@@ -1,0 +1,46 @@
+//! Paper-style sweep: one model, several arrival rates, four systems —
+//! the shape of Figs. 6, 7 and 10 in one table.
+//!
+//! ```bash
+//! cargo run --release --example paper_benchmark [requests_per_rate]
+//! ```
+
+use cascade_infer::cluster::{run_experiment, ClusterConfig, SchedulerKind};
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::LLAMA_3B;
+use cascade_infer::workload::{generate, ShareGptLike};
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(800);
+    let rates = [8.0, 16.0, 32.0, 48.0];
+    let systems = [
+        SchedulerKind::Cascade,
+        SchedulerKind::RoundRobin,
+        SchedulerKind::SgLangLike,
+        SchedulerKind::LlumnixLike,
+    ];
+    println!(
+        "{:<6} {:<14} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "rate", "system", "TTFT", "p95TTFT", "TPOT", "p95TPOT", "tok/s"
+    );
+    for rate in rates {
+        let reqs = generate(&ShareGptLike::default(), rate, n, 42);
+        for k in systems {
+            let mut cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 16, k);
+            if k == SchedulerKind::LlumnixLike {
+                cfg.engine_speed = 1.25;
+            }
+            let (r, _) = run_experiment(cfg, &reqs);
+            println!(
+                "{:<6.1} {:<14} {:>9.4}s {:>9.4}s {:>9.5}s {:>9.5}s {:>11.1}",
+                rate,
+                k.name(),
+                r.mean_ttft(),
+                r.p95_ttft(),
+                r.mean_tpot(),
+                r.p95_tpot(),
+                r.throughput_tokens_per_s()
+            );
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Quickstart: plan a length-aware pipeline and simulate a small
+//! CascadeInfer cluster against a round-robin baseline.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cascade_infer::cluster::{run_experiment, ClusterConfig, SchedulerKind};
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::LLAMA_3B;
+use cascade_infer::workload::{generate, ShareGptLike};
+
+fn main() {
+    // 1. A ShareGPT-like workload: skewed lengths, Poisson arrivals.
+    let requests = generate(&ShareGptLike::default(), 24.0, 800, 42);
+    println!("workload: {} requests over {:.1}s", requests.len(),
+             requests.last().unwrap().arrival);
+
+    // 2. CascadeInfer on 8 simulated H20 instances.
+    let cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 8, SchedulerKind::Cascade);
+    let (cascade, stats) = run_experiment(cfg, &requests);
+
+    // 3. The same workload through a round-robin load balancer.
+    let cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 8, SchedulerKind::RoundRobin);
+    let (rr, _) = run_experiment(cfg, &requests);
+
+    println!("\n{:<14} {:>12} {:>12} {:>14}", "scheduler", "mean TTFT", "mean TPOT", "throughput");
+    for (name, r) in [("CascadeInfer", &cascade), ("RoundRobin", &rr)] {
+        println!(
+            "{:<14} {:>11.4}s {:>11.5}s {:>10.1} tok/s",
+            name,
+            r.mean_ttft(),
+            r.mean_tpot(),
+            r.throughput_tokens_per_s()
+        );
+    }
+    println!(
+        "\nCascadeInfer: {} stages, {} migrations, boundaries {:?}",
+        stats.stages.len(),
+        stats.migrations,
+        stats.final_boundaries
+    );
+}

@@ -1,0 +1,46 @@
+//! Trace explorer: generate (or load) a workload trace, show its
+//! length distribution (the Fig. 1 shape), and print the pipeline the
+//! planner would build for it.
+//!
+//! ```bash
+//! cargo run --release --example trace_explorer [trace.csv]
+//! ```
+
+use cascade_infer::coordinator::plan::{MigrationCost, Planner};
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::kernelmodel::AttentionModel;
+use cascade_infer::models::LLAMA_3B;
+use cascade_infer::qoe::profile_and_fit;
+use cascade_infer::workload::{self, LengthHistogram, ShareGptLike};
+
+fn main() {
+    let reqs = match std::env::args().nth(1) {
+        Some(path) => workload::load_csv(&path).expect("readable trace"),
+        None => workload::generate(&ShareGptLike::default(), 10.0, 10_000, 42),
+    };
+    println!("{} requests", reqs.len());
+
+    let hist = LengthHistogram::from_requests(&reqs, 131_072);
+    println!("\nfinal-length distribution (log buckets):");
+    let max = *hist.count.iter().max().unwrap() as f64;
+    let mut lo = 0u64;
+    for (k, &hi) in hist.bounds.iter().enumerate() {
+        if hist.count[k] > 0 {
+            let bar = "#".repeat((hist.count[k] as f64 / max * 50.0).ceil() as usize);
+            println!("[{lo:>7},{hi:>7}) {:>6}  {bar}", hist.count[k]);
+        }
+        lo = hi;
+    }
+
+    let am = AttentionModel::new(GpuProfile::H20, LLAMA_3B);
+    let (qoe, _) = profile_and_fit(&am, 64, 131_072, 512);
+    let planner = Planner::new(
+        qoe,
+        MigrationCost::new(LLAMA_3B.kv_bytes_per_token() as f64, 450e9),
+    );
+    let pipe = planner.plan_dp(&hist, 16);
+    println!("\nplanned pipeline for 16 instances:");
+    for (i, s) in pipe.stages.iter().enumerate() {
+        println!("  stage {i}: [{:>7}, {:>7})  x{} instances", s.lo, s.hi, s.n_instances);
+    }
+}

@@ -1,0 +1,173 @@
+"""AOT compile path: lower the L2 model to HLO **text** + parameter blob.
+
+Run once by ``make artifacts``; the Rust runtime
+(`rust/src/runtime/`) then loads the artifacts via
+``HloModuleProto::from_text_file`` and serves with no Python anywhere on
+the request path.
+
+Interchange format is HLO *text*, NOT ``lowered.compile().serialize()``
+and NOT a serialized ``HloModuleProto``: jax >= 0.5 emits protos with
+64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written (all under ``--out-dir``, default ``artifacts/``):
+
+* ``prefill_b{B}_t{T}.hlo.txt``  — prefill executable per batch variant
+* ``decode_b{B}.hlo.txt``        — decode-step executable per batch variant
+* ``params.bin``                 — little-endian f32 blob, params in order
+* ``params.manifest``            — text ABI: ``name ndim dims... offset``
+* ``model.meta``                 — key=value model geometry for Rust
+
+Batch variants cover the batch sizes the Rust engine actually forms
+(powers of two); Rust pads a short batch up to the nearest variant with
+inert rows and ignores their outputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# Batch variants compiled ahead of time.  The engine picks the smallest
+# variant >= live batch and pads with inert rows.
+DEFAULT_BATCHES = (1, 2, 4, 8)
+DEFAULT_PREFILL_T = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: M.ModelConfig, batch: int, t: int) -> str:
+    fn = M.make_prefill_fn(cfg)
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_order(cfg)]
+    specs.append(jax.ShapeDtypeStruct((batch, t), jnp.int32))       # tokens
+    specs.append(jax.ShapeDtypeStruct((batch,), jnp.int32))         # lengths
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int) -> str:
+    fn = M.make_decode_fn(cfg)
+    r = batch * cfg.n_heads
+    cache = (cfg.n_layers, r, cfg.max_seq, cfg.head_dim)
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_order(cfg)]
+    specs.append(jax.ShapeDtypeStruct((batch,), jnp.int32))         # tokens
+    specs.append(jax.ShapeDtypeStruct(cache, jnp.float32))          # k_cache
+    specs.append(jax.ShapeDtypeStruct(cache, jnp.float32))          # v_cache
+    specs.append(jax.ShapeDtypeStruct((batch,), jnp.int32))         # lengths
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def write_params(cfg: M.ModelConfig, out_dir: str, seed: int) -> None:
+    params = M.init_params(cfg, seed=seed)
+    order = M.param_order(cfg)
+    blob_path = os.path.join(out_dir, "params.bin")
+    man_path = os.path.join(out_dir, "params.manifest")
+    offset = 0
+    with open(blob_path, "wb") as blob, open(man_path, "w") as man:
+        for name, shape in order:
+            arr = np.asarray(params[name], dtype="<f4")
+            assert tuple(arr.shape) == shape
+            blob.write(arr.tobytes())
+            dims = " ".join(str(d) for d in shape)
+            man.write(f"{name} {len(shape)} {dims} {offset}\n")
+            offset += arr.size
+    print(f"wrote {blob_path} ({offset * 4} bytes), {man_path}")
+
+
+def write_meta(cfg: M.ModelConfig, out_dir: str, batches, prefill_t: int) -> None:
+    path = os.path.join(out_dir, "model.meta")
+    with open(path, "w") as f:
+        f.write(f"vocab={cfg.vocab}\n")
+        f.write(f"d_model={cfg.d_model}\n")
+        f.write(f"n_heads={cfg.n_heads}\n")
+        f.write(f"n_layers={cfg.n_layers}\n")
+        f.write(f"max_seq={cfg.max_seq}\n")
+        f.write(f"head_dim={cfg.head_dim}\n")
+        f.write(f"prefill_t={prefill_t}\n")
+        f.write("batches=" + ",".join(str(b) for b in batches) + "\n")
+        f.write(f"n_params={len(M.param_order(cfg))}\n")
+    print(f"wrote {path}")
+
+
+def write_goldens(cfg: M.ModelConfig, out_dir: str, seed: int, prefill_t: int) -> None:
+    """Golden generations for the Rust end-to-end numerics test.
+
+    Format, one request per line:
+    ``prompt_csv|prompt_len|steps|expected_csv`` where expected tokens
+    come from greedy decoding through the same prefill/decode functions
+    that were lowered to HLO.
+    """
+    import numpy as _np
+
+    params = M.init_params(cfg, seed=seed)
+    rng = _np.random.default_rng(1234)
+    path = os.path.join(out_dir, "golden.txt")
+    steps = 16
+    cases = [(4, 3), (12, 4), (20, 2), (prefill_t, 1)]  # (prompt_len, batch)
+    with open(path, "w") as f:
+        for plen, batch in cases:
+            prompts = rng.integers(0, cfg.vocab, (batch, prefill_t)).astype("int32")
+            lens = jnp.full((batch,), plen, jnp.int32)
+            toks = M.reference_generate(params, cfg, jnp.asarray(prompts), lens, steps)
+            toks = _np.asarray(toks)
+            for b in range(batch):
+                prompt_csv = ",".join(str(x) for x in prompts[b, :plen])
+                exp_csv = ",".join(str(x) for x in toks[b])
+                f.write(f"{prompt_csv}|{plen}|{steps}|{exp_csv}\n")
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="legacy sentinel path; implies --out-dir dirname")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batches", default=",".join(map(str, DEFAULT_BATCHES)))
+    ap.add_argument("--prefill-t", type=int, default=DEFAULT_PREFILL_T)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = M.TINY
+    batches = tuple(int(b) for b in args.batches.split(","))
+
+    for b in batches:
+        text = lower_prefill(cfg, b, args.prefill_t)
+        p = os.path.join(out_dir, f"prefill_b{b}_t{args.prefill_t}.hlo.txt")
+        with open(p, "w") as f:
+            f.write(text)
+        print(f"wrote {p} ({len(text)} chars)")
+
+        text = lower_decode(cfg, b)
+        p = os.path.join(out_dir, f"decode_b{b}.hlo.txt")
+        with open(p, "w") as f:
+            f.write(text)
+        print(f"wrote {p} ({len(text)} chars)")
+
+    write_params(cfg, out_dir, args.seed)
+    write_meta(cfg, out_dir, batches, args.prefill_t)
+    write_goldens(cfg, out_dir, args.seed, args.prefill_t)
+
+    # Sentinel consumed by the Makefile's staleness check.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: length-masked batched decode attention.
+
+This is the hot-spot CascadeInfer schedules around (§2.3 of the paper):
+one new query token per sequence attends over a padded KV cache whose
+*valid* length differs per row.  The paper measures this kernel on CUDA
+(FlashAttention / FlashDecoding); here it is re-thought for a TPU-style
+memory hierarchy per DESIGN.md §2:
+
+* Grid = (rows, kv_chunks).  Each grid step streams one
+  ``(BLOCK_K, head_dim)`` tile of K and V from HBM into VMEM via
+  ``BlockSpec`` — the HBM↔VMEM schedule that CUDA kernels express with
+  threadblocks.
+* Online (flash) softmax state — running max ``m``, denominator ``l`` and
+  the unnormalized accumulator — lives in the output refs, which stay
+  VMEM-resident across the sequential ``j`` dimension because their index
+  map ignores ``j``.
+* Rows whose length ends before a chunk are masked, so compute cost
+  tracks the *true* sequence length — the exact per-row imbalance the
+  paper attributes to inter-SM load imbalance carries over to grid-step
+  imbalance here.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness is what the build-time pytest gate checks.
+Real-TPU efficiency is estimated structurally (DESIGN.md §6).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                   block_k: int, scale: float):
+    """One (row, kv-chunk) grid step of flash decode attention."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lens_ref[0, 0]
+    pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
+    mask = pos < length
+
+    q = q_ref[0, :]                      # [D]     (VMEM-resident)
+    k = k_ref[0, :, :]                   # [Bk, D] (streamed tile)
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # [Bk]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    # exp() of an all-masked chunk underflows to exactly 0, so fully
+    # padded chunks contribute nothing (alpha == 1, p == 0).
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new) * mask.astype(s.dtype)  # [Bk]
+
+    l_ref[0, 0] = l_ref[0, 0] * alpha + jnp.sum(p)
+    o_ref[0, :] = o_ref[0, :] * alpha + jnp.dot(
+        p, v_ref[0, :, :], preferred_element_type=jnp.float32)
+    m_ref[0, 0] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[0, :] = o_ref[0, :] / jnp.maximum(l_ref[0, 0], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k, v, lengths, block_k: int = DEFAULT_BLOCK_K):
+    """Flash decode attention over a padded per-row KV cache.
+
+    Args:
+      q: [R, D] float32 — one query per row (R = batch * heads).
+      k: [R, S, D] float32 key cache, padded to S.
+      v: [R, S, D] float32 value cache.
+      lengths: [R] int32 valid KV length per row, 1 <= len <= S.
+      block_k: KV tile size (the VMEM streaming granule).
+
+    Returns:
+      [R, D] float32 attention output; matches
+      :func:`kernels.ref.decode_attention_ref`.
+    """
+    r, s, d = k.shape
+    assert q.shape == (r, d) and v.shape == (r, s, d)
+    block_k = min(block_k, s)
+    pad = (-s) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    scale = 1.0 / (d ** 0.5)
+    lens2d = lengths.reshape(r, 1).astype(jnp.int32)
+
+    grid = (r, s // block_k)
+    out, _m, _l = pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, d), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(lens2d, q, k, v)
+    return out
+
+
+def vmem_footprint_bytes(d: int, block_k: int = DEFAULT_BLOCK_K,
+                         bytes_per_el: int = 4) -> int:
+    """Structural VMEM estimate for one grid step (DESIGN.md §6 target).
+
+    One K tile + one V tile + the q row + accumulator/m/l state.
+    """
+    return bytes_per_el * (2 * block_k * d + 3 * d + 2)

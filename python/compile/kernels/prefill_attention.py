@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: length-masked causal prefill attention.
+
+Prefill ingests the whole prompt at once (O(T^2), compute-bound — paper
+§2.1).  The kernel is a blockwise flash-attention forward pass:
+
+* Grid = (rows, q_chunks, kv_chunks); the kv dimension is innermost and
+  sequential, so the running max/denominator/accumulator state for one
+  ``(row, q_chunk)`` stays VMEM-resident across kv steps.
+* Causality is enforced per (q_pos, kv_pos) pair; fully-future kv chunks
+  are masked out entirely (their exp() underflows to 0), mirroring how a
+  CUDA flash kernel would simply not launch those tiles.
+* Rows shorter than the padded T produce garbage *above* their length;
+  the L2 model never reads those positions.
+
+``interpret=True`` always — see decode_attention.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _prefill_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                    block_q: int, block_k: int, scale: float):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lens_ref[0, 0]
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    k_pos = jk * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = (k_pos <= q_pos) & (k_pos < length)  # [Bq, Bk]
+
+    q = q_ref[0, :, :]  # [Bq, D]
+    k = k_ref[0, :, :]  # [Bk, D]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0, :, 0]                       # [Bq]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)               # [Bq]
+    p = jnp.exp(s - m_new[:, None]) * mask.astype(s.dtype)  # [Bq, Bk]
+
+    l_ref[0, :, 0] = l_ref[0, :, 0] * alpha + jnp.sum(p, axis=1)
+    o_ref[0, :, :] = o_ref[0, :, :] * alpha[:, None] + jnp.dot(
+        p, v_ref[0, :, :], preferred_element_type=jnp.float32)
+    m_ref[0, :, 0] = m_new
+
+    @pl.when(jk == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0, :, :] = o_ref[0, :, :] / jnp.maximum(
+            l_ref[0, :, 0], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def prefill_attention(q, k, v, lengths,
+                      block_q: int = DEFAULT_BLOCK_Q,
+                      block_k: int = DEFAULT_BLOCK_K):
+    """Blockwise causal flash attention over padded prefixes.
+
+    Args:
+      q, k, v: [R, T, D] float32 (R = batch * heads).
+      lengths: [R] int32 valid prefix lengths (1 <= len <= T).
+
+    Returns:
+      [R, T, D] float32; positions >= length hold unspecified finite
+      values.  Matches :func:`kernels.ref.prefill_attention_ref` below
+      each row's length.
+    """
+    r, t, d = q.shape
+    assert k.shape == (r, t, d) and v.shape == (r, t, d)
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    pad_q = (-t) % block_q
+    pad_k = (-t) % block_k
+    pad = max(pad_q, pad_k)
+    tp = t + pad
+    # Pad T so both tilings divide; padded q rows are masked by causality
+    # against `length` and simply produce garbage rows we slice off.
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    scale = 1.0 / (d ** 0.5)
+    lens2d = lengths.reshape(r, 1).astype(jnp.int32)
+
+    grid = (r, tp // block_q, tp // block_k)
+    out, _m, _l = pl.pallas_call(
+        functools.partial(_prefill_kernel, block_q=block_q,
+                          block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, iq, jk: (i, 0)),
+            pl.BlockSpec((1, block_q, d), lambda i, iq, jk: (i, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, iq, jk: (i, jk, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, iq, jk: (i, jk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, iq, jk: (i, iq, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda i, iq, jk: (i, iq, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda i, iq, jk: (i, iq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, tp, d), jnp.float32),
+            jax.ShapeDtypeStruct((r, tp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, tp, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(lens2d, q, k, v)
+    return out[:, :t, :]

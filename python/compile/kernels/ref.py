@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest + hypothesis
+sweeps (python/tests/).  They are deliberately written in the most
+obvious way possible — full materialized score matrices, explicit masks —
+so that reviewing them is trivial.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, lengths, scale=None):
+    """Masked single-token decode attention.
+
+    Args:
+      q: [R, D] query rows (R = batch * heads, one new token each).
+      k: [R, S, D] key cache (padded to S).
+      v: [R, S, D] value cache.
+      lengths: [R] int32, valid KV length per row (0 < len <= S).
+      scale: softmax scale; defaults to 1/sqrt(D).
+
+    Returns:
+      [R, D] attention output.
+    """
+    r, s, d = k.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("rd,rsd->rs", q, k) * scale  # [R, S]
+    pos = jnp.arange(s)[None, :]
+    mask = pos < lengths[:, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * mask  # kill padded lanes exactly
+    denom = probs.sum(axis=-1, keepdims=True)
+    probs = probs / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("rs,rsd->rd", probs, v)
+
+
+def prefill_attention_ref(q, k, v, lengths, scale=None):
+    """Masked causal self-attention over a padded prefix.
+
+    Args:
+      q: [R, T, D] query rows (R = batch * heads).
+      k: [R, T, D], v: [R, T, D].
+      lengths: [R] int32 valid prefix length per row.
+
+    Returns:
+      [R, T, D]; rows at positions >= length are unspecified-but-finite.
+    """
+    r, t, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("rtd,rsd->rts", q, k) * scale  # [R, T, S=T]
+    pos = jnp.arange(t)
+    causal = pos[None, :, None] >= pos[None, None, :]  # q >= k
+    valid = pos[None, None, :] < lengths[:, None, None]
+    mask = causal & valid
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * mask
+    denom = probs.sum(axis=-1, keepdims=True)
+    probs = probs / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("rts,rsd->rtd", probs, v)

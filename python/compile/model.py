@@ -1,0 +1,295 @@
+"""L2 JAX model: a small GPT-style decoder with an explicit KV cache.
+
+This is the *served* model of the reproduction: CascadeInfer (the L3 Rust
+coordinator) schedules requests across instances, and each instance runs
+this model's AOT-compiled prefill / decode-step executables through PJRT.
+Both entry points call the L1 Pallas kernels
+(:mod:`compile.kernels.prefill_attention`,
+:mod:`compile.kernels.decode_attention`) so the kernels lower into the
+same HLO modules Rust loads.
+
+Everything here is *build-time only* — ``aot.py`` lowers the two jitted
+functions once to HLO text plus a flat parameter blob, and Python never
+runs again on the request path.
+
+Conventions
+-----------
+* Shapes are static: ``B`` (batch rows per instance step), ``T`` (prefill
+  chunk), ``S`` (max KV length per row), layers ``L``, model dim ``D``,
+  heads ``H`` with head dim ``Dh = D // H``, vocab ``V``.
+* The KV cache is a pair of arrays ``[L, R, S, Dh]`` with ``R = B * H``
+  (one row per (sequence, head)); ``lengths: [B] int32`` counts the valid
+  tokens per sequence.  Functional updates return the new cache; Rust
+  round-trips the buffers between executable calls.
+* Parameters travel as a flat, deterministically-ordered list (see
+  :func:`param_order`) so the Rust side can feed them positionally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.prefill_attention import prefill_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture of the served GPT."""
+
+    vocab: int = 256          # byte-level vocabulary
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    max_seq: int = 128        # S: per-row KV capacity
+    mlp_mult: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def mlp_dim(self) -> int:
+        return self.d_model * self.mlp_mult
+
+
+# The canonical small config served by examples/serve_real.rs.  Chosen so
+# interpret-mode Pallas on CPU PJRT stays fast while still exercising a
+# multi-layer, multi-head transformer (~100k params).
+TINY = ModelConfig()
+
+
+def param_order(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the ABI between aot.py and Rust.
+
+    Rust reads ``artifacts/params.manifest`` (written from this function)
+    and feeds the parameter literals positionally before the activations.
+    """
+    d, s, v, m = cfg.d_model, cfg.max_seq, cfg.vocab, cfg.mlp_dim
+    order: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (s, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        order += [
+            (p + "ln1_scale", (d,)),
+            (p + "ln1_bias", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ln2_scale", (d,)),
+            (p + "ln2_bias", (d,)),
+            (p + "w1", (d, m)),
+            (p + "b1", (m,)),
+            (p + "w2", (m, d)),
+            (p + "b2", (d,)),
+        ]
+    order += [("lnf_scale", (d,)), ("lnf_bias", (d,))]
+    return order
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic parameter init (same seed ⇒ same bytes in the blob)."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, jax.Array] = {}
+    for name, shape in param_order(cfg):
+        if name.endswith("_scale"):
+            arr = np.ones(shape, np.float32)
+        elif name.endswith(("_bias", "b1", "b2")):
+            arr = np.zeros(shape, np.float32)
+        else:
+            fan_in = shape[0]
+            arr = rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def params_to_list(cfg: ModelConfig, params: Dict[str, jax.Array]) -> List[jax.Array]:
+    return [params[name] for name, _ in param_order(cfg)]
+
+
+def list_to_params(cfg: ModelConfig, flat) -> Dict[str, jax.Array]:
+    order = param_order(cfg)
+    assert len(flat) == len(order), (len(flat), len(order))
+    out = {}
+    for (name, shape), arr in zip(order, flat):
+        assert tuple(arr.shape) == shape, (name, arr.shape, shape)
+        out[name] = arr
+    return out
+
+
+def _layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _split_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[B, T, D] -> [B*H, T, Dh] (row-major over (b, h))."""
+    b, t, _ = x.shape
+    x = x.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    x = x.transpose(0, 2, 1, 3)  # [B, H, T, Dh]
+    return x.reshape(b * cfg.n_heads, t, cfg.head_dim)
+
+
+def _merge_heads(x: jax.Array, cfg: ModelConfig, b: int) -> jax.Array:
+    """[B*H, T, Dh] -> [B, T, D]."""
+    t = x.shape[1]
+    x = x.reshape(b, cfg.n_heads, t, cfg.head_dim).transpose(0, 2, 1, 3)
+    return x.reshape(b, t, cfg.d_model)
+
+
+def _mlp(x: jax.Array, p: Dict[str, jax.Array], prefix: str) -> jax.Array:
+    h = jnp.dot(x, p[prefix + "w1"]) + p[prefix + "b1"]
+    h = jax.nn.gelu(h)
+    return jnp.dot(h, p[prefix + "w2"]) + p[prefix + "b2"]
+
+
+def prefill(
+    params: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    tokens: jax.Array,   # [B, T] int32 (padded with anything past lengths)
+    lengths: jax.Array,  # [B] int32, 1 <= len <= T
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Ingest prompts; return next-token logits and the primed KV cache.
+
+    Returns:
+      logits:   [B, V] at each row's last valid position.
+      k_cache:  [L, B*H, S, Dh] — keys written at [0, T), zero elsewhere.
+      v_cache:  [L, B*H, S, Dh].
+    """
+    b, t = tokens.shape
+    s = cfg.max_seq
+    assert t <= s
+    h = params["tok_emb"][tokens] + params["pos_emb"][:t][None, :, :]
+
+    # Per-head valid lengths for the pallas kernel: [B*H]
+    row_lens = jnp.repeat(lengths.astype(jnp.int32), cfg.n_heads)
+
+    k_caches, v_caches = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        x = _layer_norm(h, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        q = _split_heads(jnp.dot(x, params[p + "wq"]), cfg)
+        k = _split_heads(jnp.dot(x, params[p + "wk"]), cfg)
+        v = _split_heads(jnp.dot(x, params[p + "wv"]), cfg)
+        att = prefill_attention(q, k, v, row_lens)          # L1 kernel
+        att = _merge_heads(att, cfg, b)
+        h = h + jnp.dot(att, params[p + "wo"])
+        x2 = _layer_norm(h, params[p + "ln2_scale"], params[p + "ln2_bias"])
+        h = h + _mlp(x2, params, p)
+        pad = s - t
+        k_caches.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0))))
+        v_caches.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0))))
+
+    hf = _layer_norm(h, params["lnf_scale"], params["lnf_bias"])
+    logits_all = jnp.dot(hf, params["tok_emb"].T)           # tied head [B,T,V]
+    last = jnp.clip(lengths - 1, 0, t - 1)
+    logits = jnp.take_along_axis(
+        logits_all, last[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0, :]
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def decode_step(
+    params: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    tokens: jax.Array,    # [B] int32 — the tokens produced last step
+    k_cache: jax.Array,   # [L, B*H, S, Dh]
+    v_cache: jax.Array,
+    lengths: jax.Array,   # [B] int32 — valid KV entries *before* this step
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One autoregressive step over the whole batch.
+
+    The new token is written into the cache at position ``lengths`` and
+    attention runs over ``lengths + 1`` valid entries — the L1 decode
+    kernel sees exactly the per-row heterogeneity the paper studies.
+
+    Returns ``(logits [B, V], k_cache', v_cache', lengths + 1)``.
+    """
+    b = tokens.shape[0]
+    pos = jnp.clip(lengths, 0, cfg.max_seq - 1)
+    h = params["tok_emb"][tokens] + params["pos_emb"][pos]   # [B, D]
+    h = h[:, None, :]                                        # [B, 1, D]
+
+    row_lens = jnp.repeat((lengths + 1).astype(jnp.int32), cfg.n_heads)
+    row_pos = jnp.repeat(pos.astype(jnp.int32), cfg.n_heads)  # [B*H]
+
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        x = _layer_norm(h, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        q = _split_heads(jnp.dot(x, params[p + "wq"]), cfg)[:, 0, :]  # [R, Dh]
+        k = _split_heads(jnp.dot(x, params[p + "wk"]), cfg)[:, 0, :]
+        v = _split_heads(jnp.dot(x, params[p + "wv"]), cfg)[:, 0, :]
+        # Scatter this step's K/V into the cache at each row's position.
+        kc = jax.vmap(lambda c, kk, pp: jax.lax.dynamic_update_slice(
+            c, kk[None, :], (pp, 0)))(k_cache[i], k, row_pos)
+        vc = jax.vmap(lambda c, vv, pp: jax.lax.dynamic_update_slice(
+            c, vv[None, :], (pp, 0)))(v_cache[i], v, row_pos)
+        att = decode_attention(q, kc, vc, row_lens)           # L1 kernel
+        att = _merge_heads(att[:, None, :], cfg, b)           # [B, 1, D]
+        h = h + jnp.dot(att, params[p + "wo"])
+        x2 = _layer_norm(h, params[p + "ln2_scale"], params[p + "ln2_bias"])
+        h = h + _mlp(x2, params, p)
+        new_k.append(kc)
+        new_v.append(vc)
+
+    hf = _layer_norm(h[:, 0, :], params["lnf_scale"], params["lnf_bias"])
+    logits = jnp.dot(hf, params["tok_emb"].T)                 # [B, V]
+    return logits, jnp.stack(new_k), jnp.stack(new_v), lengths + 1
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers: the exact signatures lowered to HLO by aot.py.
+# Params come first (in param_order), then activations, so the Rust side
+# can keep one parameter-literal vector per executable.
+# ---------------------------------------------------------------------------
+
+def make_prefill_fn(cfg: ModelConfig):
+    n_params = len(param_order(cfg))
+
+    def fn(*args):
+        flat, (tokens, lengths) = list(args[:n_params]), args[n_params:]
+        params = list_to_params(cfg, flat)
+        return prefill(params, cfg, tokens, lengths)
+
+    return fn
+
+
+def make_decode_fn(cfg: ModelConfig):
+    n_params = len(param_order(cfg))
+
+    def fn(*args):
+        flat = list(args[:n_params])
+        tokens, k_cache, v_cache, lengths = args[n_params:]
+        params = list_to_params(cfg, flat)
+        return decode_step(params, cfg, tokens, k_cache, v_cache, lengths)
+
+    return fn
+
+
+def reference_generate(
+    params: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    prompt: jax.Array,    # [B, T0] int32
+    lengths: jax.Array,   # [B] int32
+    steps: int,
+) -> jax.Array:
+    """Greedy generation through prefill + decode_step (test oracle)."""
+    logits, kc, vc = prefill(params, cfg, prompt, lengths)
+    lens = lengths
+    toks = []
+    for _ in range(steps):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks.append(nxt)
+        logits, kc, vc, lens = decode_step(params, cfg, nxt, kc, vc, lens)
+    return jnp.stack(toks, axis=1)  # [B, steps]

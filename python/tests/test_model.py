@@ -1,0 +1,146 @@
+"""L2 correctness: the GPT model's prefill/decode semantics and param ABI."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_heads=2, n_layers=2, max_seq=48)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=7)
+
+
+def _prompt(b, t, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab, (b, t)), jnp.int32)
+
+
+class TestParamABI:
+    def test_order_is_deterministic(self):
+        assert M.param_order(CFG) == M.param_order(CFG)
+
+    def test_roundtrip_list(self, params):
+        flat = M.params_to_list(CFG, params)
+        back = M.list_to_params(CFG, flat)
+        for name, _ in M.param_order(CFG):
+            np.testing.assert_array_equal(params[name], back[name])
+
+    def test_init_deterministic(self):
+        a = M.init_params(CFG, seed=3)
+        b = M.init_params(CFG, seed=3)
+        for name, _ in M.param_order(CFG):
+            np.testing.assert_array_equal(a[name], b[name])
+
+    def test_param_count_matches_layers(self):
+        assert len(M.param_order(CFG)) == 2 + CFG.n_layers * 12 + 2
+
+
+class TestPrefill:
+    def test_shapes(self, params):
+        b, t = 3, 16
+        logits, kc, vc = M.prefill(params, CFG, _prompt(b, t), jnp.array([4, 9, 16], jnp.int32))
+        r = b * CFG.n_heads
+        assert logits.shape == (b, CFG.vocab)
+        assert kc.shape == (CFG.n_layers, r, CFG.max_seq, CFG.head_dim)
+        assert vc.shape == kc.shape
+
+    def test_logits_depend_only_on_valid_prefix(self, params):
+        """Tokens past `length` must not influence the logits."""
+        b, t = 2, 12
+        toks = _prompt(b, t, seed=1)
+        lens = jnp.array([5, 8], jnp.int32)
+        base, _, _ = M.prefill(params, CFG, toks, lens)
+        # Scramble the padding region only.
+        pos = jnp.arange(t)[None, :]
+        scrambled = jnp.where(pos < lens[:, None], toks, (toks + 13) % CFG.vocab)
+        got, _, _ = M.prefill(params, CFG, scrambled, lens)
+        np.testing.assert_allclose(base, got, rtol=1e-5, atol=1e-5)
+
+    def test_cache_zero_beyond_prefill_window(self, params):
+        b, t = 2, 8
+        _, kc, vc = M.prefill(params, CFG, _prompt(b, t), jnp.array([8, 3], jnp.int32))
+        assert np.all(np.asarray(kc[:, :, t:, :]) == 0.0)
+        assert np.all(np.asarray(vc[:, :, t:, :]) == 0.0)
+
+
+class TestDecodeStep:
+    def test_consistency_with_prefill(self, params):
+        """prefill(n) == prefill(n-1) + decode_step(token n)."""
+        b, t = 3, 16
+        toks = _prompt(b, t, seed=2)
+        lens = jnp.array([6, 11, 16], jnp.int32)
+        want, _, _ = M.prefill(params, CFG, toks, lens)
+        logits0, kc, vc = M.prefill(params, CFG, toks, lens - 1)
+        last = jnp.take_along_axis(toks, (lens - 1)[:, None], axis=1)[:, 0]
+        got, _, _, new_lens = M.decode_step(params, CFG, last, kc, vc, lens - 1)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+        np.testing.assert_array_equal(new_lens, lens)
+
+    def test_lengths_monotone(self, params):
+        b = 2
+        toks = _prompt(b, 8, seed=3)
+        lens = jnp.array([4, 8], jnp.int32)
+        _, kc, vc = M.prefill(params, CFG, toks, lens)
+        cur = lens
+        for _ in range(3):
+            _, kc, vc, nxt = M.decode_step(
+                params, CFG, jnp.zeros((b,), jnp.int32), kc, vc, cur)
+            assert (np.asarray(nxt) == np.asarray(cur) + 1).all()
+            cur = nxt
+
+    def test_rows_independent(self, params):
+        """Changing row 1's token must not change row 0's logits."""
+        b = 2
+        toks = _prompt(b, 8, seed=4)
+        lens = jnp.array([5, 7], jnp.int32)
+        _, kc, vc = M.prefill(params, CFG, toks, lens)
+        t_a = jnp.array([3, 9], jnp.int32)
+        t_b = jnp.array([3, 42], jnp.int32)
+        la, _, _, _ = M.decode_step(params, CFG, t_a, kc, vc, lens)
+        lb, _, _, _ = M.decode_step(params, CFG, t_b, kc, vc, lens)
+        np.testing.assert_allclose(la[0], lb[0], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(np.asarray(la[1]), np.asarray(lb[1]))
+
+
+class TestGenerate:
+    def test_deterministic(self, params):
+        toks = _prompt(2, 8, seed=5)
+        lens = jnp.array([4, 8], jnp.int32)
+        a = M.reference_generate(params, CFG, toks, lens, 6)
+        b = M.reference_generate(params, CFG, toks, lens, 6)
+        np.testing.assert_array_equal(a, b)
+
+    def test_tokens_in_vocab(self, params):
+        toks = _prompt(2, 8, seed=6)
+        out = M.reference_generate(params, CFG, toks, jnp.array([8, 8], jnp.int32), 4)
+        arr = np.asarray(out)
+        assert ((arr >= 0) & (arr < CFG.vocab)).all()
+
+
+class TestFlatWrappers:
+    def test_prefill_fn_matches_dict_api(self, params):
+        fn = M.make_prefill_fn(CFG)
+        toks = _prompt(2, 8, seed=8)
+        lens = jnp.array([3, 8], jnp.int32)
+        flat = M.params_to_list(CFG, params)
+        got = fn(*flat, toks, lens)
+        want = M.prefill(params, CFG, toks, lens)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6)
+
+    def test_decode_fn_matches_dict_api(self, params):
+        toks0 = _prompt(2, 8, seed=9)
+        lens = jnp.array([3, 8], jnp.int32)
+        _, kc, vc = M.prefill(params, CFG, toks0, lens)
+        fn = M.make_decode_fn(CFG)
+        flat = M.params_to_list(CFG, params)
+        step_toks = jnp.array([1, 2], jnp.int32)
+        got = fn(*flat, step_toks, kc, vc, lens)
+        want = M.decode_step(params, CFG, step_toks, kc, vc, lens)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6)

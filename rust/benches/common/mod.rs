@@ -1,0 +1,55 @@
+//! Shared helpers for the figure-regeneration benches.
+//!
+//! Each bench is a standalone binary (`harness = false`) that prints
+//! the rows/series of one paper table or figure. Absolute numbers come
+//! from the simulated testbed (DESIGN.md §1), so the comparisons —
+//! who wins, rough factors, crossovers — are the reproduction target,
+//! not the raw values.
+
+#![allow(dead_code)]
+
+use cascade_infer::cluster::{run_experiment, ClusterConfig, SchedulerKind};
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::metrics::Report;
+use cascade_infer::models::ModelProfile;
+use cascade_infer::workload::{generate, Request, ShareGptLike};
+
+/// Scale knob: `CASCADE_BENCH_REQUESTS` overrides the per-point
+/// request count (default keeps the full sweep under a few minutes).
+pub fn n_requests(default: usize) -> usize {
+    std::env::var("CASCADE_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn workload(rate: f64, n: usize, seed: u64) -> Vec<Request> {
+    generate(&ShareGptLike::default(), rate, n, seed)
+}
+
+/// The four compared systems of §6 with their engine speeds.
+pub fn systems() -> Vec<(SchedulerKind, f64)> {
+    vec![
+        (SchedulerKind::Cascade, 1.0),
+        (SchedulerKind::RoundRobin, 1.0),  // vLLM 0.9.1 + RR
+        (SchedulerKind::SgLangLike, 0.95), // SGLang 0.4.9 + RR
+        (SchedulerKind::LlumnixLike, 1.25),
+    ]
+}
+
+pub fn run(
+    gpu: GpuProfile,
+    model: ModelProfile,
+    n_instances: usize,
+    k: SchedulerKind,
+    speed: f64,
+    reqs: &[Request],
+) -> (Report, cascade_infer::cluster::RunStats) {
+    let mut cfg = ClusterConfig::new(gpu, model, n_instances, k);
+    cfg.engine_speed = speed;
+    run_experiment(cfg, reqs)
+}
+
+pub fn hr() {
+    println!("{}", "-".repeat(100));
+}

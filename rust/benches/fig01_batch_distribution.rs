@@ -1,0 +1,65 @@
+//! Fig. 1: request-length distribution inside decode batches, sampled
+//! at 20/40/60/80% of the run, per scheduling policy and request rate.
+//!
+//! The paper's point: under length-agnostic policies, every sampled
+//! batch mixes short and very long sequences; CascadeInfer's batches
+//! are length-homogeneous per stage.
+
+mod common;
+
+use cascade_infer::cluster::SchedulerKind;
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::LLAMA_3B;
+
+fn percentile(xs: &mut Vec<u64>, p: f64) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    xs.sort_unstable();
+    xs[((xs.len() - 1) as f64 * p / 100.0).round() as usize]
+}
+
+fn main() {
+    println!("=== Fig. 1: batch length composition (p10/p50/p90 within sampled batches) ===");
+    let n = common::n_requests(2000);
+    for rate in [50.0, 250.0] {
+        let reqs = common::workload(rate, n, 101);
+        for (k, speed) in common::systems() {
+            let (_, stats) = common::run(GpuProfile::H20, LLAMA_3B, 16, k, speed, &reqs);
+            print!("rate {rate:>4.0}  {:<14}", k.name());
+            for mark in [0.2, 0.4, 0.6, 0.8] {
+                let mut lens: Vec<u64> = stats
+                    .batch_snapshots
+                    .iter()
+                    .filter(|(m, _)| (*m - mark).abs() < 1e-9)
+                    .flat_map(|(_, l)| l.iter().copied())
+                    .collect();
+                if lens.is_empty() {
+                    print!("  [{:>3.0}%] (no sample)        ", mark * 100.0);
+                    continue;
+                }
+                let p10 = percentile(&mut lens, 10.0);
+                let p50 = percentile(&mut lens, 50.0);
+                let p90 = percentile(&mut lens, 90.0);
+                print!("  [{:>2.0}%] {p10:>5}/{p50:>6}/{p90:>7}", mark * 100.0);
+            }
+            // Spread statistic: mean p90/p10 ratio across marks (the
+            // heterogeneity CascadeInfer removes).
+            let mut ratios = Vec::new();
+            for mark in [0.2, 0.4, 0.6, 0.8] {
+                for (m, lens) in &stats.batch_snapshots {
+                    if (*m - mark).abs() < 1e-9 && lens.len() >= 4 {
+                        let mut v = lens.clone();
+                        v.sort_unstable();
+                        let p10 = v[(v.len() - 1) / 10].max(1);
+                        let p90 = v[(v.len() - 1) * 9 / 10];
+                        ratios.push(p90 as f64 / p10 as f64);
+                    }
+                }
+            }
+            let spread = ratios.iter().sum::<f64>() / ratios.len().max(1) as f64;
+            println!("  | spread p90/p10 = {spread:>7.1}x");
+        }
+        common::hr();
+    }
+}

@@ -1,0 +1,53 @@
+//! Fig. 2: effect of sequence-length heterogeneity on the decode
+//! forward pass at constant total tokens (paper: 1.1-2.1x inflation,
+//! Llama-3.2-3B, batch 512).
+//!
+//! (a) 1000 vs 50000 tokens; (b) 200 vs 10000 tokens.  The fixed-split
+//! sweep exposes the block-size/block-count trade-off of §2.3.
+
+mod common;
+
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::kernelmodel::{AttentionModel, BLOCK_CANDIDATES};
+use cascade_infer::models::LLAMA_3B;
+
+fn mix(n: usize, n_long: usize, long: u64, short: u64) -> Vec<u64> {
+    let mut v = vec![long; n_long];
+    v.extend(vec![short; n - n_long]);
+    v
+}
+
+fn main() {
+    let m = AttentionModel::new(GpuProfile::H20, LLAMA_3B);
+    for (name, long, short) in [("Fig 2a: 1000 vs 50000", 50_000u64, 1000u64),
+                                ("Fig 2b:  200 vs 10000", 10_000, 200)] {
+        println!("=== {name} (batch 512, constant total tokens) ===");
+        println!("{:<10} {:>14} {:>14} {:>9}", "long rows", "hetero (ms)", "homo (ms)", "penalty");
+        for n_long in [5, 10, 26, 51, 102, 128] {
+            let lens = mix(512, n_long, long, short);
+            let total: u64 = lens.iter().sum();
+            let homo = vec![(total / 512).max(1); 512];
+            let t_het = m.decode_attention_latency(&lens);
+            let t_hom = m.decode_attention_latency(&homo);
+            println!(
+                "{n_long:<10} {:>14.3} {:>14.3} {:>8.2}x",
+                t_het * 1e3,
+                t_hom * 1e3,
+                t_het / t_hom
+            );
+        }
+        common::hr();
+    }
+
+    println!("=== split-size sweep (partitioning inefficiency, 26 long rows of 50K) ===");
+    let lens = mix(512, 26, 50_000, 1000);
+    println!("{:<12} {:>14}", "split", "latency (ms)");
+    for b in BLOCK_CANDIDATES {
+        let t = m.decode_attention_latency_fixed_block(&lens, b);
+        println!("{b:<12} {:>14.3}", t * 1e3);
+    }
+    let t = m.decode_attention_latency_fixed_block(&lens, u32::MAX);
+    println!("{:<12} {:>14.3}", "no-split", t * 1e3);
+    let t = m.decode_attention_latency(&lens);
+    println!("{:<12} {:>14.3}", "heuristic", t * 1e3);
+}

@@ -1,0 +1,40 @@
+//! Fig. 7: mean and p95 TPOT across the model zoo under varying
+//! arrival rates (H20 testbed, 16 instances).
+//!
+//! Paper headline: heavy-load mean TPOT down 30-64% vs vLLM, 25-77%
+//! vs SGLang, 3.4-56% vs Llumnix.
+
+mod common;
+
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::paper_zoo;
+
+fn main() {
+    let n = common::n_requests(1500);
+    println!("=== Fig. 7: TPOT (ms/token) — mean / p95 ===");
+    for model in paper_zoo() {
+        // Light / medium / saturation rates per model size class.
+        let rates: [f64; 3] = if model.params > 20_000_000_000 {
+            [8.0, 20.0, 40.0]
+        } else if model.params > 10_000_000_000 {
+            [15.0, 40.0, 80.0]
+        } else {
+            [50.0, 150.0, 300.0]
+        };
+        println!("--- {} ---", model.name);
+        print!("{:<14}", "rate:");
+        for r in rates {
+            print!(" {r:>17.0} req/s");
+        }
+        println!();
+        for (k, speed) in common::systems() {
+            print!("{:<14}", k.name());
+            for rate in rates {
+                let reqs = common::workload(rate, n, 707);
+                let (rep, _) = common::run(GpuProfile::H20, model, 16, k, speed, &reqs);
+                print!("  {:>8.3}/{:>8.3}", rep.mean_tpot() * 1e3, rep.p95_tpot() * 1e3);
+            }
+            println!();
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Fig. 8: TPOT of a *single* instance across request rates.
+//!
+//! Paper finding: CascadeInfer's single-instance performance matches
+//! vLLM's (it does not touch instance internals) but trails Llumnix's
+//! newer engine by 22-81% — so the multi-instance gains in Figs. 6-7
+//! are scheduling gains, not engine gains.
+
+mod common;
+
+use cascade_infer::cluster::SchedulerKind;
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::LLAMA_3B;
+
+fn main() {
+    let n = common::n_requests(400);
+    println!("=== Fig. 8: single-instance TPOT (ms/token) ===");
+    println!("{:<14} {:>8} {:>8} {:>8} {:>8}", "system", "2/s", "5/s", "10/s", "20/s");
+    for (k, speed) in [
+        (SchedulerKind::Cascade, 1.0),
+        (SchedulerKind::RoundRobin, 1.0),
+        (SchedulerKind::LlumnixLike, 1.25),
+    ] {
+        print!("{:<14}", k.name());
+        for rate in [2.0, 5.0, 10.0, 20.0] {
+            let reqs = common::workload(rate, n, 808);
+            let (rep, _) = common::run(GpuProfile::H20, LLAMA_3B, 1, k, speed, &reqs);
+            print!(" {:>8.3}", rep.mean_tpot() * 1e3);
+        }
+        println!();
+    }
+    println!("\n(CascadeInfer == vLLM single-instance by construction; Llumnix's\n newer engine is faster — its multi-instance gains are smaller.)");
+}

@@ -1,0 +1,43 @@
+//! Fig. 9: normalized latency (end-to-end delay per output token) on
+//! (a) the L40 testbed (small models) and (b) Llama-3.1-70B at TP2/TP4
+//! on the H20 testbed.
+//!
+//! Paper: 45-67% reduction on L40; 27-65% at TP2, 49-64% at TP4.
+
+mod common;
+
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::{llama_70b, LLAMA_3B, LLAMA_8B};
+
+fn main() {
+    let n = common::n_requests(1200);
+    println!("=== Fig. 9a: normalized latency (ms/token), L40 testbed ===");
+    for model in [LLAMA_3B, LLAMA_8B] {
+        println!("--- {} ---", model.name);
+        for (k, speed) in common::systems() {
+            print!("{:<14}", k.name());
+            for rate in [15.0, 40.0, 80.0] {
+                let reqs = common::workload(rate, n, 909);
+                let (rep, _) = common::run(GpuProfile::L40, model, 16, k, speed, &reqs);
+                print!(" {:>10.3}", rep.mean_normalized_latency() * 1e3);
+            }
+            println!();
+        }
+    }
+    common::hr();
+    println!("=== Fig. 9b: normalized latency (ms/token), Llama-3.1-70B TP on H20 ===");
+    for tp in [2u32, 4] {
+        let model = llama_70b(tp);
+        let n_inst = 16 / tp as usize;
+        println!("--- TP={tp} ({n_inst} instances) ---");
+        for (k, speed) in common::systems() {
+            print!("{:<14}", k.name());
+            for rate in [3.0, 8.0, 16.0] {
+                let reqs = common::workload(rate, n, 910);
+                let (rep, _) = common::run(GpuProfile::H20, model, n_inst, k, speed, &reqs);
+                print!(" {:>10.3}", rep.mean_normalized_latency() * 1e3);
+            }
+            println!();
+        }
+    }
+}

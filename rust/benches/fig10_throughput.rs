@@ -1,0 +1,36 @@
+//! Fig. 10: system throughput across the model zoo under varying
+//! arrival rates (H20 testbed, 16 instances).
+//!
+//! Paper headline: heavy-load average throughput 1.99x vLLM, 2.18x
+//! SGLang, 1.71x Llumnix (up to 2.89x).
+
+mod common;
+
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::paper_zoo;
+
+fn main() {
+    let n = common::n_requests(1500);
+    println!("=== Fig. 10: throughput (tokens/s over the offered-load window) ===");
+    for model in paper_zoo() {
+        // Light / medium / saturation rates per model size class.
+        let rates: [f64; 3] = if model.params > 20_000_000_000 {
+            [8.0, 20.0, 40.0]
+        } else if model.params > 10_000_000_000 {
+            [15.0, 40.0, 80.0]
+        } else {
+            [50.0, 150.0, 300.0]
+        };
+        println!("--- {} ---", model.name);
+        for (k, speed) in common::systems() {
+            print!("{:<14}", k.name());
+            for rate in rates {
+                let reqs = common::workload(rate, n, 1010);
+                let window = reqs.last().unwrap().arrival;
+                let (rep, _) = common::run(GpuProfile::H20, model, 16, k, speed, &reqs);
+                print!(" {:>10.0}", rep.throughput_until(window));
+            }
+            println!();
+        }
+    }
+}

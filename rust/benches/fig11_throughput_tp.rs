@@ -1,0 +1,45 @@
+//! Fig. 11: throughput on (a) the L40 testbed and (b) Llama-3.1-70B at
+//! TP2/TP4 on H20.
+//!
+//! Paper: 1.21-1.37x on L40 (smaller gains: less memory, smaller
+//! batches); 1.31-2.53x at TP2, 2.89-4.16x at TP4.
+
+mod common;
+
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::{llama_70b, LLAMA_3B, LLAMA_8B};
+
+fn main() {
+    let n = common::n_requests(1200);
+    println!("=== Fig. 11a: throughput (tok/s), L40 testbed ===");
+    for model in [LLAMA_3B, LLAMA_8B] {
+        println!("--- {} ---", model.name);
+        for (k, speed) in common::systems() {
+            print!("{:<14}", k.name());
+            for rate in [15.0, 40.0, 80.0] {
+                let reqs = common::workload(rate, n, 1111);
+                let window = reqs.last().unwrap().arrival;
+                let (rep, _) = common::run(GpuProfile::L40, model, 16, k, speed, &reqs);
+                print!(" {:>10.0}", rep.throughput_until(window));
+            }
+            println!();
+        }
+    }
+    common::hr();
+    println!("=== Fig. 11b: throughput (tok/s), Llama-3.1-70B TP on H20 ===");
+    for tp in [2u32, 4] {
+        let model = llama_70b(tp);
+        let n_inst = 16 / tp as usize;
+        println!("--- TP={tp} ({n_inst} instances) ---");
+        for (k, speed) in common::systems() {
+            print!("{:<14}", k.name());
+            for rate in [3.0, 8.0, 16.0] {
+                let reqs = common::workload(rate, n, 1112);
+                let window = reqs.last().unwrap().arrival;
+                let (rep, _) = common::run(GpuProfile::H20, model, n_inst, k, speed, &reqs);
+                print!(" {:>10.0}", rep.throughput_until(window));
+            }
+            println!();
+        }
+    }
+}

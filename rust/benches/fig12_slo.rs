@@ -1,0 +1,37 @@
+//! Fig. 12: SLO attainment across SLO scales and arrival rates
+//! (Llama-3.2-3B, H20). The base SLO is TTFT/TPOT under minimum load;
+//! the Nx SLO scales both bounds.
+//!
+//! Paper: 3.8-7.6x attainment under 5x SLO, 2.0-2.8x under 20x.
+
+mod common;
+
+use cascade_infer::cluster::SchedulerKind;
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::metrics::Slo;
+use cascade_infer::models::LLAMA_3B;
+
+fn main() {
+    let n = common::n_requests(2000);
+    // Base SLO: a single request on an idle CascadeInfer cluster.
+    let solo = common::workload(0.01, 1, 1212);
+    let (base, _) =
+        common::run(GpuProfile::H20, LLAMA_3B, 16, SchedulerKind::Cascade, 1.0, &solo);
+    let (bt, bp) = (base.mean_ttft().max(1e-4), base.mean_tpot().max(1e-5));
+    println!("base SLO: TTFT {bt:.4}s, TPOT {bp:.5}s");
+    println!("=== Fig. 12: SLO attainment (%) ===");
+    for rate in [100.0, 200.0, 300.0] {
+        let reqs = common::workload(rate, n, 1213);
+        println!("--- rate {rate} req/s ---");
+        println!("{:<14} {:>8} {:>8} {:>8} {:>8}", "system", "5x", "10x", "20x", "40x");
+        for (k, speed) in common::systems() {
+            let (rep, _) = common::run(GpuProfile::H20, LLAMA_3B, 16, k, speed, &reqs);
+            print!("{:<14}", k.name());
+            for scale in [5.0, 10.0, 20.0, 40.0] {
+                let slo = Slo::scaled(bt, bp, scale);
+                print!(" {:>7.1}%", 100.0 * rep.slo_attainment(slo));
+            }
+            println!();
+        }
+    }
+}

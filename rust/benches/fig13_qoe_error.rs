@@ -1,0 +1,53 @@
+//! Fig. 13: prediction-error distribution of the QoE cost model vs a
+//! static mean predictor.
+//!
+//! Paper: QoE-model error density peaks sharply at zero with mean
+//! absolute error 8.9%, vs 64% for the static baseline.
+
+mod common;
+
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::kernelmodel::AttentionModel;
+use cascade_infer::models::LLAMA_3B;
+use cascade_infer::qoe::{
+    fit, mean_abs_rel_error, profile_and_fit, relative_errors, static_baseline_errors,
+};
+use cascade_infer::sim::Rng;
+
+fn main() {
+    let am = AttentionModel::new(GpuProfile::H20, LLAMA_3B);
+    let (_, all) = profile_and_fit(&am, 64, 131_072, 512);
+
+    // Fit/validation split (§4.1), shuffled deterministically.
+    let mut idx: Vec<usize> = (0..all.len()).collect();
+    Rng::new(1313).shuffle(&mut idx);
+    let cut = all.len() * 7 / 10;
+    let fit_set: Vec<_> = idx[..cut].iter().map(|&i| all[i]).collect();
+    let val_set: Vec<_> = idx[cut..].iter().map(|&i| all[i]).collect();
+    let model = fit(&fit_set).expect("fit");
+
+    let model_errs = relative_errors(&model, &val_set);
+    let static_errs = static_baseline_errors(&fit_set, &val_set);
+    println!("=== Fig. 13: relative prediction error ===");
+    println!(
+        "QoE model  : MAE {:>6.1}%  (paper: 8.9%)",
+        100.0 * mean_abs_rel_error(&model_errs)
+    );
+    println!(
+        "static mean: MAE {:>6.1}%  (paper: 64%)",
+        100.0 * mean_abs_rel_error(&static_errs)
+    );
+
+    // Error density histogram (text form of the figure).
+    println!("\nerror density (bucketed relative error):");
+    let buckets = [-1.0, -0.5, -0.25, -0.1, -0.05, 0.05, 0.1, 0.25, 0.5, 1.0];
+    for (name, errs) in [("model", &model_errs), ("static", &static_errs)] {
+        print!("{name:<7}");
+        for w in buckets.windows(2) {
+            let c = errs.iter().filter(|&&e| e >= w[0] && e < w[1]).count();
+            let frac = c as f64 / errs.len().max(1) as f64;
+            print!(" [{:>+5.2},{:>+5.2}):{:>4.0}%", w[0], w[1], 100.0 * frac);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,40 @@
+//! Fig. 15: boundary-refinement ablation — adaptive (QoE-optimal
+//! split) vs quantity-based vs memory-based policies.
+//!
+//! Paper: quantity-based worst (severe imbalance); CascadeInfer beats
+//! memory-based by 21% latency / 12% throughput.
+
+mod common;
+
+use cascade_infer::cluster::SchedulerKind;
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::LLAMA_3B;
+
+fn main() {
+    let n = common::n_requests(2000);
+    println!("=== Fig. 15: refinement ablation (Llama-3.2-3B, 16 instances, H20) ===");
+    println!(
+        "{:<16} {:>8} {:>12} {:>12} {:>12}",
+        "refinement", "rate", "norm lat ms", "mean TPOT ms", "tok/s"
+    );
+    for rate in [100.0, 200.0, 300.0] {
+        let reqs = common::workload(rate, n, 1515);
+        let window = reqs.last().unwrap().arrival;
+        for k in [
+            SchedulerKind::Cascade,
+            SchedulerKind::CascadeMemoryRefine,
+            SchedulerKind::CascadeQuantityRefine,
+        ] {
+            let (rep, _) = common::run(GpuProfile::H20, LLAMA_3B, 16, k, 1.0, &reqs);
+            println!(
+                "{:<16} {:>8.0} {:>12.3} {:>12.3} {:>12.0}",
+                k.name(),
+                rate,
+                rep.mean_normalized_latency() * 1e3,
+                rep.mean_tpot() * 1e3,
+                rep.throughput_until(window)
+            );
+        }
+        common::hr();
+    }
+}

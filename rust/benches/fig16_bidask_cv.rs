@@ -1,0 +1,59 @@
+//! Fig. 16: load-balance quality of the bid-ask protocol — coefficient
+//! of variation of per-instance output tokens within each stage, for
+//! the paper's forced four-stage x four-instance pipeline.
+//!
+//! Paper: full bid-ask cuts CV ~40% vs inter-stage-only and ~47% vs
+//! round-robin receiver selection.
+
+mod common;
+
+use cascade_infer::cluster::{ClusterConfig, SchedulerKind};
+use cascade_infer::coordinator::plan::{Pipeline, StageSpec};
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::LLAMA_3B;
+
+fn four_by_four() -> Pipeline {
+    Pipeline {
+        stages: vec![
+            StageSpec { lo: 0, hi: 512, n_instances: 4 },
+            StageSpec { lo: 512, hi: 1536, n_instances: 4 },
+            StageSpec { lo: 1536, hi: 4096, n_instances: 4 },
+            StageSpec { lo: 4096, hi: 131_072, n_instances: 4 },
+        ],
+        predicted_quality: 0.0,
+    }
+}
+
+fn main() {
+    let n = common::n_requests(3000);
+    let seeds = [1616u64, 1717, 1818, 1919, 2020];
+    println!("=== Fig. 16: per-stage output-token CV, 4 stages x 4 instances ===");
+    println!("(averaged over {} workload seeds at rate 200)\n", seeds.len());
+    println!("{:<16} {:>32} {:>10}", "policy", "mean per-stage CVs (s0..s3)", "mean CV");
+    for k in [
+        SchedulerKind::Cascade,
+        SchedulerKind::CascadeInterStageOnly,
+        SchedulerKind::CascadeRoundRobinIntra,
+    ] {
+        let mut stage_cvs = vec![0.0f64; 4];
+        let mut total = 0.0;
+        for &seed in &seeds {
+            let reqs = common::workload(200.0, n, seed);
+            let mut cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 16, k);
+            cfg.forced_pipeline = Some(four_by_four());
+            let (_, stats) = cascade_infer::cluster::run_experiment(cfg, &reqs);
+            for (si, stage) in stats.stages.iter().enumerate() {
+                if stage.len() >= 2 {
+                    stage_cvs[si] += stats.counters.cv(stage);
+                }
+            }
+        }
+        for c in stage_cvs.iter_mut() {
+            *c /= seeds.len() as f64;
+            total += *c;
+        }
+        let mean = total / 4.0;
+        let cv_str: Vec<String> = stage_cvs.iter().map(|c| format!("{c:.3}")).collect();
+        println!("{:<16} {:>32} {:>10.3}", k.name(), cv_str.join(" "), mean);
+    }
+}

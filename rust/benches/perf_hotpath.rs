@@ -1,0 +1,72 @@
+//! Perf harness for the L3 hot paths (EXPERIMENTS.md §Perf): cost-model
+//! pricing, engine stepping, planning, and whole-cluster simulation
+//! throughput (simulated decode-iterations per wall-second).
+
+mod common;
+
+use cascade_infer::cluster::{run_experiment, ClusterConfig, SchedulerKind};
+use cascade_infer::engine::{CostModelBackend, Engine, EngineConfig};
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::kernelmodel::AttentionModel;
+use cascade_infer::models::LLAMA_3B;
+use cascade_infer::sim::Rng;
+use cascade_infer::workload::{generate, Request, ShareGptLike};
+use std::time::Instant;
+
+fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    let mut sink = 0u64;
+    for _ in 0..(iters / 10).max(1) {
+        sink = sink.wrapping_add(f());
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sink = sink.wrapping_add(f());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{name:<44} {:>12.2} ops/s   ({:.3} us/op, sink {})",
+             iters as f64 / dt, dt / iters as f64 * 1e6, sink % 10);
+}
+
+fn main() {
+    let am = AttentionModel::new(GpuProfile::H20, LLAMA_3B);
+    let mut rng = Rng::new(99);
+    let lens_small: Vec<u64> = (0..32).map(|_| 100 + rng.next_range(4000)).collect();
+    let lens_big: Vec<u64> = (0..512).map(|_| 100 + rng.next_range(50_000)).collect();
+
+    println!("=== L3 hot-path microbenchmarks ===");
+    bench("decode_iteration_latency (batch 32)", 200_000, || {
+        am.decode_iteration_latency(&lens_small).to_bits()
+    });
+    bench("decode_iteration_latency (batch 512)", 20_000, || {
+        am.decode_iteration_latency(&lens_big).to_bits()
+    });
+
+    // Engine stepping throughput.
+    bench("engine.step (64 live seqs)", 2_000, || {
+        let mut e = Engine::new(EngineConfig::default(), CostModelBackend::new(am));
+        for i in 0..64 {
+            e.submit(Request { id: i, arrival: 0.0, input_len: 200 + i * 10, output_len: 4 });
+        }
+        let mut now = 0.0;
+        let mut n = 0u64;
+        while e.has_work() {
+            let o = e.step(now);
+            now += o.duration.max(1e-9);
+            n += 1;
+        }
+        n
+    });
+
+    // Whole-cluster simulation rate.
+    let reqs = generate(&ShareGptLike::default(), 32.0, 2000, 7);
+    let total_tokens: u64 = reqs.iter().map(|r| r.output_len).sum();
+    let t0 = Instant::now();
+    let cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 16, SchedulerKind::Cascade);
+    let (rep, _) = run_experiment(cfg, &reqs);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("\n=== cluster simulation throughput ===");
+    println!("2000 requests / {total_tokens} decode tokens in {dt:.2}s wall");
+    println!("{:.0} simulated output tokens per wall-second", total_tokens as f64 / dt);
+    println!("(completed: {})", rep.records.len());
+}

@@ -1,0 +1,102 @@
+//! Baseline layouts and helpers used by the §6 comparisons.
+//!
+//! The scheduler-policy axes live in [`crate::cluster::policy`]; this
+//! module holds the layout constructors that need the planner.
+
+use crate::coordinator::plan::{Pipeline, Planner, StageSpec};
+use crate::workload::LengthHistogram;
+
+/// The "chain" ablation layout (Fig. 14): exactly one instance per
+/// stage.  Cuts come from the planner's chain DP (phase 1 of the
+/// two-phase heuristic) so the chain is as good as a chain can be.
+pub fn chain_layout(planner: &Planner, hist: &LengthHistogram, e: usize) -> Pipeline {
+    // Run the heuristic, then explode any multi-instance stage into
+    // per-instance slices of its range (simple equal split in log
+    // space, matching the exponential bucketing).
+    let merged = planner.plan_heuristic(hist, e);
+    let mut stages: Vec<StageSpec> = Vec::new();
+    for s in merged.stages {
+        if s.n_instances <= 1 {
+            stages.push(s);
+            continue;
+        }
+        let k = s.n_instances as u32;
+        let lo = s.lo.max(1) as f64;
+        let hi = s.hi as f64;
+        let ratio = (hi / lo).powf(1.0 / k as f64);
+        let mut cur = s.lo;
+        for j in 0..k {
+            let next = if j == k - 1 {
+                s.hi
+            } else {
+                ((lo * ratio.powi(j as i32 + 1)).round() as u64).clamp(cur + 1, s.hi - 1)
+            };
+            stages.push(StageSpec { lo: cur, hi: next, n_instances: 1 });
+            cur = next;
+        }
+    }
+    // Fix any degenerate ranges produced by clamping.
+    let mut cleaned: Vec<StageSpec> = Vec::new();
+    for s in stages {
+        if s.lo >= s.hi {
+            if let Some(last) = cleaned.last_mut() {
+                last.n_instances += s.n_instances;
+            }
+        } else {
+            cleaned.push(s);
+        }
+    }
+    let q = planner.pipeline_quality(hist, &Pipeline { stages: cleaned.clone(), predicted_quality: 0.0 });
+    Pipeline { stages: cleaned, predicted_quality: q }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::MigrationCost;
+    use crate::qoe::QoeModel;
+    use crate::workload::{generate, ShareGptLike};
+
+    fn setup() -> (Planner, LengthHistogram) {
+        let qoe = QoeModel::new([5e-3, 2e-4, 1e-6, 1e-11, 2e-6]);
+        let planner = Planner::new(qoe, MigrationCost::free());
+        let reqs = generate(&ShareGptLike::default(), 10.0, 3000, 21);
+        let hist = LengthHistogram::from_requests(&reqs, 131_072);
+        (planner, hist)
+    }
+
+    #[test]
+    fn chain_has_one_instance_per_stage() {
+        let (planner, hist) = setup();
+        let chain = chain_layout(&planner, &hist, 8);
+        assert_eq!(chain.total_instances(), 8);
+        assert!(chain.stages.iter().all(|s| s.n_instances == 1));
+        assert_eq!(chain.stages.len(), 8);
+    }
+
+    #[test]
+    fn chain_covers_full_range_contiguously() {
+        let (planner, hist) = setup();
+        let chain = chain_layout(&planner, &hist, 8);
+        assert_eq!(chain.stages.first().unwrap().lo, 0);
+        assert_eq!(chain.stages.last().unwrap().hi, 131_072);
+        for w in chain.stages.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+            assert!(w[0].lo < w[0].hi);
+        }
+    }
+
+    #[test]
+    fn chain_quality_worse_or_equal_to_planned() {
+        let (planner, hist) = setup();
+        let planned = planner.plan_dp(&hist, 8);
+        let chain = chain_layout(&planner, &hist, 8);
+        let chain_q = planner.pipeline_quality(&hist, &chain);
+        assert!(
+            chain_q >= planned.predicted_quality * 0.999,
+            "chain {} vs planned {}",
+            chain_q,
+            planned.predicted_quality
+        );
+    }
+}

@@ -1,0 +1,142 @@
+//! Dependency-free CLI argument parsing + the `cascade-infer`
+//! subcommands (serve, plan, sim, fit, gen-trace).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positional args and `--key value` / `--flag`
+/// options.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Resolve a scheduler name from the CLI.
+pub fn scheduler_by_name(name: &str) -> Option<crate::cluster::SchedulerKind> {
+    use crate::cluster::SchedulerKind as K;
+    Some(match name.to_ascii_lowercase().as_str() {
+        "cascade" | "cascadeinfer" => K::Cascade,
+        "rr" | "roundrobin" | "vllm" => K::RoundRobin,
+        "sglang" => K::SgLangLike,
+        "llumnix" => K::LlumnixLike,
+        "chain" => K::Chain,
+        "nopipeline" | "flat" => K::NoPipeline,
+        "quantity" => K::CascadeQuantityRefine,
+        "memory" => K::CascadeMemoryRefine,
+        "interstage" => K::CascadeInterStageOnly,
+        "rrintra" => K::CascadeRoundRobinIntra,
+        _ => return None,
+    })
+}
+
+pub const USAGE: &str = "\
+cascade-infer — length-aware MILS scheduling (CascadeInfer reproduction)
+
+USAGE:
+  cascade-infer sim   [--model NAME] [--gpu H20|L40] [--instances N]
+                      [--rate R] [--requests N] [--seed S]
+                      [--scheduler cascade|vllm|sglang|llumnix|chain|...]
+  cascade-infer plan  [--model NAME] [--instances N] [--requests N] [--seed S]
+  cascade-infer fit   [--model NAME] [--gpu H20|L40]
+  cascade-infer gen-trace --out FILE [--rate R] [--requests N] [--seed S]
+  cascade-infer serve [--artifacts DIR] [--requests N]
+
+`sim` runs a full multi-instance simulation and prints the paper's
+metrics; `serve` drives the real PJRT-served model end to end.";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_positional_options_flags() {
+        let a = Args::parse(
+            ["sim", "--rate", "8.5", "--verbose", "--seed=7"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(a.positional, vec!["sim"]);
+        assert_eq!(a.get_f64("rate", 0.0), 8.5);
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(["--fast"].iter().map(|s| s.to_string()));
+        assert!(a.has_flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(std::iter::empty());
+        assert_eq!(a.get_usize("instances", 16), 16);
+        assert_eq!(a.get_or("model", "Llama-3.2-3B"), "Llama-3.2-3B");
+    }
+
+    #[test]
+    fn scheduler_names_resolve() {
+        use crate::cluster::SchedulerKind as K;
+        assert_eq!(scheduler_by_name("cascade"), Some(K::Cascade));
+        assert_eq!(scheduler_by_name("VLLM"), Some(K::RoundRobin));
+        assert_eq!(scheduler_by_name("llumnix"), Some(K::LlumnixLike));
+        assert_eq!(scheduler_by_name("bogus"), None);
+    }
+}

@@ -1,0 +1,1130 @@
+//! MILS cluster — the discrete-event testbed every figure runs on.
+//!
+//! Ties together the substrate: N continuous-batching engine instances
+//! ([`crate::engine`]) priced by the attention cost model, organised by
+//! a scheduler policy.  For CascadeInfer the instances are partitioned
+//! into length-specialized stages (§4.2), gossip load reports (§3.2),
+//! refine stage boundaries (§4.3), and migrate sequences through the
+//! decentralized bid-ask protocol (§4.4) with live KV migration (§5).
+//! Baseline policies (round-robin, Llumnix-like, chain, no-pipeline,
+//! naive refinement) share the same event loop so comparisons are
+//! apples-to-apples.
+
+pub mod policy;
+
+pub use policy::{BalancePolicy, Layout, RefinePolicy, SchedulerKind};
+
+use crate::baselines;
+use crate::coordinator::balance::{Ask, Bid, BidAskScheduler, PendingPull, PullAction};
+use crate::coordinator::migrate::MigrationManager;
+use crate::coordinator::plan::{MigrationCost, Pipeline, Planner};
+use crate::coordinator::refine::{naive, RangeRefiner, RefineConfig};
+use crate::coordinator::LoadTracker;
+use crate::engine::{CostModelBackend, Engine, EngineConfig, ExecBackend, Phase, Sequence};
+use crate::gpu::{GpuProfile, Topology};
+use crate::kernelmodel::AttentionModel;
+use crate::metrics::{InstanceCounters, Report, RequestRecord};
+use crate::models::ModelProfile;
+use crate::qoe::{self, QoeModel};
+use crate::sim::EventQueue;
+use crate::workload::{LengthHistogram, Request};
+use crate::{InstanceId, RequestId, Time, Tokens};
+
+/// Cluster-level configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub gpu: GpuProfile,
+    pub model: ModelProfile,
+    pub n_instances: usize,
+    pub scheduler: SchedulerKind,
+    /// Engine knobs; the default KV capacity is replaced by the value
+    /// derived from the GPU memory budget.
+    pub engine: EngineConfig,
+    /// Relative engine speed (1.0 = vLLM-class; Llumnix's newer engine
+    /// runs faster — §6.2 Fig. 8).
+    pub engine_speed: f64,
+    pub gossip_interval: Time,
+    pub refine_interval: Time,
+    /// Periodic full re-planning interval (§4.2 "periodically
+    /// thereafter"); 0 disables.
+    pub replan_interval: Time,
+    /// §4.4: trigger intra-stage rebalancing when an instance's load is
+    /// this fraction above the stage average.
+    pub overload_threshold: f64,
+    pub seed: u64,
+    /// How many head-of-trace requests feed the offline stage planner.
+    pub plan_sample: usize,
+    pub max_len: Tokens,
+    /// Bypass planning with an explicit layout (ablation experiments,
+    /// e.g. the paper's forced 4-stage x 4-instance Fig. 16 pipeline).
+    /// Disables periodic re-planning.
+    pub forced_pipeline: Option<Pipeline>,
+}
+
+impl ClusterConfig {
+    pub fn new(
+        gpu: GpuProfile,
+        model: ModelProfile,
+        n_instances: usize,
+        scheduler: SchedulerKind,
+    ) -> Self {
+        Self {
+            gpu,
+            model,
+            n_instances,
+            scheduler,
+            engine: EngineConfig::default(),
+            engine_speed: 1.0,
+            gossip_interval: 0.05,
+            refine_interval: 5.0,
+            replan_interval: 10.0,
+            overload_threshold: 0.25,
+            seed: 42,
+            plan_sample: 2000,
+            max_len: 131_072,
+            forced_pipeline: None,
+        }
+    }
+
+    fn engine_config(&self) -> EngineConfig {
+        let mut e = self.engine;
+        if e.kv_capacity_tokens == EngineConfig::default().kv_capacity_tokens {
+            let budget = self.model.kv_budget_bytes(self.gpu.mem_bytes, 0.9);
+            e.kv_capacity_tokens = self.model.kv_capacity_tokens(budget).max(1024);
+        }
+        e
+    }
+}
+
+/// Speed-scaled cost backend (models newer/slower engine runtimes).
+#[derive(Debug, Clone, Copy)]
+pub struct ScaledBackend {
+    inner: CostModelBackend,
+    speed: f64,
+}
+
+impl ExecBackend for ScaledBackend {
+    fn prefill_cost(&self, chunks: &[(Tokens, Tokens)]) -> Time {
+        self.inner.prefill_cost(chunks) / self.speed
+    }
+
+    fn decode_cost(&self, lens: &[Tokens]) -> Time {
+        self.inner.decode_cost(lens) / self.speed
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Event {
+    Arrival(Request),
+    /// Instance finished one engine iteration.
+    StepDone(InstanceId),
+    /// Periodic load gossip.
+    Gossip,
+    /// Periodic stage-range refinement.
+    Refine,
+    /// Periodic full pipeline re-planning (§4.2).
+    Replan,
+    /// Periodic Llumnix-style rebalance check (baseline only).
+    BaselineRebalance,
+    /// KV transfer completed.
+    MigrationDone { request: RequestId, from: InstanceId, to: InstanceId },
+    /// §4.4 asking phase: an Ask reaches a candidate receiver.
+    AskDelivered { receiver: InstanceId, ask: Ask },
+    /// §4.4 bidding phase: a Bid reaches the asking sender.
+    BidDelivered { sender: InstanceId, bid: Bid },
+    /// §4.4 confirm: ownership handover reaches the chosen receiver.
+    ConfirmDelivered { receiver: InstanceId, pull: PendingPull },
+    /// Receiver drains its priority queue (starts actual transfers).
+    PullAttempt { receiver: InstanceId },
+    /// Starvation escalation reaches the sender (§4.4).
+    StarveNotice { sender: InstanceId, pull: PendingPull, receiver: InstanceId },
+}
+
+/// Run statistics beyond the per-request report.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub migrations: u64,
+    pub migration_tokens: Tokens,
+    pub migrations_skipped: u64,
+    pub preemptions: u64,
+    pub refinements: u64,
+    pub final_boundaries: Vec<Tokens>,
+    /// Per-instance output tokens (Fig. 16).
+    pub counters: InstanceCounters,
+    /// stage -> member instances.
+    pub stages: Vec<Vec<InstanceId>>,
+    /// Batch length snapshots: (sim progress fraction, lens) — Fig. 1.
+    pub batch_snapshots: Vec<(f64, Vec<Tokens>)>,
+}
+
+/// The cluster simulator.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    engines: Vec<Engine<ScaledBackend>>,
+    trackers: Vec<LoadTracker>,
+    busy: Vec<bool>,
+    /// Pipeline stage structure (single stage for flat baselines).
+    pub pipeline: Pipeline,
+    stage_of: Vec<usize>,
+    stages: Vec<Vec<InstanceId>>,
+    refiners: Vec<RangeRefiner>,
+    topology: Topology,
+    migration: MigrationManager,
+    /// Requests currently mid-transfer.
+    in_flight: std::collections::HashSet<RequestId>,
+    events: EventQueue<Event>,
+    records: Vec<RequestRecord>,
+    pub stats: RunStats,
+    qoe: QoeModel,
+    rr_counter: usize,
+    n_requests_total: usize,
+    snapshot_marks: Vec<f64>,
+    /// Last intra-stage offer time per instance (rebalance hysteresis).
+    last_offer: Vec<Time>,
+    /// Planner kept for periodic re-planning.
+    planner: Planner,
+    /// Failed-handover retry gate: request -> earliest next attempt.
+    retry_after: std::collections::HashMap<RequestId, Time>,
+    /// Per-instance bid-ask state machines (sender book + receiver
+    /// priority queue + starvation accounting).
+    schedulers: Vec<BidAskScheduler>,
+    /// Open offers: request -> (sender, seq_len at offer, sender load).
+    offers: std::collections::HashMap<RequestId, (InstanceId, Tokens, Tokens)>,
+    /// Starvation promises per sender: (pull, receiver) to send
+    /// immediately after the current transmission completes.
+    promises: std::collections::HashMap<InstanceId, Vec<(PendingPull, InstanceId)>>,
+    /// (input_len, final_len) of recently completed requests — the
+    /// workload statistics the periodic re-plan consumes.
+    observed: Vec<(Tokens, Tokens)>,
+    pub replans: u64,
+}
+
+impl Cluster {
+    /// Build a cluster for `cfg`, planning the pipeline from
+    /// `plan_trace` (pass the workload itself or a historical slice).
+    pub fn new(cfg: ClusterConfig, plan_trace: &[Request]) -> Self {
+        let am = AttentionModel::new(cfg.gpu, cfg.model);
+        let (qoe_model, _) =
+            qoe::profile_and_fit(&am, 64, cfg.max_len, cfg.engine.max_batch.min(512));
+        let e = cfg.n_instances;
+
+        // Build the stage layout per the scheduler policy.
+        let sample = &plan_trace[..plan_trace.len().min(cfg.plan_sample)];
+        let hist = LengthHistogram::from_requests(sample, cfg.max_len);
+        let topology = Topology::sequential(e, 8, crate::gpu::LinkKind::NvLink);
+        let mig_cost = MigrationCost::new(
+            cfg.model.kv_bytes_per_token() as f64,
+            topology.intra_node.bytes_per_s(),
+        );
+        let planner = Planner::new(qoe_model, mig_cost);
+        let pipeline = match (&cfg.forced_pipeline, cfg.scheduler.layout()) {
+            (Some(p), _) => {
+                assert_eq!(p.total_instances(), e, "forced pipeline must use all instances");
+                p.clone()
+            }
+            (None, Layout::Planned) => planner.plan_dp(&hist, e),
+            (None, Layout::Chain) => baselines::chain_layout(&planner, &hist, e),
+            (None, Layout::Flat) => Pipeline::no_pipeline(e, cfg.max_len),
+        };
+
+        // Assign instances to stages contiguously (co-locates adjacent
+        // stages on nodes — the §5 placement optimization).
+        let mut stage_of = Vec::with_capacity(e);
+        let mut stages: Vec<Vec<InstanceId>> = Vec::new();
+        for spec in pipeline.stages.iter() {
+            let mut members = Vec::new();
+            for _ in 0..spec.n_instances {
+                members.push(stage_of.len());
+                stage_of.push(stages.len());
+            }
+            stages.push(members);
+        }
+
+        let engine_cfg = cfg.engine_config();
+        let backend = ScaledBackend { inner: CostModelBackend::new(am), speed: cfg.engine_speed };
+        let engines: Vec<Engine<ScaledBackend>> =
+            (0..e).map(|_| Engine::new(engine_cfg, backend)).collect();
+        let trackers: Vec<LoadTracker> = (0..e).map(|i| LoadTracker::new(i, 10.0)).collect();
+
+        // One refiner per stage boundary, initialised from the plan.
+        let refiners: Vec<RangeRefiner> = pipeline
+            .boundaries()
+            .iter()
+            .map(|&b| RangeRefiner::new(qoe_model, b, RefineConfig::default()))
+            .collect();
+
+        let migration = MigrationManager::new(cfg.model.kv_bytes_per_token() as f64);
+        let stats = RunStats { stages: stages.clone(), ..Default::default() };
+
+        Self {
+            cfg,
+            engines,
+            trackers,
+            busy: vec![false; e],
+            pipeline,
+            stage_of,
+            stages,
+            refiners,
+            topology,
+            migration,
+            in_flight: Default::default(),
+            events: EventQueue::new(),
+            records: Vec::new(),
+            stats,
+            qoe: qoe_model,
+            rr_counter: 0,
+            n_requests_total: 0,
+            snapshot_marks: vec![0.2, 0.4, 0.6, 0.8],
+            last_offer: vec![f64::NEG_INFINITY; e],
+            planner,
+            retry_after: Default::default(),
+            schedulers: (0..e).map(|i| BidAskScheduler::new(i, 4)).collect(),
+            offers: Default::default(),
+            promises: Default::default(),
+            observed: Vec::new(),
+            replans: 0,
+        }
+    }
+
+    /// Current stage ranges (after refinement).
+    pub fn stage_ranges(&self) -> Vec<(Tokens, Tokens)> {
+        let mut out = Vec::new();
+        let mut lo = 0;
+        for i in 0..self.pipeline.stages.len() {
+            let hi = if i < self.refiners.len() {
+                self.refiners[i].boundary
+            } else {
+                self.cfg.max_len
+            };
+            out.push((lo, hi));
+            lo = hi;
+        }
+        out
+    }
+
+    fn stage_for_len(&self, len: Tokens) -> usize {
+        let ranges = self.stage_ranges();
+        for (i, &(_, hi)) in ranges.iter().enumerate() {
+            if len < hi {
+                return i;
+            }
+        }
+        ranges.len() - 1
+    }
+
+    /// Run the full workload; returns the report and run stats.
+    pub fn run(mut self, requests: &[Request]) -> (Report, RunStats) {
+        self.n_requests_total = requests.len();
+        for r in requests {
+            self.events.schedule(r.arrival, Event::Arrival(*r));
+        }
+        if self.cfg.gossip_interval > 0.0 && self.cfg.scheduler.uses_gossip() {
+            self.events.schedule(self.cfg.gossip_interval, Event::Gossip);
+        }
+        if self.cfg.refine_interval > 0.0
+            && self.cfg.scheduler.refine_policy() != RefinePolicy::Off
+        {
+            self.events.schedule(self.cfg.refine_interval, Event::Refine);
+        }
+        if self.cfg.scheduler == SchedulerKind::LlumnixLike {
+            self.events.schedule(0.25, Event::BaselineRebalance);
+        }
+        if self.cfg.replan_interval > 0.0
+            && self.cfg.scheduler.layout() == Layout::Planned
+            && self.cfg.scheduler.is_cascade()
+            && self.cfg.forced_pipeline.is_none()
+        {
+            self.events.schedule(self.cfg.replan_interval, Event::Replan);
+        }
+
+        let mut guard: u64 = 0;
+        while let Some((now, ev)) = self.events.pop() {
+            guard += 1;
+            assert!(guard < 500_000_000, "cluster event loop runaway");
+            match ev {
+                Event::Arrival(req) => self.on_arrival(now, req),
+                Event::StepDone(i) => self.on_step_done(now, i),
+                Event::Gossip => self.on_gossip(now),
+                Event::Refine => self.on_refine(now),
+                Event::BaselineRebalance => self.on_baseline_rebalance(now),
+                Event::Replan => self.on_replan(now),
+                Event::MigrationDone { request, from, to } => {
+                    self.on_migration_done(now, request, from, to)
+                }
+                Event::AskDelivered { receiver, ask } => self.on_ask(now, receiver, ask),
+                Event::BidDelivered { sender, bid } => self.on_bid(now, sender, bid),
+                Event::ConfirmDelivered { receiver, pull } => {
+                    self.on_confirm(now, receiver, pull)
+                }
+                Event::PullAttempt { receiver } => self.on_pull(now, receiver),
+                Event::StarveNotice { sender, pull, receiver } => {
+                    self.on_starve(now, sender, pull, receiver)
+                }
+            }
+            // Stop once all requests completed and only periodic timers
+            // remain in the queue.
+            if self.records.len() >= self.n_requests_total
+                && !self.engines.iter().any(|e| e.has_work())
+                && self.in_flight.is_empty()
+            {
+                break;
+            }
+        }
+        self.stats.final_boundaries = self.refiners.iter().map(|r| r.boundary).collect();
+        (Report::from_records(std::mem::take(&mut self.records)), self.stats)
+    }
+
+    // ----- event handlers ---------------------------------------------
+
+    fn on_arrival(&mut self, now: Time, req: Request) {
+        let target = match self.cfg.scheduler {
+            SchedulerKind::RoundRobin | SchedulerKind::SgLangLike => {
+                self.rr_counter += 1;
+                (self.rr_counter - 1) % self.engines.len()
+            }
+            SchedulerKind::LlumnixLike => {
+                // Load-aware, length-agnostic dispatch: least memory
+                // demand (Llumnix's virtual-usage heuristic, simplified).
+                (0..self.engines.len())
+                    .min_by(|&a, &b| {
+                        self.engines[a]
+                            .memory_demand()
+                            .partial_cmp(&self.engines[b].memory_demand())
+                            .unwrap()
+                    })
+                    .unwrap()
+            }
+            _ => {
+                // CascadeInfer: earliest stage covering the prompt
+                // length (§3.2); within the stage, least-loaded member
+                // — except under the Fig. 16 round-robin ablation,
+                // which dispatches regardless of instance load.
+                let s = self.stage_for_len(req.input_len);
+                if self.cfg.scheduler.balance_policy() == BalancePolicy::RoundRobinIntra {
+                    self.rr_counter += 1;
+                    self.stages[s][(self.rr_counter - 1) % self.stages[s].len()]
+                } else {
+                    *self.stages[s]
+                        .iter()
+                        .min_by_key(|&&i| self.engines[i].token_load() + self.inbound_tokens(i))
+                        .expect("stage has members")
+                }
+            }
+        };
+        self.engines[target].submit(req);
+        self.kick(now, target);
+    }
+
+    fn kick(&mut self, now: Time, i: InstanceId) {
+        if self.busy[i] || !self.engines[i].has_work() {
+            return;
+        }
+        let outcome = self.engines[i].step(now);
+        if outcome.duration <= 0.0 {
+            // Queued-but-unadmittable work (e.g. memory full); it will
+            // be re-kicked when something frees.
+            return;
+        }
+        self.busy[i] = true;
+        self.stats.preemptions += outcome.preempted;
+        let end = now + outcome.duration;
+        self.events.schedule(end, Event::StepDone(i));
+        // Completions carry their end-of-iteration timestamps already.
+        for rec in outcome.completed {
+            self.observed.push((rec.input_len, rec.input_len + rec.output_len));
+            self.records.push(rec);
+        }
+        self.stats.counters.add(i, outcome.tokens_emitted);
+        self.trackers[i].observe_tokens(end, outcome.tokens_emitted);
+    }
+
+    fn on_step_done(&mut self, now: Time, i: InstanceId) {
+        self.busy[i] = false;
+        // Record batch composition for trackers + Fig. 1 snapshots.
+        let rows: Vec<(Tokens, Tokens)> = self.engines[i]
+            .running()
+            .iter()
+            .map(|s| (s.req.input_len, s.current_len()))
+            .collect();
+        self.trackers[i].observe_batch(now, &rows);
+        self.maybe_snapshot(&rows);
+
+        if self.cfg.scheduler.is_cascade() {
+            self.cascade_post_step(now, i);
+        }
+        self.kick(now, i);
+    }
+
+    fn maybe_snapshot(&mut self, rows: &[(Tokens, Tokens)]) {
+        if rows.is_empty() || self.n_requests_total == 0 {
+            return;
+        }
+        let progress = self.records.len() as f64 / self.n_requests_total as f64;
+        if let Some(pos) =
+            self.snapshot_marks.iter().position(|&m| (progress - m).abs() < 0.01)
+        {
+            let mark = self.snapshot_marks[pos];
+            self.stats
+                .batch_snapshots
+                .push((mark, rows.iter().map(|&(_, l)| l).collect()));
+            // Cap snapshots per mark so memory stays bounded.
+            let at_mark =
+                self.stats.batch_snapshots.iter().filter(|(m, _)| *m == mark).count();
+            if at_mark >= 64 {
+                self.snapshot_marks.remove(pos);
+            }
+        }
+    }
+
+    /// CascadeInfer per-iteration coordination: hand over outgrown
+    /// sequences to the next stage, rebalance within the stage.
+    fn cascade_post_step(&mut self, now: Time, i: InstanceId) {
+        let stage = self.stage_of[i];
+        let ranges = self.stage_ranges();
+        let (_, hi) = ranges[stage];
+        let last_stage = stage + 1 >= self.stages.len();
+
+        // --- Inter-stage handover: sequences that outgrew the range.
+        if !last_stage {
+            let outgrown: Vec<(RequestId, Tokens)> = self.engines[i]
+                .running()
+                .iter()
+                .filter(|s| {
+                    s.phase == Phase::Decoding
+                        && s.current_len() >= hi
+                        && !self.migration.is_migrating(s.req.id)
+                        && s.remaining() > 8 // not worth moving a nearly-done seq
+                })
+                .map(|s| (s.req.id, s.current_len()))
+                .collect();
+            for (rid, len) in outgrown {
+                let next_stage =
+                    self.stage_for_len(len).max(stage + 1).min(self.stages.len() - 1);
+                let candidates = self.stages[next_stage].clone();
+                self.bid_ask_migrate(now, i, rid, len, &candidates);
+            }
+        }
+
+        // --- Intra-stage rebalance: am I an overloaded outlier?
+        // Hysteresis: one outstanding offer per instance per cooldown
+        // window, so a persistent imbalance migrates a few sequences,
+        // not a stampede (§4.4's trigger is an *outlier* condition,
+        // re-evaluated after the stage settles).
+        const OFFER_COOLDOWN: Time = 0.5;
+        if self.cfg.scheduler.balance_policy() == BalancePolicy::Full
+            && now - self.last_offer[i] >= OFFER_COOLDOWN
+        {
+            let my_load = self.engines[i].token_load();
+            if self.trackers[i].is_overloaded(now, my_load, self.cfg.overload_threshold, 1.0) {
+                self.last_offer[i] = now;
+                // Offer the most demanding decoding sequence to peers.
+                let peers: Vec<InstanceId> =
+                    self.stages[stage].iter().copied().filter(|&p| p != i).collect();
+                if let Some((rid, len)) = self.engines[i]
+                    .running()
+                    .iter()
+                    .filter(|s| {
+                        s.phase == Phase::Decoding
+                            && !self.migration.is_migrating(s.req.id)
+                            && s.remaining() > 16
+                    })
+                    .max_by_key(|s| s.current_len())
+                    .map(|s| (s.req.id, s.current_len()))
+                {
+                    self.bid_ask_migrate(now, i, rid, len, &peers);
+                }
+            }
+        }
+    }
+
+    /// Run the bid-ask selection over `candidates` and start the KV
+    /// transfer to the winner (§4.4 + §5).
+    fn bid_ask_migrate(
+        &mut self,
+        now: Time,
+        from: InstanceId,
+        request: RequestId,
+        seq_len: Tokens,
+        candidates: &[InstanceId],
+    ) {
+        if candidates.is_empty() || self.in_flight.contains(&request) {
+            return;
+        }
+        // Back off after a failed attempt (no dest slot / at the
+        // concurrency cap) instead of retrying every iteration.
+        if self.retry_after.get(&request).map(|&t| now < t).unwrap_or(false) {
+            return;
+        }
+        if self.offers.contains_key(&request) || self.schedulers[from].sender.is_open(request) {
+            return; // negotiation already in flight
+        }
+        if self.cfg.scheduler.balance_policy() == BalancePolicy::RoundRobinIntra {
+            // Ablation: skip the negotiation, rotate receivers.
+            self.rr_counter += 1;
+            let to = candidates[(self.rr_counter - 1) % candidates.len()];
+            if to != from {
+                self.start_transfer(now, request, from, to, seq_len);
+            }
+            return;
+        }
+        // --- Asking phase: notify every candidate receiver (§4.4).
+        let sender_load = self.engines[from].token_load();
+        let targets: Vec<InstanceId> =
+            candidates.iter().copied().filter(|&c| c != from).collect();
+        if targets.is_empty() {
+            return;
+        }
+        self.schedulers[from].sender.open(request, targets.len());
+        self.offers.insert(request, (from, seq_len, sender_load));
+        let ask = Ask { sender: from, request, seq_len, sender_load };
+        for c in targets {
+            let latency = self.topology.link_between(from, c).latency_s();
+            self.events
+                .schedule(now + latency, Event::AskDelivered { receiver: c, ask });
+        }
+    }
+
+    /// Bidding phase: the receiver replies with its load and earliest
+    /// transmission start (buffered length / measured throughput).
+    fn on_ask(&mut self, now: Time, receiver: InstanceId, ask: Ask) {
+        let buffered =
+            self.schedulers[receiver].receiver.buffered_len() + self.inbound_tokens(receiver);
+        // Receivers reply between engine iterations; model that
+        // scheduling delay with a deterministic per-(request, receiver)
+        // hash so first-reply selection doesn't degenerate into
+        // always-lowest-id.
+        let jitter = {
+            let mut h = ask
+                .request
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(receiver as u64);
+            h ^= h >> 33;
+            h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+            (h >> 40) as f64 / (1u64 << 24) as f64 * 2.0e-3
+        };
+        let latency = self.topology.link_between(ask.sender, receiver).latency_s();
+        let reply_at = now + latency + jitter;
+        let bid = Bid {
+            receiver,
+            request: ask.request,
+            load: self.engines[receiver].token_load() + buffered,
+            earliest_start: now + buffered as f64 / self.trackers[receiver].throughput().max(1.0),
+            reply_at,
+        };
+        self.events.schedule(reply_at, Event::BidDelivered { sender: ask.sender, bid });
+    }
+
+    /// All bids in: run the §4.4 selection (drop high-load half, keep
+    /// 3 earliest starts, first reply wins) and confirm the handover.
+    fn on_bid(&mut self, now: Time, sender: InstanceId, bid: Bid) {
+        let request = bid.request;
+        let Some(chosen) = self.schedulers[sender].sender.record(bid) else {
+            return; // still collecting
+        };
+        let Some(&(from, seq_len, sender_load)) = self.offers.get(&request) else {
+            return;
+        };
+        debug_assert_eq!(from, sender);
+        let pull = PendingPull {
+            sender,
+            request,
+            seq_len,
+            priority: sender_load,
+            failed_attempts: 0,
+        };
+        let latency = self.topology.link_between(sender, chosen).latency_s();
+        self.events
+            .schedule(now + latency, Event::ConfirmDelivered { receiver: chosen, pull });
+    }
+
+    /// Confirm: the receiver queues the pull by sender-load priority
+    /// and drives its transfer queue.
+    fn on_confirm(&mut self, now: Time, receiver: InstanceId, pull: PendingPull) {
+        self.schedulers[receiver].receiver.push(pull);
+        self.events.schedule(now, Event::PullAttempt { receiver });
+    }
+
+    /// Receiver-side pull loop: dequeue the highest-priority request
+    /// whose sender is not already transmitting; escalate starvation.
+    fn on_pull(&mut self, now: Time, receiver: InstanceId) {
+        if self.migration.at_capacity(receiver) {
+            if !self.schedulers[receiver].receiver.is_empty() {
+                self.events.schedule(now + 0.05, Event::PullAttempt { receiver });
+            }
+            return;
+        }
+        let migration = &self.migration;
+        let action = self.schedulers[receiver]
+            .receiver
+            .next_action(|sndr| migration.sender_busy(sndr));
+        match action {
+            PullAction::Pull(p) => {
+                self.try_pull(now, receiver, p);
+                if !self.schedulers[receiver].receiver.is_empty() {
+                    self.events.schedule(now + 0.01, Event::PullAttempt { receiver });
+                }
+            }
+            PullAction::Starved(p) => {
+                // Notify the sender; the receiver waits for this pull
+                // instead of skipping further (§4.4).
+                let latency = self.topology.link_between(p.sender, receiver).latency_s();
+                self.events.schedule(
+                    now + latency,
+                    Event::StarveNotice { sender: p.sender, pull: p, receiver },
+                );
+            }
+            PullAction::Idle => {}
+        }
+    }
+
+    /// Start the actual KV transfer for a granted pull.
+    fn try_pull(&mut self, now: Time, receiver: InstanceId, p: PendingPull) {
+        let request = p.request;
+        // The sequence may have finished or moved since the offer.
+        let live_len = self.engines[p.sender]
+            .running()
+            .iter()
+            .find(|s| s.req.id == request)
+            .map(|s| s.current_len());
+        let Some(len) = live_len else {
+            self.offers.remove(&request);
+            return;
+        };
+        if self.migration.is_migrating(request) || self.in_flight.contains(&request) {
+            return;
+        }
+        self.start_transfer(now, request, p.sender, receiver, len);
+    }
+
+    /// Sender promised to transmit `pull` right after its current
+    /// transfer; remember the promise.
+    fn on_starve(&mut self, _now: Time, sender: InstanceId, pull: PendingPull, receiver: InstanceId) {
+        self.promises.entry(sender).or_default().push((pull, receiver));
+    }
+
+    /// Common transfer start: §5 flow control (idle-slot check,
+    /// concurrency cap) + live-migration scheduling.
+    fn start_transfer(
+        &mut self,
+        now: Time,
+        request: RequestId,
+        from: InstanceId,
+        to: InstanceId,
+        seq_len: Tokens,
+    ) {
+        let link = self.topology.link_between(from, to);
+        let decode_rate =
+            self.trackers[from].throughput() / self.engines[from].n_running().max(1) as f64;
+        let dest_free = self.engines[to].kv().can_allocate(seq_len + 64);
+        if let Some(t) = self
+            .migration
+            .try_start(now, request, from, to, seq_len, link, decode_rate, dest_free)
+        {
+            self.in_flight.insert(request);
+            self.retry_after.remove(&request);
+            self.offers.remove(&request);
+            self.events
+                .schedule(t.finish_at, Event::MigrationDone { request, from, to });
+        } else {
+            self.stats.migrations_skipped += 1;
+            self.offers.remove(&request);
+            self.retry_after.insert(request, now + 0.25);
+        }
+    }
+
+    /// Tokens already inbound to instance `i` from active transfers —
+    /// the receiver's "buffered length" in the bid. Counting in-flight
+    /// arrivals prevents the herd effect where every sender picks the
+    /// same momentarily-least-loaded receiver.
+    fn inbound_tokens(&self, i: InstanceId) -> Tokens {
+        self.migration.inbound_tokens(i)
+    }
+
+    fn on_migration_done(
+        &mut self,
+        now: Time,
+        request: RequestId,
+        from: InstanceId,
+        to: InstanceId,
+    ) {
+        self.in_flight.remove(&request);
+        let Some(t) = self.migration.finish(request) else { return };
+        // The sequence kept decoding on the source during the transfer
+        // (live migration). Move it now if it still exists.
+        if let Some(seq) = self.engines[from].extract(request) {
+            if self.engines[to].inject(seq) {
+                self.stats.migrations += 1;
+                self.stats.migration_tokens += t.tokens_moved;
+                self.kick(now, to);
+            } else {
+                // Destination filled up mid-flight: keep on source
+                // (§5: requests exceeding the cap keep running there).
+                let back = self.engines[from].inject(seq);
+                debug_assert!(back, "source must re-accept its own sequence");
+                self.stats.migrations_skipped += 1;
+            }
+        }
+        self.kick(now, from);
+        // Starvation promises: the sender transmits the starved pull
+        // immediately after completing its current transfer (§4.4).
+        if let Some(mut list) = self.promises.remove(&from) {
+            if let Some((p, receiver)) = list.pop() {
+                self.try_pull(now, receiver, p);
+            }
+            if !list.is_empty() {
+                self.promises.insert(from, list);
+            }
+        }
+    }
+
+    /// Periodic full pipeline re-planning (§4.2): rebuild the length
+    /// histogram from the last window's completed requests, re-run the
+    /// DP, and remap instance membership.  Live sequences stay where
+    /// they are; anything now out of range migrates through the normal
+    /// handover path, so replanning never disrupts ongoing decoding.
+    fn on_replan(&mut self, now: Time) {
+        // Need a meaningful sample (low-traffic freeze, like §4.3).
+        if self.observed.len() >= 64 {
+            let mut hist = LengthHistogram::new(LengthHistogram::exponential_bounds(self.cfg.max_len));
+            for &(i, f) in self.observed.iter().rev().take(4000) {
+                hist.push(i, f);
+            }
+            // Include live sequences so long-runners are represented.
+            for e in &self.engines {
+                for sq in e.running() {
+                    hist.push(sq.req.input_len, sq.current_len());
+                }
+            }
+            let pipe = self.planner.plan_dp(&hist, self.cfg.n_instances);
+            if pipe.stages.len() != self.stages.len()
+                || pipe
+                    .stages
+                    .iter()
+                    .zip(self.pipeline.stages.iter())
+                    .any(|(a, b)| a.n_instances != b.n_instances)
+            {
+                // Remap membership contiguously (keeps the §5 placement
+                // property) and rebuild refiners from the new plan.
+                let mut stage_of = Vec::with_capacity(self.cfg.n_instances);
+                let mut stages: Vec<Vec<InstanceId>> = Vec::new();
+                for spec in pipe.stages.iter() {
+                    let mut members = Vec::new();
+                    for _ in 0..spec.n_instances {
+                        members.push(stage_of.len());
+                        stage_of.push(stages.len());
+                    }
+                    stages.push(members);
+                }
+                self.refiners = pipe
+                    .boundaries()
+                    .iter()
+                    .map(|&b| RangeRefiner::new(self.qoe, b, RefineConfig::default()))
+                    .collect();
+                self.stage_of = stage_of;
+                self.stats.stages = stages.clone();
+                self.stages = stages;
+                self.pipeline = pipe;
+                self.replans += 1;
+            }
+        }
+        self.events.schedule(now + self.cfg.replan_interval, Event::Replan);
+    }
+
+    fn on_gossip(&mut self, now: Time) {
+        // Each instance reports to same-stage peers and to the previous
+        // stage (its upstream feeders) — §3.2 steps 1-2.
+        let reports: Vec<crate::coordinator::loadtracker::LoadReport> = (0..self.engines.len())
+            .map(|i| crate::coordinator::loadtracker::LoadReport {
+                instance: i,
+                at: now,
+                token_load: self.engines[i].token_load(),
+                n_seqs: self.engines[i].n_running(),
+                memory_demand: self.engines[i].memory_demand(),
+                throughput: self.trackers[i].throughput(),
+            })
+            .collect();
+        for i in 0..self.engines.len() {
+            let s = self.stage_of[i];
+            for &peer in &self.stages[s] {
+                if peer != i {
+                    self.trackers[i].record_peer(reports[peer]);
+                }
+            }
+            if s + 1 < self.stages.len() {
+                for &succ in &self.stages[s + 1] {
+                    self.trackers[i].record_successor(reports[succ]);
+                }
+            }
+        }
+        self.events.schedule(now + self.cfg.gossip_interval, Event::Gossip);
+    }
+
+    fn on_refine(&mut self, now: Time) {
+        self.stats.refinements += 1;
+        let policy = self.cfg.scheduler.refine_policy();
+        let ranges = self.stage_ranges();
+        for b in 0..self.refiners.len() {
+            // Boundary b separates stage b from stage b+1. The local
+            // side enters the split as a *per-instance average* (S4.3
+            // refines an instance's own boundary against the successor
+            // average), so a 15-instance stage does not numerically
+            // swamp a 1-instance successor.
+            let local_union: Vec<(Tokens, Tokens)> = self.stages[b]
+                .iter()
+                .flat_map(|&i| self.engines[i].running().iter())
+                .map(|s| (s.req.input_len, s.current_len()))
+                .collect();
+            let local =
+                RangeRefiner::divide_set(local_union.clone(), self.stages[b].len().max(1));
+            let successors: Vec<Vec<(Tokens, Tokens)>> = self.stages[b + 1]
+                .iter()
+                .map(|&i| {
+                    self.engines[i]
+                        .running()
+                        .iter()
+                        .map(|s| (s.req.input_len, s.current_len()))
+                        .collect()
+                })
+                .collect();
+            match policy {
+                RefinePolicy::Adaptive => {
+                    // Instance-count-weighted variant: stage unions on
+                    // both sides, QoE per Eq. (1) with the even set
+                    // division over each stage's member count.
+                    let succ_union: Vec<(Tokens, Tokens)> =
+                        successors.iter().flatten().copied().collect();
+                    self.refiners[b].refine_weighted(
+                        local_union,
+                        succ_union,
+                        self.stages[b].len(),
+                        self.stages[b + 1].len(),
+                    );
+                }
+                RefinePolicy::Quantity | RefinePolicy::Memory => {
+                    let mut merged: Vec<(Tokens, Tokens)> = local
+                        .iter()
+                        .copied()
+                        .chain(successors.iter().flatten().copied())
+                        .collect();
+                    if merged.len() >= 5 {
+                        merged.sort_by_key(|&(_, l)| l);
+                        let nb = if policy == RefinePolicy::Quantity {
+                            naive::quantity_boundary(&merged)
+                        } else {
+                            naive::memory_boundary(&merged)
+                        };
+                        if let Some(nb) = nb {
+                            self.refiners[b].boundary = nb.max(1);
+                        }
+                    }
+                }
+                RefinePolicy::Off => {}
+            }
+            // Keep boundaries monotone across stages.
+            let lo = ranges[b].0;
+            if self.refiners[b].boundary <= lo {
+                self.refiners[b].boundary = lo + 1;
+            }
+        }
+        for b in 1..self.refiners.len() {
+            if self.refiners[b].boundary <= self.refiners[b - 1].boundary {
+                self.refiners[b].boundary = self.refiners[b - 1].boundary + 1;
+            }
+        }
+        self.events.schedule(now + self.cfg.refine_interval, Event::Refine);
+    }
+
+    /// Llumnix-like periodic rebalancing: move one sequence from the
+    /// most- to the least-memory-loaded instance when the gap is big.
+    /// Length-agnostic — exactly the §2.4 criticism.
+    fn on_baseline_rebalance(&mut self, now: Time) {
+        let (mut hi_i, mut hi_v) = (0, f64::MIN);
+        let (mut lo_i, mut lo_v) = (0, f64::MAX);
+        for i in 0..self.engines.len() {
+            let d = self.engines[i].memory_demand();
+            if d > hi_v {
+                hi_v = d;
+                hi_i = i;
+            }
+            if d < lo_v {
+                lo_v = d;
+                lo_i = i;
+            }
+        }
+        if hi_v - lo_v > 0.2 && hi_i != lo_i {
+            if let Some((rid, len)) = self.engines[hi_i]
+                .running()
+                .iter()
+                .filter(|s| s.phase == Phase::Decoding && !self.migration.is_migrating(s.req.id))
+                .max_by_key(|s| s.req.id)
+                .map(|s| (s.req.id, s.current_len()))
+            {
+                let link = self.topology.link_between(hi_i, lo_i);
+                let decode_rate = self.trackers[hi_i].throughput()
+                    / self.engines[hi_i].n_running().max(1) as f64;
+                let dest_free = self.engines[lo_i].kv().can_allocate(len + 64);
+                if let Some(t) = self
+                    .migration
+                    .try_start(now, rid, hi_i, lo_i, len, link, decode_rate, dest_free)
+                {
+                    self.in_flight.insert(rid);
+                    self.events.schedule(
+                        t.finish_at,
+                        Event::MigrationDone { request: rid, from: hi_i, to: lo_i },
+                    );
+                }
+            }
+        }
+        self.events.schedule(now + 0.25, Event::BaselineRebalance);
+    }
+
+    /// Expose the fitted QoE model (for validation figures).
+    pub fn qoe_model(&self) -> QoeModel {
+        self.qoe
+    }
+
+    /// Per-stage live sequence lengths (testing / figures).
+    pub fn stage_loads(&self) -> Vec<Vec<Tokens>> {
+        self.stages
+            .iter()
+            .map(|members| {
+                members
+                    .iter()
+                    .flat_map(|&i| self.engines[i].running().iter().map(Sequence::current_len))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Convenience: run one (scheduler, workload) experiment end to end.
+pub fn run_experiment(cfg: ClusterConfig, requests: &[Request]) -> (Report, RunStats) {
+    let cluster = Cluster::new(cfg, requests);
+    cluster.run(requests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LLAMA_3B;
+    use crate::workload::{generate, ShareGptLike};
+
+    fn small_cfg(scheduler: SchedulerKind) -> ClusterConfig {
+        let mut cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 4, scheduler);
+        cfg.plan_sample = 500;
+        cfg
+    }
+
+    fn workload(n: usize, rate: f64, seed: u64) -> Vec<Request> {
+        generate(&ShareGptLike::default(), rate, n, seed)
+    }
+
+    #[test]
+    fn all_requests_complete_cascade() {
+        let reqs = workload(200, 20.0, 1);
+        let (report, stats) = run_experiment(small_cfg(SchedulerKind::Cascade), &reqs);
+        assert_eq!(report.records.len(), 200);
+        assert!(report.mean_ttft() > 0.0);
+        assert!(report.throughput_tokens_per_s() > 0.0);
+        assert!(!stats.stages.is_empty());
+    }
+
+    #[test]
+    fn all_requests_complete_baselines() {
+        let reqs = workload(150, 15.0, 2);
+        for k in [
+            SchedulerKind::RoundRobin,
+            SchedulerKind::SgLangLike,
+            SchedulerKind::LlumnixLike,
+            SchedulerKind::Chain,
+            SchedulerKind::NoPipeline,
+        ] {
+            let (report, _) = run_experiment(small_cfg(k), &reqs);
+            assert_eq!(report.records.len(), 150, "{k:?} dropped requests");
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let reqs = workload(100, 10.0, 3);
+        let (r1, s1) = run_experiment(small_cfg(SchedulerKind::Cascade), &reqs);
+        let (r2, s2) = run_experiment(small_cfg(SchedulerKind::Cascade), &reqs);
+        assert_eq!(r1.records.len(), r2.records.len());
+        assert_eq!(s1.migrations, s2.migrations);
+        let t1: f64 = r1.records.iter().map(|r| r.completion).sum();
+        let t2: f64 = r2.records.iter().map(|r| r.completion).sum();
+        assert!((t1 - t2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cascade_pipeline_has_multiple_stages() {
+        let reqs = workload(500, 10.0, 4);
+        let cluster = Cluster::new(small_cfg(SchedulerKind::Cascade), &reqs);
+        assert!(cluster.pipeline.stages.len() > 1, "{:?}", cluster.pipeline.stages);
+        assert_eq!(cluster.pipeline.total_instances(), 4);
+    }
+
+    #[test]
+    fn cascade_migrates_growing_sequences() {
+        // Long outputs force sequences across stage boundaries.
+        let mut reqs = workload(120, 12.0, 5);
+        for r in reqs.iter_mut() {
+            r.output_len = r.output_len.max(1500);
+        }
+        let (report, stats) = run_experiment(small_cfg(SchedulerKind::Cascade), &reqs);
+        assert_eq!(report.records.len(), 120);
+        assert!(stats.migrations > 0, "expected inter-stage handovers: {stats:?}");
+    }
+
+    #[test]
+    fn round_robin_never_migrates() {
+        let reqs = workload(100, 10.0, 6);
+        let (_, stats) = run_experiment(small_cfg(SchedulerKind::RoundRobin), &reqs);
+        assert_eq!(stats.migrations, 0);
+    }
+
+    #[test]
+    fn refinement_updates_boundaries() {
+        let mut cfg = small_cfg(SchedulerKind::Cascade);
+        cfg.refine_interval = 0.5;
+        let reqs = workload(300, 30.0, 7);
+        let cluster = Cluster::new(cfg.clone(), &reqs);
+        let initial = cluster.pipeline.boundaries();
+        let (_, stats) = run_experiment(cfg, &reqs);
+        assert!(stats.refinements > 0);
+        assert_eq!(stats.final_boundaries.len(), initial.len());
+    }
+
+    #[test]
+    fn heavy_load_cascade_not_worse_than_round_robin() {
+        // The headline comparison (Figs. 6-7) at miniature scale.
+        let reqs = workload(400, 40.0, 8);
+        let (cascade, _) = run_experiment(small_cfg(SchedulerKind::Cascade), &reqs);
+        let (rr, _) = run_experiment(small_cfg(SchedulerKind::RoundRobin), &reqs);
+        assert_eq!(cascade.records.len(), rr.records.len());
+        assert!(
+            cascade.mean_tpot() < rr.mean_tpot() * 1.10,
+            "cascade {} vs rr {}",
+            cascade.mean_tpot(),
+            rr.mean_tpot()
+        );
+    }
+
+    #[test]
+    fn fig1_snapshots_collected() {
+        let reqs = workload(300, 25.0, 9);
+        let (_, stats) = run_experiment(small_cfg(SchedulerKind::Cascade), &reqs);
+        assert!(!stats.batch_snapshots.is_empty());
+    }
+
+    #[test]
+    fn stage_ranges_are_monotone_throughout() {
+        let mut cfg = small_cfg(SchedulerKind::Cascade);
+        cfg.refine_interval = 0.3;
+        let reqs = workload(250, 25.0, 10);
+        let (_, stats) = run_experiment(cfg, &reqs);
+        for w in stats.final_boundaries.windows(2) {
+            assert!(w[0] < w[1], "boundaries must stay ordered: {:?}", stats.final_boundaries);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Scheduler policy taxonomy: CascadeInfer, its ablations, and the
+//! §6.1 baselines, expressed as orthogonal (layout, refinement,
+//! balancing) axes so the ablation figures (14–16) toggle exactly one
+//! axis at a time.
+
+/// Stage layout policy (Fig. 14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// §4.2 DP-planned multi-stage pipeline.
+    Planned,
+    /// One instance per stage (the "chain" ablation).
+    Chain,
+    /// All instances in a single stage ("no-pipeline").
+    Flat,
+}
+
+/// Boundary refinement policy (Fig. 15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefinePolicy {
+    /// §4.3 QoE-optimal split with EMA + low-traffic freeze.
+    Adaptive,
+    /// Equalise request counts per stage.
+    Quantity,
+    /// Equalise cached-token memory per stage.
+    Memory,
+    Off,
+}
+
+/// Intra-/inter-stage balancing policy (Fig. 16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BalancePolicy {
+    /// §4.4 bid-ask for both inter-stage handover and intra-stage
+    /// outlier rebalancing.
+    Full,
+    /// Bid-ask on inter-stage handover only.
+    InterStageOnly,
+    /// Round-robin receiver choice (protocol ablation).
+    RoundRobinIntra,
+    Off,
+}
+
+/// Top-level scheduler selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// CascadeInfer: planned layout + adaptive refinement + full bid-ask.
+    Cascade,
+    /// vLLM-style instances behind a round-robin balancer.
+    RoundRobin,
+    /// SGLang-style instances behind a round-robin balancer (different
+    /// engine speed is configured via `ClusterConfig::engine_speed`).
+    SgLangLike,
+    /// Llumnix: load-aware dispatch + length-agnostic rebalancing.
+    LlumnixLike,
+    /// Ablation: chain layout (one instance per stage).
+    Chain,
+    /// Ablation: single stage holding every instance.
+    NoPipeline,
+    /// Ablation: quantity-based refinement.
+    CascadeQuantityRefine,
+    /// Ablation: memory-based refinement.
+    CascadeMemoryRefine,
+    /// Ablation: inter-stage bid-ask only (no intra-stage rebalance).
+    CascadeInterStageOnly,
+    /// Ablation: round-robin receiver selection instead of bid-ask.
+    CascadeRoundRobinIntra,
+}
+
+impl SchedulerKind {
+    pub fn layout(&self) -> Layout {
+        match self {
+            SchedulerKind::Chain => Layout::Chain,
+            SchedulerKind::NoPipeline
+            | SchedulerKind::RoundRobin
+            | SchedulerKind::SgLangLike
+            | SchedulerKind::LlumnixLike => Layout::Flat,
+            _ => Layout::Planned,
+        }
+    }
+
+    pub fn refine_policy(&self) -> RefinePolicy {
+        match self {
+            SchedulerKind::Cascade
+            | SchedulerKind::Chain
+            | SchedulerKind::CascadeInterStageOnly
+            | SchedulerKind::CascadeRoundRobinIntra => RefinePolicy::Adaptive,
+            SchedulerKind::CascadeQuantityRefine => RefinePolicy::Quantity,
+            SchedulerKind::CascadeMemoryRefine => RefinePolicy::Memory,
+            _ => RefinePolicy::Off,
+        }
+    }
+
+    pub fn balance_policy(&self) -> BalancePolicy {
+        match self {
+            SchedulerKind::Cascade
+            | SchedulerKind::Chain
+            | SchedulerKind::NoPipeline
+            | SchedulerKind::CascadeQuantityRefine
+            | SchedulerKind::CascadeMemoryRefine => BalancePolicy::Full,
+            SchedulerKind::CascadeInterStageOnly => BalancePolicy::InterStageOnly,
+            SchedulerKind::CascadeRoundRobinIntra => BalancePolicy::RoundRobinIntra,
+            SchedulerKind::RoundRobin | SchedulerKind::SgLangLike | SchedulerKind::LlumnixLike => {
+                BalancePolicy::Off
+            }
+        }
+    }
+
+    /// Does this policy exchange LoadTracker gossip?
+    pub fn uses_gossip(&self) -> bool {
+        self.is_cascade()
+    }
+
+    /// Any CascadeInfer variant (incl. ablations).
+    pub fn is_cascade(&self) -> bool {
+        !matches!(
+            self,
+            SchedulerKind::RoundRobin | SchedulerKind::SgLangLike | SchedulerKind::LlumnixLike
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Cascade => "CascadeInfer",
+            SchedulerKind::RoundRobin => "vLLM+RR",
+            SchedulerKind::SgLangLike => "SGLang+RR",
+            SchedulerKind::LlumnixLike => "Llumnix",
+            SchedulerKind::Chain => "Chain",
+            SchedulerKind::NoPipeline => "NoPipeline",
+            SchedulerKind::CascadeQuantityRefine => "QuantityRefine",
+            SchedulerKind::CascadeMemoryRefine => "MemoryRefine",
+            SchedulerKind::CascadeInterStageOnly => "InterStageOnly",
+            SchedulerKind::CascadeRoundRobinIntra => "RRIntra",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cascade_axes() {
+        let k = SchedulerKind::Cascade;
+        assert_eq!(k.layout(), Layout::Planned);
+        assert_eq!(k.refine_policy(), RefinePolicy::Adaptive);
+        assert_eq!(k.balance_policy(), BalancePolicy::Full);
+        assert!(k.is_cascade());
+        assert!(k.uses_gossip());
+    }
+
+    #[test]
+    fn baselines_are_flat_and_gossip_free() {
+        for k in [SchedulerKind::RoundRobin, SchedulerKind::SgLangLike, SchedulerKind::LlumnixLike]
+        {
+            assert_eq!(k.layout(), Layout::Flat);
+            assert_eq!(k.balance_policy(), BalancePolicy::Off);
+            assert!(!k.uses_gossip());
+            assert!(!k.is_cascade());
+        }
+    }
+
+    #[test]
+    fn ablations_toggle_one_axis() {
+        assert_eq!(SchedulerKind::Chain.layout(), Layout::Chain);
+        assert_eq!(SchedulerKind::Chain.refine_policy(), RefinePolicy::Adaptive);
+        assert_eq!(SchedulerKind::NoPipeline.layout(), Layout::Flat);
+        assert_eq!(SchedulerKind::CascadeQuantityRefine.refine_policy(), RefinePolicy::Quantity);
+        assert_eq!(SchedulerKind::CascadeMemoryRefine.refine_policy(), RefinePolicy::Memory);
+        assert_eq!(
+            SchedulerKind::CascadeInterStageOnly.balance_policy(),
+            BalancePolicy::InterStageOnly
+        );
+        assert_eq!(
+            SchedulerKind::CascadeRoundRobinIntra.balance_policy(),
+            BalancePolicy::RoundRobinIntra
+        );
+    }
+
+    #[test]
+    fn names_unique() {
+        let all = [
+            SchedulerKind::Cascade,
+            SchedulerKind::RoundRobin,
+            SchedulerKind::SgLangLike,
+            SchedulerKind::LlumnixLike,
+            SchedulerKind::Chain,
+            SchedulerKind::NoPipeline,
+            SchedulerKind::CascadeQuantityRefine,
+            SchedulerKind::CascadeMemoryRefine,
+            SchedulerKind::CascadeInterStageOnly,
+            SchedulerKind::CascadeRoundRobinIntra,
+        ];
+        let mut names: Vec<&str> = all.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
+    }
+}

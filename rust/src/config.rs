@@ -1,0 +1,339 @@
+//! Minimal TOML-subset configuration parser + typed experiment configs.
+//!
+//! The offline vendor set has no `serde`/`toml`, so this module parses
+//! the subset the repo's config files use: `[section]` headers,
+//! `key = value` with string / integer / float / bool / flat arrays,
+//! and `#` comments.  Typed accessors convert into the experiment
+//! structs used by the CLI and examples.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parsed config: section -> key -> value. Keys outside any section
+/// land in the "" section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let lineno = idx + 1;
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            cfg.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self, Box<dyn std::error::Error>> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_int(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn get_float(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn get_float_array(&self, section: &str, key: &str) -> Option<Vec<f64>> {
+        self.get(section, key)?
+            .as_array()?
+            .iter()
+            .map(|v| v.as_float())
+            .collect()
+    }
+}
+
+fn err(line: usize, msg: &str) -> ParseError {
+    ParseError { line, message: msg.to_string() }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value `{s}`")))
+}
+
+/// Split on commas that are not inside quotes.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// Typed experiment configuration assembled from a [`Config`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub model: String,
+    pub gpu: String,
+    pub n_instances: usize,
+    pub rate: f64,
+    pub n_requests: usize,
+    pub seed: u64,
+    pub scheduler: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            model: "Llama-3.2-3B".into(),
+            gpu: "H20".into(),
+            n_instances: 16,
+            rate: 8.0,
+            n_requests: 2000,
+            seed: 42,
+            scheduler: "cascade".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_config(cfg: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            model: cfg.get_str("experiment", "model", &d.model),
+            gpu: cfg.get_str("experiment", "gpu", &d.gpu),
+            n_instances: cfg.get_int("experiment", "instances", d.n_instances as i64) as usize,
+            rate: cfg.get_float("experiment", "rate", d.rate),
+            n_requests: cfg.get_int("experiment", "requests", d.n_requests as i64) as usize,
+            seed: cfg.get_int("experiment", "seed", d.seed as i64) as u64,
+            scheduler: cfg.get_str("experiment", "scheduler", &d.scheduler),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level comment
+title = "cascade"   # trailing comment
+
+[experiment]
+model = "Llama-3.2-3B"
+instances = 16
+rate = 8.5
+requests = 2000
+seed = 42
+warm = true
+rates = [2.0, 4.0, 8.0]
+names = ["a", "b"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get_str("", "title", ""), "cascade");
+        assert_eq!(cfg.get_int("experiment", "instances", 0), 16);
+        assert!((cfg.get_float("experiment", "rate", 0.0) - 8.5).abs() < 1e-12);
+        assert!(cfg.get_bool("experiment", "warm", false));
+        assert_eq!(cfg.get_float_array("experiment", "rates").unwrap(), vec![2.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let cfg = Config::parse("x = 3").unwrap();
+        assert_eq!(cfg.get_float("", "x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn string_arrays() {
+        let cfg = Config::parse(r#"xs = ["a,b", "c"]"#).unwrap();
+        let arr = cfg.get("", "xs").unwrap().as_array().unwrap();
+        assert_eq!(arr[0].as_str(), Some("a,b"));
+        assert_eq!(arr[1].as_str(), Some("c"));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let cfg = Config::parse(r##"x = "a#b""##).unwrap();
+        assert_eq!(cfg.get_str("", "x", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Config::parse("\n\nbad line").unwrap_err();
+        assert_eq!(e.line, 3);
+        let e = Config::parse("[unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Config::parse("x = \"open").unwrap_err();
+        assert!(e.message.contains("unterminated"));
+    }
+
+    #[test]
+    fn experiment_config_defaults_fill_gaps() {
+        let cfg = Config::parse("[experiment]\nrate = 2.0").unwrap();
+        let e = ExperimentConfig::from_config(&cfg);
+        assert_eq!(e.rate, 2.0);
+        assert_eq!(e.n_instances, 16);
+        assert_eq!(e.scheduler, "cascade");
+    }
+
+    #[test]
+    fn missing_keys_fall_back() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.get_int("nope", "x", 7), 7);
+    }
+}

@@ -1,0 +1,396 @@
+//! Decentralized bid-ask load (re)balancing — §4.4.
+//!
+//! Senders (overloaded or handing-over instances) and receivers
+//! negotiate pairwise, like transaction matching in a specialist
+//! market:
+//!
+//! * **Ask** — the sender announces one request migration to all
+//!   candidate receivers, piggybacking its own load (total length of
+//!   its buffered requests).
+//! * **Bid** — each receiver replies with its current load and its
+//!   earliest transmission start time (buffered length ÷ measured
+//!   throughput).
+//! * **Selection** — the sender filters out the half of receivers with
+//!   higher load, keeps the three earliest start times, and picks the
+//!   one whose bid arrived first.
+//! * **Confirm** — ownership transfers; the receiver enqueues the
+//!   request in a priority queue ordered by *sender load* and drives
+//!   the actual migration ([`crate::coordinator::migrate`]).
+//!
+//! Starvation guard: a receiver counts failed pull attempts per
+//! request (sender busy transmitting another); past a threshold it
+//! notifies the sender, which promotes the request to
+//! send-immediately-after-current.
+
+use crate::{InstanceId, RequestId, Time, Tokens};
+use std::collections::{BinaryHeap, HashMap};
+
+/// Ask message: sender offers one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ask {
+    pub sender: InstanceId,
+    pub request: RequestId,
+    pub seq_len: Tokens,
+    /// Total length of all requests buffered at the sender.
+    pub sender_load: Tokens,
+}
+
+/// Bid message: receiver's counter-offer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bid {
+    pub receiver: InstanceId,
+    pub request: RequestId,
+    /// Receiver's current load (cached tokens + buffered migrations).
+    pub load: Tokens,
+    /// Earliest time the receiver could start this transfer.
+    pub earliest_start: Time,
+    /// When the bid reached the sender (for first-reply tie-breaking).
+    pub reply_at: Time,
+}
+
+/// The §4.4 selection rule. Returns the chosen receiver, or `None` if
+/// there are no bids.
+pub fn select_receiver(bids: &[Bid]) -> Option<InstanceId> {
+    if bids.is_empty() {
+        return None;
+    }
+    // 1. Filter out the half with higher load (keep ceil(n/2) lowest).
+    let mut by_load: Vec<&Bid> = bids.iter().collect();
+    by_load.sort_by(|a, b| {
+        a.load
+            .cmp(&b.load)
+            .then(a.receiver.cmp(&b.receiver))
+    });
+    let keep = by_load.len().div_ceil(2);
+    let low_half = &by_load[..keep];
+    // 2. Keep the three earliest transmission start times.
+    let mut by_start: Vec<&&Bid> = low_half.iter().collect();
+    by_start.sort_by(|a, b| {
+        a.earliest_start
+            .partial_cmp(&b.earliest_start)
+            .unwrap()
+            .then(a.receiver.cmp(&b.receiver))
+    });
+    let top3 = &by_start[..by_start.len().min(3)];
+    // 3. Of those, the first reply wins.
+    top3.iter()
+        .min_by(|a, b| {
+            a.reply_at
+                .partial_cmp(&b.reply_at)
+                .unwrap()
+                .then(a.receiver.cmp(&b.receiver))
+        })
+        .map(|b| b.receiver)
+}
+
+/// A confirmed migration waiting in a receiver's priority queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PendingPull {
+    pub sender: InstanceId,
+    pub request: RequestId,
+    pub seq_len: Tokens,
+    /// Priority = sender's load at confirm time (§4.4).
+    pub priority: Tokens,
+    pub failed_attempts: u32,
+}
+
+impl Eq for PendingPull {}
+
+impl Ord for PendingPull {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap on priority; deterministic tie-break on request id.
+        self.priority
+            .cmp(&other.priority)
+            .then(other.request.cmp(&self.request))
+    }
+}
+
+impl PartialOrd for PendingPull {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Receiver-side queue + starvation accounting.
+#[derive(Debug, Clone)]
+pub struct ReceiverQueue {
+    heap: BinaryHeap<PendingPull>,
+    /// Attempts threshold before the starvation escalation (§4.4).
+    pub starvation_threshold: u32,
+}
+
+impl ReceiverQueue {
+    pub fn new(starvation_threshold: u32) -> Self {
+        Self { heap: BinaryHeap::new(), starvation_threshold }
+    }
+
+    pub fn push(&mut self, pull: PendingPull) {
+        self.heap.push(pull);
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total buffered length (the "earliest start" numerator).
+    pub fn buffered_len(&self) -> Tokens {
+        self.heap.iter().map(|p| p.seq_len).sum()
+    }
+
+    /// Try to start the next migration.  `sender_busy(sender)` reports
+    /// whether that sender is currently transmitting another request.
+    ///
+    /// Returns:
+    /// * `Pull(p)` — start migrating `p` now,
+    /// * `Starved(p)` — `p` exceeded the attempt threshold; the caller
+    ///   must notify the sender and then wait (no further skipping),
+    /// * `Idle` — nothing startable.
+    pub fn next_action(&mut self, mut sender_busy: impl FnMut(InstanceId) -> bool) -> PullAction {
+        let mut skipped: Vec<PendingPull> = Vec::new();
+        let mut result = PullAction::Idle;
+        while let Some(mut head) = self.heap.pop() {
+            if !sender_busy(head.sender) {
+                result = PullAction::Pull(head);
+                break;
+            }
+            head.failed_attempts += 1;
+            if head.failed_attempts >= self.starvation_threshold {
+                result = PullAction::Starved(head);
+                break;
+            }
+            skipped.push(head);
+        }
+        for s in skipped {
+            self.heap.push(s);
+        }
+        result
+    }
+
+    /// Re-insert a starved request while it waits for the sender's
+    /// immediate-send promise.
+    pub fn requeue(&mut self, pull: PendingPull) {
+        self.heap.push(pull);
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PullAction {
+    Pull(PendingPull),
+    Starved(PendingPull),
+    Idle,
+}
+
+/// Sender-side offer bookkeeping: outstanding asks and collected bids.
+#[derive(Debug, Clone, Default)]
+pub struct SenderBook {
+    /// request -> bids received so far.
+    pending: HashMap<RequestId, Vec<Bid>>,
+    /// request -> number of receivers asked.
+    expected: HashMap<RequestId, usize>,
+}
+
+impl SenderBook {
+    pub fn open(&mut self, request: RequestId, n_receivers: usize) {
+        self.pending.insert(request, Vec::new());
+        self.expected.insert(request, n_receivers);
+    }
+
+    /// Record a bid; returns `Some(receiver)` once all expected bids
+    /// arrived and selection can run.
+    pub fn record(&mut self, bid: Bid) -> Option<InstanceId> {
+        let bids = self.pending.get_mut(&bid.request)?;
+        bids.push(bid);
+        if bids.len() >= *self.expected.get(&bid.request)? {
+            let chosen = select_receiver(bids);
+            self.pending.remove(&bid.request);
+            self.expected.remove(&bid.request);
+            chosen
+        } else {
+            None
+        }
+    }
+
+    /// Force selection with whatever bids arrived (timeout path).
+    pub fn close(&mut self, request: RequestId) -> Option<InstanceId> {
+        let bids = self.pending.remove(&request)?;
+        self.expected.remove(&request);
+        select_receiver(&bids)
+    }
+
+    pub fn is_open(&self, request: RequestId) -> bool {
+        self.pending.contains_key(&request)
+    }
+}
+
+/// Snapshot of one instance's balance-relevant state, used by the
+/// cluster to originate asks/bids without borrowing the engines.
+#[derive(Debug, Clone, Copy)]
+pub struct BidAskSnapshot {
+    pub instance: InstanceId,
+    pub token_load: Tokens,
+    pub buffered_len: Tokens,
+    pub throughput: f64,
+}
+
+impl BidAskSnapshot {
+    /// The receiver's earliest transmission start (§4.4: buffered
+    /// length over measured throughput).
+    pub fn earliest_start(&self, now: Time) -> Time {
+        now + self.buffered_len as f64 / self.throughput.max(1.0)
+    }
+}
+
+/// Combined sender+receiver state machine (one per instance).
+#[derive(Debug, Clone)]
+pub struct BidAskScheduler {
+    pub instance: InstanceId,
+    pub sender: SenderBook,
+    pub receiver: ReceiverQueue,
+    /// Requests this instance promised to send immediately after its
+    /// current transmission (starvation escalations).
+    pub promised: Vec<RequestId>,
+}
+
+impl BidAskScheduler {
+    pub fn new(instance: InstanceId, starvation_threshold: u32) -> Self {
+        Self {
+            instance,
+            sender: SenderBook::default(),
+            receiver: ReceiverQueue::new(starvation_threshold),
+            promised: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bid(receiver: usize, load: u64, start: f64, reply: f64) -> Bid {
+        Bid { receiver, request: 1, load, earliest_start: start, reply_at: reply }
+    }
+
+    #[test]
+    fn selection_filters_high_load_half() {
+        // Receivers 3,4 have much higher load and must be filtered even
+        // though they reply first and start earliest.
+        let bids = vec![
+            bid(1, 100, 5.0, 5.0),
+            bid(2, 120, 4.0, 4.0),
+            bid(3, 900, 0.0, 0.0),
+            bid(4, 950, 0.0, 0.0),
+        ];
+        let chosen = select_receiver(&bids).unwrap();
+        assert!(chosen == 1 || chosen == 2);
+        // Among the low half, earliest start then first reply: 2.
+        assert_eq!(chosen, 2);
+    }
+
+    #[test]
+    fn selection_top3_then_first_reply() {
+        // 6 low-load receivers; keep 3 earliest starts {a,b,c}; first
+        // reply among them wins.
+        let bids = vec![
+            bid(1, 10, 1.0, 9.0),
+            bid(2, 10, 2.0, 1.0),
+            bid(3, 10, 3.0, 2.0),
+            bid(4, 10, 4.0, 0.1), // 4th earliest start — excluded
+            bid(5, 11, 5.0, 0.1),
+            bid(6, 11, 6.0, 0.1),
+        ];
+        assert_eq!(select_receiver(&bids), Some(2));
+    }
+
+    #[test]
+    fn selection_single_bid() {
+        assert_eq!(select_receiver(&[bid(7, 1, 0.0, 0.0)]), Some(7));
+        assert_eq!(select_receiver(&[]), None);
+    }
+
+    #[test]
+    fn selection_deterministic_on_ties() {
+        let bids = vec![bid(2, 10, 1.0, 1.0), bid(1, 10, 1.0, 1.0)];
+        // Ties broken by receiver id — stable across orderings.
+        let a = select_receiver(&bids);
+        let rev: Vec<Bid> = bids.into_iter().rev().collect();
+        assert_eq!(a, select_receiver(&rev));
+    }
+
+    #[test]
+    fn sender_book_waits_for_all_bids() {
+        let mut book = SenderBook::default();
+        book.open(1, 3);
+        assert_eq!(book.record(bid(1, 10, 0.0, 0.0)), None);
+        assert_eq!(book.record(bid(2, 20, 0.0, 0.1)), None);
+        let chosen = book.record(bid(3, 30, 0.0, 0.2));
+        assert!(chosen.is_some());
+        assert!(!book.is_open(1));
+    }
+
+    #[test]
+    fn sender_book_timeout_close() {
+        let mut book = SenderBook::default();
+        book.open(1, 5);
+        book.record(bid(1, 10, 0.0, 0.0));
+        assert_eq!(book.close(1), Some(1));
+        assert_eq!(book.close(1), None, "already closed");
+    }
+
+    #[test]
+    fn receiver_queue_orders_by_sender_load() {
+        let mut q = ReceiverQueue::new(3);
+        q.push(PendingPull { sender: 1, request: 1, seq_len: 10, priority: 100, failed_attempts: 0 });
+        q.push(PendingPull { sender: 2, request: 2, seq_len: 10, priority: 900, failed_attempts: 0 });
+        q.push(PendingPull { sender: 3, request: 3, seq_len: 10, priority: 500, failed_attempts: 0 });
+        match q.next_action(|_| false) {
+            PullAction::Pull(p) => assert_eq!(p.request, 2, "highest sender load first"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn receiver_skips_busy_sender() {
+        let mut q = ReceiverQueue::new(5);
+        q.push(PendingPull { sender: 1, request: 1, seq_len: 10, priority: 900, failed_attempts: 0 });
+        q.push(PendingPull { sender: 2, request: 2, seq_len: 10, priority: 100, failed_attempts: 0 });
+        // Sender 1 busy: queue skips to request 2.
+        match q.next_action(|s| s == 1) {
+            PullAction::Pull(p) => assert_eq!(p.request, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Request 1 still queued with one failed attempt.
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn starvation_escalates_after_threshold() {
+        let mut q = ReceiverQueue::new(2);
+        q.push(PendingPull { sender: 1, request: 1, seq_len: 10, priority: 900, failed_attempts: 0 });
+        // Attempt 1: skipped.
+        assert!(matches!(q.next_action(|_| true), PullAction::Idle));
+        // Attempt 2: hits the threshold -> starved.
+        match q.next_action(|_| true) {
+            PullAction::Starved(p) => assert_eq!(p.request, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(q.is_empty(), "starved pull handed to caller");
+    }
+
+    #[test]
+    fn buffered_len_sums_queued() {
+        let mut q = ReceiverQueue::new(3);
+        q.push(PendingPull { sender: 1, request: 1, seq_len: 100, priority: 1, failed_attempts: 0 });
+        q.push(PendingPull { sender: 1, request: 2, seq_len: 200, priority: 2, failed_attempts: 0 });
+        assert_eq!(q.buffered_len(), 300);
+    }
+
+    #[test]
+    fn earliest_start_uses_throughput() {
+        let s = BidAskSnapshot { instance: 0, token_load: 0, buffered_len: 500, throughput: 100.0 };
+        assert!((s.earliest_start(2.0) - 7.0).abs() < 1e-12);
+    }
+}

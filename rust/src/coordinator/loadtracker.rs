@@ -1,0 +1,245 @@
+//! LoadTracker — per-instance token-level workload monitor (§3.1).
+//!
+//! Each instance's LoadTracker records the token-level load of the
+//! instance (cached tokens per live request), maintains a sliding
+//! window of recently observed sequence lengths for range refinement,
+//! and holds the most recent load reports gossiped from peers (same
+//! stage) and successors (next stage).  Staleness is explicit: every
+//! report carries its timestamp, and consumers can discount or ignore
+//! reports older than a threshold.
+
+use crate::{InstanceId, Time, Tokens};
+use std::collections::HashMap;
+
+/// A gossiped load report from one instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadReport {
+    pub instance: InstanceId,
+    pub at: Time,
+    /// Total cached tokens across live sequences.
+    pub token_load: Tokens,
+    /// Live sequence count.
+    pub n_seqs: usize,
+    /// KV-pool utilization in [0,1].
+    pub memory_demand: f64,
+    /// Measured decode throughput, tokens/s (for bid earliest-start).
+    pub throughput: f64,
+}
+
+/// Sliding-window sample of a sequence length observed on an instance.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthSample {
+    pub at: Time,
+    pub input_len: Tokens,
+    pub current_len: Tokens,
+}
+
+/// Bound on retained length samples: a reservoir this size is plenty
+/// for boundary refinement while keeping `observe_batch` O(batch)
+/// amortized (the unbounded version made sample GC the cluster
+/// simulator's top hot spot — see EXPERIMENTS.md §Perf).
+const MAX_SAMPLES: usize = 4096;
+
+/// The per-instance tracker.
+#[derive(Debug, Clone)]
+pub struct LoadTracker {
+    pub instance: InstanceId,
+    /// Window length (seconds) for length samples.
+    pub window: Time,
+    samples: std::collections::VecDeque<LengthSample>,
+    peer_reports: HashMap<InstanceId, LoadReport>,
+    successor_reports: HashMap<InstanceId, LoadReport>,
+    /// Throughput estimate via exponentially weighted token rate.
+    tokens_in_window: f64,
+    last_rate_update: Time,
+    rate_ema: f64,
+}
+
+impl LoadTracker {
+    pub fn new(instance: InstanceId, window: Time) -> Self {
+        Self {
+            instance,
+            window,
+            samples: std::collections::VecDeque::new(),
+            peer_reports: HashMap::new(),
+            successor_reports: HashMap::new(),
+            tokens_in_window: 0.0,
+            last_rate_update: 0.0,
+            rate_ema: 0.0,
+        }
+    }
+
+    /// Record the lengths of the instance's current batch.
+    pub fn observe_batch(&mut self, now: Time, rows: &[(Tokens, Tokens)]) {
+        for &(input_len, current_len) in rows {
+            if self.samples.len() >= MAX_SAMPLES {
+                self.samples.pop_front();
+            }
+            self.samples.push_back(LengthSample { at: now, input_len, current_len });
+        }
+    }
+
+    /// Record `tokens` emitted at `now` (throughput estimation).
+    pub fn observe_tokens(&mut self, now: Time, tokens: u64) {
+        let dt = (now - self.last_rate_update).max(1e-9);
+        if dt > 0.05 {
+            let rate = self.tokens_in_window / dt;
+            // EMA with ~1s time constant.
+            let alpha = (dt / 1.0).min(1.0);
+            self.rate_ema = (1.0 - alpha) * self.rate_ema + alpha * rate;
+            self.tokens_in_window = 0.0;
+            self.last_rate_update = now;
+        }
+        self.tokens_in_window += tokens as f64;
+    }
+
+    /// Current decode-throughput estimate (tokens/s).
+    pub fn throughput(&self) -> f64 {
+        self.rate_ema.max(1.0)
+    }
+
+    /// The in-window length samples (input to range refinement).
+    /// Age filtering happens lazily here, not on the hot write path.
+    pub fn window_samples(&self, now: Time) -> Vec<LengthSample> {
+        let cutoff = now - self.window;
+        self.samples.iter().copied().filter(|s| s.at >= cutoff).collect()
+    }
+
+    /// Store a peer (same-stage) report, keeping only the freshest per
+    /// instance.
+    pub fn record_peer(&mut self, report: LoadReport) {
+        let entry = self.peer_reports.entry(report.instance).or_insert(report);
+        if report.at >= entry.at {
+            *entry = report;
+        }
+    }
+
+    /// Store a successor (next-stage) report.
+    pub fn record_successor(&mut self, report: LoadReport) {
+        let entry = self.successor_reports.entry(report.instance).or_insert(report);
+        if report.at >= entry.at {
+            *entry = report;
+        }
+    }
+
+    /// Fresh peer reports (age <= max_age at `now`).
+    pub fn peers(&self, now: Time, max_age: Time) -> Vec<LoadReport> {
+        let mut v: Vec<LoadReport> = self
+            .peer_reports
+            .values()
+            .filter(|r| now - r.at <= max_age)
+            .copied()
+            .collect();
+        v.sort_by_key(|r| r.instance);
+        v
+    }
+
+    pub fn successors(&self, now: Time, max_age: Time) -> Vec<LoadReport> {
+        let mut v: Vec<LoadReport> = self
+            .successor_reports
+            .values()
+            .filter(|r| now - r.at <= max_age)
+            .copied()
+            .collect();
+        v.sort_by_key(|r| r.instance);
+        v
+    }
+
+    /// Is this instance an overloaded outlier within its stage?
+    /// (§4.4: request-memory demand 25% above the stage average.)
+    pub fn is_overloaded(&self, now: Time, my_load: Tokens, threshold: f64, max_age: Time) -> bool {
+        let peers = self.peers(now, max_age);
+        if peers.is_empty() {
+            return false;
+        }
+        let total: f64 = peers.iter().map(|r| r.token_load as f64).sum::<f64>() + my_load as f64;
+        let avg = total / (peers.len() + 1) as f64;
+        my_load as f64 > avg * (1.0 + threshold)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(instance: usize, at: f64, load: u64) -> LoadReport {
+        LoadReport {
+            instance,
+            at,
+            token_load: load,
+            n_seqs: 1,
+            memory_demand: 0.5,
+            throughput: 100.0,
+        }
+    }
+
+    #[test]
+    fn window_discards_old_samples() {
+        let mut t = LoadTracker::new(0, 10.0);
+        t.observe_batch(0.0, &[(10, 20)]);
+        t.observe_batch(5.0, &[(30, 40)]);
+        t.observe_batch(20.0, &[(50, 60)]);
+        let w = t.window_samples(20.0);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].input_len, 50);
+    }
+
+    #[test]
+    fn freshest_report_wins() {
+        let mut t = LoadTracker::new(0, 10.0);
+        t.record_peer(report(1, 5.0, 100));
+        t.record_peer(report(1, 3.0, 999)); // stale, ignored
+        let peers = t.peers(6.0, 100.0);
+        assert_eq!(peers.len(), 1);
+        assert_eq!(peers[0].token_load, 100);
+    }
+
+    #[test]
+    fn stale_reports_filtered_by_age() {
+        let mut t = LoadTracker::new(0, 10.0);
+        t.record_peer(report(1, 0.0, 100));
+        t.record_peer(report(2, 9.5, 200));
+        let fresh = t.peers(10.0, 1.0);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].instance, 2);
+    }
+
+    #[test]
+    fn overload_detection_25_percent() {
+        let mut t = LoadTracker::new(0, 10.0);
+        t.record_peer(report(1, 0.0, 100));
+        t.record_peer(report(2, 0.0, 100));
+        // avg(100,100,140) = 113.3; 140 > 1.25*113 is false.
+        assert!(!t.is_overloaded(0.0, 140, 0.25, 10.0));
+        // avg(100,100,200) = 133.3; 200 > 166.7 is true.
+        assert!(t.is_overloaded(0.0, 200, 0.25, 10.0));
+    }
+
+    #[test]
+    fn no_peers_never_overloaded() {
+        let t = LoadTracker::new(0, 10.0);
+        assert!(!t.is_overloaded(0.0, 10_000, 0.25, 10.0));
+    }
+
+    #[test]
+    fn throughput_ema_tracks_rate() {
+        let mut t = LoadTracker::new(0, 10.0);
+        let mut now = 0.0;
+        for _ in 0..100 {
+            now += 0.1;
+            t.observe_tokens(now, 50); // 500 tokens/s
+        }
+        let est = t.throughput();
+        assert!(est > 250.0 && est < 1000.0, "estimate {est}");
+    }
+
+    #[test]
+    fn successors_separate_from_peers() {
+        let mut t = LoadTracker::new(0, 10.0);
+        t.record_peer(report(1, 0.0, 1));
+        t.record_successor(report(2, 0.0, 2));
+        assert_eq!(t.peers(0.0, 10.0).len(), 1);
+        assert_eq!(t.successors(0.0, 10.0).len(), 1);
+        assert_eq!(t.successors(0.0, 10.0)[0].instance, 2);
+    }
+}

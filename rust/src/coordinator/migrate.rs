@@ -1,0 +1,318 @@
+//! Live KV-cache migration — §5's transmission subsystem.
+//!
+//! Models the Llumnix-style multi-round live migration CascadeInfer
+//! adopts: while the source instance keeps decoding a sequence, its KV
+//! cache is copied round by round; each round transfers the delta that
+//! accumulated during the previous round, until the delta is small
+//! enough for a brief final stop-the-world round.
+//!
+//! Flow-control properties from §5 are enforced here:
+//! * a strict concurrency cap (3 parallel transfers per instance),
+//! * idle-slot targeting (migration is skipped when the destination
+//!   has no free KV blocks),
+//! * bandwidth sharing across concurrent transfers on the same link.
+
+use crate::gpu::LinkKind;
+use crate::{InstanceId, RequestId, Time, Tokens};
+use std::collections::HashMap;
+
+/// §5: "a strict concurrency limit (capped at three parallel
+/// transfers in our implementation)".
+pub const MAX_CONCURRENT_TRANSFERS: usize = 3;
+
+/// Number of live rounds before the stop-the-world finish.
+pub const MAX_ROUNDS: u32 = 4;
+
+/// One in-flight migration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    pub request: RequestId,
+    pub from: InstanceId,
+    pub to: InstanceId,
+    pub started_at: Time,
+    pub finish_at: Time,
+    /// Tokens of KV state moved (final, incl. rounds' deltas).
+    pub tokens_moved: Tokens,
+    /// Decode time lost on the source (the final frozen round).
+    pub stall: Time,
+}
+
+/// Analytic multi-round live-migration schedule.
+///
+/// Round 0 copies the current `seq_len` tokens; while it flies, the
+/// sequence keeps decoding at `decode_tokens_per_s`, accruing a delta;
+/// each subsequent round copies the previous round's delta.  After
+/// [`MAX_ROUNDS`] (or when a round's delta stops shrinking), the final
+/// delta is copied with decode frozen — that's the stall.
+///
+/// Returns `(total_time, total_tokens_moved, stall_time)`.
+pub fn live_migration_schedule(
+    seq_len: Tokens,
+    kv_bytes_per_token: f64,
+    link_bytes_per_s: f64,
+    decode_tokens_per_s: f64,
+) -> (Time, Tokens, Time) {
+    let bw_tokens_per_s = link_bytes_per_s / kv_bytes_per_token.max(1.0);
+    let mut to_move = seq_len.max(1) as f64;
+    let mut total_time = 0.0;
+    let mut total_tokens = 0.0;
+    for _round in 0..MAX_ROUNDS {
+        let t = to_move / bw_tokens_per_s;
+        total_time += t;
+        total_tokens += to_move;
+        let delta = decode_tokens_per_s * t;
+        // Converged enough for the final round when the delta is tiny
+        // or not shrinking (bw <= decode rate would never converge).
+        if delta < 1.0 || delta >= to_move {
+            to_move = delta.max(0.0);
+            break;
+        }
+        to_move = delta;
+    }
+    // Final stop-the-world round.
+    let stall = to_move / bw_tokens_per_s;
+    total_time += stall;
+    total_tokens += to_move;
+    (total_time, total_tokens.ceil() as Tokens, stall)
+}
+
+/// Per-cluster migration bookkeeping: concurrency caps and link
+/// bandwidth sharing.
+#[derive(Debug, Clone)]
+pub struct MigrationManager {
+    pub kv_bytes_per_token: f64,
+    /// Active transfers keyed by request.
+    active: HashMap<RequestId, Transfer>,
+    /// Per-instance active-transfer counts (as source or destination).
+    busy: HashMap<InstanceId, usize>,
+    pub total_completed: u64,
+    pub total_tokens_moved: Tokens,
+    pub total_skipped_no_slot: u64,
+    pub total_rejected_concurrency: u64,
+}
+
+impl MigrationManager {
+    pub fn new(kv_bytes_per_token: f64) -> Self {
+        Self {
+            kv_bytes_per_token,
+            active: HashMap::new(),
+            busy: HashMap::new(),
+            total_completed: 0,
+            total_tokens_moved: 0,
+            total_skipped_no_slot: 0,
+            total_rejected_concurrency: 0,
+        }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_migrating(&self, request: RequestId) -> bool {
+        self.active.contains_key(&request)
+    }
+
+    /// Is `instance` transmitting (or receiving) at its cap?
+    pub fn at_capacity(&self, instance: InstanceId) -> bool {
+        self.busy.get(&instance).copied().unwrap_or(0) >= MAX_CONCURRENT_TRANSFERS
+    }
+
+    /// Is the given sender currently transmitting anything? (the
+    /// receiver-queue "sender busy" probe of §4.4).
+    pub fn sender_busy(&self, instance: InstanceId) -> bool {
+        self.active.values().any(|t| t.from == instance)
+    }
+
+    /// Try to start a migration at `now`. Fails (returning `None`)
+    /// when either side is at its concurrency cap or the destination
+    /// has no idle KV capacity (`dest_has_slot == false` — §5 "skipped
+    /// if no idle cache is available").
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_start(
+        &mut self,
+        now: Time,
+        request: RequestId,
+        from: InstanceId,
+        to: InstanceId,
+        seq_len: Tokens,
+        link: LinkKind,
+        decode_tokens_per_s: f64,
+        dest_has_slot: bool,
+    ) -> Option<Transfer> {
+        if self.active.contains_key(&request) {
+            return None;
+        }
+        if !dest_has_slot {
+            self.total_skipped_no_slot += 1;
+            return None;
+        }
+        if self.at_capacity(from) || self.at_capacity(to) {
+            self.total_rejected_concurrency += 1;
+            return None;
+        }
+        // Bandwidth shared across this instance pair's active flows.
+        let concurrent = 1 + self
+            .active
+            .values()
+            .filter(|t| (t.from == from && t.to == to) || (t.from == to && t.to == from))
+            .count();
+        let bw = link.bytes_per_s() / concurrent as f64;
+        let (dur, tokens_moved, stall) =
+            live_migration_schedule(seq_len, self.kv_bytes_per_token, bw, decode_tokens_per_s);
+        let t = Transfer {
+            request,
+            from,
+            to,
+            started_at: now,
+            finish_at: now + link.latency_s() + dur,
+            tokens_moved,
+            stall,
+        };
+        self.active.insert(request, t);
+        *self.busy.entry(from).or_insert(0) += 1;
+        *self.busy.entry(to).or_insert(0) += 1;
+        Some(t)
+    }
+
+    /// Complete a transfer (caller observed `finish_at` pass).
+    pub fn finish(&mut self, request: RequestId) -> Option<Transfer> {
+        let t = self.active.remove(&request)?;
+        for side in [t.from, t.to] {
+            if let Some(c) = self.busy.get_mut(&side) {
+                *c = c.saturating_sub(1);
+            }
+        }
+        self.total_completed += 1;
+        self.total_tokens_moved += t.tokens_moved;
+        Some(t)
+    }
+
+    /// Tokens currently inbound to `instance` over active transfers —
+    /// the receiver-side "buffered length" of the §4.4 bids.
+    pub fn inbound_tokens(&self, instance: InstanceId) -> Tokens {
+        self.active
+            .values()
+            .filter(|t| t.to == instance)
+            .map(|t| t.tokens_moved)
+            .sum()
+    }
+
+    /// Abort a transfer (e.g. the sequence finished mid-flight).
+    pub fn abort(&mut self, request: RequestId) -> Option<Transfer> {
+        let t = self.active.remove(&request)?;
+        for side in [t.from, t.to] {
+            if let Some(c) = self.busy.get_mut(&side) {
+                *c = c.saturating_sub(1);
+            }
+        }
+        Some(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KVB: f64 = 114_688.0; // Llama-3.2-3B bytes/token
+
+    #[test]
+    fn schedule_transfers_more_than_seq_len() {
+        // Multi-round: deltas accumulate while decoding continues.
+        let (time, tokens, stall) = live_migration_schedule(10_000, KVB, 25e9, 50.0);
+        assert!(tokens >= 10_000);
+        assert!(time > 0.0);
+        assert!(stall >= 0.0 && stall < time);
+    }
+
+    #[test]
+    fn faster_link_means_less_stall() {
+        let (_, _, stall_nvl) = live_migration_schedule(50_000, KVB, 450e9, 100.0);
+        let (_, _, stall_pcie) = live_migration_schedule(50_000, KVB, 25e9, 100.0);
+        assert!(stall_nvl < stall_pcie);
+    }
+
+    #[test]
+    fn stall_is_small_fraction_for_realistic_rates() {
+        // §8: "KV migration is efficient and rarely impacts performance
+        // under realistic bandwidth" — final stall should be a small
+        // fraction of the total for NVLink.
+        let (time, _, stall) = live_migration_schedule(100_000, KVB, 450e9, 100.0);
+        assert!(stall / time < 0.05, "stall {stall} of {time}");
+    }
+
+    #[test]
+    fn zero_decode_rate_single_round() {
+        let (time, tokens, stall) = live_migration_schedule(1000, KVB, 25e9, 0.0);
+        assert_eq!(tokens, 1000);
+        assert!(stall.abs() < 1e-12);
+        assert!((time - 1000.0 * KVB / 25e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrency_cap_enforced() {
+        let mut m = MigrationManager::new(KVB);
+        for i in 0..MAX_CONCURRENT_TRANSFERS as u64 {
+            assert!(m
+                .try_start(0.0, i, 0, 1, 1000, LinkKind::NvLink, 10.0, true)
+                .is_some());
+        }
+        // Fourth transfer from instance 0 rejected.
+        assert!(m
+            .try_start(0.0, 99, 0, 2, 1000, LinkKind::NvLink, 10.0, true)
+            .is_none());
+        assert_eq!(m.total_rejected_concurrency, 1);
+        // Finishing one frees a slot.
+        assert!(m.finish(0).is_some());
+        assert!(m
+            .try_start(0.0, 99, 0, 2, 1000, LinkKind::NvLink, 10.0, true)
+            .is_some());
+    }
+
+    #[test]
+    fn no_idle_slot_skips() {
+        let mut m = MigrationManager::new(KVB);
+        assert!(m
+            .try_start(0.0, 1, 0, 1, 1000, LinkKind::NvLink, 10.0, false)
+            .is_none());
+        assert_eq!(m.total_skipped_no_slot, 1);
+    }
+
+    #[test]
+    fn duplicate_request_rejected() {
+        let mut m = MigrationManager::new(KVB);
+        assert!(m.try_start(0.0, 1, 0, 1, 100, LinkKind::Rdma, 10.0, true).is_some());
+        assert!(m.try_start(0.0, 1, 0, 2, 100, LinkKind::Rdma, 10.0, true).is_none());
+    }
+
+    #[test]
+    fn bandwidth_shared_between_same_pair() {
+        let mut m = MigrationManager::new(KVB);
+        let t1 = m.try_start(0.0, 1, 0, 1, 10_000, LinkKind::Pcie, 0.0, true).unwrap();
+        let t2 = m.try_start(0.0, 2, 0, 1, 10_000, LinkKind::Pcie, 0.0, true).unwrap();
+        // Second transfer sees half bandwidth -> ~2x duration.
+        let d1 = t1.finish_at - t1.started_at;
+        let d2 = t2.finish_at - t2.started_at;
+        assert!(d2 > 1.8 * d1, "d1={d1} d2={d2}");
+    }
+
+    #[test]
+    fn sender_busy_probe() {
+        let mut m = MigrationManager::new(KVB);
+        assert!(!m.sender_busy(0));
+        m.try_start(0.0, 1, 0, 1, 100, LinkKind::Rdma, 10.0, true);
+        assert!(m.sender_busy(0));
+        assert!(!m.sender_busy(1), "receiving != transmitting");
+        m.finish(1);
+        assert!(!m.sender_busy(0));
+    }
+
+    #[test]
+    fn abort_releases_slots_without_counting() {
+        let mut m = MigrationManager::new(KVB);
+        m.try_start(0.0, 1, 0, 1, 100, LinkKind::Rdma, 10.0, true);
+        assert!(m.abort(1).is_some());
+        assert_eq!(m.total_completed, 0);
+        assert!(!m.at_capacity(0));
+        assert!(m.abort(1).is_none());
+    }
+}

@@ -1,0 +1,22 @@
+//! The paper's L3 contribution: length-aware pipeline coordination.
+//!
+//! * [`plan`] — the §4.2 dynamic-programming stage partitioner (with
+//!   the exponential-bucketing and two-phase-heuristic optimizations).
+//! * [`refine`] — §4.3 adaptive range refinement with EMA smoothing
+//!   and low-traffic freezing.
+//! * [`balance`] — §4.4 decentralized bid-ask scheduling.
+//! * [`migrate`] — §5 live KV migration with concurrency caps and
+//!   starvation-aware backpressure.
+//! * [`loadtracker`] — the per-instance token-level load monitor that
+//!   feeds all of the above.
+
+pub mod balance;
+pub mod loadtracker;
+pub mod migrate;
+pub mod plan;
+pub mod refine;
+
+pub use balance::{BidAskScheduler, BidAskSnapshot};
+pub use loadtracker::LoadTracker;
+pub use migrate::{MigrationManager, Transfer};
+pub use plan::{MigrationCost, Pipeline, Planner, StageSpec};

@@ -1,0 +1,573 @@
+//! Length-aware stage partitioning — the §4.2 dynamic program.
+//!
+//! Given `E` instances and a request-length histogram, find the
+//! pipeline (number of stages, instances per stage, length range per
+//! stage) minimising total predicted QoE plus inter-stage migration
+//! cost:
+//!
+//! ```text
+//! f[s][e][l] = min over e' in [s-1, e), l' in [0, l)
+//!              of f[s-1][e'][l'] + (e-e') * Q^{n_{l',l}/(e-e')} + c_{l'}
+//! ```
+//!
+//! Three implementations, matching the paper's complexity discussion:
+//!
+//! * [`Planner::plan_exact_fine`] — the naive formulation over raw
+//!   length cut points, `O(E^3 L^2)`; only used by the complexity
+//!   bench (§6.5 reports 51 hours at L=128K without optimizations).
+//! * [`Planner::plan_dp`] — exact DP over exponential length buckets,
+//!   `O(E^3 log^2 L)` (the first optimization).
+//! * [`Planner::plan_heuristic`] — the two-phase heuristic: a chain DP
+//!   assigning one instance per stage, then greedy merging of adjacent
+//!   stages by best positive merge gain, `O(E (log^2 L + log E))`.
+
+use crate::qoe::{Features, QoeModel};
+use crate::workload::LengthHistogram;
+use crate::Tokens;
+
+/// One pipeline stage: serves sequences with length in `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageSpec {
+    pub lo: Tokens,
+    pub hi: Tokens,
+    pub n_instances: usize,
+}
+
+/// A full pipeline plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pipeline {
+    pub stages: Vec<StageSpec>,
+    /// Predicted quality (lower is better) under the planning model.
+    pub predicted_quality: f64,
+}
+
+impl Pipeline {
+    /// Index of the stage serving length `len` (clamps to the ends —
+    /// §3.2 routes a request to the earliest stage covering it).
+    pub fn stage_for(&self, len: Tokens) -> usize {
+        for (i, s) in self.stages.iter().enumerate() {
+            if len < s.hi {
+                return i;
+            }
+        }
+        self.stages.len() - 1
+    }
+
+    pub fn total_instances(&self) -> usize {
+        self.stages.iter().map(|s| s.n_instances).sum()
+    }
+
+    /// A single-stage pipeline using all instances (the "no-pipeline"
+    /// ablation layout of §6.5).
+    pub fn no_pipeline(e: usize, max_len: Tokens) -> Self {
+        Pipeline {
+            stages: vec![StageSpec { lo: 0, hi: max_len, n_instances: e }],
+            predicted_quality: f64::INFINITY,
+        }
+    }
+
+    /// Boundaries between consecutive stages (len = stages-1).
+    pub fn boundaries(&self) -> Vec<Tokens> {
+        self.stages.iter().take(self.stages.len().saturating_sub(1)).map(|s| s.hi).collect()
+    }
+}
+
+/// Inter-stage migration cost model: the `c_{l'}` term.
+///
+/// Every request whose final length crosses a cut at `l'` must move its
+/// KV cache (~`l' * kv_bytes_per_token` bytes) across the inter-stage
+/// link once.  Amortised over the planning window, the delay charged to
+/// the cut is `crossings * bytes / bandwidth`, scaled by `weight` to
+/// express how much one second of migration traffic degrades QoE.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationCost {
+    pub kv_bytes_per_token: f64,
+    pub link_bytes_per_s: f64,
+    /// QoE units charged per second of transfer time.
+    pub weight: f64,
+}
+
+impl MigrationCost {
+    pub fn new(kv_bytes_per_token: f64, link_bytes_per_s: f64) -> Self {
+        Self { kv_bytes_per_token, link_bytes_per_s, weight: 1.0 }
+    }
+
+    /// Zero-cost model (for tests / ablations).
+    pub fn free() -> Self {
+        Self { kv_bytes_per_token: 0.0, link_bytes_per_s: 1.0, weight: 0.0 }
+    }
+
+    fn cut_cost(&self, cut_len: Tokens, crossings: f64) -> f64 {
+        if self.weight == 0.0 {
+            return 0.0;
+        }
+        let bytes = crossings * cut_len as f64 * self.kv_bytes_per_token;
+        self.weight * bytes / self.link_bytes_per_s
+    }
+}
+
+/// The pipeline planner.
+#[derive(Debug, Clone, Copy)]
+pub struct Planner {
+    pub qoe: QoeModel,
+    pub migration: MigrationCost,
+}
+
+/// Aggregate view of the requests in a bucket range, as QoE features.
+#[derive(Debug, Clone, Copy)]
+struct RangeAgg {
+    n: f64,
+    sum_i: f64,
+    sum_i2: f64,
+    sum_l: f64,
+}
+
+impl RangeAgg {
+    fn features(&self) -> Features {
+        Features([1.0, self.n, self.sum_i, self.sum_i2, self.sum_l])
+    }
+}
+
+impl Planner {
+    pub fn new(qoe: QoeModel, migration: MigrationCost) -> Self {
+        Self { qoe, migration }
+    }
+
+    /// QoE of serving the aggregate `agg` on `k` instances, via the
+    /// paper's even set division (§4.2 footnote 1).
+    fn stage_cost(&self, agg: RangeAgg, k: usize) -> f64 {
+        if agg.n == 0.0 {
+            return 0.0;
+        }
+        self.qoe.split_batch_qoe(&agg.features(), k)
+    }
+
+    /// Exact DP over the histogram's exponential buckets.
+    pub fn plan_dp(&self, hist: &LengthHistogram, e: usize) -> Pipeline {
+        assert!(e >= 1);
+        let k = hist.bounds.len();
+        let pref = hist.prefix();
+        let range = |a: usize, b: usize| -> RangeAgg {
+            RangeAgg {
+                n: pref[b].0 - pref[a].0,
+                sum_i: pref[b].1 - pref[a].1,
+                sum_i2: pref[b].2 - pref[a].2,
+                sum_l: pref[b].3 - pref[a].3,
+            }
+        };
+        // Crossings at bucket boundary b: requests in buckets >= b.
+        let total_n = pref[k].0;
+        let crossings = |b: usize| total_n - pref[b].0;
+
+        // f[s][e][l]: s stages (1-indexed), e instances, first l buckets.
+        // Flatten: dims (e+1) x (k+1) per stage level; roll stages.
+        const INF: f64 = f64::INFINITY;
+        let idx = |ee: usize, ll: usize| ee * (k + 1) + ll;
+        let mut prev = vec![INF; (e + 1) * (k + 1)];
+        // Base: 0 stages serve 0 buckets with any instance count >= 0.
+        for ee in 0..=e {
+            prev[idx(ee, 0)] = 0.0;
+        }
+        let mut choice: Vec<Vec<(usize, usize)>> = Vec::new(); // per stage level: (e', l') at (e,l)
+        let mut best: Option<(f64, usize, usize)> = None; // (quality, stages, level snapshot idx)
+        let mut layers: Vec<Vec<f64>> = vec![prev.clone()];
+
+        let max_stages = e.min(k);
+        for s in 1..=max_stages {
+            let mut cur = vec![INF; (e + 1) * (k + 1)];
+            let mut ch = vec![(0usize, 0usize); (e + 1) * (k + 1)];
+            for ee in s..=e {
+                for ll in s..=k {
+                    let mut bv = INF;
+                    let mut barg = (0usize, 0usize);
+                    for ep in (s - 1)..ee {
+                        for lp in (s - 1)..ll {
+                            let base = prev[idx(ep, lp)];
+                            if !base.is_finite() {
+                                continue;
+                            }
+                            let agg = range(lp, ll);
+                            let stage = self.stage_cost(agg, ee - ep);
+                            let cut = if lp == 0 {
+                                0.0
+                            } else {
+                                self.migration.cut_cost(hist.bounds[lp - 1], crossings(lp))
+                            };
+                            let v = base + stage + cut;
+                            if v < bv {
+                                bv = v;
+                                barg = (ep, lp);
+                            }
+                        }
+                    }
+                    cur[idx(ee, ll)] = bv;
+                    ch[idx(ee, ll)] = barg;
+                }
+            }
+            let q = cur[idx(e, k)];
+            if q.is_finite() && best.map(|(b, _, _)| q < b).unwrap_or(true) {
+                best = Some((q, s, layers.len()));
+            }
+            choice.push(ch);
+            layers.push(cur.clone());
+            prev = cur;
+        }
+
+        let (quality, n_stages, _) = best.expect("at least one feasible pipeline");
+        // Reconstruct boundaries by walking the choice tables.
+        let mut stages_rev: Vec<StageSpec> = Vec::new();
+        let (mut ee, mut ll) = (e, k);
+        for s in (1..=n_stages).rev() {
+            let (ep, lp) = choice[s - 1][idx(ee, ll)];
+            let lo = if lp == 0 { 0 } else { hist.bounds[lp - 1] };
+            let hi = hist.bounds[ll - 1];
+            stages_rev.push(StageSpec { lo, hi, n_instances: ee - ep });
+            ee = ep;
+            ll = lp;
+        }
+        stages_rev.reverse();
+        // First stage starts at 0.
+        if let Some(first) = stages_rev.first_mut() {
+            first.lo = 0;
+        }
+        Pipeline { stages: stages_rev, predicted_quality: quality }
+    }
+
+    /// The naive `O(E^3 L^2)` DP over raw cut points `0..=max_len` at
+    /// `granularity`-token resolution. Exists to regenerate the §6.5
+    /// complexity comparison — do not use at L=128K granularity 1.
+    pub fn plan_exact_fine(
+        &self,
+        reqs: &[(Tokens, Tokens)], // (input_len, final_len)
+        e: usize,
+        max_len: Tokens,
+        granularity: Tokens,
+    ) -> Pipeline {
+        // Build a fine-grained "histogram" with one bucket per
+        // granularity step, then run the same DP.
+        let g = granularity.max(1);
+        let n_buckets = max_len.div_ceil(g) as usize;
+        let bounds: Vec<Tokens> = (1..=n_buckets as Tokens).map(|i| (i * g).min(max_len)).collect();
+        let mut hist = LengthHistogram::new(bounds);
+        for &(i, f) in reqs {
+            hist.push(i, f);
+        }
+        self.plan_dp(&hist, e)
+    }
+
+    /// Two-phase heuristic (§4.2 second optimization).
+    ///
+    /// Phase 1: chain DP with exactly one instance per stage over the
+    /// bucket boundaries (E stages for E instances).  Phase 2: greedily
+    /// merge the adjacent stage pair with the highest positive merge
+    /// gain until no merge improves predicted quality.
+    pub fn plan_heuristic(&self, hist: &LengthHistogram, e: usize) -> Pipeline {
+        assert!(e >= 1);
+        let k = hist.bounds.len();
+        let pref = hist.prefix();
+        let range = |a: usize, b: usize| -> RangeAgg {
+            RangeAgg {
+                n: pref[b].0 - pref[a].0,
+                sum_i: pref[b].1 - pref[a].1,
+                sum_i2: pref[b].2 - pref[a].2,
+                sum_l: pref[b].3 - pref[a].3,
+            }
+        };
+        let total_n = pref[k].0;
+        let cut_cost = |b: usize| {
+            if b == 0 || b >= k {
+                0.0
+            } else {
+                self.migration.cut_cost(hist.bounds[b - 1], total_n - pref[b].0)
+            }
+        };
+
+        // --- Phase 1: chain DP. g[s][l] = best cost of covering the
+        // first l buckets with s single-instance stages.
+        let s_max = e.min(k);
+        const INF: f64 = f64::INFINITY;
+        let mut g = vec![vec![INF; k + 1]; s_max + 1];
+        let mut ch = vec![vec![0usize; k + 1]; s_max + 1];
+        g[0][0] = 0.0;
+        for s in 1..=s_max {
+            for ll in s..=k {
+                let mut bv = INF;
+                let mut barg = 0;
+                for lp in (s - 1)..ll {
+                    let base = g[s - 1][lp];
+                    if !base.is_finite() {
+                        continue;
+                    }
+                    let v = base + self.stage_cost(range(lp, ll), 1) + cut_cost(lp);
+                    if v < bv {
+                        bv = v;
+                        barg = lp;
+                    }
+                }
+                g[s][ll] = bv;
+                ch[s][ll] = barg;
+            }
+        }
+        // Pick the best stage count for the chain (instances beyond the
+        // chain length get distributed during merging below by giving
+        // the chain exactly min(e, k) stages and then rebalancing).
+        let chain_stages = (1..=s_max)
+            .filter(|&s| g[s][k].is_finite())
+            .min_by(|&a, &b| g[a][k].partial_cmp(&g[b][k]).unwrap())
+            .expect("feasible chain");
+        // Reconstruct cuts.
+        let mut cuts_rev = Vec::new();
+        let mut ll = k;
+        for s in (1..=chain_stages).rev() {
+            let lp = ch[s][ll];
+            cuts_rev.push((lp, ll));
+            ll = lp;
+        }
+        cuts_rev.reverse();
+        // Distribute instances over the chain's ranges by greedy
+        // marginal gain (optimal for the convex per-stage QoE curve).
+        let distribute = |ranges: &[(usize, usize)], e: usize| -> Vec<usize> {
+            let mut inst = vec![1usize; ranges.len()];
+            for _ in ranges.len()..e {
+                let (imax, _) = ranges
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(a, b))| {
+                        let agg = range(a, b);
+                        let gain = self.stage_cost(agg, inst[i]) - self.stage_cost(agg, inst[i] + 1);
+                        (i, gain)
+                    })
+                    .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+                    .unwrap();
+                inst[imax] += 1;
+            }
+            inst
+        };
+        let ranges: Vec<(usize, usize)> = cuts_rev.clone();
+        let inst = distribute(&ranges, e);
+        let mut stages: Vec<(usize, usize, usize)> = ranges
+            .iter()
+            .zip(inst.iter())
+            .map(|(&(a, b), &i)| (a, b, i))
+            .collect();
+
+        // --- Phase 2: greedy merge by best positive gain, re-running
+        // the instance distribution for every trial layout.
+        let plan_cost = |ranges: &[(usize, usize)], inst: &[usize]| -> f64 {
+            let mut c = 0.0;
+            for (i, (&(a, b), &k)) in ranges.iter().zip(inst.iter()).enumerate() {
+                c += self.stage_cost(range(a, b), k);
+                if i > 0 {
+                    c += cut_cost(a);
+                }
+            }
+            c
+        };
+        let mut ranges: Vec<(usize, usize)> = stages.iter().map(|&(a, b, _)| (a, b)).collect();
+        let mut inst: Vec<usize> = stages.iter().map(|&(_, _, i)| i).collect();
+        let mut cost = plan_cost(&ranges, &inst);
+        loop {
+            if ranges.len() == 1 {
+                break;
+            }
+            let mut best: Option<(f64, usize, Vec<(usize, usize)>, Vec<usize>)> = None;
+            for i in 0..ranges.len() - 1 {
+                let mut trial: Vec<(usize, usize)> = ranges.clone();
+                trial[i] = (trial[i].0, trial[i + 1].1);
+                trial.remove(i + 1);
+                let trial_inst = distribute(&trial, e);
+                let c = plan_cost(&trial, &trial_inst);
+                let gain = cost - c;
+                if gain > 0.0 && best.as_ref().map(|(g, _, _, _)| gain > *g).unwrap_or(true) {
+                    best = Some((gain, i, trial, trial_inst));
+                }
+            }
+            let Some((gain, _i, trial, trial_inst)) = best else { break };
+            ranges = trial;
+            inst = trial_inst;
+            cost -= gain;
+        }
+        stages = ranges
+            .iter()
+            .zip(inst.iter())
+            .map(|(&(a, b), &k)| (a, b, k))
+            .collect();
+
+        let specs: Vec<StageSpec> = stages
+            .iter()
+            .enumerate()
+            .map(|(i, &(a, b, inst))| StageSpec {
+                lo: if i == 0 { 0 } else { hist.bounds[a - 1] },
+                hi: hist.bounds[b - 1],
+                n_instances: inst,
+            })
+            .collect();
+        Pipeline { stages: specs, predicted_quality: cost }
+    }
+
+    /// Predicted quality of an arbitrary pipeline under this planner's
+    /// model (used by ablations to compare layouts on equal footing).
+    pub fn pipeline_quality(&self, hist: &LengthHistogram, p: &Pipeline) -> f64 {
+        let pref = hist.prefix();
+        let k = hist.bounds.len();
+        let total_n = pref[k].0;
+        let bucket_at = |len: Tokens| -> usize {
+            // First bucket index whose bound >= len (prefix cut point).
+            hist.bounds.iter().position(|&b| b >= len).map(|i| i + 1).unwrap_or(k)
+        };
+        let mut cost = 0.0;
+        for (i, s) in p.stages.iter().enumerate() {
+            let a = if i == 0 { 0 } else { bucket_at(s.lo) };
+            let b = bucket_at(s.hi);
+            let agg = RangeAgg {
+                n: pref[b].0 - pref[a].0,
+                sum_i: pref[b].1 - pref[a].1,
+                sum_i2: pref[b].2 - pref[a].2,
+                sum_l: pref[b].3 - pref[a].3,
+            };
+            cost += self.stage_cost(agg, s.n_instances);
+            if i > 0 {
+                cost += self.migration.cut_cost(s.lo, total_n - pref[a].0);
+            }
+        }
+        cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qoe::QoeModel;
+    use crate::workload::{generate, LengthHistogram, ShareGptLike};
+
+    /// A QoE model shaped like real fits: constant + per-batch terms.
+    fn qoe() -> QoeModel {
+        QoeModel::new([5e-3, 2e-4, 1e-6, 1e-11, 2e-6])
+    }
+
+    fn hist() -> LengthHistogram {
+        let reqs = generate(&ShareGptLike::default(), 10.0, 5000, 77);
+        LengthHistogram::from_requests(&reqs, 131_072)
+    }
+
+    #[test]
+    fn dp_uses_all_instances_and_covers_range() {
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let pipe = p.plan_dp(&hist(), 8);
+        assert_eq!(pipe.total_instances(), 8);
+        assert_eq!(pipe.stages.first().unwrap().lo, 0);
+        assert_eq!(pipe.stages.last().unwrap().hi, 131_072);
+        // Stages are contiguous and increasing.
+        for w in pipe.stages.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+            assert!(w[0].lo < w[0].hi);
+        }
+    }
+
+    #[test]
+    fn dp_prefers_multi_stage_on_skewed_load() {
+        // With a skewed distribution and a QoE model that charges for
+        // length heterogeneity (F4 term), the optimum is > 1 stage.
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let pipe = p.plan_dp(&hist(), 16);
+        assert!(pipe.stages.len() > 1, "expected a pipeline, got {:?}", pipe.stages);
+        assert!(pipe.stages.len() <= 16);
+    }
+
+    #[test]
+    fn dp_beats_no_pipeline_quality() {
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let h = hist();
+        let pipe = p.plan_dp(&h, 16);
+        let flat = Pipeline::no_pipeline(16, 131_072);
+        assert!(
+            pipe.predicted_quality <= p.pipeline_quality(&h, &flat) + 1e-9,
+            "DP {} vs flat {}",
+            pipe.predicted_quality,
+            p.pipeline_quality(&h, &flat)
+        );
+    }
+
+    #[test]
+    fn migration_cost_discourages_cuts() {
+        let h = hist();
+        let free = Planner::new(qoe(), MigrationCost::free()).plan_dp(&h, 16);
+        let pricey = Planner::new(
+            qoe(),
+            MigrationCost { kv_bytes_per_token: 114_688.0, link_bytes_per_s: 25e9, weight: 1000.0 },
+        )
+        .plan_dp(&h, 16);
+        assert!(pricey.stages.len() <= free.stages.len());
+    }
+
+    #[test]
+    fn single_instance_is_single_stage() {
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let pipe = p.plan_dp(&hist(), 1);
+        assert_eq!(pipe.stages.len(), 1);
+        assert_eq!(pipe.total_instances(), 1);
+    }
+
+    #[test]
+    fn heuristic_matches_dp_closely() {
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let h = hist();
+        let exact = p.plan_dp(&h, 16);
+        let heur = p.plan_heuristic(&h, 16);
+        assert_eq!(heur.total_instances(), 16);
+        // The heuristic is within 25% of the exact optimum's quality.
+        let exact_q = exact.predicted_quality;
+        let heur_q = p.pipeline_quality(&h, &heur);
+        assert!(
+            heur_q <= exact_q * 1.25 + 1e-9,
+            "heuristic {heur_q} vs exact {exact_q}"
+        );
+    }
+
+    #[test]
+    fn heuristic_much_faster_than_exact_fine() {
+        // Structural check of the complexity claim: the heuristic
+        // touches O(E log^2 L) states vs the fine DP's O(E^3 (L/g)^2).
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let h = hist();
+        let t0 = std::time::Instant::now();
+        let _ = p.plan_heuristic(&h, 16);
+        let heur_t = t0.elapsed();
+        let reqs: Vec<(u64, u64)> = generate(&ShareGptLike::default(), 10.0, 500, 3)
+            .iter()
+            .map(|r| (r.input_len, r.final_len()))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let _ = p.plan_exact_fine(&reqs, 8, 16_384, 512); // 32 cut points
+        let fine_t = t0.elapsed();
+        // Both should run, heuristic comfortably under a second.
+        assert!(heur_t.as_secs_f64() < 1.0, "heuristic took {heur_t:?}");
+        assert!(fine_t.as_secs_f64() < 60.0);
+    }
+
+    #[test]
+    fn stage_for_routes_by_length() {
+        let pipe = Pipeline {
+            stages: vec![
+                StageSpec { lo: 0, hi: 1024, n_instances: 2 },
+                StageSpec { lo: 1024, hi: 8192, n_instances: 2 },
+                StageSpec { lo: 8192, hi: 131_072, n_instances: 1 },
+            ],
+            predicted_quality: 0.0,
+        };
+        assert_eq!(pipe.stage_for(0), 0);
+        assert_eq!(pipe.stage_for(1023), 0);
+        assert_eq!(pipe.stage_for(1024), 1);
+        assert_eq!(pipe.stage_for(100_000), 2);
+        assert_eq!(pipe.stage_for(999_999_999), 2);
+        assert_eq!(pipe.boundaries(), vec![1024, 8192]);
+    }
+
+    #[test]
+    fn empty_histogram_still_plans() {
+        let h = LengthHistogram::new(LengthHistogram::exponential_bounds(131_072));
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let pipe = p.plan_dp(&h, 4);
+        assert_eq!(pipe.total_instances(), 4);
+    }
+}

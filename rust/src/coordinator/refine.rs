@@ -1,0 +1,338 @@
+//! Adaptive range refinement — §4.3.
+//!
+//! Each instance periodically recomputes the boundary between its own
+//! length range and its successors'.  The refinement:
+//!
+//! 1. averages the successor stage's workload (union of successor
+//!    sequence lengths divided evenly by successor count, using the
+//!    §4.2 set-division approximation),
+//! 2. merges it with the local sequence lengths, sorts the union as a
+//!    list `R`, and
+//! 3. picks the split index minimising `Q^{R[:i]} + Q^{R[i:]}` under
+//!    the QoE model (Eq. 1),
+//!
+//! with three stabilisers: initialisation from the offline plan, EMA
+//! smoothing of boundary updates, and freezing under low traffic
+//! (fewer than [`RefineConfig::min_requests`] samples).
+
+use crate::qoe::{Features, QoeModel};
+use crate::Tokens;
+
+/// One sequence as (input_len, current_len).
+pub type SeqLen = (Tokens, Tokens);
+
+#[derive(Debug, Clone, Copy)]
+pub struct RefineConfig {
+    /// EMA smoothing factor for boundary updates in (0, 1]; 1 = jump.
+    pub ema_alpha: f64,
+    /// Freeze refinement below this many merged samples (§4.3: "fewer
+    /// than five requests").
+    pub min_requests: usize,
+}
+
+impl Default for RefineConfig {
+    fn default() -> Self {
+        Self { ema_alpha: 0.3, min_requests: 5 }
+    }
+}
+
+/// Stateful per-boundary refiner.
+#[derive(Debug, Clone)]
+pub struct RangeRefiner {
+    pub cfg: RefineConfig,
+    pub qoe: QoeModel,
+    /// Current smoothed boundary.
+    pub boundary: Tokens,
+}
+
+impl RangeRefiner {
+    /// Initialise from the offline pipeline-planning boundary (§4.3
+    /// stabiliser #1).
+    pub fn new(qoe: QoeModel, initial_boundary: Tokens, cfg: RefineConfig) -> Self {
+        Self { cfg, qoe, boundary: initial_boundary }
+    }
+
+    /// The §4.2 set-division approximation: sort, start at the
+    /// (n/2)-th element, take every n-th — yielding a representative
+    /// 1/n-subset of the set.
+    pub fn divide_set(mut lens: Vec<SeqLen>, n: usize) -> Vec<SeqLen> {
+        if n <= 1 || lens.is_empty() {
+            return lens;
+        }
+        lens.sort_by_key(|&(_, l)| l);
+        lens.iter().skip(n / 2).step_by(n).copied().collect()
+    }
+
+    /// Optimal split of the sorted union `r` under the QoE model:
+    /// returns (index, quality).  Index `i` means `r[..i]` stays local,
+    /// `r[i..]` goes downstream.
+    pub fn optimal_split(&self, r: &[SeqLen]) -> (usize, f64) {
+        // Prefix features for O(1) range queries.
+        let n = r.len();
+        let mut pre = Vec::with_capacity(n + 1);
+        let mut acc = (0.0f64, 0.0f64, 0.0f64); // sumI, sumI2, sumL
+        pre.push(acc);
+        for &(i, l) in r {
+            acc.0 += i as f64;
+            acc.1 += (i as f64) * (i as f64);
+            acc.2 += l as f64;
+            pre.push(acc);
+        }
+        let q_range = |a: usize, b: usize| -> f64 {
+            if a == b {
+                return 0.0;
+            }
+            let f = Features([
+                1.0,
+                (b - a) as f64,
+                pre[b].0 - pre[a].0,
+                pre[b].1 - pre[a].1,
+                pre[b].2 - pre[a].2,
+            ]);
+            self.qoe.batch_qoe(&f)
+        };
+        let mut best = (0usize, f64::INFINITY);
+        for i in 0..=n {
+            let q = q_range(0, i) + q_range(i, n);
+            if q < best.1 {
+                best = (i, q);
+            }
+        }
+        best
+    }
+
+    /// Instance-count-weighted split: evaluate `Q^{left/k_left} +
+    /// Q^{right/k_right}` (Eq. 1 + the §4.2 even set division) so a
+    /// 14-instance stage and a 1-instance stage are compared by
+    /// *per-instance* quality. Returns (index, quality) over `r`.
+    pub fn optimal_split_weighted(
+        &self,
+        r: &[SeqLen],
+        k_left: usize,
+        k_right: usize,
+    ) -> (usize, f64) {
+        let n = r.len();
+        let mut pre = Vec::with_capacity(n + 1);
+        let mut acc = (0.0f64, 0.0f64, 0.0f64);
+        pre.push(acc);
+        for &(i, l) in r {
+            acc.0 += i as f64;
+            acc.1 += (i as f64) * (i as f64);
+            acc.2 += l as f64;
+            pre.push(acc);
+        }
+        let q_range = |a: usize, b: usize, k: usize| -> f64 {
+            if a == b {
+                return 0.0;
+            }
+            let f = Features([
+                1.0,
+                (b - a) as f64,
+                pre[b].0 - pre[a].0,
+                pre[b].1 - pre[a].1,
+                pre[b].2 - pre[a].2,
+            ]);
+            self.qoe.split_batch_qoe(&f, k)
+        };
+        let mut best = (0usize, f64::INFINITY);
+        for i in 0..=n {
+            let q = q_range(0, i, k_left) + q_range(i, n, k_right);
+            if q < best.1 {
+                best = (i, q);
+            }
+        }
+        best
+    }
+
+    /// Refinement over full stage unions with explicit instance counts
+    /// (the multi-instance-stage generalisation of `refine`).
+    pub fn refine_weighted(
+        &mut self,
+        local_union: Vec<SeqLen>,
+        succ_union: Vec<SeqLen>,
+        k_local: usize,
+        k_succ: usize,
+    ) -> Tokens {
+        let mut merged: Vec<SeqLen> =
+            local_union.into_iter().chain(succ_union).collect();
+        if merged.len() < self.cfg.min_requests {
+            return self.boundary;
+        }
+        merged.sort_by_key(|&(_, l)| l);
+        let (split, _q) =
+            self.optimal_split_weighted(&merged, k_local.max(1), k_succ.max(1));
+        let raw_boundary = if split >= merged.len() {
+            merged.last().map(|&(_, l)| l + 1).unwrap_or(self.boundary)
+        } else {
+            merged[split].1
+        };
+        let a = self.cfg.ema_alpha;
+        let smoothed = (1.0 - a) * self.boundary as f64 + a * raw_boundary as f64;
+        self.boundary = smoothed.round().max(1.0) as Tokens;
+        self.boundary
+    }
+
+    /// Run one refinement round.
+    ///
+    /// * `local` — this instance's live sequence lengths.
+    /// * `successors` — each successor instance's live lengths.
+    ///
+    /// Returns the new (smoothed) boundary; `self.boundary` updates.
+    pub fn refine(&mut self, local: &[SeqLen], successors: &[Vec<SeqLen>]) -> Tokens {
+        // Average successor workload: union ÷ successor count.
+        let succ_union: Vec<SeqLen> = successors.iter().flatten().copied().collect();
+        let succ_avg = Self::divide_set(succ_union, successors.len().max(1));
+
+        let mut merged: Vec<SeqLen> = local.iter().copied().chain(succ_avg).collect();
+        if merged.len() < self.cfg.min_requests {
+            // Low-traffic freeze (§4.3 stabiliser #3).
+            return self.boundary;
+        }
+        merged.sort_by_key(|&(_, l)| l);
+        let (split, _q) = self.optimal_split(&merged);
+
+        // Boundary = length at the optimal split point. A split at the
+        // very end means "keep everything local": push the boundary to
+        // the largest observed length + 1.
+        let raw_boundary = if split >= merged.len() {
+            merged.last().map(|&(_, l)| l + 1).unwrap_or(self.boundary)
+        } else {
+            merged[split].1
+        };
+
+        // EMA smoothing (§4.3 stabiliser #2).
+        let a = self.cfg.ema_alpha;
+        let smoothed = (1.0 - a) * self.boundary as f64 + a * raw_boundary as f64;
+        self.boundary = smoothed.round().max(1.0) as Tokens;
+        self.boundary
+    }
+}
+
+/// Ablation policies of Fig. 15.
+pub mod naive {
+    use super::SeqLen;
+    use crate::Tokens;
+
+    /// Quantity-based refinement: split so both sides hold the same
+    /// *number* of requests.
+    pub fn quantity_boundary(merged_sorted: &[SeqLen]) -> Option<Tokens> {
+        if merged_sorted.is_empty() {
+            return None;
+        }
+        Some(merged_sorted[merged_sorted.len() / 2].1)
+    }
+
+    /// Memory-based refinement: split so both sides hold roughly the
+    /// same total cached tokens (memory).
+    pub fn memory_boundary(merged_sorted: &[SeqLen]) -> Option<Tokens> {
+        if merged_sorted.is_empty() {
+            return None;
+        }
+        let total: u64 = merged_sorted.iter().map(|&(_, l)| l).sum();
+        let mut acc = 0u64;
+        for &(_, l) in merged_sorted {
+            acc += l;
+            if acc * 2 >= total {
+                return Some(l);
+            }
+        }
+        merged_sorted.last().map(|&(_, l)| l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qoe::QoeModel;
+
+    fn qoe() -> QoeModel {
+        // Constant per-batch cost + per-token terms: favours splitting
+        // long from short.
+        QoeModel::new([1e-3, 1e-4, 1e-6, 1e-11, 5e-6])
+    }
+
+    fn lens(v: &[u64]) -> Vec<SeqLen> {
+        v.iter().map(|&l| (l / 2, l)).collect()
+    }
+
+    #[test]
+    fn divide_set_picks_every_nth_from_middle() {
+        let set = lens(&[10, 20, 30, 40, 50, 60, 70, 80]);
+        let sub = RangeRefiner::divide_set(set, 4);
+        // skip(2).step_by(4) over sorted: indices 2, 6.
+        assert_eq!(sub.iter().map(|&(_, l)| l).collect::<Vec<_>>(), vec![30, 70]);
+    }
+
+    #[test]
+    fn divide_by_one_is_identity() {
+        let set = lens(&[5, 1, 3]);
+        let sub = RangeRefiner::divide_set(set.clone(), 1);
+        assert_eq!(sub, set);
+    }
+
+    #[test]
+    fn optimal_split_separates_bimodal_lengths() {
+        let r = RangeRefiner::new(qoe(), 1000, RefineConfig::default());
+        let mut data = lens(&[100, 110, 120, 130, 10_000, 11_000, 12_000]);
+        data.sort_by_key(|&(_, l)| l);
+        let (split, _) = r.optimal_split(&data);
+        // The optimum lands at the cluster boundary (exactly where the
+        // clusters separate, +/- one element depending on the linear
+        // model's n-interaction terms).
+        assert!((4..=5).contains(&split), "split {split} not at the cluster gap");
+    }
+
+    #[test]
+    fn refine_moves_boundary_toward_data() {
+        let mut r = RangeRefiner::new(qoe(), 50_000, RefineConfig { ema_alpha: 1.0, min_requests: 5 });
+        let local = lens(&[100, 200, 300, 400, 500]);
+        let succ = vec![lens(&[20_000, 30_000, 40_000])];
+        let b = r.refine(&local, &succ);
+        assert!(b < 50_000, "boundary should drop toward the short cluster, got {b}");
+        assert!(b > 500, "but not below the local lengths, got {b}");
+    }
+
+    #[test]
+    fn ema_dampens_jumps() {
+        let mut fast = RangeRefiner::new(qoe(), 10_000, RefineConfig { ema_alpha: 1.0, min_requests: 1 });
+        let mut slow = RangeRefiner::new(qoe(), 10_000, RefineConfig { ema_alpha: 0.1, min_requests: 1 });
+        let local = lens(&[100, 150, 200]);
+        let succ = vec![lens(&[50_000, 60_000, 70_000])];
+        let bf = fast.refine(&local, &succ);
+        let bs = slow.refine(&local, &succ);
+        // Slow refiner stays near the old boundary.
+        assert!((bs as i64 - 10_000i64).abs() < (bf as i64 - 10_000i64).abs());
+    }
+
+    #[test]
+    fn low_traffic_freezes_boundary() {
+        let mut r = RangeRefiner::new(qoe(), 5000, RefineConfig::default());
+        let local = lens(&[100, 200]); // only 2 < min_requests=5
+        let b = r.refine(&local, &[]);
+        assert_eq!(b, 5000, "boundary frozen under low traffic");
+    }
+
+    #[test]
+    fn naive_quantity_balances_counts() {
+        let mut data = lens(&[1, 2, 3, 4, 100, 200]);
+        data.sort_by_key(|&(_, l)| l);
+        let b = naive::quantity_boundary(&data).unwrap();
+        assert_eq!(b, 4); // index 3 of 6
+    }
+
+    #[test]
+    fn naive_memory_balances_tokens() {
+        let mut data = lens(&[10, 10, 10, 1000]);
+        data.sort_by_key(|&(_, l)| l);
+        let b = naive::memory_boundary(&data).unwrap();
+        assert_eq!(b, 1000, "one huge request dominates memory");
+    }
+
+    #[test]
+    fn empty_inputs_survive() {
+        let mut r = RangeRefiner::new(qoe(), 123, RefineConfig::default());
+        assert_eq!(r.refine(&[], &[]), 123);
+        assert_eq!(naive::quantity_boundary(&[]), None);
+        assert_eq!(naive::memory_boundary(&[]), None);
+    }
+}

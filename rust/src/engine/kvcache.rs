@@ -1,0 +1,235 @@
+//! Paged KV-cache memory manager (vLLM-style block allocator).
+//!
+//! The scheduler-visible behaviour of PagedAttention's memory system:
+//! sequences own integral numbers of fixed-size token blocks; admission
+//! and decode growth must fit the device's KV budget; freeing returns
+//! blocks to the pool.  Fragmentation is therefore bounded to one
+//! partial block per sequence, exactly as in the real system.
+
+use crate::{RequestId, Tokens};
+use std::collections::HashMap;
+
+/// Default tokens per block (vLLM's default block size is 16).
+pub const DEFAULT_BLOCK_SIZE: Tokens = 16;
+
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    /// Total capacity in blocks.
+    capacity_blocks: u64,
+    block_size: Tokens,
+    free_blocks: u64,
+    /// Per-sequence allocation: (tokens stored, blocks held).
+    seqs: HashMap<RequestId, (Tokens, u64)>,
+}
+
+impl KvCache {
+    pub fn new(capacity_tokens: Tokens, block_size: Tokens) -> Self {
+        let block_size = block_size.max(1);
+        let capacity_blocks = capacity_tokens / block_size;
+        Self { capacity_blocks, block_size, free_blocks: capacity_blocks, seqs: HashMap::new() }
+    }
+
+    pub fn block_size(&self) -> Tokens {
+        self.block_size
+    }
+
+    pub fn capacity_tokens(&self) -> Tokens {
+        self.capacity_blocks * self.block_size
+    }
+
+    pub fn free_tokens(&self) -> Tokens {
+        self.free_blocks * self.block_size
+    }
+
+    pub fn used_tokens(&self) -> Tokens {
+        self.seqs.values().map(|(t, _)| *t).sum()
+    }
+
+    /// Tokens reserved (block-granular) — what actually occupies HBM.
+    pub fn reserved_tokens(&self) -> Tokens {
+        self.seqs.values().map(|(_, b)| b * self.block_size).sum()
+    }
+
+    fn blocks_for(&self, tokens: Tokens) -> u64 {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Can a new sequence of `tokens` be admitted right now?
+    pub fn can_allocate(&self, tokens: Tokens) -> bool {
+        self.blocks_for(tokens.max(1)) <= self.free_blocks
+    }
+
+    /// Allocate a fresh sequence. Returns false (no change) if it
+    /// doesn't fit or the id already exists.
+    pub fn allocate(&mut self, id: RequestId, tokens: Tokens) -> bool {
+        if self.seqs.contains_key(&id) {
+            return false;
+        }
+        let need = self.blocks_for(tokens.max(1));
+        if need > self.free_blocks {
+            return false;
+        }
+        self.free_blocks -= need;
+        self.seqs.insert(id, (tokens, need));
+        true
+    }
+
+    /// Grow a sequence by `delta` tokens (decode step / prefill chunk).
+    /// Returns false if the growth doesn't fit (caller must preempt).
+    pub fn grow(&mut self, id: RequestId, delta: Tokens) -> bool {
+        let Some(&(tokens, blocks)) = self.seqs.get(&id) else {
+            return false;
+        };
+        let need = self.blocks_for(tokens + delta);
+        let extra = need.saturating_sub(blocks);
+        if extra > self.free_blocks {
+            return false;
+        }
+        self.free_blocks -= extra;
+        self.seqs.insert(id, (tokens + delta, blocks + extra));
+        true
+    }
+
+    /// Free a sequence entirely, returning its blocks.
+    pub fn free(&mut self, id: RequestId) -> bool {
+        if let Some((_, blocks)) = self.seqs.remove(&id) {
+            self.free_blocks += blocks;
+            debug_assert!(self.free_blocks <= self.capacity_blocks);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn tokens_of(&self, id: RequestId) -> Option<Tokens> {
+        self.seqs.get(&id).map(|(t, _)| *t)
+    }
+
+    /// Would growing `id` by one token require a fresh block?
+    /// (True exactly when the sequence currently fills its blocks.)
+    pub fn next_token_needs_block(&self, id: RequestId) -> bool {
+        match self.seqs.get(&id) {
+            Some(&(tokens, blocks)) => tokens >= blocks * self.block_size,
+            None => false,
+        }
+    }
+
+    /// Free blocks available right now.
+    pub fn free_blocks(&self) -> u64 {
+        self.free_blocks
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.seqs.contains_key(&id)
+    }
+
+    pub fn n_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Utilization in [0, 1] of reserved blocks over capacity.
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_blocks == 0 {
+            return 1.0;
+        }
+        1.0 - self.free_blocks as f64 / self.capacity_blocks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+    use crate::testutil::for_all;
+
+    #[test]
+    fn allocate_and_free_roundtrip() {
+        let mut kv = KvCache::new(1600, 16);
+        assert!(kv.allocate(1, 100));
+        assert_eq!(kv.tokens_of(1), Some(100));
+        assert_eq!(kv.free_tokens(), 1600 - 112); // 7 blocks of 16
+        assert!(kv.free(1));
+        assert_eq!(kv.free_tokens(), 1600);
+        assert!(!kv.free(1), "double free is a no-op");
+    }
+
+    #[test]
+    fn rejects_over_capacity() {
+        let mut kv = KvCache::new(100, 16);
+        assert!(!kv.allocate(1, 101));
+        assert!(kv.allocate(1, 96));
+        assert!(!kv.allocate(2, 16), "pool exhausted");
+    }
+
+    #[test]
+    fn duplicate_allocation_rejected() {
+        let mut kv = KvCache::new(1000, 16);
+        assert!(kv.allocate(1, 10));
+        assert!(!kv.allocate(1, 10));
+    }
+
+    #[test]
+    fn grow_within_block_is_free() {
+        let mut kv = KvCache::new(160, 16);
+        assert!(kv.allocate(1, 10));
+        let free_before = kv.free_tokens();
+        assert!(kv.grow(1, 6)); // still one block (16 tokens)
+        assert_eq!(kv.free_tokens(), free_before);
+        assert!(kv.grow(1, 1)); // crosses to a second block
+        assert_eq!(kv.free_tokens(), free_before - 16);
+    }
+
+    #[test]
+    fn grow_fails_when_full_without_corruption() {
+        let mut kv = KvCache::new(32, 16);
+        assert!(kv.allocate(1, 16));
+        assert!(kv.allocate(2, 16));
+        assert!(!kv.grow(1, 1));
+        assert_eq!(kv.tokens_of(1), Some(16), "failed grow must not mutate");
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let mut kv = KvCache::new(160, 16);
+        assert_eq!(kv.utilization(), 0.0);
+        kv.allocate(1, 160);
+        assert!((kv.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_blocks_conserved() {
+        for_all("kv-conservation", 0xBEEF, 64, |rng: &mut Rng| {
+            let mut kv = KvCache::new(10_000, 16);
+            let mut live: Vec<RequestId> = Vec::new();
+            for op in 0..200 {
+                match rng.next_range(3) {
+                    0 => {
+                        let id = op as RequestId;
+                        if kv.allocate(id, 1 + rng.next_range(500)) {
+                            live.push(id);
+                        }
+                    }
+                    1 => {
+                        if let Some(&id) = rng.choose(&live) {
+                            kv.grow(id, 1 + rng.next_range(100));
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.next_range(live.len() as u64) as usize;
+                            let id = live.swap_remove(i);
+                            assert!(kv.free(id));
+                        }
+                    }
+                }
+                // Invariant: reserved + free == capacity.
+                assert_eq!(kv.reserved_tokens() + kv.free_tokens(), kv.capacity_tokens());
+                // Invariant: every live seq's tokens fit its blocks.
+                for &id in &live {
+                    let t = kv.tokens_of(id).unwrap();
+                    assert!(t <= kv.capacity_tokens());
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,652 @@
+//! Single-instance continuous-batching engine simulator (§2.1–2.2).
+//!
+//! Reproduces the scheduler-visible behaviour of a vLLM 0.9.x instance:
+//! iteration-level decoding with continuous batching, FCFS admission
+//! bounded by paged-KV memory and a token budget, chunked prefill with
+//! prefill-priority, and recompute-mode preemption when decode growth
+//! overflows memory.  Execution cost comes from an [`ExecBackend`] —
+//! the analytic attention cost model for the simulated figures, or a
+//! fake backend in tests.
+//!
+//! The engine exposes migration hooks ([`Engine::extract`],
+//! [`Engine::inject`]) so the CascadeInfer coordinator can move live
+//! sequences between instances; the engine itself stays scheduler-
+//! agnostic, mirroring the paper's "no modification to instance
+//! internals" claim.
+
+pub mod kvcache;
+
+pub use kvcache::KvCache;
+
+use crate::kernelmodel::AttentionModel;
+use crate::metrics::RequestRecord;
+use crate::workload::Request;
+use crate::{RequestId, Time, Tokens};
+use std::collections::VecDeque;
+
+/// Prices one engine iteration.
+pub trait ExecBackend {
+    /// Cost of a prefill iteration over per-sequence chunk sizes,
+    /// given each sequence's already-cached prefix length.
+    fn prefill_cost(&self, chunks: &[(Tokens, Tokens)]) -> Time;
+    /// Cost of one decode iteration over per-sequence current lengths.
+    fn decode_cost(&self, lens: &[Tokens]) -> Time;
+}
+
+/// Backend priced by the analytic attention model of §2.3.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModelBackend {
+    pub model: AttentionModel,
+}
+
+impl CostModelBackend {
+    pub fn new(model: AttentionModel) -> Self {
+        Self { model }
+    }
+}
+
+impl ExecBackend for CostModelBackend {
+    fn prefill_cost(&self, chunks: &[(Tokens, Tokens)]) -> Time {
+        // Chunked prefill over `new` tokens each, attending to
+        // prefix+new; dominated by compute on the new tokens.
+        let total_new: Tokens = chunks.iter().map(|&(new, _)| new).sum();
+        if total_new == 0 {
+            return 0.0;
+        }
+        // Cross-attention to the cached prefix adds memory traffic.
+        let prefix_tokens: Tokens = chunks.iter().map(|&(_, prefix)| prefix).sum();
+        let prefix_read = prefix_tokens as f64
+            * self.model.model.kv_bytes_per_token() as f64
+            / self.model.gpu.hbm_bytes_per_s;
+        self.model.prefill_latency(total_new) + prefix_read
+    }
+
+    fn decode_cost(&self, lens: &[Tokens]) -> Time {
+        self.model.decode_iteration_latency(lens)
+    }
+}
+
+/// Engine scheduling limits (vLLM-equivalent knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Max sequences in one decode batch (paper caps at 1024).
+    pub max_batch: usize,
+    /// Max new tokens per prefill iteration (chunked prefill budget).
+    pub max_batched_tokens: Tokens,
+    /// KV pool size in tokens.
+    pub kv_capacity_tokens: Tokens,
+    /// Paged-allocator block size.
+    pub block_size: Tokens,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 1024,
+            max_batched_tokens: 8192,
+            kv_capacity_tokens: 1_000_000,
+            block_size: kvcache::DEFAULT_BLOCK_SIZE,
+        }
+    }
+}
+
+/// Lifecycle phase of a sequence inside the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting in the FCFS queue (not yet admitted).
+    Queued,
+    /// Admitted; prefill partially done (`kv_len < prompt_len`).
+    Prefilling,
+    /// Autoregressive decoding.
+    Decoding,
+}
+
+/// A live sequence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sequence {
+    pub req: Request,
+    /// Output tokens generated so far (logical decode progress —
+    /// survives preemption).
+    pub generated: Tokens,
+    /// Tokens materialised in this instance's KV cache.
+    pub kv_len: Tokens,
+    /// Tokens to (re)prefill on admission: the prompt, plus any
+    /// already-generated outputs whose KV was dropped by a
+    /// recompute-mode preemption.
+    pub prompt_len: Tokens,
+    pub first_token_at: Option<Time>,
+    pub phase: Phase,
+}
+
+impl Sequence {
+    pub fn new(req: Request) -> Self {
+        Self {
+            req,
+            generated: 0,
+            kv_len: 0,
+            prompt_len: req.input_len,
+            first_token_at: None,
+            phase: Phase::Queued,
+        }
+    }
+
+    /// Current total sequence length (cached tokens).
+    pub fn current_len(&self) -> Tokens {
+        self.kv_len
+    }
+
+    /// Logical sequence length (prompt + generated), independent of
+    /// where the KV currently lives.
+    pub fn logical_len(&self) -> Tokens {
+        self.req.input_len + self.generated
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.generated >= self.req.output_len
+    }
+
+    /// Remaining decode tokens.
+    pub fn remaining(&self) -> Tokens {
+        self.req.output_len.saturating_sub(self.generated)
+    }
+}
+
+/// Result of advancing the engine by one iteration.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    /// Iteration execution time (0 if the engine was idle).
+    pub duration: Time,
+    /// Requests that finished this iteration.
+    pub completed: Vec<RequestRecord>,
+    /// Output tokens emitted this iteration.
+    pub tokens_emitted: u64,
+    /// Sequences preempted back to the queue this iteration.
+    pub preempted: u64,
+    /// True if this was a prefill (vs decode) iteration.
+    pub was_prefill: bool,
+}
+
+/// Single-instance continuous-batching engine.
+#[derive(Debug, Clone)]
+pub struct Engine<B: ExecBackend> {
+    pub cfg: EngineConfig,
+    backend: B,
+    /// FCFS arrival queue.
+    queue: VecDeque<Sequence>,
+    /// Admitted sequences (prefilling or decoding).
+    running: Vec<Sequence>,
+    kv: KvCache,
+    /// Cumulative stats.
+    pub total_output_tokens: u64,
+    pub total_iterations: u64,
+    pub busy_time: Time,
+}
+
+impl<B: ExecBackend> Engine<B> {
+    pub fn new(cfg: EngineConfig, backend: B) -> Self {
+        let kv = KvCache::new(cfg.kv_capacity_tokens, cfg.block_size);
+        Self {
+            cfg,
+            backend,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            kv,
+            total_output_tokens: 0,
+            total_iterations: 0,
+            busy_time: 0.0,
+        }
+    }
+
+    /// Enqueue a fresh request (prefill pending).
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(Sequence::new(req));
+    }
+
+    /// Inject a mid-life sequence arriving via migration. Its KV cache
+    /// is materialised on this instance (allocation must succeed —
+    /// the migration subsystem checks for idle slots first, §5).
+    pub fn inject(&mut self, seq: Sequence) -> bool {
+        if seq.phase == Phase::Queued {
+            self.queue.push_back(seq);
+            return true;
+        }
+        if !self.kv.allocate(seq.req.id, seq.current_len().max(1)) {
+            return false;
+        }
+        self.running.push(seq);
+        true
+    }
+
+    /// Remove a live sequence for migration out. Frees its KV.
+    pub fn extract(&mut self, id: RequestId) -> Option<Sequence> {
+        if let Some(pos) = self.running.iter().position(|s| s.req.id == id) {
+            let seq = self.running.remove(pos);
+            self.kv.free(id);
+            return Some(seq);
+        }
+        if let Some(pos) = self.queue.iter().position(|s| s.req.id == id) {
+            return self.queue.remove(pos);
+        }
+        None
+    }
+
+    /// Sequences currently decoding/prefilling (for load trackers).
+    pub fn running(&self) -> &[Sequence] {
+        &self.running
+    }
+
+    pub fn queued(&self) -> impl Iterator<Item = &Sequence> {
+        self.queue.iter()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn kv(&self) -> &KvCache {
+        &self.kv
+    }
+
+    /// Token-level load: total cached tokens (the LoadTracker metric).
+    pub fn token_load(&self) -> Tokens {
+        self.running.iter().map(|s| s.current_len()).sum::<Tokens>()
+            + self.queue.iter().map(|s| s.req.input_len).sum::<Tokens>()
+    }
+
+    /// Memory demand as a fraction of KV capacity.
+    pub fn memory_demand(&self) -> f64 {
+        self.kv.utilization()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.running.is_empty() || !self.queue.is_empty()
+    }
+
+    /// Admit queued sequences while memory and batch slots allow (FCFS).
+    fn admit(&mut self) {
+        while self.running.len() < self.cfg.max_batch {
+            let Some(front) = self.queue.front() else { break };
+            let need = front.prompt_len.max(1);
+            if !self.kv.can_allocate(need) {
+                break;
+            }
+            let mut seq = self.queue.pop_front().unwrap();
+            // Reserve the prompt's KV up front (vLLM reserves on admit).
+            let ok = self.kv.allocate(seq.req.id, need);
+            debug_assert!(ok);
+            if seq.phase == Phase::Queued {
+                seq.phase = Phase::Prefilling;
+            }
+            self.running.push(seq);
+        }
+    }
+
+    /// Advance one iteration starting at absolute time `now`.
+    ///
+    /// Prefill-priority (§6.1 "all systems prioritize prefilling over
+    /// decoding"): if any admitted sequence still has prompt tokens to
+    /// ingest, run a chunked-prefill iteration; otherwise decode.
+    pub fn step(&mut self, now: Time) -> StepOutcome {
+        self.admit();
+        if self.running.is_empty() {
+            return StepOutcome::default();
+        }
+
+        let any_prefill = self.running.iter().any(|s| s.phase == Phase::Prefilling);
+        let outcome = if any_prefill {
+            self.prefill_iteration(now)
+        } else {
+            self.decode_iteration(now)
+        };
+        self.total_iterations += 1;
+        self.busy_time += outcome.duration;
+        outcome
+    }
+
+    fn prefill_iteration(&mut self, now: Time) -> StepOutcome {
+        let mut budget = self.cfg.max_batched_tokens;
+        let mut chunks: Vec<(usize, Tokens, Tokens)> = Vec::new(); // (idx, new, prefix)
+        for (i, seq) in self.running.iter().enumerate() {
+            if seq.phase != Phase::Prefilling || budget == 0 {
+                continue;
+            }
+            let pending = seq.prompt_len - seq.kv_len;
+            let take = pending.min(budget);
+            if take == 0 {
+                continue;
+            }
+            budget -= take;
+            chunks.push((i, take, seq.kv_len));
+        }
+        if chunks.is_empty() {
+            // All prefilling seqs starved by budget 0 — run decode instead.
+            return self.decode_iteration(now);
+        }
+        let cost_input: Vec<(Tokens, Tokens)> =
+            chunks.iter().map(|&(_, new, prefix)| (new, prefix)).collect();
+        let duration = self.backend.prefill_cost(&cost_input);
+        let end = now + duration;
+
+        let mut outcome = StepOutcome { duration, was_prefill: true, ..Default::default() };
+        for &(i, take, _) in &chunks {
+            let seq = &mut self.running[i];
+            seq.kv_len += take;
+            if seq.kv_len >= seq.prompt_len {
+                seq.phase = Phase::Decoding;
+                if seq.generated == 0 {
+                    // Fresh prefill completes: emits the first token.
+                    seq.generated = 1;
+                    seq.first_token_at = Some(end);
+                    self.kv.grow(seq.req.id, 1);
+                    seq.kv_len += 1;
+                    outcome.tokens_emitted += 1;
+                    self.total_output_tokens += 1;
+                }
+                // Recompute re-prefill: KV rebuilt, no token emitted.
+            }
+        }
+        // A prompt of output_len==1 is done right after prefill.
+        self.reap(end, &mut outcome);
+        outcome
+    }
+
+    fn decode_iteration(&mut self, now: Time) -> StepOutcome {
+        // Grow every decoding sequence by one token; preempt from the
+        // back (latest arrivals) if memory runs out — vLLM recompute.
+        let mut preempted = 0u64;
+        // First ensure memory for everyone by preempting from the back.
+        loop {
+            // O(batch) feasibility check without cloning the allocator:
+            // a +1-token grow needs a new block only for sequences that
+            // exactly fill their current blocks.
+            let blocks_needed = self
+                .running
+                .iter()
+                .filter(|s| self.kv.next_token_needs_block(s.req.id))
+                .count() as u64;
+            if blocks_needed <= self.kv.free_blocks() || self.running.is_empty() {
+                break;
+            }
+            let victim = self.running.remove(self.running.len() - 1);
+            self.kv.free(victim.req.id);
+            // Recompute mode: back to queue, lose the cached KV but
+            // keep logical progress — prompt + generated become the new
+            // "prompt" to re-prefill (vLLM recompute preemption).
+            let mut requeued = victim;
+            requeued.kv_len = 0;
+            requeued.prompt_len = requeued.logical_len();
+            requeued.phase = Phase::Queued;
+            self.queue.push_front(requeued);
+            preempted += 1;
+        }
+        if self.running.is_empty() {
+            return StepOutcome { preempted, ..Default::default() };
+        }
+        for seq in &self.running {
+            let ok = self.kv.grow(seq.req.id, 1);
+            debug_assert!(ok);
+        }
+
+        let lens: Vec<Tokens> = self.running.iter().map(|s| s.current_len()).collect();
+        let duration = self.backend.decode_cost(&lens);
+        let end = now + duration;
+
+        let mut outcome =
+            StepOutcome { duration, preempted, was_prefill: false, ..Default::default() };
+        for seq in &mut self.running {
+            seq.generated += 1;
+            seq.kv_len += 1;
+            outcome.tokens_emitted += 1;
+            self.total_output_tokens += 1;
+            if seq.first_token_at.is_none() {
+                seq.first_token_at = Some(end);
+            }
+        }
+        self.reap(end, &mut outcome);
+        outcome
+    }
+
+    /// Remove finished sequences, emitting their records.
+    fn reap(&mut self, end: Time, outcome: &mut StepOutcome) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].is_finished() {
+                let seq = self.running.remove(i);
+                self.kv.free(seq.req.id);
+                outcome.completed.push(RequestRecord {
+                    id: seq.req.id,
+                    arrival: seq.req.arrival,
+                    first_token: seq.first_token_at.unwrap_or(end),
+                    completion: end,
+                    input_len: seq.req.input_len,
+                    output_len: seq.req.output_len,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unit-cost backend: prefill = 1s per 1000 tokens, decode = 1ms
+    /// per row plus 1us per cached token.
+    #[derive(Debug, Clone, Copy)]
+    struct FakeBackend;
+
+    impl ExecBackend for FakeBackend {
+        fn prefill_cost(&self, chunks: &[(Tokens, Tokens)]) -> Time {
+            let t: Tokens = chunks.iter().map(|&(n, _)| n).sum();
+            t as f64 / 1000.0
+        }
+
+        fn decode_cost(&self, lens: &[Tokens]) -> Time {
+            1e-3 * lens.len() as f64 + 1e-6 * lens.iter().sum::<Tokens>() as f64
+        }
+    }
+
+    fn req(id: u64, arrival: f64, input: u64, output: u64) -> Request {
+        Request { id, arrival, input_len: input, output_len: output }
+    }
+
+    fn engine() -> Engine<FakeBackend> {
+        Engine::new(EngineConfig::default(), FakeBackend)
+    }
+
+    fn run_to_completion(e: &mut Engine<FakeBackend>) -> Vec<RequestRecord> {
+        let mut now = 0.0;
+        let mut records = Vec::new();
+        let mut guard = 0;
+        while e.has_work() {
+            let out = e.step(now);
+            now += out.duration.max(1e-9);
+            records.extend(out.completed);
+            guard += 1;
+            assert!(guard < 1_000_000, "engine did not converge");
+        }
+        records
+    }
+
+    #[test]
+    fn single_request_lifecycle() {
+        let mut e = engine();
+        e.submit(req(1, 0.0, 100, 5));
+        let recs = run_to_completion(&mut e);
+        assert_eq!(recs.len(), 1);
+        let r = recs[0];
+        // Prefill(100 tokens)=0.1s emits the first token.
+        assert!((r.first_token - 0.1).abs() < 1e-9, "{}", r.first_token);
+        assert_eq!(r.output_len, 5);
+        assert!(r.completion > r.first_token);
+        assert_eq!(e.kv().n_seqs(), 0, "kv fully freed");
+    }
+
+    #[test]
+    fn output_len_one_completes_at_prefill() {
+        let mut e = engine();
+        e.submit(req(1, 0.0, 50, 1));
+        let recs = run_to_completion(&mut e);
+        assert_eq!(recs.len(), 1);
+        assert!((recs[0].completion - recs[0].first_token).abs() < 1e-12);
+    }
+
+    #[test]
+    fn continuous_batching_joins_midstream() {
+        let mut e = engine();
+        e.submit(req(1, 0.0, 10, 50));
+        // Run a few iterations, then add another request; both finish.
+        let mut now = 0.0;
+        for _ in 0..5 {
+            let out = e.step(now);
+            now += out.duration;
+        }
+        e.submit(req(2, now, 10, 10));
+        let mut recs = Vec::new();
+        while e.has_work() {
+            let out = e.step(now);
+            now += out.duration.max(1e-9);
+            recs.extend(out.completed);
+        }
+        assert_eq!(recs.len(), 2);
+    }
+
+    #[test]
+    fn chunked_prefill_respects_token_budget() {
+        let cfg = EngineConfig { max_batched_tokens: 1000, ..Default::default() };
+        let mut e = Engine::new(cfg, FakeBackend);
+        e.submit(req(1, 0.0, 3500, 2));
+        // 4 prefill iterations needed (1000+1000+1000+500).
+        let mut prefills = 0;
+        let mut now = 0.0;
+        while e.has_work() {
+            let out = e.step(now);
+            now += out.duration.max(1e-9);
+            if out.was_prefill {
+                prefills += 1;
+            }
+        }
+        assert_eq!(prefills, 4);
+    }
+
+    #[test]
+    fn fcfs_admission_order() {
+        let cfg = EngineConfig { max_batch: 1, ..Default::default() };
+        let mut e = Engine::new(cfg, FakeBackend);
+        e.submit(req(1, 0.0, 10, 3));
+        e.submit(req(2, 0.0, 10, 3));
+        let recs = run_to_completion(&mut e);
+        assert_eq!(recs[0].id, 1);
+        assert_eq!(recs[1].id, 2);
+    }
+
+    #[test]
+    fn memory_bounded_admission() {
+        let cfg = EngineConfig { kv_capacity_tokens: 160, block_size: 16, ..Default::default() };
+        let mut e = Engine::new(cfg, FakeBackend);
+        e.submit(req(1, 0.0, 100, 2));
+        e.submit(req(2, 0.0, 100, 2));
+        e.step(0.0);
+        // Only one fits at a time.
+        assert_eq!(e.n_running() + usize::from(e.queue_len() == 0), 1);
+        let recs = run_to_completion(&mut e);
+        assert_eq!(recs.len(), 2, "second admitted after first frees");
+    }
+
+    #[test]
+    fn preemption_on_decode_overflow() {
+        // Two seqs fit initially but their decode growth overflows; the
+        // later one must be preempted and still complete eventually.
+        let cfg = EngineConfig { kv_capacity_tokens: 96, block_size: 16, ..Default::default() };
+        let mut e = Engine::new(cfg, FakeBackend);
+        e.submit(req(1, 0.0, 30, 40));
+        e.submit(req(2, 0.0, 30, 40));
+        let mut now = 0.0;
+        let mut preempted = 0;
+        let mut recs = Vec::new();
+        let mut guard = 0;
+        while e.has_work() {
+            let out = e.step(now);
+            now += out.duration.max(1e-9);
+            preempted += out.preempted;
+            recs.extend(out.completed);
+            guard += 1;
+            assert!(guard < 100_000);
+        }
+        assert!(preempted > 0, "expected at least one preemption");
+        assert_eq!(recs.len(), 2);
+    }
+
+    #[test]
+    fn extract_and_inject_preserve_sequence() {
+        let mut e1 = engine();
+        e1.submit(req(1, 0.0, 10, 20));
+        let mut now = 0.0;
+        for _ in 0..5 {
+            let out = e1.step(now);
+            now += out.duration;
+        }
+        let seq = e1.extract(1).expect("live seq");
+        assert!(seq.generated > 0);
+        assert!(!e1.has_work());
+        assert_eq!(e1.kv().n_seqs(), 0);
+
+        let mut e2 = engine();
+        assert!(e2.inject(seq));
+        let mut recs = Vec::new();
+        while e2.has_work() {
+            let out = e2.step(now);
+            now += out.duration.max(1e-9);
+            recs.extend(out.completed);
+        }
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].output_len, 20);
+        // First token was never re-emitted: timestamp from e1's run.
+        assert!(recs[0].first_token <= now);
+    }
+
+    #[test]
+    fn inject_fails_when_kv_full() {
+        let cfg = EngineConfig { kv_capacity_tokens: 32, block_size: 16, ..Default::default() };
+        let mut e = Engine::new(cfg, FakeBackend);
+        e.submit(req(1, 0.0, 32, 5));
+        e.step(0.0);
+        let mid = Sequence {
+            req: req(9, 0.0, 100, 50),
+            generated: 10,
+            kv_len: 110,
+            prompt_len: 100,
+            first_token_at: Some(0.5),
+            phase: Phase::Decoding,
+        };
+        assert!(!e.inject(mid));
+    }
+
+    #[test]
+    fn token_load_counts_running_and_queued() {
+        let mut e = engine();
+        e.submit(req(1, 0.0, 100, 5));
+        e.submit(req(2, 0.0, 200, 5));
+        assert_eq!(e.token_load(), 300);
+    }
+
+    #[test]
+    fn decode_cost_sees_true_lengths() {
+        // After prefill of 10 and 3 decode steps, the decode batch
+        // reports length 13-ish to the backend — verify via busy time
+        // growth being superlinear-free but positive.
+        let mut e = engine();
+        e.submit(req(1, 0.0, 10, 5));
+        let recs = run_to_completion(&mut e);
+        assert_eq!(recs.len(), 1);
+        assert!(e.busy_time > 0.0);
+        assert!(e.total_iterations >= 5);
+        assert_eq!(e.total_output_tokens, 5);
+    }
+}

@@ -1,0 +1,190 @@
+//! GPU and interconnect profiles — the simulated testbeds of §6.1.
+//!
+//! The paper evaluates on two 16-GPU testbeds (NVLink H20 141 GB and
+//! PCIe L40 48 GB, 400 Gbps CX-7 NICs).  Neither exists here, so each
+//! device is reduced to the handful of numbers the attention-backend
+//! cost model ([`crate::kernelmodel`]) and the migration subsystem
+//! ([`crate::coordinator::migrate`]) actually consume: SM count, HBM
+//! bandwidth, memory capacity, dense-FP16 throughput, and link
+//! bandwidths.  Published datasheet values are used throughout.
+
+/// A GPU device profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuProfile {
+    pub name: &'static str,
+    /// Streaming multiprocessors (the unit of kernel-block parallelism).
+    pub sm_count: u32,
+    /// HBM/GDDR bandwidth in bytes/s.
+    pub hbm_bytes_per_s: f64,
+    /// Device memory in bytes.
+    pub mem_bytes: u64,
+    /// Dense FP16/BF16 tensor throughput in FLOP/s (no sparsity).
+    pub fp16_flops: f64,
+    /// Fraction of peak FLOPs a well-tuned GEMM sustains.
+    pub mfu: f64,
+    /// Fixed per-kernel-launch overhead (seconds).
+    pub launch_overhead_s: f64,
+}
+
+impl GpuProfile {
+    /// NVIDIA H20: 78 SMs, 141 GB HBM3e @ 4.0 TB/s, 148 TFLOPs FP16.
+    /// (The H20 trades compute for memory — exactly why the paper's
+    /// decode workloads are attention/memory dominated on it.)
+    pub const H20: GpuProfile = GpuProfile {
+        name: "H20",
+        sm_count: 78,
+        hbm_bytes_per_s: 4.0e12,
+        mem_bytes: 141 * GIB,
+        fp16_flops: 148.0e12,
+        mfu: 0.70,
+        launch_overhead_s: 8.0e-6,
+    };
+
+    /// NVIDIA L40: 142 SMs, 48 GB GDDR6 @ 864 GB/s, 181 TFLOPs FP16.
+    pub const L40: GpuProfile = GpuProfile {
+        name: "L40",
+        sm_count: 142,
+        hbm_bytes_per_s: 0.864e12,
+        mem_bytes: 48 * GIB,
+        fp16_flops: 181.0e12,
+        mfu: 0.65,
+        launch_overhead_s: 8.0e-6,
+    };
+
+    /// NVIDIA H100 SXM: used for the paper's §2.2 motivation numbers.
+    pub const H100: GpuProfile = GpuProfile {
+        name: "H100",
+        sm_count: 132,
+        hbm_bytes_per_s: 3.35e12,
+        mem_bytes: 80 * GIB,
+        fp16_flops: 989.0e12,
+        mfu: 0.75,
+        launch_overhead_s: 8.0e-6,
+    };
+
+    /// Effective GEMM throughput (FLOP/s) after the MFU haircut.
+    pub fn effective_flops(&self) -> f64 {
+        self.fp16_flops * self.mfu
+    }
+
+    /// Per-SM share of memory bandwidth (bytes/s) when all SMs stream.
+    pub fn bw_per_sm(&self) -> f64 {
+        self.hbm_bytes_per_s / self.sm_count as f64
+    }
+}
+
+pub const GIB: u64 = 1024 * 1024 * 1024;
+
+/// Link technology between two instances.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Same node, NVLink (H20 testbed): ~450 GB/s unidirectional.
+    NvLink,
+    /// Same node, PCIe Gen4 x16 (L40 testbed): ~25 GB/s effective.
+    Pcie,
+    /// Cross node over 400 Gbps ConnectX-7 RDMA: ~45 GB/s effective.
+    Rdma,
+}
+
+impl LinkKind {
+    pub fn bytes_per_s(&self) -> f64 {
+        match self {
+            LinkKind::NvLink => 450.0e9,
+            LinkKind::Pcie => 25.0e9,
+            LinkKind::Rdma => 45.0e9,
+        }
+    }
+
+    /// One-way small-message latency (seconds) for control traffic.
+    pub fn latency_s(&self) -> f64 {
+        match self {
+            LinkKind::NvLink => 5.0e-6,
+            LinkKind::Pcie => 10.0e-6,
+            LinkKind::Rdma => 15.0e-6,
+        }
+    }
+}
+
+/// Physical placement of instances onto nodes, so the migration
+/// subsystem can distinguish intra-node from inter-node transfers
+/// (§5: "placing instances of adjacent pipeline stages on the same
+/// node whenever possible").
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub gpus_per_node: usize,
+    pub intra_node: LinkKind,
+    pub inter_node: LinkKind,
+    /// node index per instance id.
+    pub node_of: Vec<usize>,
+}
+
+impl Topology {
+    /// Sequential fill: instance i lands on node i / gpus_per_node.
+    /// Because pipeline planning emits stages in length order and
+    /// assigns instance ids contiguously, adjacent stages naturally
+    /// co-locate — the §5 placement optimization.
+    pub fn sequential(n_instances: usize, gpus_per_node: usize, intra: LinkKind) -> Self {
+        assert!(gpus_per_node > 0);
+        let node_of = (0..n_instances).map(|i| i / gpus_per_node).collect();
+        Self { gpus_per_node, intra_node: intra, inter_node: LinkKind::Rdma, node_of }
+    }
+
+    /// The paper's H20 testbed: 2 nodes x 8 GPUs, NVLink intra-node.
+    pub fn h20_testbed(n_instances: usize) -> Self {
+        Self::sequential(n_instances, 8, LinkKind::NvLink)
+    }
+
+    /// The paper's L40 testbed: 2 nodes x 8 GPUs, PCIe intra-node.
+    pub fn l40_testbed(n_instances: usize) -> Self {
+        Self::sequential(n_instances, 8, LinkKind::Pcie)
+    }
+
+    pub fn link_between(&self, a: usize, b: usize) -> LinkKind {
+        if self.node_of[a] == self.node_of[b] {
+            self.intra_node
+        } else {
+            self.inter_node
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h20_is_memory_rich_compute_poor() {
+        // The H20's FLOP/byte ratio is far below the H100's — the paper
+        // picked it because decode is memory-bound there.
+        let h20 = GpuProfile::H20.fp16_flops / GpuProfile::H20.hbm_bytes_per_s;
+        let h100 = GpuProfile::H100.fp16_flops / GpuProfile::H100.hbm_bytes_per_s;
+        assert!(h20 < h100 / 4.0);
+    }
+
+    #[test]
+    fn l40_has_less_memory_than_h20() {
+        assert!(GpuProfile::L40.mem_bytes < GpuProfile::H20.mem_bytes);
+    }
+
+    #[test]
+    fn link_speeds_ordered() {
+        assert!(LinkKind::NvLink.bytes_per_s() > LinkKind::Rdma.bytes_per_s());
+        assert!(LinkKind::Rdma.bytes_per_s() > LinkKind::Pcie.bytes_per_s());
+    }
+
+    #[test]
+    fn topology_sequential_co_locates_neighbors() {
+        let t = Topology::h20_testbed(16);
+        assert_eq!(t.node_of[0], t.node_of[7]);
+        assert_ne!(t.node_of[7], t.node_of[8]);
+        assert_eq!(t.link_between(0, 7), LinkKind::NvLink);
+        assert_eq!(t.link_between(7, 8), LinkKind::Rdma);
+    }
+
+    #[test]
+    fn bw_per_sm_partitions_total() {
+        let g = GpuProfile::H20;
+        let total = g.bw_per_sm() * g.sm_count as f64;
+        assert!((total / g.hbm_bytes_per_s - 1.0).abs() < 1e-12);
+    }
+}

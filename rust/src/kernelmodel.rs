@@ -1,0 +1,388 @@
+//! Attention-backend cost model — the hardware behaviour of §2.3.
+//!
+//! The paper's central empirical claim is that modern attention kernels
+//! (FlashAttention / FlashDecoding / Triton) are *sensitive to sequence-
+//! length heterogeneity within a batch*: mixing short and long rows
+//! inflates decode-kernel latency 1.1–2.1x at constant total tokens
+//! (Fig. 2), because of
+//!
+//! 1. **Inter-SM imbalance** — a decode kernel assigns one CTA per
+//!    (row, kv-head) when batch occupancy suffices; a 50K-token row
+//!    then streams its whole KV through one CTA while the CTAs that
+//!    served short rows sit idle — the long row is a *straggler* on the
+//!    kernel's critical path.
+//! 2. **Partitioning inefficiency** — when the kernel does split rows
+//!    (FlashDecoding-style split-k), one split policy must serve the
+//!    whole batch: small splits bloat the long rows' partial-result
+//!    aggregation, large splits leave short rows' CTAs under-occupied
+//!    (floor effects).
+//!
+//! The model prices a decode layer from: a hardware bandwidth floor,
+//! per-CTA streaming rates with an occupancy cap, an issue-order
+//! straggler term, a per-CTA minimum runtime, and serialized partial
+//! aggregation.  The split policy mirrors flash_attn's real heuristic —
+//! split **only** when `rows*kv_heads < 2*SMs` (occupancy starved),
+//! never as a latency oracle — which is exactly why heterogeneous
+//! batches get hurt on real kernels.
+//!
+//! Constants are physical where possible (datasheet bandwidths/FLOPs);
+//! the four kernel-shape constants below are calibrated once so the
+//! §2.2 attention-share numbers and the Fig. 2 penalty band reproduce
+//! (see DESIGN.md §Calibration).
+
+use crate::gpu::GpuProfile;
+use crate::models::ModelProfile;
+
+/// Candidate split sizes (tokens) for the fixed-split ablation sweep —
+/// mirrors FlashDecoding's split-k choices.
+pub const BLOCK_CANDIDATES: [u32; 6] = [64, 128, 256, 512, 1024, 2048];
+
+/// Per-partial-result aggregation cost, seconds (combine kernel's
+/// serialized pass over one row's split partials).
+const T_AGG_PER_PARTIAL: f64 = 1.0e-6;
+
+/// Minimum CTA runtime regardless of tokens covered (warp scheduling +
+/// DRAM burst granularity).
+const T_BLOCK_MIN: f64 = 3.0e-6;
+
+/// Single-CTA KV streaming rate, bytes/s. One CTA cannot saturate HBM;
+/// ~12 GB/s is typical for a paged-KV gather loop on Hopper-class SMs.
+const TB_BW: f64 = 12.0e9;
+
+/// Fraction of peak HBM bandwidth the kernel sustains at full occupancy.
+const ATTN_BW_EFF: f64 = 0.75;
+
+/// Resident CTAs per SM (occupancy).
+const CTA_PER_SM: u64 = 4;
+
+/// Below `2*SM` row-head programs the kernel switches to split-k.
+const SPLIT_OCCUPANCY_FACTOR: u64 = 2;
+
+/// Minimum tokens per split program.
+const SPLIT_TOKEN_MIN: u64 = 256;
+
+/// One row of a decode batch: its current KV length in tokens.
+pub type RowLen = u64;
+
+/// The attention cost model bound to one (GPU, model) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct AttentionModel {
+    pub gpu: GpuProfile,
+    pub model: ModelProfile,
+}
+
+impl AttentionModel {
+    pub fn new(gpu: GpuProfile, model: ModelProfile) -> Self {
+        Self { gpu, model }
+    }
+
+    /// KV bytes per token per layer per kv-head.
+    #[inline]
+    fn bytes_per_token_head(&self) -> f64 {
+        self.model.kv_bytes_per_token() as f64
+            / self.model.n_layers as f64
+            / self.model.n_kv_heads as f64
+    }
+
+    /// Decode-attention latency of one layer.
+    ///
+    /// `split_tokens`: `None` = the kernel's own occupancy heuristic;
+    /// `Some(s)` = force split-k at `s` tokens per split (ablation).
+    pub fn decode_layer_latency(&self, lens: &[RowLen], split_tokens: Option<u64>) -> f64 {
+        if lens.is_empty() {
+            return 0.0;
+        }
+        let sm = self.gpu.sm_count as u64;
+        let conc = CTA_PER_SM * sm; // concurrently resident CTAs
+        let heads = self.model.n_kv_heads as u64;
+        let row_heads = lens.len() as u64 * heads;
+        let bph = self.bytes_per_token_head();
+        let len_max = lens.iter().copied().max().unwrap_or(1).max(1);
+
+        // Split policy (the real kernels' heuristic, not an oracle):
+        // enough (row, head) programs -> no split; occupancy-starved ->
+        // split the longest row into ~conc/row_heads pieces.
+        let split = match split_tokens {
+            Some(s) => s.max(1),
+            None => {
+                if row_heads >= SPLIT_OCCUPANCY_FACTOR * sm {
+                    u64::MAX // no split
+                } else {
+                    let target = (conc / row_heads.max(1)).max(1);
+                    (len_max.div_ceil(target)).max(SPLIT_TOKEN_MIN)
+                }
+            }
+        };
+
+        let prog_dur = |tokens: u64| -> f64 { T_BLOCK_MIN.max(tokens as f64 * bph / TB_BW) };
+
+        let mut work = 0.0f64; // total CTA-seconds
+        let mut straggler = 0.0f64; // longest single program
+        let mut n_progs = 0u64;
+        let mut max_splits = 0u64;
+        let mut total_tokens = 0u64;
+        for &len in lens {
+            let len = len.max(1);
+            total_tokens += len;
+            let splits = if split == u64::MAX { 1 } else { len.div_ceil(split) };
+            let full = if split == u64::MAX { 0 } else { len / split };
+            let rem = if split == u64::MAX { len } else { len - full * split };
+            let mut row_work = full as f64 * prog_dur(split.min(len));
+            let mut row_straggle = if full > 0 { prog_dur(split.min(len)) } else { 0.0 };
+            if rem > 0 || full == 0 {
+                let d = prog_dur(rem.max(1));
+                row_work += d;
+                row_straggle = row_straggle.max(d);
+            }
+            work += row_work * heads as f64;
+            straggler = straggler.max(row_straggle);
+            n_progs += splits * heads;
+            max_splits = max_splits.max(splits);
+        }
+
+        // Issue-order list scheduling on `conc` workers: the makespan is
+        // the work-conserving bound plus (when programs queue) the
+        // expected straggler tail — on average half a straggler lands
+        // in the final wave under issue-order (non-LPT) scheduling.
+        let tb_time = if n_progs > conc {
+            work / conc as f64 + 0.5 * straggler
+        } else {
+            (work / conc as f64).max(straggler)
+        };
+        // Hardware bandwidth floor: all KV bytes must cross HBM once.
+        let total_bytes = total_tokens as f64 * bph * heads as f64;
+        let bw_bound = total_bytes / (self.gpu.hbm_bytes_per_s * ATTN_BW_EFF);
+
+        let agg = if max_splits > 1 { max_splits as f64 * T_AGG_PER_PARTIAL } else { 0.0 };
+        self.gpu.launch_overhead_s + tb_time.max(bw_bound) + agg
+    }
+
+    /// Decode attention for the full stack (kernel heuristic).
+    pub fn decode_attention_latency(&self, lens: &[RowLen]) -> f64 {
+        self.decode_layer_latency(lens, None) * self.model.n_layers as f64
+    }
+
+    /// Same, with split-k forced at `block` tokens — used by the Fig. 2
+    /// bench to expose the block-size/block-count trade-off explicitly.
+    pub fn decode_attention_latency_fixed_block(&self, lens: &[RowLen], block: u32) -> f64 {
+        self.decode_layer_latency(lens, Some(block as u64)) * self.model.n_layers as f64
+    }
+
+    /// Weight-access time of one decode iteration: every parameter is
+    /// read once per forward pass (memory-bound GEMV regime).
+    pub fn weight_access_latency(&self) -> f64 {
+        self.model.weight_bytes() as f64 / self.gpu.hbm_bytes_per_s
+    }
+
+    /// Linear-layer compute for `batch` tokens in one iteration.
+    pub fn linear_compute_latency(&self, batch: usize) -> f64 {
+        batch as f64 * self.model.flops_per_token() / self.gpu.effective_flops()
+    }
+
+    /// Full decode-iteration latency for a batch with per-row KV lens:
+    /// `max(weights, linear) + attention + engine overhead` (weight
+    /// streaming overlaps GEMV compute; attention is a separate pass).
+    pub fn decode_iteration_latency(&self, lens: &[RowLen]) -> f64 {
+        if lens.is_empty() {
+            return 0.0;
+        }
+        let dense = self.weight_access_latency().max(self.linear_compute_latency(lens.len()));
+        // Per-token sampling/dispatch overhead of the serving engine.
+        let engine = 1.5e-6 * lens.len() as f64 + 150.0e-6;
+        dense + self.decode_attention_latency(lens) + engine
+    }
+
+    /// Fraction of decode-iteration latency spent in attention — the
+    /// §2.2 motivation statistic (81% at bs=250, len=1000 on H100/3B).
+    pub fn attention_share(&self, lens: &[RowLen]) -> f64 {
+        let attn = self.decode_attention_latency(lens);
+        attn / self.decode_iteration_latency(lens)
+    }
+
+    /// Prefill latency for a prompt of `t` tokens (compute-bound,
+    /// quadratic attention term; §2.1).
+    pub fn prefill_latency(&self, t: u64) -> f64 {
+        let t = t as f64;
+        let dense = t * self.model.flops_per_token() / self.gpu.effective_flops();
+        // Attention FLOPs: 2 * T^2 * d per layer (QK^T and PV).
+        let attn_flops = self.model.n_layers as f64
+            * t
+            * t
+            * (self.model.n_heads as f64 * self.model.head_dim as f64)
+            * 2.0
+            / self.model.tp as f64;
+        let weights = self.weight_access_latency();
+        self.gpu.launch_overhead_s
+            + dense.max(weights)
+            + attn_flops / self.gpu.effective_flops()
+    }
+
+    /// The Fig. 2 statistic: latency of a mixed batch over the latency
+    /// of a homogeneous batch with the same row count and total tokens.
+    pub fn heterogeneity_penalty(&self, lens: &[RowLen]) -> f64 {
+        if lens.is_empty() {
+            return 1.0;
+        }
+        let total: u64 = lens.iter().sum();
+        let homo = vec![(total / lens.len() as u64).max(1); lens.len()];
+        self.decode_attention_latency(lens) / self.decode_attention_latency(&homo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuProfile;
+    use crate::models::LLAMA_3B;
+
+    fn h100_3b() -> AttentionModel {
+        AttentionModel::new(GpuProfile::H100, LLAMA_3B)
+    }
+
+    fn h20_3b() -> AttentionModel {
+        AttentionModel::new(GpuProfile::H20, LLAMA_3B)
+    }
+
+    /// A mixed batch: `n_long` rows at `long` tokens, rest at `short`.
+    fn mix(n: usize, n_long: usize, long: u64, short: u64) -> Vec<u64> {
+        let mut v = vec![long; n_long];
+        v.extend(vec![short; n - n_long]);
+        v
+    }
+
+    #[test]
+    fn empty_batch_costs_nothing() {
+        assert_eq!(h100_3b().decode_attention_latency(&[]), 0.0);
+    }
+
+    #[test]
+    fn latency_monotone_in_length() {
+        let m = h100_3b();
+        let short = m.decode_attention_latency(&[1000; 32]);
+        let long = m.decode_attention_latency(&[4000; 32]);
+        assert!(long > short);
+    }
+
+    #[test]
+    fn latency_monotone_in_batch() {
+        let m = h100_3b();
+        let a = m.decode_attention_latency(&[2000; 16]);
+        let b = m.decode_attention_latency(&[2000; 64]);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn paper_2_2_attention_share_bs250() {
+        // §2.2: Llama-3.2-3B on H100, 1000-token rows: attention is
+        // ~81% of iteration latency at bs=250, vs ~14% at bs=1.
+        let m = h100_3b();
+        let share_big = m.attention_share(&[1000; 250]);
+        let share_one = m.attention_share(&[1000; 1]);
+        assert!(share_big > 0.70, "bs=250 share {share_big}");
+        assert!(share_one < 0.30, "bs=1 share {share_one}");
+    }
+
+    #[test]
+    fn paper_2_2_attention_share_len200_bs500() {
+        // §2.2: 200-token rows at bs=500 reach ~62%.
+        let share = h100_3b().attention_share(&[200; 500]);
+        assert!(share > 0.45 && share < 0.85, "share {share}");
+    }
+
+    #[test]
+    fn fig2a_heterogeneity_penalty_band() {
+        // Fig. 2a: 1000 vs 50000 tokens, bs=512, constant total tokens:
+        // 1.1-2.1x inflation. The penalty peaks when the long rows are
+        // a minority (stragglers over mostly-idle CTAs).
+        let m = h20_3b();
+        let mut peak: f64 = 1.0;
+        for n_long in [10, 26, 51, 128] {
+            let lens = mix(512, n_long, 50_000, 1000);
+            let p = m.heterogeneity_penalty(&lens);
+            assert!(p >= 0.99 && p < 2.5, "penalty {p} at n_long {n_long}");
+            peak = peak.max(p);
+        }
+        assert!(peak > 1.1 && peak < 2.2, "peak penalty {peak} outside Fig.2 band");
+    }
+
+    #[test]
+    fn fig2b_small_mix_band() {
+        // Fig. 2b: 200 vs 10000 tokens, bs=512.
+        let m = h20_3b();
+        let p = m.heterogeneity_penalty(&mix(512, 32, 10_000, 200));
+        assert!(p > 1.1 && p < 2.5, "penalty {p}");
+    }
+
+    #[test]
+    fn homogeneous_penalty_is_one() {
+        let m = h20_3b();
+        let p = m.heterogeneity_penalty(&[3000; 64]);
+        assert!((p - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_heuristic_beats_forced_extremes_when_starved() {
+        // Low-occupancy mixed batch: the occupancy-driven split must
+        // beat both no-split (huge straggler) and tiny splits (agg
+        // blowup + floors).
+        let m = h20_3b();
+        let lens = mix(8, 4, 60_000, 500);
+        let heuristic = m.decode_attention_latency(&lens);
+        let tiny = m.decode_attention_latency_fixed_block(&lens, 64);
+        let nosplit = m.decode_attention_latency_fixed_block(&lens, u32::MAX);
+        assert!(heuristic < tiny, "heuristic {heuristic} vs tiny {tiny}");
+        assert!(heuristic < nosplit, "heuristic {heuristic} vs nosplit {nosplit}");
+    }
+
+    #[test]
+    fn forced_split_tradeoff_exists() {
+        // The block-size/block-count trade-off (§2.3): across forced
+        // split sizes, the best is strictly inside the candidate range
+        // for a straggler-heavy batch.
+        let m = h20_3b();
+        let lens = mix(64, 8, 80_000, 400);
+        let costs: Vec<f64> = BLOCK_CANDIDATES
+            .iter()
+            .map(|&b| m.decode_attention_latency_fixed_block(&lens, b))
+            .collect();
+        let best = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(costs[0] > best, "tiny split should lose: {costs:?}");
+        let nosplit = m.decode_attention_latency_fixed_block(&lens, u32::MAX);
+        assert!(nosplit > best, "no-split should lose: {nosplit} vs {best}");
+    }
+
+    #[test]
+    fn prefill_quadratic_regime() {
+        let m = h20_3b();
+        let t1 = m.prefill_latency(8_000);
+        let t2 = m.prefill_latency(16_000);
+        // Superlinear growth (attention term kicks in).
+        assert!(t2 > 2.0 * t1, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn decode_iteration_includes_weight_floor() {
+        let m = h20_3b();
+        let t = m.decode_iteration_latency(&[100]);
+        assert!(t >= m.weight_access_latency());
+    }
+
+    #[test]
+    fn tp_reduces_weight_latency() {
+        use crate::models::llama_70b;
+        let m2 = AttentionModel::new(GpuProfile::H20, llama_70b(2));
+        let m4 = AttentionModel::new(GpuProfile::H20, llama_70b(4));
+        assert!(m4.weight_access_latency() < m2.weight_access_latency());
+    }
+
+    #[test]
+    fn bandwidth_floor_binds_at_full_occupancy() {
+        // A big homogeneous batch must cost at least its HBM traffic.
+        let m = h20_3b();
+        let lens = vec![8000u64; 512];
+        let total_bytes: f64 =
+            lens.iter().map(|&l| l as f64).sum::<f64>() * m.model.kv_bytes_per_token() as f64;
+        let floor = total_bytes / (m.gpu.hbm_bytes_per_s * 0.75);
+        assert!(m.decode_attention_latency(&lens) >= floor * 0.99);
+    }
+}

@@ -1,0 +1,54 @@
+//! # cascade_infer
+//!
+//! A from-scratch reproduction of **CascadeInfer** (Yuan et al., 2025):
+//! length-aware, decentralized inter-instance scheduling for
+//! multi-instance LLM serving (MILS).
+//!
+//! The crate is organised as the three-layer stack described in
+//! `DESIGN.md`:
+//!
+//! * **L3 (this crate)** — the paper's contribution: length-specialized
+//!   pipeline stages ([`coordinator::plan`]), adaptive range refinement
+//!   ([`coordinator::refine`]), the decentralized bid-ask protocol
+//!   ([`coordinator::balance`]) and live KV migration
+//!   ([`coordinator::migrate`]), running over a deterministic
+//!   discrete-event MILS cluster ([`cluster`]) *and* over a real
+//!   PJRT-served model ([`server`], [`runtime`]).
+//! * **L2/L1 (python/, build time only)** — a small GPT with Pallas
+//!   attention kernels, AOT-lowered to `artifacts/*.hlo.txt`, which
+//!   [`runtime`] loads and executes with no Python on the request path.
+//!
+//! Substrate modules ([`sim`], [`gpu`], [`kernelmodel`], [`models`],
+//! [`qoe`], [`workload`], [`engine`], [`metrics`]) rebuild everything
+//! the paper's evaluation depends on — GPUs, attention-backend cost
+//! behaviour, the model zoo, ShareGPT-like traffic — as faithful,
+//! seedable simulations (see DESIGN.md §1 for the substitution table).
+
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod gpu;
+pub mod kernelmodel;
+pub mod metrics;
+pub mod models;
+pub mod qoe;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod testutil;
+pub mod workload;
+
+/// Seconds — the universal time unit of the simulation layer.
+pub type Time = f64;
+
+/// Token counts and sequence lengths.
+pub type Tokens = u64;
+
+/// Request identifier, unique per run.
+pub type RequestId = u64;
+
+/// Engine-instance identifier (index into the cluster's instance table).
+pub type InstanceId = usize;

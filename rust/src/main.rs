@@ -1,0 +1,169 @@
+//! `cascade-infer` — leader entrypoint.
+//!
+//! Subcommands drive the two halves of the reproduction:
+//! * `sim` / `plan` / `fit` / `gen-trace` — the 16-instance simulated
+//!   testbed used by every figure,
+//! * `serve` — the real PJRT path over the AOT artifacts.
+
+use cascade_infer::cli::{scheduler_by_name, Args, USAGE};
+use cascade_infer::cluster::{run_experiment, ClusterConfig, SchedulerKind};
+use cascade_infer::coordinator::plan::{MigrationCost, Planner};
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::kernelmodel::AttentionModel;
+use cascade_infer::metrics::Slo;
+use cascade_infer::models;
+use cascade_infer::qoe;
+use cascade_infer::workload::{self, LengthHistogram, ShareGptLike};
+
+fn gpu_by_name(name: &str) -> GpuProfile {
+    match name.to_ascii_uppercase().as_str() {
+        "L40" => GpuProfile::L40,
+        "H100" => GpuProfile::H100,
+        _ => GpuProfile::H20,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "sim" => cmd_sim(&args),
+        "plan" => cmd_plan(&args),
+        "fit" => cmd_fit(&args),
+        "gen-trace" => cmd_gen_trace(&args),
+        "serve" => cmd_serve(&args),
+        _ => println!("{USAGE}"),
+    }
+}
+
+fn cmd_sim(args: &Args) {
+    let model = models::by_name(&args.get_or("model", "Llama-3.2-3B"))
+        .expect("unknown model; see models::paper_zoo()");
+    let gpu = gpu_by_name(&args.get_or("gpu", "H20"));
+    let n = args.get_usize("instances", 16);
+    let rate = args.get_f64("rate", 8.0);
+    let n_req = args.get_usize("requests", 2000);
+    let seed = args.get_u64("seed", 42);
+    let sched = scheduler_by_name(&args.get_or("scheduler", "cascade"))
+        .expect("unknown scheduler");
+
+    let reqs = workload::generate(&ShareGptLike::default(), rate, n_req, seed);
+    let mut cfg = ClusterConfig::new(gpu, model, n, sched);
+    if sched == SchedulerKind::LlumnixLike {
+        cfg.engine_speed = 1.25; // Llumnix's newer engine (§6.2 Fig. 8)
+    }
+    println!(
+        "sim: {} x{} on {}, rate {:.1} req/s, {} requests, scheduler {}",
+        model.name, n, gpu.name, rate, n_req, sched.name()
+    );
+    let t0 = std::time::Instant::now();
+    let (report, stats) = run_experiment(cfg, &reqs);
+    println!("wall time        {:.2}s", t0.elapsed().as_secs_f64());
+    println!("completed        {}", report.records.len());
+    println!("mean TTFT        {:.4}s   p95 {:.4}s", report.mean_ttft(), report.p95_ttft());
+    println!("mean TPOT        {:.5}s   p95 {:.5}s", report.mean_tpot(), report.p95_tpot());
+    println!("norm latency     {:.5}s/token", report.mean_normalized_latency());
+    println!("throughput       {:.1} tok/s", report.throughput_tokens_per_s());
+    let slo = Slo { ttft: 1.0, tpot: 0.1 };
+    println!("SLO(1s,100ms)    {:.1}%", 100.0 * report.slo_attainment(slo));
+    println!(
+        "migrations       {} ({} skipped), preemptions {}",
+        stats.migrations, stats.migrations_skipped, stats.preemptions
+    );
+    println!("stages           {:?}", stats.stages.iter().map(|s| s.len()).collect::<Vec<_>>());
+    println!("boundaries       {:?}", stats.final_boundaries);
+}
+
+fn cmd_plan(args: &Args) {
+    let model = models::by_name(&args.get_or("model", "Llama-3.2-3B")).expect("unknown model");
+    let gpu = gpu_by_name(&args.get_or("gpu", "H20"));
+    let e = args.get_usize("instances", 16);
+    let n_req = args.get_usize("requests", 5000);
+    let seed = args.get_u64("seed", 42);
+
+    let am = AttentionModel::new(gpu, model);
+    let (qoe_model, _) = qoe::profile_and_fit(&am, 64, 131_072, 512);
+    let reqs = workload::generate(&ShareGptLike::default(), 10.0, n_req, seed);
+    let hist = LengthHistogram::from_requests(&reqs, 131_072);
+    let planner = Planner::new(
+        qoe_model,
+        MigrationCost::new(model.kv_bytes_per_token() as f64, 450e9),
+    );
+
+    let t0 = std::time::Instant::now();
+    let dp = planner.plan_dp(&hist, e);
+    let dp_t = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let heur = planner.plan_heuristic(&hist, e);
+    let heur_t = t0.elapsed();
+
+    println!("planning {} instances over {} requests ({})", e, n_req, model.name);
+    println!("exact DP   ({dp_t:?}):");
+    for s in &dp.stages {
+        println!("  [{:>7}, {:>7})  x{}", s.lo, s.hi, s.n_instances);
+    }
+    println!("heuristic  ({heur_t:?}):");
+    for s in &heur.stages {
+        println!("  [{:>7}, {:>7})  x{}", s.lo, s.hi, s.n_instances);
+    }
+    println!(
+        "quality: dp {:.4}, heuristic {:.4}",
+        dp.predicted_quality,
+        planner.pipeline_quality(&hist, &heur)
+    );
+}
+
+fn cmd_fit(args: &Args) {
+    let model = models::by_name(&args.get_or("model", "Llama-3.2-3B")).expect("unknown model");
+    let gpu = gpu_by_name(&args.get_or("gpu", "H20"));
+    let am = AttentionModel::new(gpu, model);
+    let (qoe_model, samples) = qoe::profile_and_fit(&am, 64, 131_072, 512);
+    println!("QoE fit for {} on {} ({} samples)", model.name, gpu.name, samples.len());
+    println!("D = {:?}", qoe_model.d);
+    let errs = qoe::relative_errors(&qoe_model, &samples);
+    println!("in-sample MAE {:.2}%", 100.0 * qoe::mean_abs_rel_error(&errs));
+}
+
+fn cmd_gen_trace(args: &Args) {
+    let out = args.get_or("out", "trace.csv");
+    let rate = args.get_f64("rate", 8.0);
+    let n = args.get_usize("requests", 2000);
+    let seed = args.get_u64("seed", 42);
+    let reqs = workload::generate(&ShareGptLike::default(), rate, n, seed);
+    workload::save_csv(&out, &reqs).expect("write trace");
+    println!("wrote {n} requests to {out}");
+}
+
+fn cmd_serve(args: &Args) {
+    use cascade_infer::server::{ServeRequest, Server, ServerConfig};
+    let dir = args.get_or("artifacts", "artifacts");
+    let n_req = args.get_usize("requests", 12);
+    let seed = args.get_u64("seed", 7);
+
+    println!("starting real-path server over {dir} (compiling executables)...");
+    let cfg = ServerConfig::new(dir);
+    let mut server = Server::start(cfg).expect("server starts");
+    let mut rng = cascade_infer::sim::Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    for id in 0..n_req {
+        let plen = 4 + rng.next_range(28) as usize;
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.next_range(256) as i32).collect();
+        server.submit(ServeRequest { id: id as u64, prompt, max_new_tokens: 24 });
+    }
+    let responses = server.collect(n_req);
+    let wall = t0.elapsed().as_secs_f64();
+    let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let migrated = responses.iter().filter(|r| r.served_by.len() > 1).count();
+    println!("served {n_req} requests, {total_tokens} tokens in {wall:.2}s");
+    println!("throughput {:.1} tok/s, {migrated} requests migrated", total_tokens as f64 / wall);
+    for r in responses.iter().take(3) {
+        println!(
+            "  req {}: ttft {:?}, e2e {:?}, path {:?}",
+            r.id,
+            r.ttft(),
+            r.e2e(),
+            r.served_by
+        );
+    }
+    server.shutdown();
+}

@@ -1,0 +1,309 @@
+//! Serving metrics — TTFT, TPOT, throughput, SLO attainment (§6.1).
+//!
+//! Per-request lifecycle timestamps are recorded by the engines and
+//! folded here into the exact statistics the paper's figures report:
+//! mean/p95 TTFT (Fig. 6), mean/p95 TPOT (Fig. 7), token throughput
+//! (Figs. 10–11), normalized latency (Fig. 9), SLO attainment
+//! (Fig. 12), and per-instance output-token CV (Fig. 16).
+
+use crate::{RequestId, Time, Tokens};
+use std::collections::HashMap;
+
+/// Lifecycle record of one completed request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestRecord {
+    pub id: RequestId,
+    pub arrival: Time,
+    /// First output token emitted (end of prefill).
+    pub first_token: Time,
+    /// Last output token emitted.
+    pub completion: Time,
+    pub input_len: Tokens,
+    pub output_len: Tokens,
+}
+
+impl RequestRecord {
+    /// Time to First Token.
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Time per Output Token (averaged over the decode phase).
+    pub fn tpot(&self) -> f64 {
+        if self.output_len <= 1 {
+            0.0
+        } else {
+            (self.completion - self.first_token) / (self.output_len - 1) as f64
+        }
+    }
+
+    /// End-to-end latency.
+    pub fn e2e(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    /// Normalized latency: end-to-end delay per output token (the
+    /// Fig. 9 metric, and the Q of the QoE fit).
+    pub fn normalized_latency(&self) -> f64 {
+        self.e2e() / self.output_len.max(1) as f64
+    }
+}
+
+/// Percentile over a copy of the data (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0 * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Aggregated run report.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub records: Vec<RequestRecord>,
+    /// Wall-clock span of the run (for throughput).
+    pub duration: Time,
+}
+
+impl Report {
+    pub fn from_records(records: Vec<RequestRecord>) -> Self {
+        let duration = records
+            .iter()
+            .map(|r| r.completion)
+            .fold(0.0f64, f64::max);
+        Self { records, duration }
+    }
+
+    pub fn ttfts(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.ttft()).collect()
+    }
+
+    pub fn tpots(&self) -> Vec<f64> {
+        self.records.iter().filter(|r| r.output_len > 1).map(|r| r.tpot()).collect()
+    }
+
+    pub fn normalized_latencies(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.normalized_latency()).collect()
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        mean(&self.ttfts())
+    }
+
+    pub fn p95_ttft(&self) -> f64 {
+        percentile(&self.ttfts(), 95.0)
+    }
+
+    pub fn mean_tpot(&self) -> f64 {
+        mean(&self.tpots())
+    }
+
+    pub fn p95_tpot(&self) -> f64 {
+        percentile(&self.tpots(), 95.0)
+    }
+
+    pub fn mean_normalized_latency(&self) -> f64 {
+        mean(&self.normalized_latencies())
+    }
+
+    /// Output tokens per second over the run (Figs. 10–11).
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        if self.duration <= 0.0 {
+            return 0.0;
+        }
+        let toks: u64 = self.records.iter().map(|r| r.output_len).sum();
+        toks as f64 / self.duration
+    }
+
+    /// Output tokens per second emitted before `t` — the paper's
+    /// fixed-duration throughput (§6.1: "each test point runs for the
+    /// same duration"). Tokens of a request are attributed uniformly
+    /// between its first token and its completion.
+    pub fn throughput_until(&self, t: Time) -> f64 {
+        if t <= 0.0 {
+            return 0.0;
+        }
+        let mut toks = 0.0;
+        for r in &self.records {
+            if r.first_token > t {
+                continue;
+            }
+            let span = (r.completion - r.first_token).max(1e-9);
+            let frac = ((t - r.first_token) / span).clamp(0.0, 1.0);
+            toks += r.output_len as f64 * frac;
+        }
+        toks / t
+    }
+
+    /// Completed requests per second.
+    pub fn throughput_requests_per_s(&self) -> f64 {
+        if self.duration <= 0.0 {
+            return 0.0;
+        }
+        self.records.len() as f64 / self.duration
+    }
+
+    /// Fraction of requests meeting `ttft <= slo.ttft && tpot <= slo.tpot`
+    /// (Fig. 12).
+    pub fn slo_attainment(&self, slo: Slo) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let ok = self
+            .records
+            .iter()
+            .filter(|r| r.ttft() <= slo.ttft && r.tpot() <= slo.tpot)
+            .count();
+        ok as f64 / self.records.len() as f64
+    }
+}
+
+/// An SLO: worst-case bounds on TTFT and TPOT (§6.4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    pub ttft: f64,
+    pub tpot: f64,
+}
+
+impl Slo {
+    /// The paper's baseline SLO: metrics under minimum load (a single
+    /// request on an idle system), scaled by N.
+    pub fn scaled(base_ttft: f64, base_tpot: f64, n: f64) -> Self {
+        Slo { ttft: base_ttft * n, tpot: base_tpot * n }
+    }
+}
+
+/// Per-instance counters for load-balance statistics (Fig. 16).
+#[derive(Debug, Clone, Default)]
+pub struct InstanceCounters {
+    /// Output tokens generated per instance.
+    pub output_tokens: HashMap<usize, u64>,
+}
+
+impl InstanceCounters {
+    pub fn add(&mut self, instance: usize, tokens: u64) {
+        *self.output_tokens.entry(instance).or_insert(0) += tokens;
+    }
+
+    /// Coefficient of variation of output tokens across the given
+    /// instances (lower = more balanced; the Fig. 16 metric).
+    pub fn cv(&self, instances: &[usize]) -> f64 {
+        if instances.is_empty() {
+            return 0.0;
+        }
+        let xs: Vec<f64> = instances
+            .iter()
+            .map(|i| *self.output_tokens.get(i).unwrap_or(&0) as f64)
+            .collect();
+        let m = mean(&xs);
+        if m.abs() < 1e-12 {
+            return 0.0;
+        }
+        let var = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64;
+        var.sqrt() / m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, first: f64, done: f64, out: u64) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            arrival,
+            first_token: first,
+            completion: done,
+            input_len: 10,
+            output_len: out,
+        }
+    }
+
+    #[test]
+    fn ttft_tpot_e2e() {
+        let r = rec(1.0, 1.5, 2.5, 11);
+        assert!((r.ttft() - 0.5).abs() < 1e-12);
+        assert!((r.tpot() - 0.1).abs() < 1e-12);
+        assert!((r.e2e() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpot_single_token_is_zero() {
+        assert_eq!(rec(0.0, 1.0, 1.0, 1).tpot(), 0.0);
+    }
+
+    #[test]
+    fn normalized_latency_divides_by_output() {
+        let r = rec(0.0, 1.0, 5.0, 10);
+        assert!((r.normalized_latency() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn throughput_counts_output_tokens() {
+        let report = Report::from_records(vec![rec(0.0, 1.0, 10.0, 100), rec(0.0, 2.0, 8.0, 50)]);
+        assert!((report.duration - 10.0).abs() < 1e-12);
+        assert!((report.throughput_tokens_per_s() - 15.0).abs() < 1e-12);
+        assert!((report.throughput_requests_per_s() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_until_interpolates() {
+        let report = Report::from_records(vec![rec(0.0, 0.0, 10.0, 100)]);
+        // Halfway through emission: 50 tokens over 5 seconds.
+        assert!((report.throughput_until(5.0) - 10.0).abs() < 1e-9);
+        // Past completion: all 100 tokens over 20 seconds.
+        assert!((report.throughput_until(20.0) - 5.0).abs() < 1e-9);
+        assert_eq!(report.throughput_until(0.0), 0.0);
+    }
+
+    #[test]
+    fn slo_attainment_fraction() {
+        let report = Report::from_records(vec![
+            rec(0.0, 0.1, 1.0, 10),  // ttft 0.1, tpot 0.1
+            rec(0.0, 2.0, 20.0, 10), // ttft 2.0, tpot 2.0
+        ]);
+        let slo = Slo { ttft: 0.5, tpot: 0.5 };
+        assert!((report.slo_attainment(slo) - 0.5).abs() < 1e-12);
+        let loose = Slo::scaled(0.1, 0.1, 100.0);
+        assert!((report.slo_attainment(loose) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn instance_cv_balanced_is_zero() {
+        let mut c = InstanceCounters::default();
+        for i in 0..4 {
+            c.add(i, 1000);
+        }
+        assert!(c.cv(&[0, 1, 2, 3]) < 1e-12);
+        c.add(0, 1000);
+        assert!(c.cv(&[0, 1, 2, 3]) > 0.1);
+    }
+
+    #[test]
+    fn empty_report_is_finite() {
+        let r = Report::default();
+        assert_eq!(r.mean_ttft(), 0.0);
+        assert_eq!(r.throughput_tokens_per_s(), 0.0);
+        assert_eq!(r.slo_attainment(Slo { ttft: 1.0, tpot: 1.0 }), 0.0);
+    }
+}

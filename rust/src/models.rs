@@ -1,0 +1,266 @@
+//! Model zoo — analytic profiles of the eight LLMs the paper serves.
+//!
+//! The evaluation (§6.1) sweeps Llama-3.2-3B … Qwen-2.5-32B plus
+//! Llama-3.1-70B under TP2/TP4.  For scheduling purposes a model is
+//! fully characterised by: weight bytes (per-iteration HBM read),
+//! per-token KV-cache bytes (attention read volume), and the dense
+//! FLOPs per token (prefill compute).  The numbers below come from the
+//! models' published architectures at FP16.
+
+use crate::gpu::GIB;
+
+/// Architecture-derived cost profile of one served LLM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    /// Total parameters.
+    pub params: u64,
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    /// Distinct KV heads (GQA: n_kv_heads <= n_heads).
+    pub n_kv_heads: u32,
+    pub head_dim: u32,
+    /// Supported context window.
+    pub max_context: u32,
+    /// Tensor-parallel degree this profile is sliced at.
+    pub tp: u32,
+}
+
+impl ModelProfile {
+    /// FP16 weight bytes *per GPU* (TP slices weights evenly).
+    pub fn weight_bytes(&self) -> u64 {
+        2 * self.params / self.tp as u64
+    }
+
+    /// KV-cache bytes per token *per GPU* at FP16 (K and V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * 2 * self.n_layers as u64 * self.n_kv_heads as u64 * self.head_dim as u64)
+            / self.tp as u64
+    }
+
+    /// Dense FLOPs to process one token through the stack (2*params,
+    /// attention excluded — the kernel model prices that separately).
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.params as f64 / self.tp as f64
+    }
+
+    /// How many cached tokens fit in `budget` bytes of KV memory.
+    pub fn kv_capacity_tokens(&self, budget_bytes: u64) -> u64 {
+        budget_bytes / self.kv_bytes_per_token().max(1)
+    }
+
+    /// KV memory budget on a device: what's left after weights and a
+    /// fixed activation/fragmentation reserve (vLLM's
+    /// `gpu_memory_utilization`-style accounting).
+    pub fn kv_budget_bytes(&self, device_mem: u64, util: f64) -> u64 {
+        let usable = (device_mem as f64 * util) as u64;
+        usable.saturating_sub(self.weight_bytes()).saturating_sub(2 * GIB)
+    }
+}
+
+/// Llama-3.2-3B: 28 layers, d=3072, 24 Q heads, 8 KV heads, hd=128.
+pub const LLAMA_3B: ModelProfile = ModelProfile {
+    name: "Llama-3.2-3B",
+    params: 3_210_000_000,
+    n_layers: 28,
+    d_model: 3072,
+    n_heads: 24,
+    n_kv_heads: 8,
+    head_dim: 128,
+    max_context: 131_072,
+    tp: 1,
+};
+
+/// Phi-3-mini (3.8B): 32 layers, d=3072, 32 heads (MHA), hd=96.
+pub const PHI_3B: ModelProfile = ModelProfile {
+    name: "Phi-3-3B",
+    params: 3_820_000_000,
+    n_layers: 32,
+    d_model: 3072,
+    n_heads: 32,
+    n_kv_heads: 32,
+    head_dim: 96,
+    max_context: 131_072,
+    tp: 1,
+};
+
+/// Llama-3.1-8B: 32 layers, d=4096, 32 Q / 8 KV heads, hd=128.
+pub const LLAMA_8B: ModelProfile = ModelProfile {
+    name: "Llama-3.1-8B",
+    params: 8_030_000_000,
+    n_layers: 32,
+    d_model: 4096,
+    n_heads: 32,
+    n_kv_heads: 8,
+    head_dim: 128,
+    max_context: 131_072,
+    tp: 1,
+};
+
+/// GLM-4-9B: 40 layers, d=4096, 32 Q / 2 KV heads, hd=128.
+pub const GLM_9B: ModelProfile = ModelProfile {
+    name: "GLM-4-9B",
+    params: 9_400_000_000,
+    n_layers: 40,
+    d_model: 4096,
+    n_heads: 32,
+    n_kv_heads: 2,
+    head_dim: 128,
+    max_context: 131_072,
+    tp: 1,
+};
+
+/// Phi-3-medium (14B): 40 layers, d=5120, 40 Q / 10 KV heads, hd=128.
+pub const PHI_14B: ModelProfile = ModelProfile {
+    name: "Phi-3-14B",
+    params: 14_000_000_000,
+    n_layers: 40,
+    d_model: 5120,
+    n_heads: 40,
+    n_kv_heads: 10,
+    head_dim: 128,
+    max_context: 131_072,
+    tp: 1,
+};
+
+/// Qwen-2.5-14B: 48 layers, d=5120, 40 Q / 8 KV heads, hd=128.
+pub const QWEN_14B: ModelProfile = ModelProfile {
+    name: "Qwen-2.5-14B",
+    params: 14_770_000_000,
+    n_layers: 48,
+    d_model: 5120,
+    n_heads: 40,
+    n_kv_heads: 8,
+    head_dim: 128,
+    max_context: 131_072,
+    tp: 1,
+};
+
+/// QwQ-32B: 64 layers, d=5120, 40 Q / 8 KV heads, hd=128.
+pub const QWQ_32B: ModelProfile = ModelProfile {
+    name: "QwQ-32B",
+    params: 32_500_000_000,
+    n_layers: 64,
+    d_model: 5120,
+    n_heads: 40,
+    n_kv_heads: 8,
+    head_dim: 128,
+    max_context: 131_072,
+    tp: 1,
+};
+
+/// Qwen-2.5-32B: 64 layers, d=5120, 40 Q / 8 KV heads, hd=128.
+pub const QWEN_32B: ModelProfile = ModelProfile {
+    name: "Qwen-2.5-32B",
+    params: 32_760_000_000,
+    n_layers: 64,
+    d_model: 5120,
+    n_heads: 40,
+    n_kv_heads: 8,
+    head_dim: 128,
+    max_context: 131_072,
+    tp: 1,
+};
+
+/// Llama-3.1-70B at a given TP degree (§6.2 "tensor parallelism").
+pub const fn llama_70b(tp: u32) -> ModelProfile {
+    ModelProfile {
+        name: "Llama-3.1-70B",
+        params: 70_600_000_000,
+        n_layers: 80,
+        d_model: 8192,
+        n_heads: 64,
+        n_kv_heads: 8,
+        head_dim: 128,
+        max_context: 131_072,
+        tp,
+    }
+}
+
+/// The paper's four size categories (§6.1), in evaluation order.
+pub fn paper_zoo() -> Vec<ModelProfile> {
+    vec![
+        LLAMA_3B, PHI_3B,        // Tiny
+        LLAMA_8B, GLM_9B,        // Small
+        PHI_14B, QWEN_14B,       // Moderate
+        QWQ_32B, QWEN_32B,       // Large
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<ModelProfile> {
+    let lower = name.to_ascii_lowercase();
+    paper_zoo()
+        .into_iter()
+        .chain([llama_70b(2), llama_70b(4)])
+        .find(|m| m.name.to_ascii_lowercase().contains(&lower) || lower.contains("70b") && m.name.contains("70B"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuProfile;
+
+    #[test]
+    fn weight_bytes_are_2x_params_fp16() {
+        assert_eq!(LLAMA_3B.weight_bytes(), 2 * LLAMA_3B.params);
+    }
+
+    #[test]
+    fn llama3b_kv_bytes_match_hand_calc() {
+        // 2 (K,V) * 2 bytes * 28 layers * 8 kv heads * 128 head dim.
+        assert_eq!(LLAMA_3B.kv_bytes_per_token(), 2 * 2 * 28 * 8 * 128);
+        assert_eq!(LLAMA_3B.kv_bytes_per_token(), 114_688);
+    }
+
+    #[test]
+    fn tp_slices_weights_and_kv() {
+        let m2 = llama_70b(2);
+        let m4 = llama_70b(4);
+        assert_eq!(m2.weight_bytes(), 2 * m4.weight_bytes());
+        assert_eq!(m2.kv_bytes_per_token(), 2 * m4.kv_bytes_per_token());
+    }
+
+    #[test]
+    fn zoo_is_ordered_small_to_large() {
+        let zoo = paper_zoo();
+        assert_eq!(zoo.len(), 8);
+        for pair in zoo.windows(2) {
+            // Categories are non-decreasing in parameter count (within
+            // a category order can vary slightly, so allow 35% slack).
+            assert!(pair[1].params as f64 > 0.65 * pair[0].params as f64);
+        }
+    }
+
+    #[test]
+    fn tp2_70b_fills_half_an_h20() {
+        // §6.2: at TP=2 the 70B weights occupy nearly half of each
+        // GPU's memory.
+        let m = llama_70b(2);
+        let frac = m.weight_bytes() as f64 / GpuProfile::H20.mem_bytes as f64;
+        assert!(frac > 0.40 && frac < 0.55, "frac {frac}");
+    }
+
+    #[test]
+    fn kv_budget_positive_for_all_paper_models_on_h20() {
+        for m in paper_zoo() {
+            let b = m.kv_budget_bytes(GpuProfile::H20.mem_bytes, 0.9);
+            assert!(b > 0, "{} has no KV budget", m.name);
+            assert!(m.kv_capacity_tokens(b) > 10_000, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn large_models_do_not_fit_l40_at_fp16() {
+        // The paper only runs small models on the L40 testbed.
+        let b = QWEN_32B.kv_budget_bytes(GpuProfile::L40.mem_bytes, 0.9);
+        assert_eq!(b, 0);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(by_name("llama-3.2-3b").unwrap().name, "Llama-3.2-3B");
+        assert_eq!(by_name("qwq").unwrap().name, "QwQ-32B");
+        assert!(by_name("nonexistent-model").is_none());
+    }
+}

@@ -1,0 +1,369 @@
+//! QoE model for requests and batches — paper §4.1, validated in Fig. 13.
+//!
+//! A batch B of n requests with input lengths I_i and current lengths
+//! L_i has per-request quality (normalized latency)
+//!
+//! ```text
+//! Q = D0*F0 + D1*F1 + D2*F2 + D3*F3 + D4*F4
+//! F0 = 1, F1 = n, F2 = sum(I_i), F3 = sum(I_i^2), F4 = sum(L_i)
+//! ```
+//!
+//! and batch quality `Q^B = n * Q` (Eq. 1).  The coefficients D_k are
+//! fitted by least squares against profiled normalized latencies; this
+//! module implements the feature extraction, the normal-equation OLS
+//! solver, the profiling loop driver, and the validation-error
+//! statistics that regenerate Fig. 13.
+
+use crate::Tokens;
+
+pub const N_FEATURES: usize = 5;
+
+/// Batch-load features F0..F4 of Eq. (1).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Features(pub [f64; N_FEATURES]);
+
+impl Features {
+    /// Extract features from a batch described by (input_len, cur_len)
+    /// pairs.  `cur_len` is the request's current total sequence length
+    /// L_i (input + generated so far).
+    pub fn from_batch(rows: &[(Tokens, Tokens)]) -> Self {
+        let n = rows.len() as f64;
+        let mut f2 = 0.0;
+        let mut f3 = 0.0;
+        let mut f4 = 0.0;
+        for &(i, l) in rows {
+            let fi = i as f64;
+            f2 += fi;
+            f3 += fi * fi;
+            f4 += l as f64;
+        }
+        Features([1.0, n, f2, f3, f4])
+    }
+
+    /// Features of a decode-only batch (prefill terms from the inputs
+    /// that *produced* the KV state).
+    pub fn from_lens(input_lens: &[Tokens], cur_lens: &[Tokens]) -> Self {
+        assert_eq!(input_lens.len(), cur_lens.len());
+        let rows: Vec<(Tokens, Tokens)> =
+            input_lens.iter().copied().zip(cur_lens.iter().copied()).collect();
+        Self::from_batch(&rows)
+    }
+}
+
+/// Fitted QoE coefficients D0..D4.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QoeModel {
+    pub d: [f64; N_FEATURES],
+}
+
+impl QoeModel {
+    pub fn new(d: [f64; N_FEATURES]) -> Self {
+        Self { d }
+    }
+
+    /// Per-request quality Q for a batch with features `f`.
+    pub fn predict(&self, f: &Features) -> f64 {
+        self.d.iter().zip(f.0.iter()).map(|(d, x)| d * x).sum()
+    }
+
+    /// Batch quality Q^B = n * Q (Eq. 1).
+    pub fn batch_qoe(&self, f: &Features) -> f64 {
+        f.0[1] * self.predict(f)
+    }
+
+    /// QoE of serving `rows` split evenly across `k` identical
+    /// instances — the `(e-e') * Q^{n/(e-e')}` term of the §4.2 DP.
+    ///
+    /// Uses the paper's set-division approximation: an even split
+    /// scales n, F2, F3, F4 by 1/k while F0 stays 1.
+    pub fn split_batch_qoe(&self, f: &Features, k: usize) -> f64 {
+        if k == 0 {
+            return f64::INFINITY;
+        }
+        let k_inv = 1.0 / k as f64;
+        let sub = Features([1.0, f.0[1] * k_inv, f.0[2] * k_inv, f.0[3] * k_inv, f.0[4] * k_inv]);
+        k as f64 * self.batch_qoe(&sub)
+    }
+}
+
+/// One profiling observation: features + measured normalized latency.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub features: Features,
+    pub q: f64,
+}
+
+/// Ordinary least squares via the normal equations (X'X) d = X'y.
+///
+/// 5 unknowns — a dense 5x5 Gaussian elimination with partial pivoting
+/// is exact enough and dependency-free.
+pub fn fit(samples: &[Sample]) -> Option<QoeModel> {
+    if samples.len() < N_FEATURES {
+        return None;
+    }
+    let mut xtx = [[0.0f64; N_FEATURES]; N_FEATURES];
+    let mut xty = [0.0f64; N_FEATURES];
+    for s in samples {
+        for i in 0..N_FEATURES {
+            xty[i] += s.features.0[i] * s.q;
+            for j in 0..N_FEATURES {
+                xtx[i][j] += s.features.0[i] * s.features.0[j];
+            }
+        }
+    }
+    // Ridge epsilon (relative to each feature's scale) keeps the solve
+    // stable when a feature is constant or nearly collinear across the
+    // profile sweep.
+    for (i, row) in xtx.iter_mut().enumerate() {
+        row[i] += 1e-9 * row[i].abs().max(1.0);
+    }
+    solve5(xtx, xty).map(QoeModel::new)
+}
+
+/// Solve a 5x5 linear system with partial pivoting.
+fn solve5(mut a: [[f64; N_FEATURES]; N_FEATURES], mut b: [f64; N_FEATURES]) -> Option<[f64; N_FEATURES]> {
+    let n = N_FEATURES;
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv][col].abs() < 1e-30 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        // Eliminate below.
+        for r in col + 1..n {
+            let f = a[r][col] / a[col][col];
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // Back-substitute.
+    let mut x = [0.0; N_FEATURES];
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for c in col + 1..n {
+            s -= a[col][c] * x[c];
+        }
+        x[col] = s / a[col][col];
+    }
+    Some(x)
+}
+
+/// Relative prediction errors |pred - obs| / obs for a validation set —
+/// the Fig. 13 density is a histogram of `(pred - obs) / obs`.
+pub fn relative_errors(model: &QoeModel, validation: &[Sample]) -> Vec<f64> {
+    validation
+        .iter()
+        .filter(|s| s.q.abs() > 1e-12)
+        .map(|s| (model.predict(&s.features) - s.q) / s.q)
+        .collect()
+}
+
+/// Mean absolute relative error (the paper reports 8.9% for the QoE
+/// model vs 64% for a static mean predictor).
+pub fn mean_abs_rel_error(errors: &[f64]) -> f64 {
+    if errors.is_empty() {
+        return 0.0;
+    }
+    errors.iter().map(|e| e.abs()).sum::<f64>() / errors.len() as f64
+}
+
+/// The static baseline of Fig. 13: always predict the fitting-set mean.
+pub fn static_baseline_errors(fit_set: &[Sample], validation: &[Sample]) -> Vec<f64> {
+    let mean = fit_set.iter().map(|s| s.q).sum::<f64>() / fit_set.len().max(1) as f64;
+    validation
+        .iter()
+        .filter(|s| s.q.abs() > 1e-12)
+        .map(|s| (mean - s.q) / s.q)
+        .collect()
+}
+
+/// Profile the (simulated) hardware and fit the QoE model — the §4.1
+/// calibration loop.
+///
+/// Mirrors the paper's procedure: partition lengths into exponential
+/// buckets, sweep batch sizes 1, 2, 4, ... per bucket, measure each
+/// configuration's normalized latency (here: priced by the analytic
+/// attention cost model, i.e. "running" the profile on the simulated
+/// GPU), extract batch features, and least-squares fit D0..D4.
+pub fn profile_and_fit(
+    m: &crate::kernelmodel::AttentionModel,
+    min_len: Tokens,
+    max_len: Tokens,
+    max_batch: usize,
+) -> (QoeModel, Vec<Sample>) {
+    let mut samples = Vec::new();
+    for (lo, hi) in length_buckets(min_len, max_len) {
+        let len = (lo + hi) / 2;
+        // Sweep input/output splits so F2/F3 (prefill terms) are not
+        // collinear with F4 (decode term) in the design matrix.
+        for frac in [0.25, 0.5, 0.75] {
+            let input = ((len as f64 * frac) as Tokens).max(1);
+            let output = (len - input).max(1);
+            let mut b = 1usize;
+            while b <= max_batch {
+                let lens = vec![len; b];
+                let t_iter = m.decode_iteration_latency(&lens);
+                let t_prefill = m.prefill_latency(input);
+                // Normalized latency: end-to-end per output token under
+                // closed-loop batch-B steady state.
+                let q = t_iter + t_prefill / output as f64;
+                let rows: Vec<(Tokens, Tokens)> = vec![(input, len); b];
+                samples.push(Sample { features: Features::from_batch(&rows), q });
+                b *= 2;
+            }
+        }
+    }
+    let model = fit(&samples).expect("profiling produced a fittable design");
+    (model, samples)
+}
+
+/// Exponentially growing length buckets used by the profiling sweep
+/// (§4.1: "[100,200), [200,400), [400,800), ...").
+pub fn length_buckets(min_len: Tokens, max_len: Tokens) -> Vec<(Tokens, Tokens)> {
+    let mut out = Vec::new();
+    let mut lo = min_len.max(1);
+    while lo < max_len {
+        let hi = (lo * 2).min(max_len);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    #[test]
+    fn features_hand_computed() {
+        let f = Features::from_batch(&[(10, 20), (30, 50)]);
+        assert_eq!(f.0, [1.0, 2.0, 40.0, 1000.0, 70.0]);
+    }
+
+    #[test]
+    fn fit_recovers_exact_linear_model() {
+        let truth = QoeModel::new([0.5, 0.01, 2e-4, 3e-8, 5e-5]);
+        let mut rng = Rng::new(9);
+        let mut samples = Vec::new();
+        for _ in 0..200 {
+            let n = 1 + rng.next_range(64);
+            let rows: Vec<(u64, u64)> = (0..n)
+                .map(|_| {
+                    let i = 50 + rng.next_range(4000);
+                    (i, i + rng.next_range(1000))
+                })
+                .collect();
+            let f = Features::from_batch(&rows);
+            samples.push(Sample { features: f, q: truth.predict(&f) });
+        }
+        let fitted = fit(&samples).unwrap();
+        // The relative ridge introduces O(1e-5) bias — accept that.
+        for (a, b) in fitted.d.iter().zip(truth.d.iter()) {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1e-3), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fit_with_noise_beats_static_baseline() {
+        let truth = QoeModel::new([1.0, 0.05, 1e-4, 2e-9, 8e-5]);
+        let mut rng = Rng::new(10);
+        let mut make = |n_samples: usize| -> Vec<Sample> {
+            (0..n_samples)
+                .map(|_| {
+                    let n = 1 + rng.next_range(128);
+                    let rows: Vec<(u64, u64)> = (0..n)
+                        .map(|_| {
+                            let i = 100 + rng.next_range(8000);
+                            (i, i + rng.next_range(2000))
+                        })
+                        .collect();
+                    let f = Features::from_batch(&rows);
+                    let noise = 1.0 + 0.05 * rng.normal();
+                    Sample { features: f, q: truth.predict(&f) * noise }
+                })
+                .collect()
+        };
+        let fit_set = make(400);
+        let val_set = make(200);
+        let model = fit(&fit_set).unwrap();
+        let model_err = mean_abs_rel_error(&relative_errors(&model, &val_set));
+        let static_err = mean_abs_rel_error(&static_baseline_errors(&fit_set, &val_set));
+        assert!(model_err < 0.10, "model err {model_err}");
+        assert!(static_err > 2.0 * model_err, "static {static_err} vs model {model_err}");
+    }
+
+    #[test]
+    fn batch_qoe_is_n_times_request_qoe() {
+        let m = QoeModel::new([1.0, 2.0, 0.0, 0.0, 0.0]);
+        let f = Features::from_batch(&[(1, 1); 8]);
+        assert!((m.batch_qoe(&f) - 8.0 * m.predict(&f)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_batch_reduces_qoe_for_load_terms() {
+        // Splitting work over more instances must not increase QoE when
+        // the per-batch constant D0 is negligible.
+        let m = QoeModel::new([1e-6, 0.01, 1e-4, 1e-9, 1e-4]);
+        let rows: Vec<(u64, u64)> = (0..64).map(|i| (100 + i, 200 + i)).collect();
+        let f = Features::from_batch(&rows);
+        let q1 = m.split_batch_qoe(&f, 1);
+        let q2 = m.split_batch_qoe(&f, 2);
+        let q4 = m.split_batch_qoe(&f, 4);
+        assert!(q2 < q1 && q4 < q2, "{q1} {q2} {q4}");
+    }
+
+    #[test]
+    fn split_by_zero_is_infinite() {
+        let m = QoeModel::new([1.0; 5]);
+        let f = Features::from_batch(&[(1, 1)]);
+        assert!(m.split_batch_qoe(&f, 0).is_infinite());
+    }
+
+    #[test]
+    fn buckets_are_exponential_and_cover() {
+        let b = length_buckets(100, 1600);
+        assert_eq!(b, vec![(100, 200), (200, 400), (400, 800), (800, 1600)]);
+        let b = length_buckets(100, 1000);
+        assert_eq!(b.last().unwrap().1, 1000);
+    }
+
+    #[test]
+    fn profile_and_fit_predicts_cost_model() {
+        use crate::gpu::GpuProfile;
+        use crate::kernelmodel::AttentionModel;
+        use crate::models::LLAMA_3B;
+        let m = AttentionModel::new(GpuProfile::H20, LLAMA_3B);
+        let (qoe, samples) = profile_and_fit(&m, 100, 131_072, 512);
+        assert!(samples.len() > 30);
+        // In-sample relative error should be modest (the true cost is
+        // only piecewise-linear in the features).
+        let errs = relative_errors(&qoe, &samples);
+        let mae = mean_abs_rel_error(&errs);
+        assert!(mae < 0.35, "profiling fit MAE {mae}");
+        // And it must beat the static-mean baseline clearly (Fig. 13).
+        let static_mae = mean_abs_rel_error(&static_baseline_errors(&samples, &samples));
+        assert!(mae < 0.5 * static_mae, "model {mae} vs static {static_mae}");
+    }
+
+    #[test]
+    fn singular_system_returns_none() {
+        // All-identical samples make X'X singular beyond the ridge eps;
+        // the fit should still not blow up (ridge makes it solvable).
+        let f = Features::from_batch(&[(10, 10)]);
+        let samples = vec![Sample { features: f, q: 1.0 }; 10];
+        let m = fit(&samples);
+        assert!(m.is_some());
+        // And prediction at the fitted point is close to 1.0.
+        assert!((m.unwrap().predict(&f) - 1.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,398 @@
+//! PJRT runtime — loads the AOT artifacts and serves them from Rust.
+//!
+//! The build-time Python path (`make artifacts`) lowers the L2 JAX
+//! model (with its L1 Pallas kernels) to **HLO text** plus a parameter
+//! blob; this module is the request-path half: parse the artifacts,
+//! compile one executable per batch variant on the PJRT CPU client,
+//! and expose typed `prefill` / `decode` calls that move only
+//! activations — parameters are uploaded to the device once.
+//!
+//! HLO *text* (not serialized protos) is deliberate: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Geometry of the served model, parsed from `artifacts/model.meta`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub prefill_t: usize,
+    pub batches: Vec<usize>,
+    pub n_params: usize,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad meta line: {line}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .ok_or_else(|| anyhow!("meta missing key {k}"))?
+                .parse()
+                .with_context(|| format!("meta key {k}"))
+        };
+        let batches = kv
+            .get("batches")
+            .ok_or_else(|| anyhow!("meta missing batches"))?
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("batches: {e}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_heads: get("n_heads")?,
+            n_layers: get("n_layers")?,
+            max_seq: get("max_seq")?,
+            head_dim: get("head_dim")?,
+            prefill_t: get("prefill_t")?,
+            batches,
+            n_params: get("n_params")?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("model.meta"))
+            .context("reading model.meta — run `make artifacts` first")?;
+        Self::parse(&text)
+    }
+
+    /// Smallest compiled batch variant that fits `n` live rows.
+    pub fn variant_for(&self, n: usize) -> Option<usize> {
+        self.batches.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Cache shape per variant: `[L, B*H, S, Dh]`.
+    pub fn cache_dims(&self, batch: usize) -> [i64; 4] {
+        [
+            self.n_layers as i64,
+            (batch * self.n_heads) as i64,
+            self.max_seq as i64,
+            self.head_dim as i64,
+        ]
+    }
+}
+
+/// One named parameter from `params.manifest`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dims: Vec<i64>,
+    /// Offset into params.bin, in f32 elements.
+    pub offset: usize,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product::<i64>() as usize
+    }
+}
+
+/// Parse `params.manifest` (`name ndim dims... offset`).
+pub fn parse_manifest(text: &str) -> Result<Vec<ParamSpec>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let err = || anyhow!("bad manifest line {}: {line}", i + 1);
+        if parts.len() < 3 {
+            bail!(err());
+        }
+        let name = parts[0].to_string();
+        let ndim: usize = parts[1].parse().map_err(|_| err())?;
+        if parts.len() != 3 + ndim {
+            bail!(err());
+        }
+        let dims = parts[2..2 + ndim]
+            .iter()
+            .map(|s| s.parse::<i64>().map_err(|_| err()))
+            .collect::<Result<Vec<i64>>>()?;
+        let offset: usize = parts[2 + ndim].parse().map_err(|_| err())?;
+        out.push(ParamSpec { name, dims, offset });
+    }
+    Ok(out)
+}
+
+/// Load the parameter blob as per-parameter `Literal`s.
+pub fn load_params(dir: &Path) -> Result<Vec<(ParamSpec, xla::Literal)>> {
+    let manifest = std::fs::read_to_string(dir.join("params.manifest"))?;
+    let specs = parse_manifest(&manifest)?;
+    let blob = std::fs::read(dir.join("params.bin"))?;
+    if blob.len() % 4 != 0 {
+        bail!("params.bin not a multiple of 4 bytes");
+    }
+    let floats: Vec<f32> = blob
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let mut out = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let end = spec.offset + spec.numel();
+        if end > floats.len() {
+            bail!("param {} overruns blob ({} > {})", spec.name, end, floats.len());
+        }
+        let lit = xla::Literal::vec1(&floats[spec.offset..end]).reshape(&spec.dims)?;
+        out.push((spec, lit));
+    }
+    Ok(out)
+}
+
+/// Output of a prefill call.
+pub struct PrefillOut {
+    /// `[B, V]` next-token logits at each row's last valid position.
+    pub logits: Vec<f32>,
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+}
+
+/// Output of a decode step.
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+    pub lengths: Vec<i32>,
+}
+
+/// The compiled model: one executable per (kind, batch) variant.
+pub struct Runtime {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    params: Vec<xla::Literal>,
+    prefill: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// Executions performed (for perf accounting).
+    pub prefill_calls: std::cell::Cell<u64>,
+    pub decode_calls: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Load every artifact under `dir` and compile all batch variants.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let meta = ModelMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let params: Vec<xla::Literal> =
+            load_params(dir)?.into_iter().map(|(_, l)| l).collect();
+        if params.len() != meta.n_params {
+            bail!("param count mismatch: blob {} vs meta {}", params.len(), meta.n_params);
+        }
+
+        let compile = |path: PathBuf| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let mut prefill = BTreeMap::new();
+        let mut decode = BTreeMap::new();
+        for &b in &meta.batches {
+            prefill.insert(
+                b,
+                compile(dir.join(format!("prefill_b{b}_t{}.hlo.txt", meta.prefill_t)))?,
+            );
+            decode.insert(b, compile(dir.join(format!("decode_b{b}.hlo.txt")))?);
+        }
+        Ok(Self {
+            meta,
+            client,
+            params,
+            prefill,
+            decode,
+            prefill_calls: Default::default(),
+            decode_calls: Default::default(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Prefill a batch of prompts (padded to the `prefill_t` window).
+    ///
+    /// `tokens` is `rows x prefill_t` row-major; `lengths[i]` counts the
+    /// valid prompt tokens of row i (1..=prefill_t). Rows beyond the
+    /// live count are padded internally.
+    pub fn prefill(&self, tokens: &[i32], lengths: &[i32]) -> Result<PrefillOut> {
+        let t = self.meta.prefill_t;
+        let rows = lengths.len();
+        if tokens.len() != rows * t {
+            bail!("tokens must be rows*prefill_t = {}", rows * t);
+        }
+        let b = self
+            .meta
+            .variant_for(rows)
+            .ok_or_else(|| anyhow!("batch {rows} exceeds largest variant"))?;
+        let exe = &self.prefill[&b];
+
+        // Pad rows up to the variant with inert length-1 rows.
+        let mut tok = tokens.to_vec();
+        tok.resize(b * t, 0);
+        let mut lens = lengths.to_vec();
+        lens.resize(b, 1);
+
+        let tok_lit = xla::Literal::vec1(&tok).reshape(&[b as i64, t as i64])?;
+        let lens_lit = xla::Literal::vec1(&lens);
+        // Borrow the parameter literals — no per-call copies.
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tok_lit);
+        args.push(&lens_lit);
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        self.prefill_calls.set(self.prefill_calls.get() + 1);
+        let mut parts = result.to_tuple()?;
+        if parts.len() != 3 {
+            bail!("prefill returned {} outputs, want 3", parts.len());
+        }
+        let v_cache = parts.pop().unwrap();
+        let k_cache = parts.pop().unwrap();
+        let logits_all: Vec<f32> = parts.pop().unwrap().to_vec()?;
+        // Trim padded rows.
+        let v = self.meta.vocab;
+        Ok(PrefillOut { logits: logits_all[..rows * v].to_vec(), k_cache, v_cache })
+    }
+
+    /// One decode step over the batch the caches were built for.
+    pub fn decode(
+        &self,
+        tokens: &[i32],
+        k_cache: &xla::Literal,
+        v_cache: &xla::Literal,
+        lengths: &[i32],
+    ) -> Result<DecodeOut> {
+        let rows = tokens.len();
+        if lengths.len() != rows {
+            bail!("tokens/lengths mismatch");
+        }
+        // The cache fixes the variant.
+        let cache_rows = k_cache.array_shape()?.dims()[1] as usize;
+        let b = cache_rows / self.meta.n_heads;
+        if rows > b {
+            bail!("batch {rows} larger than cache variant {b}");
+        }
+        let exe = self
+            .decode
+            .get(&b)
+            .ok_or_else(|| anyhow!("no decode variant for batch {b}"))?;
+
+        let mut tok = tokens.to_vec();
+        tok.resize(b, 0);
+        let mut lens = lengths.to_vec();
+        // Inert rows park at position 0 with length 0 (they write KV at
+        // slot 0 but their outputs are discarded and lengths reset).
+        lens.resize(b, 0);
+
+        let tok_lit = xla::Literal::vec1(&tok);
+        let lens_lit = xla::Literal::vec1(&lens);
+        // Borrow params and caches — the caches come straight from the
+        // previous step's outputs in the right shape already.
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tok_lit);
+        args.push(k_cache);
+        args.push(v_cache);
+        args.push(&lens_lit);
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        self.decode_calls.set(self.decode_calls.get() + 1);
+        let mut parts = result.to_tuple()?;
+        if parts.len() != 4 {
+            bail!("decode returned {} outputs, want 4", parts.len());
+        }
+        let new_lens: Vec<i32> = parts.pop().unwrap().to_vec()?;
+        let v_cache = parts.pop().unwrap();
+        let k_cache = parts.pop().unwrap();
+        let logits_all: Vec<f32> = parts.pop().unwrap().to_vec()?;
+        let v = self.meta.vocab;
+        Ok(DecodeOut {
+            logits: logits_all[..rows * v].to_vec(),
+            k_cache,
+            v_cache,
+            lengths: new_lens[..rows].to_vec(),
+        })
+    }
+
+    /// Greedy next-token choice per row from flat `[rows, vocab]` logits.
+    pub fn argmax_tokens(&self, logits: &[f32]) -> Vec<i32> {
+        let v = self.meta.vocab;
+        logits
+            .chunks_exact(v)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Default artifacts directory: `$CASCADE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("CASCADE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = "vocab=256\nd_model=64\nn_heads=4\nn_layers=2\nmax_seq=128\nhead_dim=16\nprefill_t=32\nbatches=1,2,4,8\nn_params=28\n";
+
+    #[test]
+    fn meta_parses() {
+        let m = ModelMeta::parse(META).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.batches, vec![1, 2, 4, 8]);
+        assert_eq!(m.cache_dims(2), [2, 8, 128, 16]);
+    }
+
+    #[test]
+    fn meta_missing_key_errors() {
+        assert!(ModelMeta::parse("vocab=1\n").is_err());
+        assert!(ModelMeta::parse("garbage line").is_err());
+    }
+
+    #[test]
+    fn variant_selection() {
+        let m = ModelMeta::parse(META).unwrap();
+        assert_eq!(m.variant_for(1), Some(1));
+        assert_eq!(m.variant_for(3), Some(4));
+        assert_eq!(m.variant_for(8), Some(8));
+        assert_eq!(m.variant_for(9), None);
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let text = "tok_emb 2 256 64 0\npos_emb 2 128 64 16384\nlnf_bias 1 64 24576\n";
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].numel(), 256 * 64);
+        assert_eq!(specs[1].offset, 16384);
+        assert_eq!(specs[2].dims, vec![64]);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(parse_manifest("name 2 64").is_err());
+        assert!(parse_manifest("name x 1 2 3").is_err());
+    }
+}

@@ -1,0 +1,468 @@
+//! Real serving path: CascadeInfer over the PJRT-compiled model.
+//!
+//! Where [`crate::cluster`] *simulates* 16 H20s, this module actually
+//! serves the AOT-compiled tiny GPT (python/compile) on N in-process
+//! instances, proving the three layers compose: Rust routes, batches,
+//! decodes through XLA executables, tracks per-sequence KV state, and
+//! live-migrates sequences across length-specialized stages — with no
+//! Python anywhere on the request path.
+//!
+//! Threading model: one OS thread per instance, each owning its own
+//! [`crate::runtime::Runtime`] (PJRT clients are not shared across
+//! threads).  Instances exchange control messages and KV payloads over
+//! `std::sync::mpsc` channels — the offline stand-in for the paper's
+//! C++ cudaMemcpyPeerAsync/RDMA backend (§5).  The router applies the
+//! same length-aware stage routing as the simulator; inter-stage
+//! handover reuses the §4.4 bid-ask receiver selection over gossiped
+//! load reports.
+
+use crate::coordinator::balance::{select_receiver, Bid};
+use crate::runtime::Runtime;
+use crate::{InstanceId, RequestId, Tokens};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A request to the real server.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: RequestId,
+    /// Prompt token ids (byte-level vocab). Must fit the compiled
+    /// prefill window.
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    pub submitted_at: Instant,
+    pub first_token_at: Instant,
+    pub finished_at: Instant,
+    /// Instances that served this request, in order (len > 1 means the
+    /// request migrated).
+    pub served_by: Vec<InstanceId>,
+}
+
+impl ServeResponse {
+    pub fn ttft(&self) -> Duration {
+        self.first_token_at - self.submitted_at
+    }
+
+    pub fn e2e(&self) -> Duration {
+        self.finished_at - self.submitted_at
+    }
+}
+
+/// Per-sequence KV state, host-resident between steps: `[L, H, S, Dh]`
+/// row-major.  Keeping KV per-sequence makes continuous batching
+/// (regroup every step) and migration (ship the vectors) trivial and
+/// exact.
+#[derive(Debug, Clone)]
+struct SeqKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// A live sequence inside an instance.
+#[derive(Debug, Clone)]
+struct LiveSeq {
+    id: RequestId,
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    max_new: usize,
+    kv: SeqKv,
+    kv_len: i32,
+    last_token: i32,
+    submitted_at: Instant,
+    first_token_at: Option<Instant>,
+    served_by: Vec<InstanceId>,
+}
+
+/// Messages into an instance thread.
+enum ToInstance {
+    New(ServeRequest, Instant),
+    /// A migrated sequence (KV payload included — the "RDMA transfer").
+    Migrated(Box<LiveSeq>),
+    Shutdown,
+}
+
+/// Gossiped load report (lock-free: atomics snapshotted by senders).
+#[derive(Default)]
+struct SharedLoad {
+    token_load: AtomicU64,
+    n_seqs: AtomicU64,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    /// Stage boundaries over *current* sequence length; instances are
+    /// assigned one per stage in order. len(boundaries)+1 == instances.
+    pub stage_boundaries: Vec<Tokens>,
+    pub instances_per_stage: usize,
+    /// Decode batch cap (clamped to the largest compiled variant).
+    pub max_batch: usize,
+}
+
+impl ServerConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            stage_boundaries: vec![48, 80],
+            instances_per_stage: 1,
+            max_batch: 8,
+        }
+    }
+
+    pub fn n_instances(&self) -> usize {
+        (self.stage_boundaries.len() + 1) * self.instances_per_stage
+    }
+
+    fn stage_of_len(&self, len: Tokens) -> usize {
+        for (i, &b) in self.stage_boundaries.iter().enumerate() {
+            if len < b {
+                return i;
+            }
+        }
+        self.stage_boundaries.len()
+    }
+}
+
+/// The running server.
+pub struct Server {
+    cfg: ServerConfig,
+    to_instances: Vec<Sender<ToInstance>>,
+    results: Receiver<ServeResponse>,
+    loads: Vec<Arc<SharedLoad>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    submitted: u64,
+}
+
+impl Server {
+    /// Spawn all instance threads (each compiles its own executables).
+    pub fn start(cfg: ServerConfig) -> Result<Self> {
+        let n = cfg.n_instances();
+        let (res_tx, res_rx) = channel::<ServeResponse>();
+        let loads: Vec<Arc<SharedLoad>> =
+            (0..n).map(|_| Arc::new(SharedLoad::default())).collect();
+
+        // Build the instance channel mesh first so each thread can own
+        // senders to every other instance (decentralized handover).
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<ToInstance>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+
+        let ready = Arc::new(std::sync::Barrier::new(n + 1));
+        let mut handles = Vec::with_capacity(n);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let cfg_i = cfg.clone();
+            let res_tx = res_tx.clone();
+            let peer_txs: Vec<Sender<ToInstance>> = txs.clone();
+            let loads_i: Vec<Arc<SharedLoad>> = loads.clone();
+            let ready_i = ready.clone();
+            handles.push(std::thread::spawn(move || {
+                let rt = Runtime::load(&cfg_i.artifacts_dir)
+                    .expect("artifacts must be built (make artifacts)");
+                // Executables compiled: rendezvous so `start` returns a
+                // warmed-up server and latency metrics exclude compile.
+                ready_i.wait();
+                instance_loop(i, cfg_i, rt, rx, peer_txs, res_tx, loads_i);
+            }));
+        }
+        ready.wait();
+        Ok(Self { cfg, to_instances: txs, results: res_rx, loads, handles, submitted: 0 })
+    }
+
+    /// Route a request to the earliest stage covering its prompt length
+    /// (least-loaded member within the stage).
+    pub fn submit(&mut self, req: ServeRequest) {
+        let stage = self.cfg.stage_of_len(req.prompt.len() as Tokens);
+        let members: Vec<usize> = (0..self.cfg.instances_per_stage)
+            .map(|j| stage * self.cfg.instances_per_stage + j)
+            .collect();
+        let target = members
+            .iter()
+            .copied()
+            .min_by_key(|&i| self.loads[i].token_load.load(Ordering::Relaxed))
+            .unwrap();
+        self.submitted += 1;
+        self.to_instances[target]
+            .send(ToInstance::New(req, Instant::now()))
+            .expect("instance alive");
+    }
+
+    /// Block until `n` responses arrive.
+    pub fn collect(&self, n: usize) -> Vec<ServeResponse> {
+        (0..n).map(|_| self.results.recv().expect("instances alive")).collect()
+    }
+
+    /// Shut down all instance threads.
+    pub fn shutdown(self) {
+        for tx in &self.to_instances {
+            let _ = tx.send(ToInstance::Shutdown);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Core per-instance serving loop: admit → prefill → batched decode →
+/// handover/complete.
+fn instance_loop(
+    me: InstanceId,
+    cfg: ServerConfig,
+    rt: Runtime,
+    rx: Receiver<ToInstance>,
+    peers: Vec<Sender<ToInstance>>,
+    results: Sender<ServeResponse>,
+    loads: Vec<Arc<SharedLoad>>,
+) {
+    let meta = rt.meta.clone();
+    let max_batch = cfg.max_batch.min(*meta.batches.last().unwrap());
+    let my_stage = me / cfg.instances_per_stage;
+    let last_stage = my_stage == cfg.stage_boundaries.len();
+    let stage_hi: Tokens = if last_stage {
+        meta.max_seq as Tokens
+    } else {
+        cfg.stage_boundaries[my_stage]
+    };
+
+    let mut waiting: VecDeque<(ServeRequest, Instant)> = VecDeque::new();
+    let mut active: Vec<LiveSeq> = Vec::new();
+    let mut shutdown = false;
+
+    let l = meta.n_layers;
+    let h = meta.n_heads;
+    let s = meta.max_seq;
+    let dh = meta.head_dim;
+    let row_elems = s * dh; // per (layer is outer) per head
+    let seq_kv_elems = l * h * row_elems;
+
+    while !shutdown || !active.is_empty() || !waiting.is_empty() {
+        // Drain inbox (block briefly when idle).
+        loop {
+            let msg = if active.is_empty() && waiting.is_empty() && !shutdown {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                ToInstance::New(req, at) => waiting.push_back((req, at)),
+                ToInstance::Migrated(seq) => {
+                    let mut seq = *seq;
+                    seq.served_by.push(me);
+                    active.push(seq);
+                }
+                ToInstance::Shutdown => shutdown = true,
+            }
+        }
+        if active.is_empty() && waiting.is_empty() {
+            if shutdown {
+                break;
+            }
+            continue;
+        }
+
+        // --- Admit + prefill newly waiting prompts as one batch.
+        let room = max_batch.saturating_sub(active.len());
+        let n_new = waiting.len().min(room);
+        if n_new > 0 {
+            let batch: Vec<(ServeRequest, Instant)> = waiting.drain(..n_new).collect();
+            let t = meta.prefill_t;
+            let mut tokens = vec![0i32; batch.len() * t];
+            let mut lens = vec![0i32; batch.len()];
+            for (bi, (req, _)) in batch.iter().enumerate() {
+                let plen = req.prompt.len().min(t);
+                tokens[bi * t..bi * t + plen].copy_from_slice(&req.prompt[..plen]);
+                lens[bi] = plen as i32;
+            }
+            let out = rt.prefill(&tokens, &lens).expect("prefill executes");
+            let now = Instant::now();
+            let kc: Vec<f32> = out.k_cache.to_vec().expect("k cache reads");
+            let vc: Vec<f32> = out.v_cache.to_vec().expect("v cache reads");
+            let variant = meta.variant_for(batch.len()).unwrap();
+            let first_tokens = rt.argmax_tokens(&out.logits);
+            for (bi, (req, submitted_at)) in batch.into_iter().enumerate() {
+                // Slice this sequence's rows out of [L, B*H, S, Dh].
+                let mut kv = SeqKv {
+                    k: vec![0.0; seq_kv_elems],
+                    v: vec![0.0; seq_kv_elems],
+                };
+                for li in 0..l {
+                    for hi in 0..h {
+                        let src = ((li * variant * h) + bi * h + hi) * row_elems;
+                        let dst = (li * h + hi) * row_elems;
+                        kv.k[dst..dst + row_elems].copy_from_slice(&kc[src..src + row_elems]);
+                        kv.v[dst..dst + row_elems].copy_from_slice(&vc[src..src + row_elems]);
+                    }
+                }
+                let plen = req.prompt.len().min(t);
+                let first = first_tokens[bi];
+                active.push(LiveSeq {
+                    id: req.id,
+                    tokens: vec![first],
+                    prompt_len: plen,
+                    max_new: req.max_new_tokens,
+                    kv,
+                    kv_len: plen as i32,
+                    last_token: first,
+                    submitted_at,
+                    first_token_at: Some(now),
+                    served_by: vec![me],
+                });
+            }
+        }
+
+        // --- One batched decode step over all active sequences.
+        if !active.is_empty() {
+            let rows = active.len().min(max_batch);
+            let variant = meta.variant_for(rows).unwrap();
+            // Assemble the variant-sized cache from per-seq KV.
+            let cache_elems = l * variant * h * row_elems;
+            let mut kc = vec![0.0f32; cache_elems];
+            let mut vc = vec![0.0f32; cache_elems];
+            let mut toks = vec![0i32; rows];
+            let mut lens = vec![0i32; rows];
+            for (bi, seq) in active.iter().take(rows).enumerate() {
+                toks[bi] = seq.last_token;
+                lens[bi] = seq.kv_len;
+                for li in 0..l {
+                    for hi in 0..h {
+                        let dst = ((li * variant * h) + bi * h + hi) * row_elems;
+                        let src = (li * h + hi) * row_elems;
+                        kc[dst..dst + row_elems].copy_from_slice(&seq.kv.k[src..src + row_elems]);
+                        vc[dst..dst + row_elems].copy_from_slice(&seq.kv.v[src..src + row_elems]);
+                    }
+                }
+            }
+            let dims: Vec<i64> = vec![l as i64, (variant * h) as i64, s as i64, dh as i64];
+            let k_lit = xla::Literal::vec1(&kc).reshape(&dims).unwrap();
+            let v_lit = xla::Literal::vec1(&vc).reshape(&dims).unwrap();
+            let out = rt.decode(&toks, &k_lit, &v_lit, &lens).expect("decode executes");
+            let now = Instant::now();
+            let kc2: Vec<f32> = out.k_cache.to_vec().expect("k cache reads");
+            let vc2: Vec<f32> = out.v_cache.to_vec().expect("v cache reads");
+            let next = rt.argmax_tokens(&out.logits);
+            for (bi, seq) in active.iter_mut().take(rows).enumerate() {
+                for li in 0..l {
+                    for hi in 0..h {
+                        let src = ((li * variant * h) + bi * h + hi) * row_elems;
+                        let dst = (li * h + hi) * row_elems;
+                        seq.kv.k[dst..dst + row_elems]
+                            .copy_from_slice(&kc2[src..src + row_elems]);
+                        seq.kv.v[dst..dst + row_elems]
+                            .copy_from_slice(&vc2[src..src + row_elems]);
+                    }
+                }
+                seq.kv_len = out.lengths[bi];
+                seq.last_token = next[bi];
+                seq.tokens.push(next[bi]);
+                if seq.first_token_at.is_none() {
+                    seq.first_token_at = Some(now);
+                }
+            }
+
+            // --- Complete, hand over, or keep.
+            let mut i = 0;
+            while i < active.len() {
+                let done = active[i].tokens.len() > active[i].max_new
+                    || active[i].kv_len as usize >= s - 1;
+                if done {
+                    let seq = active.remove(i);
+                    let mut tokens = seq.tokens;
+                    tokens.truncate(seq.max_new);
+                    let _ = results.send(ServeResponse {
+                        id: seq.id,
+                        tokens,
+                        submitted_at: seq.submitted_at,
+                        first_token_at: seq.first_token_at.unwrap_or(now),
+                        finished_at: now,
+                        served_by: seq.served_by,
+                    });
+                    continue;
+                }
+                let outgrown = !last_stage
+                    && (active[i].kv_len as Tokens) >= stage_hi
+                    && active[i].tokens.len() < active[i].max_new;
+                if outgrown {
+                    // Bid-ask over the next stage's members using the
+                    // gossiped load snapshots.
+                    let next_stage = my_stage + 1;
+                    let members: Vec<usize> = (0..cfg.instances_per_stage)
+                        .map(|j| next_stage * cfg.instances_per_stage + j)
+                        .collect();
+                    let bids: Vec<Bid> = members
+                        .iter()
+                        .map(|&m| Bid {
+                            receiver: m,
+                            request: active[i].id,
+                            load: loads[m].token_load.load(Ordering::Relaxed),
+                            earliest_start: loads[m].n_seqs.load(Ordering::Relaxed) as f64,
+                            reply_at: m as f64,
+                        })
+                        .collect();
+                    if let Some(target) = select_receiver(&bids) {
+                        let seq = active.remove(i);
+                        let _ = peers[target].send(ToInstance::Migrated(Box::new(seq)));
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+
+        // --- Publish load report.
+        let token_load: u64 = active.iter().map(|a| a.kv_len as u64).sum();
+        loads[me].token_load.store(token_load, Ordering::Relaxed);
+        loads[me].n_seqs.store(active.len() as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_routing_by_prompt_len() {
+        let cfg = ServerConfig::new("artifacts");
+        assert_eq!(cfg.stage_of_len(0), 0);
+        assert_eq!(cfg.stage_of_len(47), 0);
+        assert_eq!(cfg.stage_of_len(48), 1);
+        assert_eq!(cfg.stage_of_len(80), 2);
+        assert_eq!(cfg.n_instances(), 3);
+    }
+
+    #[test]
+    fn response_timing_accessors() {
+        let t0 = Instant::now();
+        let r = ServeResponse {
+            id: 1,
+            tokens: vec![1, 2],
+            submitted_at: t0,
+            first_token_at: t0 + Duration::from_millis(5),
+            finished_at: t0 + Duration::from_millis(20),
+            served_by: vec![0, 1],
+        };
+        assert!(r.ttft() >= Duration::from_millis(5));
+        assert!(r.e2e() >= r.ttft());
+    }
+}

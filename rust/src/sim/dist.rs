@@ -1,0 +1,167 @@
+//! Probability distributions used by the workload generator.
+//!
+//! Each distribution is a small value type sampling from a caller-owned
+//! [`Rng`], keeping every stream seed-addressable.
+
+use super::rng::Rng;
+
+/// Exponential(rate) — inter-arrival gaps of a Poisson process.
+#[derive(Debug, Clone, Copy)]
+pub struct Exponential {
+    pub rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        Self { rate }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let u = rng.next_f64().max(f64::MIN_POSITIVE);
+        -u.ln() / self.rate
+    }
+}
+
+/// Poisson(lambda) counts via inversion (small lambda) or normal
+/// approximation (large lambda).
+#[derive(Debug, Clone, Copy)]
+pub struct Poisson {
+    pub lambda: f64,
+}
+
+impl Poisson {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0);
+        Self { lambda }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.lambda < 30.0 {
+            // Knuth inversion.
+            let l = (-self.lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= rng.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = self.lambda + self.lambda.sqrt() * rng.normal();
+            x.max(0.0).round() as u64
+        }
+    }
+}
+
+/// LogNormal(mu, sigma) of the underlying normal.
+#[derive(Debug, Clone, Copy)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma > 0.0);
+        Self { mu, sigma }
+    }
+
+    /// Construct from the distribution's own median and the sigma of
+    /// the underlying normal (median = e^mu).
+    pub fn from_median(median: f64, sigma: f64) -> Self {
+        Self::new(median.ln(), sigma)
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        (self.mu + self.sigma * rng.normal()).exp()
+    }
+
+    pub fn mean(&self) -> f64 {
+        (self.mu + self.sigma * self.sigma / 2.0).exp()
+    }
+}
+
+/// Pareto tail: `x_min * u^(-1/alpha)` — models the rare extremely long
+/// contexts (up to 128K) that make MILS workloads heavy-tailed (paper
+/// Fig. 1).
+#[derive(Debug, Clone, Copy)]
+pub struct ParetoTail {
+    pub x_min: f64,
+    pub alpha: f64,
+}
+
+impl ParetoTail {
+    pub fn new(x_min: f64, alpha: f64) -> Self {
+        assert!(x_min > 0.0 && alpha > 0.0);
+        Self { x_min, alpha }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let u = rng.next_f64().max(f64::MIN_POSITIVE);
+        self.x_min * u.powf(-1.0 / self.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_of(n: usize, mut f: impl FnMut() -> f64) -> f64 {
+        (0..n).map(|_| f()).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn exponential_mean_is_inverse_rate() {
+        let mut rng = Rng::new(1);
+        let d = Exponential::new(4.0);
+        let m = mean_of(100_000, || d.sample(&mut rng));
+        assert!((m - 0.25).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn poisson_small_lambda_mean() {
+        let mut rng = Rng::new(2);
+        let d = Poisson::new(3.0);
+        let m = mean_of(50_000, || d.sample(&mut rng) as f64);
+        assert!((m - 3.0).abs() < 0.1, "mean {m}");
+    }
+
+    #[test]
+    fn poisson_large_lambda_mean() {
+        let mut rng = Rng::new(3);
+        let d = Poisson::new(200.0);
+        let m = mean_of(20_000, || d.sample(&mut rng) as f64);
+        assert!((m - 200.0).abs() < 1.0, "mean {m}");
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut rng = Rng::new(4);
+        let d = LogNormal::from_median(100.0, 1.0);
+        let mut xs: Vec<f64> = (0..50_001).map(|_| d.sample(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[xs.len() / 2];
+        assert!((med / 100.0 - 1.0).abs() < 0.05, "median {med}");
+    }
+
+    #[test]
+    fn lognormal_analytic_mean() {
+        let mut rng = Rng::new(5);
+        let d = LogNormal::new(2.0, 0.5);
+        let m = mean_of(200_000, || d.sample(&mut rng));
+        assert!((m / d.mean() - 1.0).abs() < 0.02, "mean {m} vs {}", d.mean());
+    }
+
+    #[test]
+    fn pareto_respects_x_min_and_is_heavy_tailed() {
+        let mut rng = Rng::new(6);
+        let d = ParetoTail::new(1000.0, 1.2);
+        let xs: Vec<f64> = (0..100_000).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| x >= 1000.0));
+        // Heavy tail: some sample exceeds 50x the minimum.
+        assert!(xs.iter().any(|&x| x > 50_000.0));
+    }
+}

@@ -1,0 +1,243 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! Everything stochastic in the repository flows through [`rng::Rng`]
+//! (a SplitMix64 generator) and everything temporal through
+//! [`EventQueue`], so every figure in `EXPERIMENTS.md` regenerates
+//! bit-identically from its seed.  No wall-clock time is ever consulted
+//! on the simulation path.
+
+pub mod dist;
+pub mod rng;
+
+pub use dist::{Exponential, LogNormal, ParetoTail, Poisson};
+pub use rng::Rng;
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::Time;
+
+/// A scheduled simulation event carrying an opaque payload `E`.
+///
+/// Ordering: earliest `at` first; ties broken by insertion sequence so
+/// simultaneous events pop in a deterministic FIFO order.
+#[derive(Debug, Clone)]
+struct Scheduled<E> {
+    at: Time,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Earliest-first event queue with a monotonically advancing clock.
+///
+/// ```
+/// use cascade_infer::sim::EventQueue;
+/// let mut q = EventQueue::new();
+/// q.schedule(2.0, "b");
+/// q.schedule(1.0, "a");
+/// assert_eq!(q.pop(), Some((1.0, "a")));
+/// assert_eq!(q.now(), 1.0);
+/// assert_eq!(q.pop(), Some((2.0, "b")));
+/// ```
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: Time,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+    }
+
+    /// Current simulated time: the timestamp of the last popped event.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `at`.
+    ///
+    /// Events scheduled in the past are clamped to `now` (they fire
+    /// immediately but never move the clock backwards).
+    pub fn schedule(&mut self, at: Time, payload: E) {
+        let at = if at < self.now { self.now } else { at };
+        self.heap.push(Scheduled { at, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` after a relative delay.
+    pub fn schedule_in(&mut self, delay: Time, payload: E) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule(self.now + delay.max(0.0), payload);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        self.heap.pop().map(|s| {
+            debug_assert!(s.at >= self.now, "time went backwards");
+            self.now = s.at;
+            (s.at, s.payload)
+        })
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|s| s.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Simple online mean/variance accumulator (Welford).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation — the imbalance statistic of Fig. 16.
+    pub fn cv(&self) -> f64 {
+        if self.mean.abs() < 1e-12 {
+            0.0
+        } else {
+            self.stddev() / self.mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, 3);
+        q.schedule(1.0, 1);
+        q.schedule(2.0, 2);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn simultaneous_events_are_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.schedule(5.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, ());
+        q.schedule(4.0, ());
+        q.pop();
+        assert_eq!(q.now(), 1.0);
+        // Past events clamp to now.
+        q.schedule(0.5, ());
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 1.0);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 4.0);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, "a");
+        q.pop();
+        q.schedule_in(3.0, "b");
+        assert_eq!(q.peek_time(), Some(5.0));
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert!(w.cv() > 0.0);
+    }
+
+    #[test]
+    fn welford_zero_mean_cv_is_zero() {
+        let mut w = Welford::default();
+        w.push(0.0);
+        w.push(0.0);
+        assert_eq!(w.cv(), 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! proptest-lite: seeded property testing without external crates.
+//!
+//! The offline vendor set only contains the `xla` crate's dependency
+//! closure, so this module provides the small slice of proptest we
+//! need: seeded generators and a case runner that reports the failing
+//! seed so any counterexample reproduces with one constant.
+
+use crate::sim::Rng;
+
+/// Number of cases each property runs by default.
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` on `cases` generated inputs; panic with the offending
+/// seed on the first failure.
+///
+/// ```
+/// use cascade_infer::testutil::{for_all, gen_vec};
+/// for_all("sorted-idempotent", 0xCAFE, 64, |rng| {
+///     let mut v = gen_vec(rng, 0, 50, |r| r.next_range(1000));
+///     v.sort_unstable();
+///     let w = { let mut w = v.clone(); w.sort_unstable(); w };
+///     assert_eq!(v, w);
+/// });
+/// ```
+pub fn for_all<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Generate a vector with length in [min_len, max_len].
+pub fn gen_vec<T>(rng: &mut Rng, min_len: usize, max_len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let len = min_len + rng.next_range((max_len - min_len + 1) as u64) as usize;
+    (0..len).map(|_| f(rng)).collect()
+}
+
+/// A plausible batch of sequence lengths: mixture of short & long.
+pub fn gen_lengths(rng: &mut Rng, max_rows: usize, max_len: u64) -> Vec<u64> {
+    gen_vec(rng, 1, max_rows, |r| {
+        if r.next_f64() < 0.1 {
+            1 + r.next_range(max_len)
+        } else {
+            1 + r.next_range((max_len / 64).max(2))
+        }
+    })
+}
+
+/// Assert `a` and `b` are within relative tolerance.
+pub fn assert_close(a: f64, b: f64, rtol: f64) {
+    let denom = a.abs().max(b.abs()).max(1e-300);
+    assert!(
+        ((a - b).abs() / denom) <= rtol || (a - b).abs() < 1e-12,
+        "not close: {a} vs {b} (rtol {rtol})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_runs_all_cases() {
+        let mut count = 0;
+        for_all("counter", 1, 10, |_| count += 1);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn for_all_reports_failures() {
+        for_all("fails", 2, 10, |rng| {
+            assert!(rng.next_range(10) < 100, "never");
+            assert!(rng.next_range(2) == 0, "coin flip");
+        });
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = gen_vec(&mut rng, 2, 7, |r| r.next_u64());
+            assert!(v.len() >= 2 && v.len() <= 7);
+        }
+    }
+
+    #[test]
+    fn gen_lengths_positive() {
+        let mut rng = Rng::new(4);
+        let lens = gen_lengths(&mut rng, 64, 131_072);
+        assert!(lens.iter().all(|&l| l >= 1));
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "not close")]
+    fn assert_close_rejects_far() {
+        assert_close(1.0, 2.0, 1e-3);
+    }
+}

@@ -1,0 +1,361 @@
+//! Workload generation — ShareGPT-like traffic with a long-context tail.
+//!
+//! The paper builds workloads from the ShareGPT52K dialogue dataset
+//! (requests longer than 128K discarded) with Poisson arrivals (§6.1).
+//! That dataset is not available offline, so this module synthesises a
+//! distribution with the same *scheduling-relevant* shape (Fig. 1):
+//! highly skewed — many short requests, a fat lognormal body, and a
+//! rare-but-present Pareto tail reaching the 128K context limit.
+//! All draws are seeded; traces can be saved/loaded as CSV so every
+//! figure regenerates from the identical request set.
+
+use crate::sim::{Exponential, LogNormal, ParetoTail, Rng};
+use crate::{RequestId, Time, Tokens};
+
+/// One inference request as the scheduler sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival time (seconds since run start).
+    pub arrival: Time,
+    /// Prompt length in tokens.
+    pub input_len: Tokens,
+    /// Number of tokens the request will generate (ground truth known
+    /// to the generator, *not* to the scheduler).
+    pub output_len: Tokens,
+}
+
+impl Request {
+    /// Total sequence length once fully decoded.
+    pub fn final_len(&self) -> Tokens {
+        self.input_len + self.output_len
+    }
+}
+
+/// Parameters of the synthetic ShareGPT-like distribution.
+#[derive(Debug, Clone, Copy)]
+pub struct ShareGptLike {
+    /// Median / sigma of the lognormal input-length body.
+    pub input_median: f64,
+    pub input_sigma: f64,
+    /// Median / sigma of the lognormal output-length body.
+    pub output_median: f64,
+    pub output_sigma: f64,
+    /// Probability a request comes from the long-context tail.
+    pub tail_prob: f64,
+    /// Pareto tail start / shape for the long-context inputs.
+    pub tail_min: f64,
+    pub tail_alpha: f64,
+    /// Hard cap (the paper discards > 128K).
+    pub max_len: Tokens,
+}
+
+impl Default for ShareGptLike {
+    fn default() -> Self {
+        // Medians follow the published ShareGPT statistics used by the
+        // vLLM paper (mean input ~161, mean output ~338 tokens), with
+        // the long-context tail the paper's Fig.1 adds on top.
+        Self {
+            input_median: 96.0,
+            input_sigma: 1.1,
+            output_median: 250.0,
+            output_sigma: 0.9,
+            tail_prob: 0.03,
+            tail_min: 4096.0,
+            tail_alpha: 0.9,
+            max_len: 131_072,
+        }
+    }
+}
+
+impl ShareGptLike {
+    /// A variant with a heavier tail, for stress ablations.
+    pub fn heavy_tail() -> Self {
+        Self { tail_prob: 0.08, tail_alpha: 0.7, ..Self::default() }
+    }
+
+    /// Short-context-only variant (the "uniform lengths" limitation
+    /// scenario of §8).
+    pub fn uniform_short() -> Self {
+        Self { tail_prob: 0.0, input_sigma: 0.3, output_sigma: 0.3, ..Self::default() }
+    }
+
+    fn sample_input(&self, rng: &mut Rng) -> Tokens {
+        let body = LogNormal::from_median(self.input_median, self.input_sigma);
+        let tail = ParetoTail::new(self.tail_min, self.tail_alpha);
+        // The paper *discards* requests longer than the context window
+        // (Fig. 1 caption) — emulate by rejection-sampling the tail so
+        // no probability mass piles up at max_len.
+        let cap = self.max_len.saturating_sub(1024).max(1);
+        for _ in 0..16 {
+            let raw = if rng.next_f64() < self.tail_prob {
+                tail.sample(rng)
+            } else {
+                body.sample(rng)
+            };
+            let t = raw.round() as Tokens;
+            if t >= 1 && t <= cap {
+                return t.max(1);
+            }
+        }
+        cap / 2 // pathological distribution: fall back mid-range
+    }
+
+    fn sample_output(&self, rng: &mut Rng, input: Tokens) -> Tokens {
+        let body = LogNormal::from_median(self.output_median, self.output_sigma);
+        let raw = body.sample(rng).round() as Tokens;
+        raw.clamp(1, self.max_len.saturating_sub(input).max(1))
+    }
+}
+
+/// Generate `n` requests with Poisson arrivals at `rate` req/s.
+pub fn generate(dist: &ShareGptLike, rate: f64, n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let gap = Exponential::new(rate);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += gap.sample(&mut rng);
+            let input_len = dist.sample_input(&mut rng);
+            let output_len = dist.sample_output(&mut rng, input_len);
+            Request { id: i as RequestId, arrival: t, input_len, output_len }
+        })
+        .collect()
+}
+
+/// Generate requests covering a fixed duration instead of a count.
+pub fn generate_for_duration(dist: &ShareGptLike, rate: f64, duration: Time, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let gap = Exponential::new(rate);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    let mut id = 0;
+    loop {
+        t += gap.sample(&mut rng);
+        if t > duration {
+            return out;
+        }
+        let input_len = dist.sample_input(&mut rng);
+        let output_len = dist.sample_output(&mut rng, input_len);
+        out.push(Request { id, arrival: t, input_len, output_len });
+        id += 1;
+    }
+}
+
+/// Save a trace as CSV (`id,arrival,input_len,output_len`).
+pub fn save_csv(path: &str, reqs: &[Request]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "id,arrival,input_len,output_len")?;
+    for r in reqs {
+        writeln!(f, "{},{:.6},{},{}", r.id, r.arrival, r.input_len, r.output_len)?;
+    }
+    Ok(())
+}
+
+/// Load a trace saved by [`save_csv`].
+pub fn load_csv(path: &str) -> std::io::Result<Vec<Request>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 && line.starts_with("id,") {
+            continue;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split(',');
+        let parse_err = || std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad trace line {i}: {line}"));
+        let id = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
+        let arrival = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
+        let input_len = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
+        let output_len = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
+        out.push(Request { id, arrival, input_len, output_len });
+    }
+    Ok(out)
+}
+
+/// Distribution summary used by planning: histogram of request counts
+/// per exponential length bucket — the `n_{l',l}` of §4.2.
+#[derive(Debug, Clone)]
+pub struct LengthHistogram {
+    /// Bucket upper bounds, ascending; bucket k covers
+    /// [bounds[k-1], bounds[k]) with bounds[-1] = 0.
+    pub bounds: Vec<Tokens>,
+    /// Requests whose *final* length lands in each bucket, stored as
+    /// (input_len, final_len) sums plus counts for QoE features.
+    pub count: Vec<u64>,
+    pub sum_input: Vec<f64>,
+    pub sum_input_sq: Vec<f64>,
+    pub sum_final: Vec<f64>,
+}
+
+impl LengthHistogram {
+    /// Exponential bounds 2^k capped at `max_len` (§4.2's log-bucketing
+    /// optimization: O(log L) candidate cut points).
+    pub fn exponential_bounds(max_len: Tokens) -> Vec<Tokens> {
+        let mut bounds = Vec::new();
+        let mut b: Tokens = 2;
+        while b < max_len {
+            bounds.push(b);
+            b *= 2;
+        }
+        bounds.push(max_len);
+        bounds
+    }
+
+    pub fn new(bounds: Vec<Tokens>) -> Self {
+        let n = bounds.len();
+        Self {
+            bounds,
+            count: vec![0; n],
+            sum_input: vec![0.0; n],
+            sum_input_sq: vec![0.0; n],
+            sum_final: vec![0.0; n],
+        }
+    }
+
+    pub fn from_requests(reqs: &[Request], max_len: Tokens) -> Self {
+        let mut h = Self::new(Self::exponential_bounds(max_len));
+        for r in reqs {
+            h.push(r.input_len, r.final_len());
+        }
+        h
+    }
+
+    pub fn bucket_of(&self, len: Tokens) -> usize {
+        match self.bounds.binary_search(&len) {
+            Ok(i) => (i + 1).min(self.bounds.len() - 1),
+            Err(i) => i.min(self.bounds.len() - 1),
+        }
+    }
+
+    pub fn push(&mut self, input_len: Tokens, final_len: Tokens) {
+        let k = self.bucket_of(final_len);
+        self.count[k] += 1;
+        self.sum_input[k] += input_len as f64;
+        self.sum_input_sq[k] += (input_len as f64) * (input_len as f64);
+        self.sum_final[k] += final_len as f64;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.count.iter().sum()
+    }
+
+    /// Prefix sums over buckets [0, k): (count, sum_I, sum_I^2, sum_L).
+    pub fn prefix(&self) -> Vec<(f64, f64, f64, f64)> {
+        let mut acc = (0.0, 0.0, 0.0, 0.0);
+        let mut out = vec![acc];
+        for k in 0..self.bounds.len() {
+            acc.0 += self.count[k] as f64;
+            acc.1 += self.sum_input[k];
+            acc.2 += self.sum_input_sq[k];
+            acc.3 += self.sum_final[k];
+            out.push(acc);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let d = ShareGptLike::default();
+        let a = generate(&d, 10.0, 100, 42);
+        let b = generate(&d, 10.0, 100, 42);
+        assert_eq!(a, b);
+        let c = generate(&d, 10.0, 100, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrivals_are_increasing_poisson() {
+        let reqs = generate(&ShareGptLike::default(), 20.0, 5000, 1);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+        // Mean gap ~ 1/rate.
+        let span = reqs.last().unwrap().arrival;
+        let mean_gap = span / reqs.len() as f64;
+        assert!((mean_gap * 20.0 - 1.0).abs() < 0.1, "gap {mean_gap}");
+    }
+
+    #[test]
+    fn distribution_is_skewed_with_tail() {
+        let reqs = generate(&ShareGptLike::default(), 10.0, 50_000, 7);
+        let mut finals: Vec<u64> = reqs.iter().map(|r| r.final_len()).collect();
+        finals.sort_unstable();
+        let median = finals[finals.len() / 2];
+        let p999 = finals[finals.len() * 999 / 1000];
+        // Fig. 1 shape: median modest, extreme tail orders of magnitude up.
+        assert!(median < 2_000, "median {median}");
+        assert!(p999 > 10_000, "p99.9 {p999}");
+        assert!(finals.iter().all(|&l| l <= 131_072));
+        assert!(finals.iter().all(|&l| l >= 2));
+    }
+
+    #[test]
+    fn uniform_short_has_no_tail() {
+        let reqs = generate(&ShareGptLike::uniform_short(), 10.0, 20_000, 3);
+        assert!(reqs.iter().all(|r| r.input_len < 4096));
+    }
+
+    #[test]
+    fn duration_generation_bounded() {
+        let reqs = generate_for_duration(&ShareGptLike::default(), 50.0, 10.0, 5);
+        assert!(!reqs.is_empty());
+        assert!(reqs.iter().all(|r| r.arrival <= 10.0));
+        // ~ rate * duration requests.
+        assert!((reqs.len() as f64 - 500.0).abs() < 100.0, "{}", reqs.len());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let reqs = generate(&ShareGptLike::default(), 5.0, 64, 11);
+        let path = std::env::temp_dir().join("cascade_trace_test.csv");
+        let path = path.to_str().unwrap();
+        save_csv(path, &reqs).unwrap();
+        let back = load_csv(path).unwrap();
+        assert_eq!(reqs.len(), back.len());
+        for (a, b) in reqs.iter().zip(back.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.input_len, b.input_len);
+            assert_eq!(a.output_len, b.output_len);
+            assert!((a.arrival - b.arrival).abs() < 1e-5);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn histogram_buckets_partition() {
+        let reqs = generate(&ShareGptLike::default(), 10.0, 10_000, 13);
+        let h = LengthHistogram::from_requests(&reqs, 131_072);
+        assert_eq!(h.total(), 10_000);
+        // Prefix sums end at the grand totals.
+        let pref = h.prefix();
+        let last = pref.last().unwrap();
+        assert_eq!(last.0 as u64, 10_000);
+        let sum_final: f64 = reqs.iter().map(|r| r.final_len() as f64).sum();
+        assert!((last.3 - sum_final).abs() < 1e-6 * sum_final);
+    }
+
+    #[test]
+    fn bucket_of_boundaries() {
+        let h = LengthHistogram::new(vec![2, 4, 8, 16]);
+        assert_eq!(h.bucket_of(1), 0);
+        assert_eq!(h.bucket_of(2), 1); // [2,4)
+        assert_eq!(h.bucket_of(3), 1);
+        assert_eq!(h.bucket_of(4), 2);
+        assert_eq!(h.bucket_of(100), 3); // clamped to last
+    }
+
+    #[test]
+    fn exponential_bounds_reach_max() {
+        let b = LengthHistogram::exponential_bounds(131_072);
+        assert_eq!(*b.last().unwrap(), 131_072);
+        assert!(b.len() < 20, "O(log L) buckets, got {}", b.len());
+    }
+}

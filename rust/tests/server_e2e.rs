@@ -1,0 +1,84 @@
+//! Real-path server integration: the threaded CascadeInfer server over
+//! PJRT must complete every request, produce golden-exact tokens, and
+//! migrate sequences across length stages.
+
+use cascade_infer::server::{ServeRequest, Server, ServerConfig};
+
+fn goldens() -> Vec<(Vec<i32>, Vec<i32>)> {
+    let text = std::fs::read_to_string("artifacts/golden.txt")
+        .expect("run `make artifacts` first");
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|line| {
+            let parts: Vec<&str> = line.split('|').collect();
+            let prompt = parts[0].split(',').map(|s| s.parse().unwrap()).collect();
+            let expected = parts[3].split(',').map(|s| s.parse().unwrap()).collect();
+            (prompt, expected)
+        })
+        .collect()
+}
+
+#[test]
+fn server_serves_batched_requests_with_exact_tokens() {
+    let cases = goldens();
+    let mut cfg = ServerConfig::new("artifacts");
+    // Single stage: no migration, pure batched serving.
+    cfg.stage_boundaries = vec![];
+    cfg.max_batch = 8;
+    let mut server = Server::start(cfg).expect("server starts");
+    for (id, (prompt, expected)) in cases.iter().enumerate() {
+        server.submit(ServeRequest {
+            id: id as u64,
+            prompt: prompt.clone(),
+            max_new_tokens: expected.len(),
+        });
+    }
+    let mut responses = server.collect(cases.len());
+    responses.sort_by_key(|r| r.id);
+    for (id, (_, expected)) in cases.iter().enumerate() {
+        let r = &responses[id];
+        assert_eq!(&r.tokens, expected, "request {id} tokens diverged (greedy must be batch-invariant)");
+        assert!(r.ttft() <= r.e2e());
+        assert_eq!(r.served_by, vec![r.served_by[0]], "single stage never migrates");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn server_migrates_across_stages_and_stays_exact() {
+    let cases = goldens();
+    let mut cfg = ServerConfig::new("artifacts");
+    // Tight stage boundary right above the prompt lengths so decoding
+    // pushes sequences into stage 1 mid-generation.
+    cfg.stage_boundaries = vec![26];
+    cfg.max_batch = 8;
+    let mut server = Server::start(cfg).expect("server starts");
+    // Only use short prompts (they start in stage 0 and outgrow it).
+    let short: Vec<(usize, &(Vec<i32>, Vec<i32>))> = cases
+        .iter()
+        .enumerate()
+        .filter(|(_, (p, _))| p.len() < 24)
+        .collect();
+    assert!(!short.is_empty());
+    for (id, (prompt, expected)) in short.iter().map(|(i, c)| (*i, *c)) {
+        server.submit(ServeRequest {
+            id: id as u64,
+            prompt: prompt.clone(),
+            max_new_tokens: expected.len(),
+        });
+    }
+    let mut responses = server.collect(short.len());
+    responses.sort_by_key(|r| r.id);
+    let mut any_migrated = false;
+    for r in &responses {
+        let (_, (_, expected)) = short.iter().find(|(i, _)| *i as u64 == r.id).unwrap();
+        assert_eq!(
+            &r.tokens, expected,
+            "request {} tokens diverged across migration (KV transfer must be exact)",
+            r.id
+        );
+        any_migrated |= r.served_by.len() > 1;
+    }
+    assert!(any_migrated, "expected at least one inter-stage migration");
+    server.shutdown();
+}
