@@ -1,0 +1,376 @@
+//! Event loop — the "driver" layer of the cluster split.
+//!
+//! Owns the event alphabet ([`Event`]), the discrete-event clock
+//! ([`crate::sim::EventQueue`]), dispatch, and the periodic timers
+//! (gossip, refinement, re-planning, the Llumnix-style baseline
+//! rebalancer).  Handlers here never rescan per-instance sequence
+//! state except where the *semantics* require it (outgrown-sequence
+//! scans, refinement unions); every load/occupancy probe is an O(1)
+//! running aggregate maintained by [`super::state::InstanceState`].
+
+use crate::coordinator::balance::{Ask, Bid, PendingPull};
+use crate::coordinator::loadtracker::LoadReport;
+use crate::coordinator::refine::{naive, RangeRefiner, RefineConfig};
+use crate::engine::Phase;
+use crate::metrics::Report;
+use crate::workload::{LengthHistogram, Request};
+use crate::{InstanceId, RequestId, Time, Tokens};
+
+use super::policy::{Layout, RefinePolicy, SchedulerKind};
+use super::{Cluster, RunStats};
+
+/// The cluster's event alphabet.
+#[derive(Debug, Clone)]
+pub(super) enum Event {
+    Arrival(Request),
+    /// Instance finished one engine iteration.
+    StepDone(InstanceId),
+    /// Periodic load gossip.
+    Gossip,
+    /// Periodic stage-range refinement.
+    Refine,
+    /// Periodic full pipeline re-planning (§4.2).
+    Replan,
+    /// Periodic Llumnix-style rebalance check (baseline only).
+    BaselineRebalance,
+    /// KV transfer completed.
+    MigrationDone { request: RequestId, from: InstanceId, to: InstanceId },
+    /// §4.4 asking phase: an Ask reaches a candidate receiver.
+    AskDelivered { receiver: InstanceId, ask: Ask },
+    /// §4.4 bidding phase: a Bid reaches the asking sender.
+    BidDelivered { sender: InstanceId, bid: Bid },
+    /// §4.4 confirm: ownership handover reaches the chosen receiver.
+    ConfirmDelivered { receiver: InstanceId, pull: PendingPull },
+    /// Receiver drains its priority queue (starts actual transfers).
+    PullAttempt { receiver: InstanceId },
+    /// Starvation escalation reaches the sender (§4.4).
+    StarveNotice { sender: InstanceId, pull: PendingPull, receiver: InstanceId },
+}
+
+impl Cluster {
+    /// Run the full workload; returns the report and run stats.
+    pub fn run(mut self, requests: &[Request]) -> (Report, RunStats) {
+        self.n_requests_total = requests.len();
+        for r in requests {
+            self.events.schedule(r.arrival, Event::Arrival(*r));
+        }
+        if self.cfg.gossip_interval > 0.0 && self.cfg.scheduler.uses_gossip() {
+            self.events.schedule(self.cfg.gossip_interval, Event::Gossip);
+        }
+        if self.cfg.refine_interval > 0.0
+            && self.cfg.scheduler.refine_policy() != RefinePolicy::Off
+        {
+            self.events.schedule(self.cfg.refine_interval, Event::Refine);
+        }
+        if self.cfg.scheduler == SchedulerKind::LlumnixLike {
+            self.events.schedule(0.25, Event::BaselineRebalance);
+        }
+        if self.cfg.replan_interval > 0.0
+            && self.cfg.scheduler.layout() == Layout::Planned
+            && self.cfg.scheduler.is_cascade()
+            && self.cfg.forced_pipeline.is_none()
+        {
+            self.events.schedule(self.cfg.replan_interval, Event::Replan);
+        }
+
+        let mut guard: u64 = 0;
+        while let Some((now, ev)) = self.events.pop() {
+            guard += 1;
+            assert!(guard < 500_000_000, "cluster event loop runaway");
+            match ev {
+                Event::Arrival(req) => self.on_arrival(now, req),
+                Event::StepDone(i) => self.on_step_done(now, i),
+                Event::Gossip => self.on_gossip(now),
+                Event::Refine => self.on_refine(now),
+                Event::BaselineRebalance => self.on_baseline_rebalance(now),
+                Event::Replan => self.on_replan(now),
+                Event::MigrationDone { request, from, to } => {
+                    self.on_migration_done(now, request, from, to)
+                }
+                Event::AskDelivered { receiver, ask } => self.on_ask(now, receiver, ask),
+                Event::BidDelivered { sender, bid } => self.on_bid(now, sender, bid),
+                Event::ConfirmDelivered { receiver, pull } => {
+                    self.on_confirm(now, receiver, pull)
+                }
+                Event::PullAttempt { receiver } => self.on_pull(now, receiver),
+                Event::StarveNotice { sender, pull, receiver } => {
+                    self.on_starve(now, sender, pull, receiver)
+                }
+            }
+            // Stop once all requests completed and only periodic timers
+            // remain in the queue.
+            if self.records.len() >= self.n_requests_total
+                && !self.instances.iter().any(|ins| ins.engine.has_work())
+                && self.in_flight.is_empty()
+            {
+                break;
+            }
+        }
+        self.stats.final_boundaries = self.refiners.iter().map(|r| r.boundary).collect();
+        (Report::from_records(std::mem::take(&mut self.records)), self.stats)
+    }
+
+    /// Start the next engine iteration on `i` if it is idle and has
+    /// admittable work.
+    pub(super) fn kick(&mut self, now: Time, i: InstanceId) {
+        if self.instances[i].busy || !self.instances[i].engine.has_work() {
+            return;
+        }
+        let outcome = self.instances[i].engine.step(now);
+        if outcome.duration <= 0.0 {
+            // Queued-but-unadmittable work (e.g. memory full); it will
+            // be re-kicked when something frees.
+            return;
+        }
+        self.instances[i].busy = true;
+        self.stats.preemptions += outcome.preempted;
+        let end = now + outcome.duration;
+        self.events.schedule(end, Event::StepDone(i));
+        // Completions carry their end-of-iteration timestamps already.
+        for rec in outcome.completed {
+            self.observed.push((rec.input_len, rec.input_len + rec.output_len));
+            self.records.push(rec);
+        }
+        self.stats.counters.add(i, outcome.tokens_emitted);
+        self.instances[i].tracker.observe_tokens(end, outcome.tokens_emitted);
+    }
+
+    fn on_step_done(&mut self, now: Time, i: InstanceId) {
+        self.instances[i].busy = false;
+        // Fig. 1 batch snapshots. The old loop materialised the batch
+        // composition on *every* step just in case; the snapshot check
+        // is O(1) now and rows are only built when a mark actually hits.
+        self.maybe_snapshot(i);
+
+        if self.cfg.scheduler.is_cascade() {
+            self.cascade_post_step(now, i);
+        }
+        self.kick(now, i);
+    }
+
+    /// Record a Fig. 1 batch-length snapshot when run progress crosses
+    /// one of the marks.
+    fn maybe_snapshot(&mut self, i: InstanceId) {
+        if self.n_requests_total == 0 || self.snapshot_marks.is_empty() {
+            return;
+        }
+        let progress = self.records.len() as f64 / self.n_requests_total as f64;
+        let Some(pos) =
+            self.snapshot_marks.iter().position(|&m| (progress - m).abs() < 0.01)
+        else {
+            return;
+        };
+        let lens: Vec<Tokens> = self.instances[i]
+            .engine
+            .running()
+            .iter()
+            .map(|s| s.current_len())
+            .collect();
+        if lens.is_empty() {
+            return;
+        }
+        let mark = self.snapshot_marks[pos];
+        self.stats.batch_snapshots.push((mark, lens));
+        // Cap snapshots per mark so memory stays bounded.
+        let at_mark = self.stats.batch_snapshots.iter().filter(|(m, _)| *m == mark).count();
+        if at_mark >= 64 {
+            self.snapshot_marks.remove(pos);
+        }
+    }
+
+    fn on_gossip(&mut self, now: Time) {
+        // Each instance reports to same-stage peers and to the previous
+        // stage (its upstream feeders) — §3.2 steps 1-2.  Assembling a
+        // report is O(1) per instance (running aggregates).
+        let reports: Vec<LoadReport> =
+            self.instances.iter().map(|ins| ins.load_report(now)).collect();
+        for i in 0..self.instances.len() {
+            let s = self.stage_of[i];
+            for &peer in &self.stages[s] {
+                if peer != i {
+                    self.instances[i].tracker.record_peer(reports[peer]);
+                }
+            }
+            if s + 1 < self.stages.len() {
+                for &succ in &self.stages[s + 1] {
+                    self.instances[i].tracker.record_successor(reports[succ]);
+                }
+            }
+        }
+        self.events.schedule(now + self.cfg.gossip_interval, Event::Gossip);
+    }
+
+    fn on_refine(&mut self, now: Time) {
+        self.stats.refinements += 1;
+        let policy = self.cfg.scheduler.refine_policy();
+        for b in 0..self.refiners.len() {
+            // Boundary b separates stage b from stage b+1. The local
+            // side enters the split as a *per-instance average* (S4.3
+            // refines an instance's own boundary against the successor
+            // average), so a 15-instance stage does not numerically
+            // swamp a 1-instance successor.
+            let local_union: Vec<(Tokens, Tokens)> = self.stages[b]
+                .iter()
+                .flat_map(|&i| self.instances[i].engine.running().iter())
+                .map(|s| (s.req.input_len, s.current_len()))
+                .collect();
+            let local =
+                RangeRefiner::divide_set(local_union.clone(), self.stages[b].len().max(1));
+            let successors: Vec<Vec<(Tokens, Tokens)>> = self.stages[b + 1]
+                .iter()
+                .map(|&i| {
+                    self.instances[i]
+                        .engine
+                        .running()
+                        .iter()
+                        .map(|s| (s.req.input_len, s.current_len()))
+                        .collect()
+                })
+                .collect();
+            match policy {
+                RefinePolicy::Adaptive => {
+                    // Instance-count-weighted variant: stage unions on
+                    // both sides, QoE per Eq. (1) with the even set
+                    // division over each stage's member count.
+                    let succ_union: Vec<(Tokens, Tokens)> =
+                        successors.iter().flatten().copied().collect();
+                    let k_local = self.stages[b].len();
+                    let k_succ = self.stages[b + 1].len();
+                    self.refiners[b].refine_weighted(local_union, succ_union, k_local, k_succ);
+                }
+                RefinePolicy::Quantity | RefinePolicy::Memory => {
+                    let mut merged: Vec<(Tokens, Tokens)> = local
+                        .iter()
+                        .copied()
+                        .chain(successors.iter().flatten().copied())
+                        .collect();
+                    if merged.len() >= 5 {
+                        merged.sort_by_key(|&(_, l)| l);
+                        let nb = if policy == RefinePolicy::Quantity {
+                            naive::quantity_boundary(&merged)
+                        } else {
+                            naive::memory_boundary(&merged)
+                        };
+                        if let Some(nb) = nb {
+                            self.refiners[b].boundary = nb.max(1);
+                        }
+                    }
+                }
+                RefinePolicy::Off => {}
+            }
+            // Keep boundaries monotone across stages (`self.ranges`
+            // still holds the pre-refinement ranges here).
+            let lo = self.ranges[b].0;
+            if self.refiners[b].boundary <= lo {
+                self.refiners[b].boundary = lo + 1;
+            }
+        }
+        for b in 1..self.refiners.len() {
+            if self.refiners[b].boundary <= self.refiners[b - 1].boundary {
+                self.refiners[b].boundary = self.refiners[b - 1].boundary + 1;
+            }
+        }
+        self.rebuild_ranges();
+        self.events.schedule(now + self.cfg.refine_interval, Event::Refine);
+    }
+
+    /// Periodic full pipeline re-planning (§4.2): rebuild the length
+    /// histogram from the last window's completed requests, re-run the
+    /// DP, and remap instance membership.  Live sequences stay where
+    /// they are; anything now out of range migrates through the normal
+    /// handover path, so replanning never disrupts ongoing decoding.
+    fn on_replan(&mut self, now: Time) {
+        // Need a meaningful sample (low-traffic freeze, like §4.3).
+        if self.observed.len() >= 64 {
+            let mut hist =
+                LengthHistogram::new(LengthHistogram::exponential_bounds(self.cfg.max_len));
+            for &(i, f) in self.observed.iter().rev().take(4000) {
+                hist.push(i, f);
+            }
+            // Include live sequences so long-runners are represented.
+            for ins in &self.instances {
+                for sq in ins.engine.running() {
+                    hist.push(sq.req.input_len, sq.current_len());
+                }
+            }
+            let pipe = self.planner.plan_dp(&hist, self.cfg.n_instances);
+            if pipe.stages.len() != self.stages.len()
+                || pipe
+                    .stages
+                    .iter()
+                    .zip(self.pipeline.stages.iter())
+                    .any(|(a, b)| a.n_instances != b.n_instances)
+            {
+                // Remap membership contiguously (keeps the §5 placement
+                // property) and rebuild refiners from the new plan.
+                let mut stage_of = Vec::with_capacity(self.cfg.n_instances);
+                let mut stages: Vec<Vec<InstanceId>> = Vec::new();
+                for spec in pipe.stages.iter() {
+                    let mut members = Vec::new();
+                    for _ in 0..spec.n_instances {
+                        members.push(stage_of.len());
+                        stage_of.push(stages.len());
+                    }
+                    stages.push(members);
+                }
+                self.refiners = pipe
+                    .boundaries()
+                    .iter()
+                    .map(|&b| RangeRefiner::new(self.qoe, b, RefineConfig::default()))
+                    .collect();
+                self.stage_of = stage_of;
+                self.stats.stages = stages.clone();
+                self.stages = stages;
+                self.pipeline = pipe;
+                self.rebuild_ranges();
+                self.replans += 1;
+            }
+        }
+        self.events.schedule(now + self.cfg.replan_interval, Event::Replan);
+    }
+
+    /// Llumnix-like periodic rebalancing: move one sequence from the
+    /// most- to the least-memory-loaded instance when the gap is big.
+    /// Length-agnostic — exactly the §2.4 criticism.
+    fn on_baseline_rebalance(&mut self, now: Time) {
+        let (mut hi_i, mut hi_v) = (0, f64::MIN);
+        let (mut lo_i, mut lo_v) = (0, f64::MAX);
+        for i in 0..self.instances.len() {
+            let d = self.instances[i].engine.memory_demand();
+            if d > hi_v {
+                hi_v = d;
+                hi_i = i;
+            }
+            if d < lo_v {
+                lo_v = d;
+                lo_i = i;
+            }
+        }
+        if hi_v - lo_v > 0.2 && hi_i != lo_i {
+            if let Some((rid, len)) = self.instances[hi_i]
+                .engine
+                .running()
+                .iter()
+                .filter(|s| s.phase == Phase::Decoding && !self.migration.is_migrating(s.req.id))
+                .max_by_key(|s| s.req.id)
+                .map(|s| (s.req.id, s.current_len()))
+            {
+                let link = self.topology.link_between(hi_i, lo_i);
+                let decode_rate = self.instances[hi_i].tracker.throughput()
+                    / self.instances[hi_i].engine.n_running().max(1) as f64;
+                let dest_free = self.instances[lo_i].engine.kv().can_allocate(len + 64);
+                if let Some(t) = self
+                    .migration
+                    .try_start(now, rid, hi_i, lo_i, len, link, decode_rate, dest_free)
+                {
+                    self.in_flight.insert(rid);
+                    self.events.schedule(
+                        t.finish_at,
+                        Event::MigrationDone { request: rid, from: hi_i, to: lo_i },
+                    );
+                }
+            }
+        }
+        self.events.schedule(now + 0.25, Event::BaselineRebalance);
+    }
+}

@@ -9,8 +9,35 @@
 //! Baseline policies (round-robin, Llumnix-like, chain, no-pipeline,
 //! naive refinement) share the same event loop so comparisons are
 //! apples-to-apples.
+//!
+//! # Architecture: driver / router / state
+//!
+//! The simulator is layered across four files so the event loop, the
+//! dispatch policy, and per-instance bookkeeping evolve independently:
+//!
+//! * `cluster/driver.rs` — the **driver**: the event alphabet, the
+//!   discrete-event clock and dispatch loop ([`Cluster::run`]), and the
+//!   periodic timers (gossip / refine / replan / baseline rebalance).
+//! * `cluster/router.rs` — the **router**: request routing & admission
+//!   (§3.2 stage selection, least-loaded member, the shared
+//!   round-robin counter the ablations rotate on).
+//! * `cluster/state.rs` — the **state**: `InstanceState`, the
+//!   per-instance bundle (engine, load tracker, bid-ask state machine,
+//!   busy flag, offer cooldown).  Load, memory demand, and batch
+//!   composition are maintained as *running aggregates* — the engine
+//!   keeps `token_load` incrementally, the migration manager keeps
+//!   per-instance inbound/outbound sums, the receiver queue keeps its
+//!   buffered length — so every `StepDone`/gossip/bid probe is O(1)
+//!   amortized instead of an O(batch) rescan of live sequences.
+//! * this file — configuration, cluster construction (offline pipeline
+//!   planning), the §4.4 bid-ask + §5 live-migration protocol
+//!   handlers, and the public API ([`run_experiment`]).
 
 pub mod policy;
+
+mod driver;
+mod router;
+mod state;
 
 pub use policy::{BalancePolicy, Layout, RefinePolicy, SchedulerKind};
 
@@ -18,7 +45,7 @@ use crate::baselines;
 use crate::coordinator::balance::{Ask, Bid, BidAskScheduler, PendingPull, PullAction};
 use crate::coordinator::migrate::MigrationManager;
 use crate::coordinator::plan::{MigrationCost, Pipeline, Planner};
-use crate::coordinator::refine::{naive, RangeRefiner, RefineConfig};
+use crate::coordinator::refine::{RangeRefiner, RefineConfig};
 use crate::coordinator::LoadTracker;
 use crate::engine::{CostModelBackend, Engine, EngineConfig, ExecBackend, Phase, Sequence};
 use crate::gpu::{GpuProfile, Topology};
@@ -29,6 +56,10 @@ use crate::qoe::{self, QoeModel};
 use crate::sim::EventQueue;
 use crate::workload::{LengthHistogram, Request};
 use crate::{InstanceId, RequestId, Time, Tokens};
+
+use driver::Event;
+use router::Router;
+use state::InstanceState;
 
 /// Cluster-level configuration.
 #[derive(Debug, Clone)]
@@ -113,33 +144,6 @@ impl ExecBackend for ScaledBackend {
     }
 }
 
-#[derive(Debug, Clone)]
-enum Event {
-    Arrival(Request),
-    /// Instance finished one engine iteration.
-    StepDone(InstanceId),
-    /// Periodic load gossip.
-    Gossip,
-    /// Periodic stage-range refinement.
-    Refine,
-    /// Periodic full pipeline re-planning (§4.2).
-    Replan,
-    /// Periodic Llumnix-style rebalance check (baseline only).
-    BaselineRebalance,
-    /// KV transfer completed.
-    MigrationDone { request: RequestId, from: InstanceId, to: InstanceId },
-    /// §4.4 asking phase: an Ask reaches a candidate receiver.
-    AskDelivered { receiver: InstanceId, ask: Ask },
-    /// §4.4 bidding phase: a Bid reaches the asking sender.
-    BidDelivered { sender: InstanceId, bid: Bid },
-    /// §4.4 confirm: ownership handover reaches the chosen receiver.
-    ConfirmDelivered { receiver: InstanceId, pull: PendingPull },
-    /// Receiver drains its priority queue (starts actual transfers).
-    PullAttempt { receiver: InstanceId },
-    /// Starvation escalation reaches the sender (§4.4).
-    StarveNotice { sender: InstanceId, pull: PendingPull, receiver: InstanceId },
-}
-
 /// Run statistics beyond the per-request report.
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
@@ -160,13 +164,16 @@ pub struct RunStats {
 /// The cluster simulator.
 pub struct Cluster {
     pub cfg: ClusterConfig,
-    engines: Vec<Engine<ScaledBackend>>,
-    trackers: Vec<LoadTracker>,
-    busy: Vec<bool>,
+    /// Per-instance bookkeeping (engine + tracker + bid-ask state).
+    instances: Vec<InstanceState>,
     /// Pipeline stage structure (single stage for flat baselines).
     pub pipeline: Pipeline,
     stage_of: Vec<usize>,
     stages: Vec<Vec<InstanceId>>,
+    /// Cached `[lo, hi)` range per stage, derived from the refiners'
+    /// boundaries.  Rebuilt only when a boundary moves (refine/replan)
+    /// so per-event range lookups are O(1) allocation-free.
+    ranges: Vec<(Tokens, Tokens)>,
     refiners: Vec<RangeRefiner>,
     topology: Topology,
     migration: MigrationManager,
@@ -176,18 +183,14 @@ pub struct Cluster {
     records: Vec<RequestRecord>,
     pub stats: RunStats,
     qoe: QoeModel,
-    rr_counter: usize,
+    /// Dispatch policy + shared round-robin counter.
+    router: Router,
     n_requests_total: usize,
     snapshot_marks: Vec<f64>,
-    /// Last intra-stage offer time per instance (rebalance hysteresis).
-    last_offer: Vec<Time>,
     /// Planner kept for periodic re-planning.
     planner: Planner,
     /// Failed-handover retry gate: request -> earliest next attempt.
     retry_after: std::collections::HashMap<RequestId, Time>,
-    /// Per-instance bid-ask state machines (sender book + receiver
-    /// priority queue + starvation accounting).
-    schedulers: Vec<BidAskScheduler>,
     /// Open offers: request -> (sender, seq_len at offer, sender load).
     offers: std::collections::HashMap<RequestId, (InstanceId, Tokens, Tokens)>,
     /// Starvation promises per sender: (pull, receiver) to send
@@ -242,9 +245,16 @@ impl Cluster {
 
         let engine_cfg = cfg.engine_config();
         let backend = ScaledBackend { inner: CostModelBackend::new(am), speed: cfg.engine_speed };
-        let engines: Vec<Engine<ScaledBackend>> =
-            (0..e).map(|_| Engine::new(engine_cfg, backend)).collect();
-        let trackers: Vec<LoadTracker> = (0..e).map(|i| LoadTracker::new(i, 10.0)).collect();
+        let instances: Vec<InstanceState> = (0..e)
+            .map(|i| {
+                InstanceState::new(
+                    i,
+                    Engine::new(engine_cfg, backend),
+                    LoadTracker::new(i, 10.0),
+                    BidAskScheduler::new(i, 4),
+                )
+            })
+            .collect();
 
         // One refiner per stage boundary, initialised from the plan.
         let refiners: Vec<RangeRefiner> = pipeline
@@ -256,14 +266,13 @@ impl Cluster {
         let migration = MigrationManager::new(cfg.model.kv_bytes_per_token() as f64);
         let stats = RunStats { stages: stages.clone(), ..Default::default() };
 
-        Self {
+        let mut cluster = Self {
             cfg,
-            engines,
-            trackers,
-            busy: vec![false; e],
+            instances,
             pipeline,
             stage_of,
             stages,
+            ranges: Vec::new(),
             refiners,
             topology,
             migration,
@@ -272,23 +281,25 @@ impl Cluster {
             records: Vec::new(),
             stats,
             qoe: qoe_model,
-            rr_counter: 0,
+            router: Router::new(),
             n_requests_total: 0,
             snapshot_marks: vec![0.2, 0.4, 0.6, 0.8],
-            last_offer: vec![f64::NEG_INFINITY; e],
             planner,
             retry_after: Default::default(),
-            schedulers: (0..e).map(|i| BidAskScheduler::new(i, 4)).collect(),
             offers: Default::default(),
             promises: Default::default(),
             observed: Vec::new(),
             replans: 0,
-        }
+        };
+        cluster.rebuild_ranges();
+        cluster
     }
 
-    /// Current stage ranges (after refinement).
-    pub fn stage_ranges(&self) -> Vec<(Tokens, Tokens)> {
-        let mut out = Vec::new();
+    /// Recompute the cached per-stage ranges from the refiner
+    /// boundaries.  Called on construction and whenever a boundary
+    /// moves (refine / replan) — never on the per-event hot path.
+    fn rebuild_ranges(&mut self) {
+        let mut out = Vec::with_capacity(self.pipeline.stages.len());
         let mut lo = 0;
         for i in 0..self.pipeline.stages.len() {
             let hi = if i < self.refiners.len() {
@@ -299,194 +310,31 @@ impl Cluster {
             out.push((lo, hi));
             lo = hi;
         }
-        out
+        self.ranges = out;
+    }
+
+    /// Current stage ranges (after refinement).
+    pub fn stage_ranges(&self) -> Vec<(Tokens, Tokens)> {
+        self.ranges.clone()
     }
 
     fn stage_for_len(&self, len: Tokens) -> usize {
-        let ranges = self.stage_ranges();
-        for (i, &(_, hi)) in ranges.iter().enumerate() {
-            if len < hi {
-                return i;
-            }
-        }
-        ranges.len() - 1
+        router::stage_for_len(&self.ranges, len)
     }
 
-    /// Run the full workload; returns the report and run stats.
-    pub fn run(mut self, requests: &[Request]) -> (Report, RunStats) {
-        self.n_requests_total = requests.len();
-        for r in requests {
-            self.events.schedule(r.arrival, Event::Arrival(*r));
-        }
-        if self.cfg.gossip_interval > 0.0 && self.cfg.scheduler.uses_gossip() {
-            self.events.schedule(self.cfg.gossip_interval, Event::Gossip);
-        }
-        if self.cfg.refine_interval > 0.0
-            && self.cfg.scheduler.refine_policy() != RefinePolicy::Off
-        {
-            self.events.schedule(self.cfg.refine_interval, Event::Refine);
-        }
-        if self.cfg.scheduler == SchedulerKind::LlumnixLike {
-            self.events.schedule(0.25, Event::BaselineRebalance);
-        }
-        if self.cfg.replan_interval > 0.0
-            && self.cfg.scheduler.layout() == Layout::Planned
-            && self.cfg.scheduler.is_cascade()
-            && self.cfg.forced_pipeline.is_none()
-        {
-            self.events.schedule(self.cfg.replan_interval, Event::Replan);
-        }
-
-        let mut guard: u64 = 0;
-        while let Some((now, ev)) = self.events.pop() {
-            guard += 1;
-            assert!(guard < 500_000_000, "cluster event loop runaway");
-            match ev {
-                Event::Arrival(req) => self.on_arrival(now, req),
-                Event::StepDone(i) => self.on_step_done(now, i),
-                Event::Gossip => self.on_gossip(now),
-                Event::Refine => self.on_refine(now),
-                Event::BaselineRebalance => self.on_baseline_rebalance(now),
-                Event::Replan => self.on_replan(now),
-                Event::MigrationDone { request, from, to } => {
-                    self.on_migration_done(now, request, from, to)
-                }
-                Event::AskDelivered { receiver, ask } => self.on_ask(now, receiver, ask),
-                Event::BidDelivered { sender, bid } => self.on_bid(now, sender, bid),
-                Event::ConfirmDelivered { receiver, pull } => {
-                    self.on_confirm(now, receiver, pull)
-                }
-                Event::PullAttempt { receiver } => self.on_pull(now, receiver),
-                Event::StarveNotice { sender, pull, receiver } => {
-                    self.on_starve(now, sender, pull, receiver)
-                }
-            }
-            // Stop once all requests completed and only periodic timers
-            // remain in the queue.
-            if self.records.len() >= self.n_requests_total
-                && !self.engines.iter().any(|e| e.has_work())
-                && self.in_flight.is_empty()
-            {
-                break;
-            }
-        }
-        self.stats.final_boundaries = self.refiners.iter().map(|r| r.boundary).collect();
-        (Report::from_records(std::mem::take(&mut self.records)), self.stats)
-    }
-
-    // ----- event handlers ---------------------------------------------
-
-    fn on_arrival(&mut self, now: Time, req: Request) {
-        let target = match self.cfg.scheduler {
-            SchedulerKind::RoundRobin | SchedulerKind::SgLangLike => {
-                self.rr_counter += 1;
-                (self.rr_counter - 1) % self.engines.len()
-            }
-            SchedulerKind::LlumnixLike => {
-                // Load-aware, length-agnostic dispatch: least memory
-                // demand (Llumnix's virtual-usage heuristic, simplified).
-                (0..self.engines.len())
-                    .min_by(|&a, &b| {
-                        self.engines[a]
-                            .memory_demand()
-                            .partial_cmp(&self.engines[b].memory_demand())
-                            .unwrap()
-                    })
-                    .unwrap()
-            }
-            _ => {
-                // CascadeInfer: earliest stage covering the prompt
-                // length (§3.2); within the stage, least-loaded member
-                // — except under the Fig. 16 round-robin ablation,
-                // which dispatches regardless of instance load.
-                let s = self.stage_for_len(req.input_len);
-                if self.cfg.scheduler.balance_policy() == BalancePolicy::RoundRobinIntra {
-                    self.rr_counter += 1;
-                    self.stages[s][(self.rr_counter - 1) % self.stages[s].len()]
-                } else {
-                    *self.stages[s]
-                        .iter()
-                        .min_by_key(|&&i| self.engines[i].token_load() + self.inbound_tokens(i))
-                        .expect("stage has members")
-                }
-            }
-        };
-        self.engines[target].submit(req);
-        self.kick(now, target);
-    }
-
-    fn kick(&mut self, now: Time, i: InstanceId) {
-        if self.busy[i] || !self.engines[i].has_work() {
-            return;
-        }
-        let outcome = self.engines[i].step(now);
-        if outcome.duration <= 0.0 {
-            // Queued-but-unadmittable work (e.g. memory full); it will
-            // be re-kicked when something frees.
-            return;
-        }
-        self.busy[i] = true;
-        self.stats.preemptions += outcome.preempted;
-        let end = now + outcome.duration;
-        self.events.schedule(end, Event::StepDone(i));
-        // Completions carry their end-of-iteration timestamps already.
-        for rec in outcome.completed {
-            self.observed.push((rec.input_len, rec.input_len + rec.output_len));
-            self.records.push(rec);
-        }
-        self.stats.counters.add(i, outcome.tokens_emitted);
-        self.trackers[i].observe_tokens(end, outcome.tokens_emitted);
-    }
-
-    fn on_step_done(&mut self, now: Time, i: InstanceId) {
-        self.busy[i] = false;
-        // Record batch composition for trackers + Fig. 1 snapshots.
-        let rows: Vec<(Tokens, Tokens)> = self.engines[i]
-            .running()
-            .iter()
-            .map(|s| (s.req.input_len, s.current_len()))
-            .collect();
-        self.trackers[i].observe_batch(now, &rows);
-        self.maybe_snapshot(&rows);
-
-        if self.cfg.scheduler.is_cascade() {
-            self.cascade_post_step(now, i);
-        }
-        self.kick(now, i);
-    }
-
-    fn maybe_snapshot(&mut self, rows: &[(Tokens, Tokens)]) {
-        if rows.is_empty() || self.n_requests_total == 0 {
-            return;
-        }
-        let progress = self.records.len() as f64 / self.n_requests_total as f64;
-        if let Some(pos) =
-            self.snapshot_marks.iter().position(|&m| (progress - m).abs() < 0.01)
-        {
-            let mark = self.snapshot_marks[pos];
-            self.stats
-                .batch_snapshots
-                .push((mark, rows.iter().map(|&(_, l)| l).collect()));
-            // Cap snapshots per mark so memory stays bounded.
-            let at_mark =
-                self.stats.batch_snapshots.iter().filter(|(m, _)| *m == mark).count();
-            if at_mark >= 64 {
-                self.snapshot_marks.remove(pos);
-            }
-        }
-    }
+    // ----- §4.4 bid-ask + §5 migration protocol handlers ---------------
 
     /// CascadeInfer per-iteration coordination: hand over outgrown
     /// sequences to the next stage, rebalance within the stage.
     fn cascade_post_step(&mut self, now: Time, i: InstanceId) {
         let stage = self.stage_of[i];
-        let ranges = self.stage_ranges();
-        let (_, hi) = ranges[stage];
+        let (_, hi) = self.ranges[stage];
         let last_stage = stage + 1 >= self.stages.len();
 
         // --- Inter-stage handover: sequences that outgrew the range.
         if !last_stage {
-            let outgrown: Vec<(RequestId, Tokens)> = self.engines[i]
+            let outgrown: Vec<(RequestId, Tokens)> = self.instances[i]
+                .engine
                 .running()
                 .iter()
                 .filter(|s| {
@@ -512,15 +360,21 @@ impl Cluster {
         // re-evaluated after the stage settles).
         const OFFER_COOLDOWN: Time = 0.5;
         if self.cfg.scheduler.balance_policy() == BalancePolicy::Full
-            && now - self.last_offer[i] >= OFFER_COOLDOWN
+            && now - self.instances[i].last_offer >= OFFER_COOLDOWN
         {
-            let my_load = self.engines[i].token_load();
-            if self.trackers[i].is_overloaded(now, my_load, self.cfg.overload_threshold, 1.0) {
-                self.last_offer[i] = now;
+            let my_load = self.instances[i].engine.token_load();
+            if self.instances[i].tracker.is_overloaded(
+                now,
+                my_load,
+                self.cfg.overload_threshold,
+                1.0,
+            ) {
+                self.instances[i].last_offer = now;
                 // Offer the most demanding decoding sequence to peers.
                 let peers: Vec<InstanceId> =
                     self.stages[stage].iter().copied().filter(|&p| p != i).collect();
-                if let Some((rid, len)) = self.engines[i]
+                if let Some((rid, len)) = self.instances[i]
+                    .engine
                     .running()
                     .iter()
                     .filter(|s| {
@@ -555,26 +409,27 @@ impl Cluster {
         if self.retry_after.get(&request).map(|&t| now < t).unwrap_or(false) {
             return;
         }
-        if self.offers.contains_key(&request) || self.schedulers[from].sender.is_open(request) {
+        if self.offers.contains_key(&request)
+            || self.instances[from].scheduler.sender.is_open(request)
+        {
             return; // negotiation already in flight
         }
         if self.cfg.scheduler.balance_policy() == BalancePolicy::RoundRobinIntra {
             // Ablation: skip the negotiation, rotate receivers.
-            self.rr_counter += 1;
-            let to = candidates[(self.rr_counter - 1) % candidates.len()];
+            let to = candidates[self.router.next_rr() % candidates.len()];
             if to != from {
                 self.start_transfer(now, request, from, to, seq_len);
             }
             return;
         }
         // --- Asking phase: notify every candidate receiver (§4.4).
-        let sender_load = self.engines[from].token_load();
+        let sender_load = self.instances[from].engine.token_load();
         let targets: Vec<InstanceId> =
             candidates.iter().copied().filter(|&c| c != from).collect();
         if targets.is_empty() {
             return;
         }
-        self.schedulers[from].sender.open(request, targets.len());
+        self.instances[from].scheduler.sender.open(request, targets.len());
         self.offers.insert(request, (from, seq_len, sender_load));
         let ask = Ask { sender: from, request, seq_len, sender_load };
         for c in targets {
@@ -587,8 +442,8 @@ impl Cluster {
     /// Bidding phase: the receiver replies with its load and earliest
     /// transmission start (buffered length / measured throughput).
     fn on_ask(&mut self, now: Time, receiver: InstanceId, ask: Ask) {
-        let buffered =
-            self.schedulers[receiver].receiver.buffered_len() + self.inbound_tokens(receiver);
+        let buffered = self.instances[receiver].scheduler.receiver.buffered_len()
+            + self.inbound_tokens(receiver);
         // Receivers reply between engine iterations; model that
         // scheduling delay with a deterministic per-(request, receiver)
         // hash so first-reply selection doesn't degenerate into
@@ -607,8 +462,9 @@ impl Cluster {
         let bid = Bid {
             receiver,
             request: ask.request,
-            load: self.engines[receiver].token_load() + buffered,
-            earliest_start: now + buffered as f64 / self.trackers[receiver].throughput().max(1.0),
+            load: self.instances[receiver].engine.token_load() + buffered,
+            earliest_start: now
+                + buffered as f64 / self.instances[receiver].tracker.throughput().max(1.0),
             reply_at,
         };
         self.events.schedule(reply_at, Event::BidDelivered { sender: ask.sender, bid });
@@ -618,7 +474,7 @@ impl Cluster {
     /// 3 earliest starts, first reply wins) and confirm the handover.
     fn on_bid(&mut self, now: Time, sender: InstanceId, bid: Bid) {
         let request = bid.request;
-        let Some(chosen) = self.schedulers[sender].sender.record(bid) else {
+        let Some(chosen) = self.instances[sender].scheduler.sender.record(bid) else {
             return; // still collecting
         };
         let Some(&(from, seq_len, sender_load)) = self.offers.get(&request) else {
@@ -640,7 +496,7 @@ impl Cluster {
     /// Confirm: the receiver queues the pull by sender-load priority
     /// and drives its transfer queue.
     fn on_confirm(&mut self, now: Time, receiver: InstanceId, pull: PendingPull) {
-        self.schedulers[receiver].receiver.push(pull);
+        self.instances[receiver].scheduler.receiver.push(pull);
         self.events.schedule(now, Event::PullAttempt { receiver });
     }
 
@@ -648,19 +504,20 @@ impl Cluster {
     /// whose sender is not already transmitting; escalate starvation.
     fn on_pull(&mut self, now: Time, receiver: InstanceId) {
         if self.migration.at_capacity(receiver) {
-            if !self.schedulers[receiver].receiver.is_empty() {
+            if !self.instances[receiver].scheduler.receiver.is_empty() {
                 self.events.schedule(now + 0.05, Event::PullAttempt { receiver });
             }
             return;
         }
         let migration = &self.migration;
-        let action = self.schedulers[receiver]
+        let action = self.instances[receiver]
+            .scheduler
             .receiver
             .next_action(|sndr| migration.sender_busy(sndr));
         match action {
             PullAction::Pull(p) => {
                 self.try_pull(now, receiver, p);
-                if !self.schedulers[receiver].receiver.is_empty() {
+                if !self.instances[receiver].scheduler.receiver.is_empty() {
                     self.events.schedule(now + 0.01, Event::PullAttempt { receiver });
                 }
             }
@@ -681,7 +538,8 @@ impl Cluster {
     fn try_pull(&mut self, now: Time, receiver: InstanceId, p: PendingPull) {
         let request = p.request;
         // The sequence may have finished or moved since the offer.
-        let live_len = self.engines[p.sender]
+        let live_len = self.instances[p.sender]
+            .engine
             .running()
             .iter()
             .find(|s| s.req.id == request)
@@ -698,7 +556,13 @@ impl Cluster {
 
     /// Sender promised to transmit `pull` right after its current
     /// transfer; remember the promise.
-    fn on_starve(&mut self, _now: Time, sender: InstanceId, pull: PendingPull, receiver: InstanceId) {
+    fn on_starve(
+        &mut self,
+        _now: Time,
+        sender: InstanceId,
+        pull: PendingPull,
+        receiver: InstanceId,
+    ) {
         self.promises.entry(sender).or_default().push((pull, receiver));
     }
 
@@ -713,9 +577,9 @@ impl Cluster {
         seq_len: Tokens,
     ) {
         let link = self.topology.link_between(from, to);
-        let decode_rate =
-            self.trackers[from].throughput() / self.engines[from].n_running().max(1) as f64;
-        let dest_free = self.engines[to].kv().can_allocate(seq_len + 64);
+        let decode_rate = self.instances[from].tracker.throughput()
+            / self.instances[from].engine.n_running().max(1) as f64;
+        let dest_free = self.instances[to].engine.kv().can_allocate(seq_len + 64);
         if let Some(t) = self
             .migration
             .try_start(now, request, from, to, seq_len, link, decode_rate, dest_free)
@@ -735,7 +599,8 @@ impl Cluster {
     /// Tokens already inbound to instance `i` from active transfers —
     /// the receiver's "buffered length" in the bid. Counting in-flight
     /// arrivals prevents the herd effect where every sender picks the
-    /// same momentarily-least-loaded receiver.
+    /// same momentarily-least-loaded receiver.  O(1) (running sum kept
+    /// by the migration manager).
     fn inbound_tokens(&self, i: InstanceId) -> Tokens {
         self.migration.inbound_tokens(i)
     }
@@ -751,15 +616,15 @@ impl Cluster {
         let Some(t) = self.migration.finish(request) else { return };
         // The sequence kept decoding on the source during the transfer
         // (live migration). Move it now if it still exists.
-        if let Some(seq) = self.engines[from].extract(request) {
-            if self.engines[to].inject(seq) {
+        if let Some(seq) = self.instances[from].engine.extract(request) {
+            if self.instances[to].engine.inject(seq) {
                 self.stats.migrations += 1;
                 self.stats.migration_tokens += t.tokens_moved;
                 self.kick(now, to);
             } else {
                 // Destination filled up mid-flight: keep on source
                 // (§5: requests exceeding the cap keep running there).
-                let back = self.engines[from].inject(seq);
+                let back = self.instances[from].engine.inject(seq);
                 debug_assert!(back, "source must re-accept its own sequence");
                 self.stats.migrations_skipped += 1;
             }
@@ -777,207 +642,6 @@ impl Cluster {
         }
     }
 
-    /// Periodic full pipeline re-planning (§4.2): rebuild the length
-    /// histogram from the last window's completed requests, re-run the
-    /// DP, and remap instance membership.  Live sequences stay where
-    /// they are; anything now out of range migrates through the normal
-    /// handover path, so replanning never disrupts ongoing decoding.
-    fn on_replan(&mut self, now: Time) {
-        // Need a meaningful sample (low-traffic freeze, like §4.3).
-        if self.observed.len() >= 64 {
-            let mut hist = LengthHistogram::new(LengthHistogram::exponential_bounds(self.cfg.max_len));
-            for &(i, f) in self.observed.iter().rev().take(4000) {
-                hist.push(i, f);
-            }
-            // Include live sequences so long-runners are represented.
-            for e in &self.engines {
-                for sq in e.running() {
-                    hist.push(sq.req.input_len, sq.current_len());
-                }
-            }
-            let pipe = self.planner.plan_dp(&hist, self.cfg.n_instances);
-            if pipe.stages.len() != self.stages.len()
-                || pipe
-                    .stages
-                    .iter()
-                    .zip(self.pipeline.stages.iter())
-                    .any(|(a, b)| a.n_instances != b.n_instances)
-            {
-                // Remap membership contiguously (keeps the §5 placement
-                // property) and rebuild refiners from the new plan.
-                let mut stage_of = Vec::with_capacity(self.cfg.n_instances);
-                let mut stages: Vec<Vec<InstanceId>> = Vec::new();
-                for spec in pipe.stages.iter() {
-                    let mut members = Vec::new();
-                    for _ in 0..spec.n_instances {
-                        members.push(stage_of.len());
-                        stage_of.push(stages.len());
-                    }
-                    stages.push(members);
-                }
-                self.refiners = pipe
-                    .boundaries()
-                    .iter()
-                    .map(|&b| RangeRefiner::new(self.qoe, b, RefineConfig::default()))
-                    .collect();
-                self.stage_of = stage_of;
-                self.stats.stages = stages.clone();
-                self.stages = stages;
-                self.pipeline = pipe;
-                self.replans += 1;
-            }
-        }
-        self.events.schedule(now + self.cfg.replan_interval, Event::Replan);
-    }
-
-    fn on_gossip(&mut self, now: Time) {
-        // Each instance reports to same-stage peers and to the previous
-        // stage (its upstream feeders) — §3.2 steps 1-2.
-        let reports: Vec<crate::coordinator::loadtracker::LoadReport> = (0..self.engines.len())
-            .map(|i| crate::coordinator::loadtracker::LoadReport {
-                instance: i,
-                at: now,
-                token_load: self.engines[i].token_load(),
-                n_seqs: self.engines[i].n_running(),
-                memory_demand: self.engines[i].memory_demand(),
-                throughput: self.trackers[i].throughput(),
-            })
-            .collect();
-        for i in 0..self.engines.len() {
-            let s = self.stage_of[i];
-            for &peer in &self.stages[s] {
-                if peer != i {
-                    self.trackers[i].record_peer(reports[peer]);
-                }
-            }
-            if s + 1 < self.stages.len() {
-                for &succ in &self.stages[s + 1] {
-                    self.trackers[i].record_successor(reports[succ]);
-                }
-            }
-        }
-        self.events.schedule(now + self.cfg.gossip_interval, Event::Gossip);
-    }
-
-    fn on_refine(&mut self, now: Time) {
-        self.stats.refinements += 1;
-        let policy = self.cfg.scheduler.refine_policy();
-        let ranges = self.stage_ranges();
-        for b in 0..self.refiners.len() {
-            // Boundary b separates stage b from stage b+1. The local
-            // side enters the split as a *per-instance average* (S4.3
-            // refines an instance's own boundary against the successor
-            // average), so a 15-instance stage does not numerically
-            // swamp a 1-instance successor.
-            let local_union: Vec<(Tokens, Tokens)> = self.stages[b]
-                .iter()
-                .flat_map(|&i| self.engines[i].running().iter())
-                .map(|s| (s.req.input_len, s.current_len()))
-                .collect();
-            let local =
-                RangeRefiner::divide_set(local_union.clone(), self.stages[b].len().max(1));
-            let successors: Vec<Vec<(Tokens, Tokens)>> = self.stages[b + 1]
-                .iter()
-                .map(|&i| {
-                    self.engines[i]
-                        .running()
-                        .iter()
-                        .map(|s| (s.req.input_len, s.current_len()))
-                        .collect()
-                })
-                .collect();
-            match policy {
-                RefinePolicy::Adaptive => {
-                    // Instance-count-weighted variant: stage unions on
-                    // both sides, QoE per Eq. (1) with the even set
-                    // division over each stage's member count.
-                    let succ_union: Vec<(Tokens, Tokens)> =
-                        successors.iter().flatten().copied().collect();
-                    self.refiners[b].refine_weighted(
-                        local_union,
-                        succ_union,
-                        self.stages[b].len(),
-                        self.stages[b + 1].len(),
-                    );
-                }
-                RefinePolicy::Quantity | RefinePolicy::Memory => {
-                    let mut merged: Vec<(Tokens, Tokens)> = local
-                        .iter()
-                        .copied()
-                        .chain(successors.iter().flatten().copied())
-                        .collect();
-                    if merged.len() >= 5 {
-                        merged.sort_by_key(|&(_, l)| l);
-                        let nb = if policy == RefinePolicy::Quantity {
-                            naive::quantity_boundary(&merged)
-                        } else {
-                            naive::memory_boundary(&merged)
-                        };
-                        if let Some(nb) = nb {
-                            self.refiners[b].boundary = nb.max(1);
-                        }
-                    }
-                }
-                RefinePolicy::Off => {}
-            }
-            // Keep boundaries monotone across stages.
-            let lo = ranges[b].0;
-            if self.refiners[b].boundary <= lo {
-                self.refiners[b].boundary = lo + 1;
-            }
-        }
-        for b in 1..self.refiners.len() {
-            if self.refiners[b].boundary <= self.refiners[b - 1].boundary {
-                self.refiners[b].boundary = self.refiners[b - 1].boundary + 1;
-            }
-        }
-        self.events.schedule(now + self.cfg.refine_interval, Event::Refine);
-    }
-
-    /// Llumnix-like periodic rebalancing: move one sequence from the
-    /// most- to the least-memory-loaded instance when the gap is big.
-    /// Length-agnostic — exactly the §2.4 criticism.
-    fn on_baseline_rebalance(&mut self, now: Time) {
-        let (mut hi_i, mut hi_v) = (0, f64::MIN);
-        let (mut lo_i, mut lo_v) = (0, f64::MAX);
-        for i in 0..self.engines.len() {
-            let d = self.engines[i].memory_demand();
-            if d > hi_v {
-                hi_v = d;
-                hi_i = i;
-            }
-            if d < lo_v {
-                lo_v = d;
-                lo_i = i;
-            }
-        }
-        if hi_v - lo_v > 0.2 && hi_i != lo_i {
-            if let Some((rid, len)) = self.engines[hi_i]
-                .running()
-                .iter()
-                .filter(|s| s.phase == Phase::Decoding && !self.migration.is_migrating(s.req.id))
-                .max_by_key(|s| s.req.id)
-                .map(|s| (s.req.id, s.current_len()))
-            {
-                let link = self.topology.link_between(hi_i, lo_i);
-                let decode_rate = self.trackers[hi_i].throughput()
-                    / self.engines[hi_i].n_running().max(1) as f64;
-                let dest_free = self.engines[lo_i].kv().can_allocate(len + 64);
-                if let Some(t) = self
-                    .migration
-                    .try_start(now, rid, hi_i, lo_i, len, link, decode_rate, dest_free)
-                {
-                    self.in_flight.insert(rid);
-                    self.events.schedule(
-                        t.finish_at,
-                        Event::MigrationDone { request: rid, from: hi_i, to: lo_i },
-                    );
-                }
-            }
-        }
-        self.events.schedule(now + 0.25, Event::BaselineRebalance);
-    }
-
     /// Expose the fitted QoE model (for validation figures).
     pub fn qoe_model(&self) -> QoeModel {
         self.qoe
@@ -990,7 +654,9 @@ impl Cluster {
             .map(|members| {
                 members
                     .iter()
-                    .flat_map(|&i| self.engines[i].running().iter().map(Sequence::current_len))
+                    .flat_map(|&i| {
+                        self.instances[i].engine.running().iter().map(Sequence::current_len)
+                    })
                     .collect()
             })
             .collect()
@@ -1125,6 +791,24 @@ mod tests {
         let (_, stats) = run_experiment(cfg, &reqs);
         for w in stats.final_boundaries.windows(2) {
             assert!(w[0] < w[1], "boundaries must stay ordered: {:?}", stats.final_boundaries);
+        }
+    }
+
+    #[test]
+    fn cached_ranges_match_refiner_boundaries() {
+        // The cached `ranges` table is the hot-path view of the refiner
+        // boundaries; they must agree at construction.
+        let reqs = workload(300, 10.0, 21);
+        let cluster = Cluster::new(small_cfg(SchedulerKind::Cascade), &reqs);
+        let ranges = cluster.stage_ranges();
+        assert_eq!(ranges.len(), cluster.pipeline.stages.len());
+        assert_eq!(ranges[0].0, 0);
+        assert_eq!(ranges.last().unwrap().1, cluster.cfg.max_len);
+        for (b, r) in cluster.refiners.iter().zip(ranges.iter()) {
+            assert_eq!(b.boundary, r.1);
+        }
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "ranges must tile contiguously");
         }
     }
 }

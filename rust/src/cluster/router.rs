@@ -1,0 +1,115 @@
+//! Request routing & admission — the "router" layer of the cluster
+//! split.
+//!
+//! Decides which instance an arriving request lands on under each
+//! scheduler policy (§3.2 for CascadeInfer: earliest stage covering the
+//! prompt length, least-loaded member within it), and owns the shared
+//! round-robin counter that both RR dispatch and the Fig. 16
+//! round-robin-intra ablation rotate on.  Every load probe used here
+//! ([`crate::engine::Engine::token_load`],
+//! [`crate::coordinator::MigrationManager::inbound_tokens`]) is an O(1)
+//! running aggregate, so routing costs O(stage members) per arrival
+//! rather than O(stage members x batch).
+
+use crate::cluster::policy::{BalancePolicy, SchedulerKind};
+use crate::coordinator::MigrationManager;
+use crate::workload::Request;
+use crate::{InstanceId, Time, Tokens};
+
+use super::state::InstanceState;
+use super::Cluster;
+
+/// Index of the stage whose `[lo, hi)` range covers `len` (clamps to
+/// the last stage — §3.2 routes to the earliest covering stage).
+pub fn stage_for_len(ranges: &[(Tokens, Tokens)], len: Tokens) -> usize {
+    for (i, &(_, hi)) in ranges.iter().enumerate() {
+        if len < hi {
+            return i;
+        }
+    }
+    ranges.len() - 1
+}
+
+/// Stateful router: dispatch policy + the shared round-robin counter.
+#[derive(Debug, Clone, Default)]
+pub struct Router {
+    rr_counter: usize,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take the next round-robin ticket (post-increment).
+    pub fn next_rr(&mut self) -> usize {
+        let v = self.rr_counter;
+        self.rr_counter += 1;
+        v
+    }
+
+    /// Pick the target instance for an arrival.
+    pub fn route(
+        &mut self,
+        kind: SchedulerKind,
+        req: &Request,
+        stages: &[Vec<InstanceId>],
+        ranges: &[(Tokens, Tokens)],
+        instances: &[InstanceState],
+        migration: &MigrationManager,
+    ) -> InstanceId {
+        match kind {
+            SchedulerKind::RoundRobin | SchedulerKind::SgLangLike => {
+                self.next_rr() % instances.len()
+            }
+            SchedulerKind::LlumnixLike => {
+                // Load-aware, length-agnostic dispatch: least memory
+                // demand (Llumnix's virtual-usage heuristic, simplified).
+                (0..instances.len())
+                    .min_by(|&a, &b| {
+                        instances[a]
+                            .engine
+                            .memory_demand()
+                            .total_cmp(&instances[b].engine.memory_demand())
+                    })
+                    .expect("cluster has instances")
+            }
+            _ => {
+                // CascadeInfer: earliest stage covering the prompt
+                // length (§3.2); within the stage, least-loaded member
+                // — except under the Fig. 16 round-robin ablation,
+                // which dispatches regardless of instance load.
+                let s = stage_for_len(ranges, req.input_len);
+                if kind.balance_policy() == BalancePolicy::RoundRobinIntra {
+                    stages[s][self.next_rr() % stages[s].len()]
+                } else {
+                    // Counting in-flight migration arrivals prevents the
+                    // herd effect on a momentarily-least-loaded member.
+                    *stages[s]
+                        .iter()
+                        .min_by_key(|&&i| {
+                            instances[i].engine.token_load() + migration.inbound_tokens(i)
+                        })
+                        .expect("stage has members")
+                }
+            }
+        }
+    }
+}
+
+impl Cluster {
+    /// Admission: route the arrival per the scheduler policy, submit it
+    /// to the chosen engine, and kick that engine if idle.
+    pub(super) fn on_arrival(&mut self, now: Time, req: Request) {
+        let target = self.router.route(
+            self.cfg.scheduler,
+            &req,
+            &self.stages,
+            &self.ranges,
+            &self.instances,
+            &self.migration,
+        );
+        self.instances[target].engine.submit(req);
+        self.kick(now, target);
+    }
+}

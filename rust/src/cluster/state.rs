@@ -1,0 +1,56 @@
+//! Per-instance bookkeeping — the "state" layer of the cluster split.
+//!
+//! [`InstanceState`] bundles everything the simulator tracks per
+//! engine instance: the engine itself, its token-level load tracker,
+//! the §4.4 bid-ask state machine, the busy flag of the event loop,
+//! and the intra-stage offer cooldown.  All load-shaped queries the
+//! coordination protocol makes against an instance (token load, memory
+//! demand, gossip report) resolve to running aggregates maintained by
+//! the engine/tracker, so touching an instance on the hot path is O(1)
+//! instead of an O(batch) rescan of its sequences.
+
+use crate::coordinator::balance::BidAskScheduler;
+use crate::coordinator::loadtracker::LoadReport;
+use crate::coordinator::LoadTracker;
+use crate::engine::Engine;
+use crate::{InstanceId, Time};
+
+use super::ScaledBackend;
+
+/// Everything the cluster tracks for one engine instance.
+#[derive(Debug, Clone)]
+pub struct InstanceState {
+    pub id: InstanceId,
+    pub engine: Engine<ScaledBackend>,
+    pub tracker: LoadTracker,
+    /// §4.4 sender book + receiver priority queue.
+    pub scheduler: BidAskScheduler,
+    /// True while a StepDone event for this instance is in flight.
+    pub busy: bool,
+    /// Last intra-stage offer time (rebalance hysteresis).
+    pub last_offer: Time,
+}
+
+impl InstanceState {
+    pub fn new(
+        id: InstanceId,
+        engine: Engine<ScaledBackend>,
+        tracker: LoadTracker,
+        scheduler: BidAskScheduler,
+    ) -> Self {
+        Self { id, engine, tracker, scheduler, busy: false, last_offer: f64::NEG_INFINITY }
+    }
+
+    /// The gossip report this instance broadcasts (§3.2). All inputs
+    /// are running aggregates — assembling a report is O(1).
+    pub fn load_report(&self, now: Time) -> LoadReport {
+        LoadReport {
+            instance: self.id,
+            at: now,
+            token_load: self.engine.token_load(),
+            n_seqs: self.engine.n_running(),
+            memory_demand: self.engine.memory_demand(),
+            throughput: self.tracker.throughput(),
+        }
+    }
+}

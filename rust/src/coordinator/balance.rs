@@ -63,12 +63,14 @@ pub fn select_receiver(bids: &[Bid]) -> Option<InstanceId> {
     });
     let keep = by_load.len().div_ceil(2);
     let low_half = &by_load[..keep];
-    // 2. Keep the three earliest transmission start times.
+    // 2. Keep the three earliest transmission start times.  total_cmp:
+    // a receiver whose throughput estimate is still NaN/garbage at
+    // startup must not panic selection — NaN sorts last and is simply
+    // never picked ahead of a finite bid.
     let mut by_start: Vec<&&Bid> = low_half.iter().collect();
     by_start.sort_by(|a, b| {
         a.earliest_start
-            .partial_cmp(&b.earliest_start)
-            .unwrap()
+            .total_cmp(&b.earliest_start)
             .then(a.receiver.cmp(&b.receiver))
     });
     let top3 = &by_start[..by_start.len().min(3)];
@@ -76,8 +78,7 @@ pub fn select_receiver(bids: &[Bid]) -> Option<InstanceId> {
     top3.iter()
         .min_by(|a, b| {
             a.reply_at
-                .partial_cmp(&b.reply_at)
-                .unwrap()
+                .total_cmp(&b.reply_at)
                 .then(a.receiver.cmp(&b.receiver))
         })
         .map(|b| b.receiver)
@@ -115,16 +116,20 @@ impl PartialOrd for PendingPull {
 #[derive(Debug, Clone)]
 pub struct ReceiverQueue {
     heap: BinaryHeap<PendingPull>,
+    /// Running sum of queued `seq_len`s, so [`Self::buffered_len`] is
+    /// O(1) on the bid hot path instead of an O(queue) rescan.
+    buffered: Tokens,
     /// Attempts threshold before the starvation escalation (§4.4).
     pub starvation_threshold: u32,
 }
 
 impl ReceiverQueue {
     pub fn new(starvation_threshold: u32) -> Self {
-        Self { heap: BinaryHeap::new(), starvation_threshold }
+        Self { heap: BinaryHeap::new(), buffered: 0, starvation_threshold }
     }
 
     pub fn push(&mut self, pull: PendingPull) {
+        self.buffered += pull.seq_len;
         self.heap.push(pull);
     }
 
@@ -137,8 +142,13 @@ impl ReceiverQueue {
     }
 
     /// Total buffered length (the "earliest start" numerator).
+    /// Maintained incrementally; O(1).
     pub fn buffered_len(&self) -> Tokens {
-        self.heap.iter().map(|p| p.seq_len).sum()
+        debug_assert_eq!(
+            self.buffered,
+            self.heap.iter().map(|p| p.seq_len).sum::<Tokens>()
+        );
+        self.buffered
     }
 
     /// Try to start the next migration.  `sender_busy(sender)` reports
@@ -154,16 +164,21 @@ impl ReceiverQueue {
         let mut result = PullAction::Idle;
         while let Some(mut head) = self.heap.pop() {
             if !sender_busy(head.sender) {
+                // Leaves the queue: hand to the caller for transfer.
+                self.buffered -= head.seq_len;
                 result = PullAction::Pull(head);
                 break;
             }
             head.failed_attempts += 1;
             if head.failed_attempts >= self.starvation_threshold {
+                self.buffered -= head.seq_len;
                 result = PullAction::Starved(head);
                 break;
             }
             skipped.push(head);
         }
+        // Skipped pulls return to the queue; their buffered share never
+        // left the running sum.
         for s in skipped {
             self.heap.push(s);
         }
@@ -173,7 +188,7 @@ impl ReceiverQueue {
     /// Re-insert a starved request while it waits for the sender's
     /// immediate-send promise.
     pub fn requeue(&mut self, pull: PendingPull) {
-        self.heap.push(pull);
+        self.push(pull);
     }
 }
 
@@ -392,5 +407,97 @@ mod tests {
     fn earliest_start_uses_throughput() {
         let s = BidAskSnapshot { instance: 0, token_load: 0, buffered_len: 500, throughput: 100.0 };
         assert!((s.earliest_start(2.0) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_throughput_earliest_start_is_finite() {
+        // A receiver whose throughput EMA is still 0 at startup must
+        // not produce an infinite/NaN earliest start: the divisor is
+        // clamped to 1 token/s.
+        let s = BidAskSnapshot { instance: 0, token_load: 0, buffered_len: 500, throughput: 0.0 };
+        let t = s.earliest_start(1.0);
+        assert!(t.is_finite());
+        assert!((t - 501.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_bids_do_not_panic_and_never_beat_finite_bids() {
+        // Pathological bids (NaN earliest_start / reply_at) must not
+        // panic selection, and a finite bid of equal load must win.
+        let bids = vec![
+            Bid { receiver: 1, request: 1, load: 10, earliest_start: f64::NAN, reply_at: f64::NAN },
+            bid(2, 10, 1.0, 1.0),
+            bid(3, 900, 0.0, 0.0),
+            bid(4, 900, 0.0, 0.0),
+        ];
+        assert_eq!(select_receiver(&bids), Some(2));
+        // All-NaN still selects deterministically instead of panicking.
+        let all_nan = vec![
+            Bid { receiver: 5, request: 1, load: 1, earliest_start: f64::NAN, reply_at: f64::NAN },
+            Bid { receiver: 6, request: 1, load: 1, earliest_start: f64::NAN, reply_at: f64::NAN },
+        ];
+        assert!(select_receiver(&all_nan).is_some());
+    }
+
+    #[test]
+    fn chosen_receiver_always_in_low_load_half() {
+        // §4.4 invariant under random bids: whoever wins must belong to
+        // the ceil(n/2) lowest-load subset.
+        use crate::sim::Rng;
+        use crate::testutil::for_all;
+        for_all("bidask-low-half", 0xABBA, 128, |rng: &mut Rng| {
+            let n = 1 + rng.next_range(8) as usize;
+            let bids: Vec<Bid> = (0..n)
+                .map(|i| Bid {
+                    receiver: i,
+                    request: 9,
+                    load: rng.next_range(1000),
+                    earliest_start: rng.next_f64(),
+                    reply_at: rng.next_f64(),
+                })
+                .collect();
+            let chosen = select_receiver(&bids).unwrap();
+            let mut by_load: Vec<(u64, usize)> =
+                bids.iter().map(|b| (b.load, b.receiver)).collect();
+            by_load.sort_unstable();
+            let keep = by_load.len().div_ceil(2);
+            assert!(
+                by_load[..keep].iter().any(|&(_, r)| r == chosen),
+                "chosen {chosen} outside low half {by_load:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn buffered_len_incremental_tracks_push_pop_requeue() {
+        let mut q = ReceiverQueue::new(2);
+        let p = |request: u64, seq_len: u64, priority: u64| PendingPull {
+            sender: 1,
+            request,
+            seq_len,
+            priority,
+            failed_attempts: 0,
+        };
+        q.push(p(1, 100, 5));
+        q.push(p(2, 200, 9));
+        assert_eq!(q.buffered_len(), 300);
+        // Pull removes request 2 (highest priority): 200 leaves.
+        match q.next_action(|_| false) {
+            PullAction::Pull(got) => assert_eq!(got.request, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(q.buffered_len(), 100);
+        // Busy sender: skip leaves the sum unchanged.
+        assert!(matches!(q.next_action(|_| true), PullAction::Idle));
+        assert_eq!(q.buffered_len(), 100);
+        // Second failed attempt hits the threshold: starved leaves.
+        match q.next_action(|_| true) {
+            PullAction::Starved(got) => {
+                assert_eq!(got.request, 1);
+                q.requeue(got);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(q.buffered_len(), 100, "requeue restores the sum");
     }
 }

@@ -1,15 +1,21 @@
 //! LoadTracker — per-instance token-level workload monitor (§3.1).
 //!
 //! Each instance's LoadTracker records the token-level load of the
-//! instance (cached tokens per live request), maintains a sliding
-//! window of recently observed sequence lengths for range refinement,
-//! and holds the most recent load reports gossiped from peers (same
-//! stage) and successors (next stage).  Staleness is explicit: every
-//! report carries its timestamp, and consumers can discount or ignore
-//! reports older than a threshold.
+//! instance (cached tokens per live request), offers an optional
+//! sliding-window reservoir of observed sequence lengths, and holds
+//! the most recent load reports gossiped from peers (same stage) and
+//! successors (next stage).  Staleness is explicit: every report
+//! carries its timestamp, and consumers can discount or ignore reports
+//! older than a threshold.
+//!
+//! Note: the cluster driver does NOT feed [`LoadTracker::observe_batch`]
+//! on its hot path — boundary refinement reads live engine state
+//! directly, and materialising the batch composition on every
+//! `StepDone` was a measured O(batch) rescan for data nothing
+//! consumed.  The reservoir stays available for offline tools and
+//! diagnostics that want a length history.
 
 use crate::{InstanceId, Time, Tokens};
-use std::collections::HashMap;
 
 /// A gossiped load report from one instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -47,12 +53,30 @@ pub struct LoadTracker {
     /// Window length (seconds) for length samples.
     pub window: Time,
     samples: std::collections::VecDeque<LengthSample>,
-    peer_reports: HashMap<InstanceId, LoadReport>,
-    successor_reports: HashMap<InstanceId, LoadReport>,
+    /// Freshest report per peer, kept sorted by instance id.  A sorted
+    /// Vec (stage size ≤ instance count, typically ≤ 16) makes the
+    /// overload probe allocation-free and — unlike a HashMap — gives a
+    /// deterministic float-summation order, which the golden-seed
+    /// regression relies on.
+    peer_reports: Vec<LoadReport>,
+    successor_reports: Vec<LoadReport>,
     /// Throughput estimate via exponentially weighted token rate.
     tokens_in_window: f64,
     last_rate_update: Time,
     rate_ema: f64,
+}
+
+/// Insert-or-replace into a Vec kept sorted by instance id, keeping
+/// only the freshest report per instance.
+fn upsert_report(reports: &mut Vec<LoadReport>, report: LoadReport) {
+    match reports.binary_search_by_key(&report.instance, |r| r.instance) {
+        Ok(i) => {
+            if report.at >= reports[i].at {
+                reports[i] = report;
+            }
+        }
+        Err(i) => reports.insert(i, report),
+    }
 }
 
 impl LoadTracker {
@@ -61,8 +85,8 @@ impl LoadTracker {
             instance,
             window,
             samples: std::collections::VecDeque::new(),
-            peer_reports: HashMap::new(),
-            successor_reports: HashMap::new(),
+            peer_reports: Vec::new(),
+            successor_reports: Vec::new(),
             tokens_in_window: 0.0,
             last_rate_update: 0.0,
             rate_ema: 0.0,
@@ -98,8 +122,10 @@ impl LoadTracker {
         self.rate_ema.max(1.0)
     }
 
-    /// The in-window length samples (input to range refinement).
-    /// Age filtering happens lazily here, not on the hot write path.
+    /// The in-window length samples (diagnostics / offline tooling —
+    /// the cluster's boundary refinement reads live engine state, not
+    /// this reservoir).  Age filtering happens lazily here, not on the
+    /// write path.
     pub fn window_samples(&self, now: Time) -> Vec<LengthSample> {
         let cutoff = now - self.window;
         self.samples.iter().copied().filter(|s| s.at >= cutoff).collect()
@@ -108,52 +134,51 @@ impl LoadTracker {
     /// Store a peer (same-stage) report, keeping only the freshest per
     /// instance.
     pub fn record_peer(&mut self, report: LoadReport) {
-        let entry = self.peer_reports.entry(report.instance).or_insert(report);
-        if report.at >= entry.at {
-            *entry = report;
-        }
+        upsert_report(&mut self.peer_reports, report);
     }
 
     /// Store a successor (next-stage) report.
     pub fn record_successor(&mut self, report: LoadReport) {
-        let entry = self.successor_reports.entry(report.instance).or_insert(report);
-        if report.at >= entry.at {
-            *entry = report;
-        }
+        upsert_report(&mut self.successor_reports, report);
     }
 
-    /// Fresh peer reports (age <= max_age at `now`).
+    /// Fresh peer reports (age <= max_age at `now`), in instance order.
     pub fn peers(&self, now: Time, max_age: Time) -> Vec<LoadReport> {
-        let mut v: Vec<LoadReport> = self
-            .peer_reports
-            .values()
+        self.peer_reports
+            .iter()
             .filter(|r| now - r.at <= max_age)
             .copied()
-            .collect();
-        v.sort_by_key(|r| r.instance);
-        v
+            .collect()
     }
 
     pub fn successors(&self, now: Time, max_age: Time) -> Vec<LoadReport> {
-        let mut v: Vec<LoadReport> = self
-            .successor_reports
-            .values()
+        self.successor_reports
+            .iter()
             .filter(|r| now - r.at <= max_age)
             .copied()
-            .collect();
-        v.sort_by_key(|r| r.instance);
-        v
+            .collect()
     }
 
     /// Is this instance an overloaded outlier within its stage?
     /// (§4.4: request-memory demand 25% above the stage average.)
+    ///
+    /// Allocation-free: iterates the sorted report list directly (the
+    /// old path materialised + sorted a Vec on every post-step check).
+    /// Summation order is the fixed instance order, so results are
+    /// bit-stable run to run.
     pub fn is_overloaded(&self, now: Time, my_load: Tokens, threshold: f64, max_age: Time) -> bool {
-        let peers = self.peers(now, max_age);
-        if peers.is_empty() {
+        let mut total = 0.0f64;
+        let mut n_peers = 0usize;
+        for r in &self.peer_reports {
+            if now - r.at <= max_age {
+                total += r.token_load as f64;
+                n_peers += 1;
+            }
+        }
+        if n_peers == 0 {
             return false;
         }
-        let total: f64 = peers.iter().map(|r| r.token_load as f64).sum::<f64>() + my_load as f64;
-        let avg = total / (peers.len() + 1) as f64;
+        let avg = (total + my_load as f64) / (n_peers + 1) as f64;
         my_load as f64 > avg * (1.0 + threshold)
     }
 }

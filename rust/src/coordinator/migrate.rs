@@ -85,6 +85,12 @@ pub struct MigrationManager {
     active: HashMap<RequestId, Transfer>,
     /// Per-instance active-transfer counts (as source or destination).
     busy: HashMap<InstanceId, usize>,
+    /// Per-receiver running sum of in-flight tokens, so
+    /// [`Self::inbound_tokens`] is O(1) on the routing/bid hot paths.
+    inbound: HashMap<InstanceId, Tokens>,
+    /// Per-sender count of outgoing transfers, so [`Self::sender_busy`]
+    /// is O(1) in the receiver pull loop.
+    outbound: HashMap<InstanceId, usize>,
     pub total_completed: u64,
     pub total_tokens_moved: Tokens,
     pub total_skipped_no_slot: u64,
@@ -97,6 +103,8 @@ impl MigrationManager {
             kv_bytes_per_token,
             active: HashMap::new(),
             busy: HashMap::new(),
+            inbound: HashMap::new(),
+            outbound: HashMap::new(),
             total_completed: 0,
             total_tokens_moved: 0,
             total_skipped_no_slot: 0,
@@ -119,8 +127,11 @@ impl MigrationManager {
 
     /// Is the given sender currently transmitting anything? (the
     /// receiver-queue "sender busy" probe of §4.4).
+    /// Maintained incrementally; O(1).
     pub fn sender_busy(&self, instance: InstanceId) -> bool {
-        self.active.values().any(|t| t.from == instance)
+        let busy = self.outbound.get(&instance).copied().unwrap_or(0) > 0;
+        debug_assert_eq!(busy, self.active.values().any(|t| t.from == instance));
+        busy
     }
 
     /// Try to start a migration at `now`. Fails (returning `None`)
@@ -171,17 +182,29 @@ impl MigrationManager {
         self.active.insert(request, t);
         *self.busy.entry(from).or_insert(0) += 1;
         *self.busy.entry(to).or_insert(0) += 1;
+        *self.inbound.entry(to).or_insert(0) += t.tokens_moved;
+        *self.outbound.entry(from).or_insert(0) += 1;
         Some(t)
     }
 
-    /// Complete a transfer (caller observed `finish_at` pass).
-    pub fn finish(&mut self, request: RequestId) -> Option<Transfer> {
-        let t = self.active.remove(&request)?;
+    fn release(&mut self, t: &Transfer) {
         for side in [t.from, t.to] {
             if let Some(c) = self.busy.get_mut(&side) {
                 *c = c.saturating_sub(1);
             }
         }
+        if let Some(v) = self.inbound.get_mut(&t.to) {
+            *v = v.saturating_sub(t.tokens_moved);
+        }
+        if let Some(c) = self.outbound.get_mut(&t.from) {
+            *c = c.saturating_sub(1);
+        }
+    }
+
+    /// Complete a transfer (caller observed `finish_at` pass).
+    pub fn finish(&mut self, request: RequestId) -> Option<Transfer> {
+        let t = self.active.remove(&request)?;
+        self.release(&t);
         self.total_completed += 1;
         self.total_tokens_moved += t.tokens_moved;
         Some(t)
@@ -189,22 +212,24 @@ impl MigrationManager {
 
     /// Tokens currently inbound to `instance` over active transfers —
     /// the receiver-side "buffered length" of the §4.4 bids.
+    /// Maintained incrementally; O(1).
     pub fn inbound_tokens(&self, instance: InstanceId) -> Tokens {
-        self.active
-            .values()
-            .filter(|t| t.to == instance)
-            .map(|t| t.tokens_moved)
-            .sum()
+        let v = self.inbound.get(&instance).copied().unwrap_or(0);
+        debug_assert_eq!(
+            v,
+            self.active
+                .values()
+                .filter(|t| t.to == instance)
+                .map(|t| t.tokens_moved)
+                .sum::<Tokens>()
+        );
+        v
     }
 
     /// Abort a transfer (e.g. the sequence finished mid-flight).
     pub fn abort(&mut self, request: RequestId) -> Option<Transfer> {
         let t = self.active.remove(&request)?;
-        for side in [t.from, t.to] {
-            if let Some(c) = self.busy.get_mut(&side) {
-                *c = c.saturating_sub(1);
-            }
-        }
+        self.release(&t);
         Some(t)
     }
 }

@@ -313,7 +313,7 @@ impl Planner {
         // the chain exactly min(e, k) stages and then rebalancing).
         let chain_stages = (1..=s_max)
             .filter(|&s| g[s][k].is_finite())
-            .min_by(|&a, &b| g[a][k].partial_cmp(&g[b][k]).unwrap())
+            .min_by(|&a, &b| g[a][k].total_cmp(&g[b][k]))
             .expect("feasible chain");
         // Reconstruct cuts.
         let mut cuts_rev = Vec::new();
@@ -337,7 +337,7 @@ impl Planner {
                         let gain = self.stage_cost(agg, inst[i]) - self.stage_cost(agg, inst[i] + 1);
                         (i, gain)
                     })
-                    .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+                    .max_by(|x, y| x.1.total_cmp(&y.1))
                     .unwrap();
                 inst[imax] += 1;
             }

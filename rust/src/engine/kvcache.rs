@@ -197,6 +197,21 @@ mod tests {
     }
 
     #[test]
+    fn zero_capacity_is_finite_and_rejects() {
+        // capacity_blocks == 0 must not yield NaN occupancy: a
+        // zero-capacity pool reports "full" (1.0) and admits nothing.
+        let kv = KvCache::new(0, 16);
+        assert!(kv.utilization().is_finite());
+        assert_eq!(kv.utilization(), 1.0);
+        assert!(!kv.can_allocate(1));
+        // Sub-block capacities truncate to zero blocks, same story.
+        let kv = KvCache::new(15, 16);
+        assert_eq!(kv.capacity_tokens(), 0);
+        assert!(kv.utilization().is_finite());
+        assert!(!kv.can_allocate(1));
+    }
+
+    #[test]
     fn property_blocks_conserved() {
         for_all("kv-conservation", 0xBEEF, 64, |rng: &mut Rng| {
             let mut kv = KvCache::new(10_000, 16);

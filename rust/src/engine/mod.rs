@@ -176,6 +176,17 @@ pub struct Engine<B: ExecBackend> {
     /// Admitted sequences (prefilling or decoding).
     running: Vec<Sequence>,
     kv: KvCache,
+    /// Running aggregate: sum of `current_len()` over `running`.
+    /// Maintained at every mutation so [`Self::token_load`] is O(1) —
+    /// the cluster routes, gossips and bids off this value on every
+    /// event, and recomputing it per call was the top O(batch) rescan.
+    running_tokens: Tokens,
+    /// Running aggregate: sum of `req.input_len` over `queue`.
+    queued_tokens: Tokens,
+    /// Reusable buffers for the per-iteration cost-model inputs (avoids
+    /// one or two Vec allocations per simulated engine step).
+    scratch_lens: Vec<Tokens>,
+    scratch_chunks: Vec<(Tokens, Tokens)>,
     /// Cumulative stats.
     pub total_output_tokens: u64,
     pub total_iterations: u64,
@@ -191,6 +202,10 @@ impl<B: ExecBackend> Engine<B> {
             queue: VecDeque::new(),
             running: Vec::new(),
             kv,
+            running_tokens: 0,
+            queued_tokens: 0,
+            scratch_lens: Vec::new(),
+            scratch_chunks: Vec::new(),
             total_output_tokens: 0,
             total_iterations: 0,
             busy_time: 0.0,
@@ -199,6 +214,7 @@ impl<B: ExecBackend> Engine<B> {
 
     /// Enqueue a fresh request (prefill pending).
     pub fn submit(&mut self, req: Request) {
+        self.queued_tokens += req.input_len;
         self.queue.push_back(Sequence::new(req));
     }
 
@@ -207,12 +223,14 @@ impl<B: ExecBackend> Engine<B> {
     /// the migration subsystem checks for idle slots first, §5).
     pub fn inject(&mut self, seq: Sequence) -> bool {
         if seq.phase == Phase::Queued {
+            self.queued_tokens += seq.req.input_len;
             self.queue.push_back(seq);
             return true;
         }
         if !self.kv.allocate(seq.req.id, seq.current_len().max(1)) {
             return false;
         }
+        self.running_tokens += seq.current_len();
         self.running.push(seq);
         true
     }
@@ -222,10 +240,15 @@ impl<B: ExecBackend> Engine<B> {
         if let Some(pos) = self.running.iter().position(|s| s.req.id == id) {
             let seq = self.running.remove(pos);
             self.kv.free(id);
+            self.running_tokens -= seq.current_len();
             return Some(seq);
         }
         if let Some(pos) = self.queue.iter().position(|s| s.req.id == id) {
-            return self.queue.remove(pos);
+            let seq = self.queue.remove(pos);
+            if let Some(s) = &seq {
+                self.queued_tokens -= s.req.input_len;
+            }
+            return seq;
         }
         None
     }
@@ -252,7 +275,20 @@ impl<B: ExecBackend> Engine<B> {
     }
 
     /// Token-level load: total cached tokens (the LoadTracker metric).
+    /// Maintained as a running aggregate; O(1).
     pub fn token_load(&self) -> Tokens {
+        debug_assert_eq!(
+            self.running_tokens + self.queued_tokens,
+            self.token_load_naive(),
+            "incremental token_load drifted from the ground truth"
+        );
+        self.running_tokens + self.queued_tokens
+    }
+
+    /// Reference O(n) recomputation of [`Self::token_load`] — the
+    /// ground truth the incremental aggregate is checked against (in
+    /// debug builds on every call, and by the regression tests).
+    pub fn token_load_naive(&self) -> Tokens {
         self.running.iter().map(|s| s.current_len()).sum::<Tokens>()
             + self.queue.iter().map(|s| s.req.input_len).sum::<Tokens>()
     }
@@ -275,12 +311,14 @@ impl<B: ExecBackend> Engine<B> {
                 break;
             }
             let mut seq = self.queue.pop_front().unwrap();
+            self.queued_tokens -= seq.req.input_len;
             // Reserve the prompt's KV up front (vLLM reserves on admit).
             let ok = self.kv.allocate(seq.req.id, need);
             debug_assert!(ok);
             if seq.phase == Phase::Queued {
                 seq.phase = Phase::Prefilling;
             }
+            self.running_tokens += seq.current_len();
             self.running.push(seq);
         }
     }
@@ -326,15 +364,18 @@ impl<B: ExecBackend> Engine<B> {
             // All prefilling seqs starved by budget 0 — run decode instead.
             return self.decode_iteration(now);
         }
-        let cost_input: Vec<(Tokens, Tokens)> =
-            chunks.iter().map(|&(_, new, prefix)| (new, prefix)).collect();
+        let mut cost_input = std::mem::take(&mut self.scratch_chunks);
+        cost_input.clear();
+        cost_input.extend(chunks.iter().map(|&(_, new, prefix)| (new, prefix)));
         let duration = self.backend.prefill_cost(&cost_input);
+        self.scratch_chunks = cost_input;
         let end = now + duration;
 
         let mut outcome = StepOutcome { duration, was_prefill: true, ..Default::default() };
         for &(i, take, _) in &chunks {
             let seq = &mut self.running[i];
             seq.kv_len += take;
+            self.running_tokens += take;
             if seq.kv_len >= seq.prompt_len {
                 seq.phase = Phase::Decoding;
                 if seq.generated == 0 {
@@ -343,6 +384,7 @@ impl<B: ExecBackend> Engine<B> {
                     seq.first_token_at = Some(end);
                     self.kv.grow(seq.req.id, 1);
                     seq.kv_len += 1;
+                    self.running_tokens += 1;
                     outcome.tokens_emitted += 1;
                     self.total_output_tokens += 1;
                 }
@@ -373,6 +415,7 @@ impl<B: ExecBackend> Engine<B> {
             }
             let victim = self.running.remove(self.running.len() - 1);
             self.kv.free(victim.req.id);
+            self.running_tokens -= victim.current_len();
             // Recompute mode: back to queue, lose the cached KV but
             // keep logical progress — prompt + generated become the new
             // "prompt" to re-prefill (vLLM recompute preemption).
@@ -380,6 +423,7 @@ impl<B: ExecBackend> Engine<B> {
             requeued.kv_len = 0;
             requeued.prompt_len = requeued.logical_len();
             requeued.phase = Phase::Queued;
+            self.queued_tokens += requeued.req.input_len;
             self.queue.push_front(requeued);
             preempted += 1;
         }
@@ -391,8 +435,11 @@ impl<B: ExecBackend> Engine<B> {
             debug_assert!(ok);
         }
 
-        let lens: Vec<Tokens> = self.running.iter().map(|s| s.current_len()).collect();
+        let mut lens = std::mem::take(&mut self.scratch_lens);
+        lens.clear();
+        lens.extend(self.running.iter().map(|s| s.current_len()));
         let duration = self.backend.decode_cost(&lens);
+        self.scratch_lens = lens;
         let end = now + duration;
 
         let mut outcome =
@@ -406,6 +453,7 @@ impl<B: ExecBackend> Engine<B> {
                 seq.first_token_at = Some(end);
             }
         }
+        self.running_tokens += self.running.len() as Tokens;
         self.reap(end, &mut outcome);
         outcome
     }
@@ -417,6 +465,7 @@ impl<B: ExecBackend> Engine<B> {
             if self.running[i].is_finished() {
                 let seq = self.running.remove(i);
                 self.kv.free(seq.req.id);
+                self.running_tokens -= seq.current_len();
                 outcome.completed.push(RequestRecord {
                     id: seq.req.id,
                     arrival: seq.req.arrival,
@@ -634,6 +683,56 @@ mod tests {
         e.submit(req(1, 0.0, 100, 5));
         e.submit(req(2, 0.0, 200, 5));
         assert_eq!(e.token_load(), 300);
+    }
+
+    #[test]
+    fn token_load_incremental_matches_naive_property() {
+        // The golden-seed refactor invariant: the O(1) running
+        // aggregate must equal the O(n) rescan after every operation —
+        // submit, step (admit/prefill/decode/preempt/reap), extract,
+        // and inject — under randomized schedules.
+        use crate::sim::Rng;
+        use crate::testutil::for_all;
+        for_all("engine-token-load", 0xD00D, 48, |rng: &mut Rng| {
+            let cfg = EngineConfig {
+                max_batch: 8,
+                max_batched_tokens: 256,
+                kv_capacity_tokens: 2048,
+                block_size: 16,
+            };
+            let mut e = Engine::new(cfg, FakeBackend);
+            let mut now = 0.0;
+            let mut extracted: Vec<Sequence> = Vec::new();
+            for op in 0..120u64 {
+                match rng.next_range(4) {
+                    0 => e.submit(req(
+                        1000 + op,
+                        now,
+                        1 + rng.next_range(300),
+                        1 + rng.next_range(40),
+                    )),
+                    1 => {
+                        let out = e.step(now);
+                        now += out.duration.max(1e-9);
+                    }
+                    2 => {
+                        if let Some(s) = e.running().first().copied() {
+                            if let Some(seq) = e.extract(s.req.id) {
+                                extracted.push(seq);
+                            }
+                        }
+                    }
+                    _ => {
+                        if let Some(seq) = extracted.pop() {
+                            // May fail when KV is full; the invariant
+                            // must hold either way.
+                            let _ = e.inject(seq);
+                        }
+                    }
+                }
+                assert_eq!(e.token_load(), e.token_load_naive());
+            }
+        });
     }
 
     #[test]

@@ -35,7 +35,9 @@ pub mod kernelmodel;
 pub mod metrics;
 pub mod models;
 pub mod qoe;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
 pub mod testutil;

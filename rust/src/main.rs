@@ -134,6 +134,16 @@ fn cmd_gen_trace(args: &Args) {
     println!("wrote {n} requests to {out}");
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) {
+    eprintln!(
+        "`serve` drives the real PJRT path and needs the `pjrt` feature:\n  \
+         cargo run --release --features pjrt -- serve"
+    );
+    std::process::exit(2);
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) {
     use cascade_infer::server::{ServeRequest, Server, ServerConfig};
     let dir = args.get_or("artifacts", "artifacts");

@@ -55,7 +55,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a single NaN sample must not panic percentile
+    // reporting (NaNs sort to the end and cannot poison low/mid ranks).
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0 * (v.len() - 1) as f64).round() as usize;
     v[rank.min(v.len() - 1)]
 }

@@ -336,7 +336,7 @@ impl Runtime {
             .map(|row| {
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i as i32)
                     .unwrap_or(0)
             })

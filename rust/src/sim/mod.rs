@@ -196,6 +196,34 @@ mod tests {
     }
 
     #[test]
+    fn fifo_tie_break_survives_interleaved_pops() {
+        // Insertion order must keep deciding equal-timestamp ordering
+        // even when pops interleave with later schedules at that time.
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "a");
+        q.schedule(1.0, "b");
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        q.schedule(1.0, "c"); // same timestamp, scheduled after a pop
+        q.schedule(0.5, "late"); // past: clamps to now=1.0, after c
+        assert_eq!(q.pop(), Some((1.0, "b")));
+        assert_eq!(q.pop(), Some((1.0, "c")));
+        assert_eq!(q.pop(), Some((1.0, "late")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_tie_break_mixed_timestamps() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, 20);
+        q.schedule(1.0, 10);
+        q.schedule(2.0, 21);
+        q.schedule(1.0, 11);
+        q.schedule(2.0, 22);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![10, 11, 20, 21, 22]);
+    }
+
+    #[test]
     fn clock_advances_monotonically() {
         let mut q = EventQueue::new();
         q.schedule(1.0, ());

@@ -5,6 +5,9 @@
 //! This is the strongest cross-language signal in the repo: it proves
 //! L1 (Pallas kernels) -> L2 (JAX model) -> AOT (HLO text) -> L3 (Rust
 //! PJRT runtime) compose with exact agreement.
+//!
+//! Requires the `pjrt` feature (real XLA bindings) and `make artifacts`.
+#![cfg(feature = "pjrt")]
 
 use cascade_infer::runtime::Runtime;
 

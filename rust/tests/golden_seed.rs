@@ -1,0 +1,139 @@
+//! Golden-seed cluster regression.
+//!
+//! Two layers of protection:
+//!
+//! 1. **Run-to-run bit-identity** (always enforced): a fixed (seed,
+//!    config, workload) triple must produce byte-for-byte identical
+//!    `Report`s and stats on repeated runs in the same build.  This
+//!    catches nondeterminism (hash-order float sums, unordered event
+//!    ties) but NOT a refactor that deterministically changes results.
+//! 2. **Blessed checksums** (enforced once blessed): per-scheduler
+//!    report checksums are compared against `tests/golden/seed42.txt`.
+//!    If the file does not exist yet, the test writes it and passes —
+//!    commit the generated file to pin the current behavior; any later
+//!    change to event ordering or float summation then fails here.
+//!    To re-bless after an *intentional* behavior change, delete the
+//!    file, re-run, and commit the regenerated copy.
+
+use cascade_infer::cluster::{run_experiment, ClusterConfig, RunStats, SchedulerKind};
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::metrics::Report;
+use cascade_infer::models::LLAMA_3B;
+use cascade_infer::workload::{generate, Request, ShareGptLike};
+use std::path::Path;
+
+const GOLDEN_PATH: &str = "tests/golden/seed42.txt";
+
+/// Stable FNV-style fingerprint over every record's exact bit patterns.
+fn checksum(r: &Report) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for rec in &r.records {
+        mix(rec.id);
+        mix(rec.arrival.to_bits());
+        mix(rec.first_token.to_bits());
+        mix(rec.completion.to_bits());
+        mix(rec.input_len);
+        mix(rec.output_len);
+    }
+    h
+}
+
+fn stats_fingerprint(s: &RunStats) -> (u64, u64, u64, u64, Vec<u64>) {
+    (
+        s.migrations,
+        s.migration_tokens,
+        s.migrations_skipped,
+        s.preemptions,
+        s.final_boundaries.clone(),
+    )
+}
+
+const SCHEDULERS: [SchedulerKind; 4] = [
+    SchedulerKind::Cascade,
+    SchedulerKind::RoundRobin,
+    SchedulerKind::LlumnixLike,
+    SchedulerKind::CascadeRoundRobinIntra,
+];
+
+fn cfg8(k: SchedulerKind) -> ClusterConfig {
+    let mut c = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 8, k);
+    c.plan_sample = 400;
+    c
+}
+
+fn trace() -> Vec<Request> {
+    generate(&ShareGptLike::default(), 24.0, 400, 42)
+}
+
+#[test]
+fn seeded_runs_are_bit_identical_across_schedulers() {
+    let reqs = trace();
+    for k in SCHEDULERS {
+        let (r1, s1) = run_experiment(cfg8(k), &reqs);
+        let (r2, s2) = run_experiment(cfg8(k), &reqs);
+        assert_eq!(r1.records.len(), reqs.len(), "{k:?} dropped requests");
+        assert_eq!(checksum(&r1), checksum(&r2), "{k:?} report not bit-identical");
+        assert_eq!(stats_fingerprint(&s1), stats_fingerprint(&s2), "{k:?} stats diverged");
+    }
+}
+
+#[test]
+fn report_checksums_match_blessed_golden_file() {
+    let reqs = trace();
+    let lines: Vec<String> = SCHEDULERS
+        .iter()
+        .map(|&k| {
+            let (r, _) = run_experiment(cfg8(k), &reqs);
+            format!("{} {:#018x}", k.name(), checksum(&r))
+        })
+        .collect();
+    let current = lines.join("\n") + "\n";
+    let path = Path::new(GOLDEN_PATH);
+    if path.exists() {
+        let blessed = std::fs::read_to_string(path).expect("golden file readable");
+        assert_eq!(
+            blessed, current,
+            "seeded Report diverged from the blessed golden checksums \
+             ({GOLDEN_PATH}). If this change is intentional, delete the \
+             file, re-run the test, and commit the regenerated copy."
+        );
+    } else {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("create tests/golden");
+        std::fs::write(path, &current).expect("write golden file");
+        eprintln!(
+            "blessed new golden checksums at {GOLDEN_PATH} — commit this \
+             file to pin the current seeded behavior"
+        );
+    }
+}
+
+#[test]
+fn golden_seed_checksum_is_order_sensitive() {
+    // Sanity-check the fingerprint itself: permuting records or
+    // perturbing one bit must change it, otherwise the regressions
+    // above could pass vacuously.
+    let reqs = trace();
+    let (r, _) = run_experiment(cfg8(SchedulerKind::Cascade), &reqs);
+    let base = checksum(&r);
+    let mut permuted = r.records.clone();
+    permuted.swap(0, 1);
+    let permuted = Report::from_records(permuted);
+    assert_ne!(base, checksum(&permuted));
+    let mut bumped = r.records.clone();
+    bumped[0].completion += 1e-9;
+    let bumped = Report::from_records(bumped);
+    assert_ne!(base, checksum(&bumped));
+}
+
+#[test]
+fn different_workload_seeds_diverge() {
+    let a = generate(&ShareGptLike::default(), 24.0, 200, 1);
+    let b = generate(&ShareGptLike::default(), 24.0, 200, 2);
+    let (ra, _) = run_experiment(cfg8(SchedulerKind::Cascade), &a);
+    let (rb, _) = run_experiment(cfg8(SchedulerKind::Cascade), &b);
+    assert_ne!(checksum(&ra), checksum(&rb));
+}

@@ -1,6 +1,9 @@
 //! Real-path server integration: the threaded CascadeInfer server over
 //! PJRT must complete every request, produce golden-exact tokens, and
 //! migrate sequences across length stages.
+//!
+//! Requires the `pjrt` feature (real XLA bindings) and `make artifacts`.
+#![cfg(feature = "pjrt")]
 
 use cascade_infer::server::{ServeRequest, Server, ServerConfig};
 

@@ -1,0 +1,167 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container image has no network and no vendored crates.io set,
+//! so this crate re-implements exactly the API subset the repository
+//! uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros,
+//! and the [`Context`] extension trait.  Semantics match upstream for
+//! that subset (error chaining is flattened into the message).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error with an optional source, like `anyhow::Error`.
+///
+/// Deliberately does NOT implement `std::error::Error`, so the blanket
+/// `From<E: std::error::Error>` conversion below does not conflict with
+/// the reflexive `From<Error> for Error`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a plain message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an additional layer of context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// Helper behind the single-expression `anyhow!(expr)` arm.
+    pub fn from_any<E: Into<Error>>(err: E) -> Self {
+        err.into()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()` to results.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::from_any($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn message_and_context() {
+        let e = Error::msg("base").context("outer");
+        assert_eq!(e.to_string(), "outer: base");
+    }
+
+    #[test]
+    fn from_std_error_and_question_mark() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn macros() {
+        let name = "x";
+        let e: Error = anyhow!("bad {name}");
+        assert_eq!(e.to_string(), "bad x");
+        let e: Error = anyhow!("v={}", 3);
+        assert_eq!(e.to_string(), "v=3");
+        let e: Error = anyhow!(io_err());
+        assert_eq!(e.to_string(), "gone");
+        fn bails() -> Result<()> {
+            bail!("stop {}", 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop 1");
+    }
+
+    #[test]
+    fn result_context_trait() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "f")).unwrap_err();
+        assert_eq!(e.to_string(), "reading f: gone");
+    }
+}

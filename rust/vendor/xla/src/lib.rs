@@ -1,0 +1,245 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real serving path compiles AOT-lowered HLO through PJRT; that
+//! native stack is not available in this container, so this stub
+//! provides the exact API surface `cascade_infer::runtime` and
+//! `cascade_infer::server` consume.  Host-side [`Literal`] buffers are
+//! fully functional (shape/reshape/to_vec); anything that would need a
+//! real PJRT client ([`PjRtClient::cpu`], compilation, execution)
+//! returns a descriptive [`Error`] instead, so the `pjrt` feature
+//! builds and degrades cleanly on machines without the toolchain.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (implements `std::error::Error` so `?` converts it
+/// into `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the real PJRT bindings; this build uses the offline stub \
+         (vendor/xla). Install the native xla_extension and swap the dependency to run."
+    ))
+}
+
+/// Element types the stub stores. Public only because [`NativeType`]
+/// mentions it; not part of the emulated xla-rs API.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side literal: a typed buffer plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+/// Array shape accessor, mirroring xla-rs' `ArrayShape`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Sealed-ish conversion trait for the element types the stub supports.
+pub trait NativeType: Sized + Copy {
+    fn wrap(v: Vec<Self>) -> Storage;
+    fn unwrap_ref(s: &Storage) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Storage {
+        Storage::F32(v)
+    }
+    fn unwrap_ref(s: &Storage) -> Option<&[Self]> {
+        match s {
+            Storage::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Storage {
+        Storage::I32(v)
+    }
+    fn unwrap_ref(s: &Storage) -> Option<&[Self]> {
+        match s {
+            Storage::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i64 {
+    fn wrap(v: Vec<Self>) -> Storage {
+        Storage::I64(v)
+    }
+    fn unwrap_ref(s: &Storage) -> Option<&[Self]> {
+        match s {
+            Storage::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal { storage: T::wrap(values.to_vec()), dims: vec![values.len() as i64] }
+    }
+
+    fn numel(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::I64(v) => v.len(),
+            Storage::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret the buffer under new dimensions (element count must
+    /// be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.numel() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap_ref(&self.storage)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    /// Destructure a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(parts) => Ok(parts),
+            _ => Err(Error("to_tuple on a non-tuple literal".into())),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.storage {
+            Storage::Tuple(_) => Err(Error("array_shape on a tuple literal".into())),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: retains nothing).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        // Validate the file exists so error messages stay actionable,
+        // then fail at compile time like the rest of the stub.
+        if !path.as_ref().exists() {
+            return Err(Error(format!("HLO file not found: {}", path.as_ref().display())));
+        }
+        Ok(HloModuleProto)
+    }
+}
+
+/// Computation wrapper (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub: never instantiated).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub: never instantiated).
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (stub: construction fails).
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
