@@ -1,40 +1,39 @@
 //! Paper-style sweep: one model, several arrival rates, four systems —
-//! the shape of Figs. 6, 7 and 10 in one table.
+//! the shape of Figs. 6, 7 and 10 in one table.  Same grid the
+//! `cascade-infer sweep` subcommand runs, here via the library API.
 //!
 //! ```bash
 //! cargo run --release --example paper_benchmark [requests_per_rate]
 //! ```
 
-use cascade_infer::cluster::{run_experiment, ClusterConfig, SchedulerKind};
-use cascade_infer::gpu::GpuProfile;
-use cascade_infer::models::LLAMA_3B;
+use cascade_infer::experiment::Experiment;
 use cascade_infer::workload::{generate, ShareGptLike};
 
 fn main() {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(800);
     let rates = [8.0, 16.0, 32.0, 48.0];
-    let systems = [
-        SchedulerKind::Cascade,
-        SchedulerKind::RoundRobin,
-        SchedulerKind::SgLangLike,
-        SchedulerKind::LlumnixLike,
-    ];
+    // Registry names; `llumnix` carries its faster engine speed.
+    let systems = ["cascade", "vllm", "sglang", "llumnix"];
     println!(
         "{:<6} {:<14} {:>10} {:>10} {:>10} {:>10} {:>12}",
         "rate", "system", "TTFT", "p95TTFT", "TPOT", "p95TPOT", "tok/s"
     );
     for rate in rates {
         let reqs = generate(&ShareGptLike::default(), rate, n, 42);
-        for k in systems {
-            let mut cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 16, k);
-            if k == SchedulerKind::LlumnixLike {
-                cfg.engine_speed = 1.25;
-            }
-            let (r, _) = run_experiment(cfg, &reqs);
+        for name in systems {
+            let (r, _) = Experiment::builder()
+                .model("Llama-3.2-3B")
+                .gpu("H20")
+                .instances(16)
+                .scheduler(name)
+                .trace(reqs.clone())
+                .build()
+                .expect("experiment builds")
+                .run();
             println!(
                 "{:<6.1} {:<14} {:>9.4}s {:>9.4}s {:>9.5}s {:>9.5}s {:>11.1}",
                 rate,
-                k.name(),
+                name,
                 r.mean_ttft(),
                 r.p95_ttft(),
                 r.mean_tpot(),

@@ -1,39 +1,54 @@
-//! Quickstart: plan a length-aware pipeline and simulate a small
-//! CascadeInfer cluster against a round-robin baseline.
+//! Quickstart: build experiments with the `Experiment` builder and
+//! compare CascadeInfer against a round-robin baseline — plus one
+//! ad-hoc `custom:` policy the closed scheduler enum could never
+//! express.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use cascade_infer::cluster::{run_experiment, ClusterConfig, SchedulerKind};
-use cascade_infer::gpu::GpuProfile;
-use cascade_infer::models::LLAMA_3B;
+use cascade_infer::experiment::Experiment;
 use cascade_infer::workload::{generate, ShareGptLike};
 
 fn main() {
     // 1. A ShareGPT-like workload: skewed lengths, Poisson arrivals.
+    //    Generated once and shared so every system sees the same trace.
     let requests = generate(&ShareGptLike::default(), 24.0, 800, 42);
     println!("workload: {} requests over {:.1}s", requests.len(),
              requests.last().unwrap().arrival);
 
-    // 2. CascadeInfer on 8 simulated H20 instances.
-    let cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 8, SchedulerKind::Cascade);
-    let (cascade, stats) = run_experiment(cfg, &requests);
-
-    // 3. The same workload through a round-robin load balancer.
-    let cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 8, SchedulerKind::RoundRobin);
-    let (rr, _) = run_experiment(cfg, &requests);
-
-    println!("\n{:<14} {:>12} {:>12} {:>14}", "scheduler", "mean TTFT", "mean TPOT", "throughput");
-    for (name, r) in [("CascadeInfer", &cascade), ("RoundRobin", &rr)] {
+    // 2. Three systems through the one construction path.  Scheduler
+    //    names go through the policy registry, so ad-hoc axis combos
+    //    work exactly like built-ins.
+    let systems = [
+        "cascade",
+        "vllm",
+        "custom:layout=planned,refine=memory,balance=rrintra",
+    ];
+    println!("\n{:<46} {:>12} {:>12} {:>14}", "scheduler", "mean TTFT", "mean TPOT", "throughput");
+    let mut cascade_stats = None;
+    for name in systems {
+        let (report, stats) = Experiment::builder()
+            .model("Llama-3.2-3B")
+            .gpu("H20")
+            .instances(8)
+            .scheduler(name)
+            .trace(requests.clone())
+            .build()
+            .expect("experiment builds")
+            .run();
         println!(
-            "{:<14} {:>11.4}s {:>11.5}s {:>10.1} tok/s",
+            "{:<46} {:>11.4}s {:>11.5}s {:>10.1} tok/s",
             name,
-            r.mean_ttft(),
-            r.mean_tpot(),
-            r.throughput_tokens_per_s()
+            report.mean_ttft(),
+            report.mean_tpot(),
+            report.throughput_tokens_per_s()
         );
+        if name == "cascade" {
+            cascade_stats = Some(stats);
+        }
     }
+    let stats = cascade_stats.unwrap();
     println!(
         "\nCascadeInfer: {} stages, {} migrations, boundaries {:?}",
         stats.stages.len(),

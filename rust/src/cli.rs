@@ -67,7 +67,11 @@ impl Args {
     }
 }
 
-/// Resolve a scheduler name from the CLI.
+/// Resolve a scheduler name to the **legacy** closed enum.  Kept as a
+/// compatibility shim: only the ten paper schedulers resolve here;
+/// the CLI itself resolves through the open
+/// [`crate::cluster::PolicySpec`] registry, which additionally accepts
+/// `sjf` and `custom:` axis strings.
 pub fn scheduler_by_name(name: &str) -> Option<crate::cluster::SchedulerKind> {
     use crate::cluster::SchedulerKind as K;
     Some(match name.to_ascii_lowercase().as_str() {
@@ -89,16 +93,40 @@ pub const USAGE: &str = "\
 cascade-infer — length-aware MILS scheduling (CascadeInfer reproduction)
 
 USAGE:
-  cascade-infer sim   [--model NAME] [--gpu H20|L40] [--instances N]
-                      [--rate R] [--requests N] [--seed S]
-                      [--scheduler cascade|vllm|sglang|llumnix|chain|...]
+  cascade-infer sim   [--config FILE] [--model NAME] [--gpu H20|L40|H100]
+                      [--instances N] [--rate R] [--requests N] [--seed S]
+                      [--scheduler NAME] [--workload NAME]
+  cascade-infer sweep [--rates R1,R2,..] [--schedulers N1,N2,..]
+                      [--model NAME] [--gpu H20|L40|H100] [--instances N]
+                      [--requests N] [--seed S] [--workload NAME]
   cascade-infer plan  [--model NAME] [--instances N] [--requests N] [--seed S]
-  cascade-infer fit   [--model NAME] [--gpu H20|L40]
+  cascade-infer fit   [--model NAME] [--gpu H20|L40|H100]
   cascade-infer gen-trace --out FILE [--rate R] [--requests N] [--seed S]
   cascade-infer serve [--artifacts DIR] [--requests N]
 
-`sim` runs a full multi-instance simulation and prints the paper's
-metrics; `serve` drives the real PJRT-served model end to end.";
+RUNNING EXPERIMENTS
+  `sim` runs one experiment through the Experiment builder and prints
+  the paper's metrics.  `sweep` runs a grid of rates x schedulers over
+  one shared workload and prints a comparison table (use `;` to
+  separate schedulers whose names contain commas, e.g. custom specs).
+
+  Schedulers: cascade|vllm|sglang|llumnix|chain|nopipeline|quantity|
+              memory|interstage|rrintra|sjf, or an ad-hoc axis spec
+              custom:layout=planned|chain|flat,refine=adaptive|quantity|
+              memory|off,balance=full|interstage|rrintra|periodic|off,
+              dispatch=roundrobin|leastloaded|stagerouted|shortestfirst
+              [,gossip=on|off][,speed=F]
+  Workloads:  sharegpt|heavytail|uniformshort|mix|bursty|trace:FILE
+  Config:     --config FILE loads an [experiment] section (model, gpu,
+              instances, rate, requests, seed, scheduler, workload);
+              explicit CLI flags override file values.
+
+  Examples:
+    cascade-infer sim --rate 16 --scheduler cascade --workload heavytail
+    cascade-infer sim --scheduler custom:layout=planned,refine=memory,balance=rrintra
+    cascade-infer sweep --rates 8,16,32 --schedulers cascade,vllm,llumnix
+
+`serve` drives the real PJRT-served model end to end.";
 
 #[cfg(test)]
 mod tests {

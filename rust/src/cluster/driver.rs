@@ -16,7 +16,7 @@ use crate::metrics::Report;
 use crate::workload::{LengthHistogram, Request};
 use crate::{InstanceId, RequestId, Time, Tokens};
 
-use super::policy::{Layout, RefinePolicy, SchedulerKind};
+use super::policy::{BalancePolicy, Layout, RefinePolicy};
 use super::{Cluster, RunStats};
 
 /// The cluster's event alphabet.
@@ -54,20 +54,17 @@ impl Cluster {
         for r in requests {
             self.events.schedule(r.arrival, Event::Arrival(*r));
         }
-        if self.cfg.gossip_interval > 0.0 && self.cfg.scheduler.uses_gossip() {
+        if self.cfg.gossip_interval > 0.0 && self.cfg.policy.gossip {
             self.events.schedule(self.cfg.gossip_interval, Event::Gossip);
         }
-        if self.cfg.refine_interval > 0.0
-            && self.cfg.scheduler.refine_policy() != RefinePolicy::Off
-        {
+        if self.cfg.refine_interval > 0.0 && self.cfg.policy.refine != RefinePolicy::Off {
             self.events.schedule(self.cfg.refine_interval, Event::Refine);
         }
-        if self.cfg.scheduler == SchedulerKind::LlumnixLike {
+        if self.cfg.policy.balance == BalancePolicy::PeriodicLengthAgnostic {
             self.events.schedule(0.25, Event::BaselineRebalance);
         }
         if self.cfg.replan_interval > 0.0
-            && self.cfg.scheduler.layout() == Layout::Planned
-            && self.cfg.scheduler.is_cascade()
+            && self.cfg.policy.layout == Layout::Planned
             && self.cfg.forced_pipeline.is_none()
         {
             self.events.schedule(self.cfg.replan_interval, Event::Replan);
@@ -142,7 +139,7 @@ impl Cluster {
         // is O(1) now and rows are only built when a mark actually hits.
         self.maybe_snapshot(i);
 
-        if self.cfg.scheduler.is_cascade() {
+        if self.cfg.policy.balance.uses_bid_ask() {
             self.cascade_post_step(now, i);
         }
         self.kick(now, i);
@@ -202,7 +199,7 @@ impl Cluster {
 
     fn on_refine(&mut self, now: Time) {
         self.stats.refinements += 1;
-        let policy = self.cfg.scheduler.refine_policy();
+        let policy = self.cfg.policy.refine;
         for b in 0..self.refiners.len() {
             // Boundary b separates stage b from stage b+1. The local
             // side enters the split as a *per-instance average* (S4.3

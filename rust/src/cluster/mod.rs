@@ -10,10 +10,15 @@
 //! naive refinement) share the same event loop so comparisons are
 //! apples-to-apples.
 //!
-//! # Architecture: driver / router / state
+//! # Architecture: policy / driver / router / state
 //!
-//! The simulator is layered across four files so the event loop, the
-//! dispatch policy, and per-instance bookkeeping evolve independently:
+//! The simulator is layered across five files so the event loop, the
+//! dispatch policy, and per-instance bookkeeping evolve independently.
+//! Scheduling behavior is driven entirely by the axes of a
+//! [`PolicySpec`] (`policy.rs`) — layout, refinement, balancing,
+//! dispatch, gossip — never by comparing a scheduler *kind*, so new
+//! scenarios are spec values (or `custom:` CLI strings), not event-loop
+//! edits:
 //!
 //! * `cluster/driver.rs` — the **driver**: the event alphabet, the
 //!   discrete-event clock and dispatch loop ([`Cluster::run`]), and the
@@ -39,7 +44,9 @@ mod driver;
 mod router;
 mod state;
 
-pub use policy::{BalancePolicy, Layout, RefinePolicy, SchedulerKind};
+pub use policy::{
+    BalancePolicy, DispatchPolicy, Layout, PolicyError, PolicySpec, RefinePolicy, SchedulerKind,
+};
 
 use crate::baselines;
 use crate::coordinator::balance::{Ask, Bid, BidAskScheduler, PendingPull, PullAction};
@@ -67,12 +74,17 @@ pub struct ClusterConfig {
     pub gpu: GpuProfile,
     pub model: ModelProfile,
     pub n_instances: usize,
-    pub scheduler: SchedulerKind,
-    /// Engine knobs; the default KV capacity is replaced by the value
-    /// derived from the GPU memory budget.
+    /// The scheduling policy, as orthogonal axes.  Construct from a
+    /// [`PolicySpec`] directly, a registry name via
+    /// [`PolicySpec::resolve`], or a legacy [`SchedulerKind`] (which
+    /// converts via `Into`).
+    pub policy: PolicySpec,
+    /// Engine knobs; a `None` KV capacity is derived from the GPU
+    /// memory budget.
     pub engine: EngineConfig,
     /// Relative engine speed (1.0 = vLLM-class; Llumnix's newer engine
-    /// runs faster — §6.2 Fig. 8).
+    /// runs faster — §6.2 Fig. 8).  Seeded from the policy spec;
+    /// override after construction to model a different runtime.
     pub engine_speed: f64,
     pub gossip_interval: Time,
     pub refine_interval: Time,
@@ -97,15 +109,17 @@ impl ClusterConfig {
         gpu: GpuProfile,
         model: ModelProfile,
         n_instances: usize,
-        scheduler: SchedulerKind,
+        policy: impl Into<PolicySpec>,
     ) -> Self {
+        let policy = policy.into();
+        let engine_speed = policy.engine_speed;
         Self {
             gpu,
             model,
             n_instances,
-            scheduler,
+            policy,
             engine: EngineConfig::default(),
-            engine_speed: 1.0,
+            engine_speed,
             gossip_interval: 0.05,
             refine_interval: 5.0,
             replan_interval: 10.0,
@@ -119,9 +133,9 @@ impl ClusterConfig {
 
     fn engine_config(&self) -> EngineConfig {
         let mut e = self.engine;
-        if e.kv_capacity_tokens == EngineConfig::default().kv_capacity_tokens {
+        if e.kv_capacity_tokens.is_none() {
             let budget = self.model.kv_budget_bytes(self.gpu.mem_bytes, 0.9);
-            e.kv_capacity_tokens = self.model.kv_capacity_tokens(budget).max(1024);
+            e.kv_capacity_tokens = Some(self.model.kv_capacity_tokens(budget).max(1024));
         }
         e
     }
@@ -220,7 +234,7 @@ impl Cluster {
             topology.intra_node.bytes_per_s(),
         );
         let planner = Planner::new(qoe_model, mig_cost);
-        let pipeline = match (&cfg.forced_pipeline, cfg.scheduler.layout()) {
+        let pipeline = match (&cfg.forced_pipeline, cfg.policy.layout) {
             (Some(p), _) => {
                 assert_eq!(p.total_instances(), e, "forced pipeline must use all instances");
                 p.clone()
@@ -359,7 +373,7 @@ impl Cluster {
         // not a stampede (§4.4's trigger is an *outlier* condition,
         // re-evaluated after the stage settles).
         const OFFER_COOLDOWN: Time = 0.5;
-        if self.cfg.scheduler.balance_policy() == BalancePolicy::Full
+        if self.cfg.policy.balance == BalancePolicy::Full
             && now - self.instances[i].last_offer >= OFFER_COOLDOWN
         {
             let my_load = self.instances[i].engine.token_load();
@@ -414,7 +428,7 @@ impl Cluster {
         {
             return; // negotiation already in flight
         }
-        if self.cfg.scheduler.balance_policy() == BalancePolicy::RoundRobinIntra {
+        if self.cfg.policy.balance == BalancePolicy::RoundRobinIntra {
             // Ablation: skip the negotiation, rotate receivers.
             let to = candidates[self.router.next_rr() % candidates.len()];
             if to != from {
@@ -720,6 +734,30 @@ mod tests {
         let t1: f64 = r1.records.iter().map(|r| r.completion).sum();
         let t2: f64 = r2.records.iter().map(|r| r.completion).sum();
         assert!((t1 - t2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn custom_policy_spec_runs_without_a_kind() {
+        // An axis combination no legacy SchedulerKind expresses:
+        // planned layout + memory refinement + round-robin intra.
+        let spec =
+            PolicySpec::resolve("custom:layout=planned,refine=memory,balance=rrintra").unwrap();
+        let reqs = workload(150, 15.0, 22);
+        let mut cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 4, spec);
+        cfg.plan_sample = 500;
+        let (report, _) = run_experiment(cfg, &reqs);
+        assert_eq!(report.records.len(), 150);
+    }
+
+    #[test]
+    fn shortest_first_dispatch_completes_all_requests() {
+        let spec = PolicySpec::resolve("sjf").unwrap();
+        let reqs = workload(150, 15.0, 23);
+        let mut cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 4, spec);
+        cfg.plan_sample = 500;
+        let (report, stats) = run_experiment(cfg, &reqs);
+        assert_eq!(report.records.len(), 150);
+        assert_eq!(stats.migrations, 0);
     }
 
     #[test]

@@ -1,7 +1,34 @@
 //! Scheduler policy taxonomy: CascadeInfer, its ablations, and the
 //! §6.1 baselines, expressed as orthogonal (layout, refinement,
-//! balancing) axes so the ablation figures (14–16) toggle exactly one
-//! axis at a time.
+//! balancing, dispatch) axes so the ablation figures (14–16) toggle
+//! exactly one axis at a time.
+//!
+//! # The open taxonomy: [`PolicySpec`]
+//!
+//! Every scheduling scenario is a first-class **`PolicySpec`** value —
+//! a bag of orthogonal axes the cluster branches on.  The event loop
+//! ([`super::driver`]), the arrival router ([`super::router`]), and the
+//! bid-ask handlers never compare against a scheduler *kind*; they read
+//! `spec.layout`, `spec.refine`, `spec.balance`, `spec.dispatch`, and
+//! `spec.gossip`.  Adding a new scenario therefore never touches the
+//! event loop: define a spec (or type a `custom:` string on the CLI)
+//! and run it.
+//!
+//! Specs are obtained three ways:
+//!
+//! 1. **Registry names** — [`PolicySpec::resolve`] maps every paper
+//!    scheduler/ablation name (and a few aliases) to its spec:
+//!    `cascade`, `vllm`, `sglang`, `llumnix`, `chain`, `nopipeline`,
+//!    `quantity`, `memory`, `interstage`, `rrintra`, `sjf`.
+//! 2. **Custom axis strings** — ad-hoc combinations the closed enum
+//!    could never express, e.g.
+//!    `custom:layout=planned,refine=memory,balance=rrintra` or
+//!    `custom:layout=flat,dispatch=shortestfirst,gossip=off`.
+//! 3. **The [`SchedulerKind`] compat shim** — the legacy closed enum
+//!    survives for existing call sites and converts losslessly via
+//!    `From<SchedulerKind> for PolicySpec`.
+
+use std::fmt;
 
 /// Stage layout policy (Fig. 14).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,10 +63,313 @@ pub enum BalancePolicy {
     InterStageOnly,
     /// Round-robin receiver choice (protocol ablation).
     RoundRobinIntra,
+    /// Llumnix-style periodic, length-agnostic rebalance: every 250 ms
+    /// move one sequence from the most- to the least-memory-loaded
+    /// instance (the §2.4 criticism, reproduced as a baseline).
+    PeriodicLengthAgnostic,
     Off,
 }
 
-/// Top-level scheduler selection.
+impl BalancePolicy {
+    /// Does this policy participate in the §4.4 bid-ask protocol
+    /// (inter-stage handover + per-step rebalance hooks)?
+    pub fn uses_bid_ask(&self) -> bool {
+        matches!(
+            self,
+            BalancePolicy::Full | BalancePolicy::InterStageOnly | BalancePolicy::RoundRobinIntra
+        )
+    }
+}
+
+/// Arrival dispatch policy — which instance an incoming request lands
+/// on.  This axis was previously hard-coded per `SchedulerKind` inside
+/// the router; opening it makes SJF-style and queue-separation
+/// scenarios (vllm-ltr, slice-level scheduling) pure spec changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Rotate across all instances (vLLM/SGLang-style balancer).
+    RoundRobin,
+    /// Least memory demand across all instances (Llumnix's
+    /// virtual-usage heuristic, simplified).
+    LeastLoaded,
+    /// §3.2: earliest stage covering the prompt length; within the
+    /// stage, least token load (or round-robin under the Fig. 16
+    /// `RoundRobinIntra` balance ablation).
+    StageRouted,
+    /// SJF-flavoured shortest-expected-wait dispatch (vllm-ltr's
+    /// length ranking collapsed to placement): route each arrival to
+    /// the instance with the least outstanding work — running tokens +
+    /// queued prompt tokens + in-flight migration arrivals — so short
+    /// requests never queue behind a long backlog when an emptier
+    /// instance exists.
+    ShortestFirst,
+}
+
+/// A first-class scheduling policy: the open, composable counterpart
+/// of the closed [`SchedulerKind`] enum.  See the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    /// Registry key (`"cascade"`, `"llumnix"`, …) or the canonical
+    /// `custom:` serialization for ad-hoc specs.
+    pub name: String,
+    pub layout: Layout,
+    pub refine: RefinePolicy,
+    pub balance: BalancePolicy,
+    pub dispatch: DispatchPolicy,
+    /// Exchange §3.2 LoadTracker gossip between instances.
+    pub gossip: bool,
+    /// Relative engine speed (1.0 = vLLM-class; Llumnix's newer engine
+    /// runs faster — §6.2 Fig. 8).  Seeds `ClusterConfig::engine_speed`.
+    pub engine_speed: f64,
+}
+
+/// Error resolving or parsing a policy name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyError(pub String);
+
+impl fmt::Display for PolicyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for PolicyError {}
+
+impl PolicySpec {
+    /// CascadeInfer: planned layout + adaptive refinement + full
+    /// bid-ask + stage-routed dispatch.
+    pub fn cascade() -> Self {
+        Self {
+            name: "cascade".into(),
+            layout: Layout::Planned,
+            refine: RefinePolicy::Adaptive,
+            balance: BalancePolicy::Full,
+            dispatch: DispatchPolicy::StageRouted,
+            gossip: true,
+            engine_speed: 1.0,
+        }
+    }
+
+    fn flat_rr(name: &str) -> Self {
+        Self {
+            name: name.into(),
+            layout: Layout::Flat,
+            refine: RefinePolicy::Off,
+            balance: BalancePolicy::Off,
+            dispatch: DispatchPolicy::RoundRobin,
+            gossip: false,
+            engine_speed: 1.0,
+        }
+    }
+
+    /// Canonical registry names, in presentation order.
+    pub fn names() -> &'static [&'static str] {
+        &[
+            "cascade",
+            "vllm",
+            "sglang",
+            "llumnix",
+            "chain",
+            "nopipeline",
+            "quantity",
+            "memory",
+            "interstage",
+            "rrintra",
+            "sjf",
+        ]
+    }
+
+    /// Resolve a scheduler name: a registry key (or alias), or a
+    /// `custom:` axis string.  Errors list the valid choices.
+    pub fn resolve(name: &str) -> Result<Self, PolicyError> {
+        let lower = name.trim().to_ascii_lowercase();
+        if let Some(body) = lower.strip_prefix("custom:") {
+            return Self::parse_custom(body);
+        }
+        let spec = match lower.as_str() {
+            "cascade" | "cascadeinfer" => Self::cascade(),
+            "vllm" | "rr" | "roundrobin" => Self::flat_rr("vllm"),
+            "sglang" => Self::flat_rr("sglang"),
+            "llumnix" => Self {
+                name: "llumnix".into(),
+                dispatch: DispatchPolicy::LeastLoaded,
+                balance: BalancePolicy::PeriodicLengthAgnostic,
+                // Llumnix's newer engine runs faster (§6.2 Fig. 8).
+                engine_speed: 1.25,
+                ..Self::flat_rr("llumnix")
+            },
+            "chain" => Self {
+                name: "chain".into(),
+                layout: Layout::Chain,
+                ..Self::cascade()
+            },
+            "nopipeline" | "flat" => Self {
+                name: "nopipeline".into(),
+                layout: Layout::Flat,
+                refine: RefinePolicy::Off,
+                ..Self::cascade()
+            },
+            "quantity" => Self {
+                name: "quantity".into(),
+                refine: RefinePolicy::Quantity,
+                ..Self::cascade()
+            },
+            "memory" => Self {
+                name: "memory".into(),
+                refine: RefinePolicy::Memory,
+                ..Self::cascade()
+            },
+            "interstage" => Self {
+                name: "interstage".into(),
+                balance: BalancePolicy::InterStageOnly,
+                ..Self::cascade()
+            },
+            "rrintra" => Self {
+                name: "rrintra".into(),
+                balance: BalancePolicy::RoundRobinIntra,
+                ..Self::cascade()
+            },
+            // Length-ranked SJF-style dispatch over flat instances
+            // (vllm-ltr, "Efficient LLM Scheduling by Learning to
+            // Rank") — a scenario the closed enum could not express.
+            "sjf" | "shortestfirst" => Self {
+                name: "sjf".into(),
+                dispatch: DispatchPolicy::ShortestFirst,
+                ..Self::flat_rr("sjf")
+            },
+            _ => {
+                return Err(PolicyError(format!(
+                    "unknown scheduler `{name}`; valid: {}, or custom:layout=..,refine=..,\
+                     balance=..,dispatch=..[,gossip=on|off][,speed=F]",
+                    Self::names().join("|")
+                )))
+            }
+        };
+        Ok(spec)
+    }
+
+    /// Parse the body of a `custom:` spec: comma-separated `axis=value`
+    /// pairs.  Unspecified axes default to CascadeInfer's. The spec's
+    /// `name` is the canonical serialization, so `resolve(spec.name)`
+    /// round-trips.
+    fn parse_custom(body: &str) -> Result<Self, PolicyError> {
+        let mut spec = Self::cascade();
+        if body.trim().is_empty() {
+            return Err(PolicyError("custom: spec needs at least one axis=value pair".into()));
+        }
+        for pair in body.split(',') {
+            let pair = pair.trim();
+            let (key, value) = pair.split_once('=').ok_or_else(|| {
+                PolicyError(format!("custom axis `{pair}` is not of the form axis=value"))
+            })?;
+            let (key, value) = (key.trim(), value.trim());
+            let bad = |valid: &str| {
+                PolicyError(format!("unknown {key} value `{value}`; valid: {valid}"))
+            };
+            match key {
+                "layout" => {
+                    spec.layout = match value {
+                        "planned" => Layout::Planned,
+                        "chain" => Layout::Chain,
+                        "flat" => Layout::Flat,
+                        _ => return Err(bad("planned|chain|flat")),
+                    }
+                }
+                "refine" => {
+                    spec.refine = match value {
+                        "adaptive" => RefinePolicy::Adaptive,
+                        "quantity" => RefinePolicy::Quantity,
+                        "memory" => RefinePolicy::Memory,
+                        "off" => RefinePolicy::Off,
+                        _ => return Err(bad("adaptive|quantity|memory|off")),
+                    }
+                }
+                "balance" => {
+                    spec.balance = match value {
+                        "full" => BalancePolicy::Full,
+                        "interstage" => BalancePolicy::InterStageOnly,
+                        "rrintra" => BalancePolicy::RoundRobinIntra,
+                        "periodic" => BalancePolicy::PeriodicLengthAgnostic,
+                        "off" => BalancePolicy::Off,
+                        _ => return Err(bad("full|interstage|rrintra|periodic|off")),
+                    }
+                }
+                "dispatch" => {
+                    spec.dispatch = match value {
+                        "roundrobin" | "rr" => DispatchPolicy::RoundRobin,
+                        "leastloaded" => DispatchPolicy::LeastLoaded,
+                        "stagerouted" => DispatchPolicy::StageRouted,
+                        "shortestfirst" | "sjf" => DispatchPolicy::ShortestFirst,
+                        _ => return Err(bad("roundrobin|leastloaded|stagerouted|shortestfirst")),
+                    }
+                }
+                "gossip" => {
+                    spec.gossip = match value {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        _ => return Err(bad("on|off")),
+                    }
+                }
+                "speed" => {
+                    spec.engine_speed = value.parse::<f64>().ok().filter(|s| *s > 0.0).ok_or_else(
+                        || PolicyError(format!("speed `{value}` is not a positive number")),
+                    )?;
+                }
+                _ => {
+                    return Err(PolicyError(format!(
+                        "unknown custom axis `{key}`; valid: \
+                         layout|refine|balance|dispatch|gossip|speed"
+                    )))
+                }
+            }
+        }
+        spec.name = spec.custom_name();
+        Ok(spec)
+    }
+
+    /// Canonical `custom:` serialization of this spec's axes.
+    pub fn custom_name(&self) -> String {
+        let layout = match self.layout {
+            Layout::Planned => "planned",
+            Layout::Chain => "chain",
+            Layout::Flat => "flat",
+        };
+        let refine = match self.refine {
+            RefinePolicy::Adaptive => "adaptive",
+            RefinePolicy::Quantity => "quantity",
+            RefinePolicy::Memory => "memory",
+            RefinePolicy::Off => "off",
+        };
+        let balance = match self.balance {
+            BalancePolicy::Full => "full",
+            BalancePolicy::InterStageOnly => "interstage",
+            BalancePolicy::RoundRobinIntra => "rrintra",
+            BalancePolicy::PeriodicLengthAgnostic => "periodic",
+            BalancePolicy::Off => "off",
+        };
+        let dispatch = match self.dispatch {
+            DispatchPolicy::RoundRobin => "roundrobin",
+            DispatchPolicy::LeastLoaded => "leastloaded",
+            DispatchPolicy::StageRouted => "stagerouted",
+            DispatchPolicy::ShortestFirst => "shortestfirst",
+        };
+        let gossip = if self.gossip { "on" } else { "off" };
+        let mut s = format!(
+            "custom:layout={layout},refine={refine},balance={balance},\
+             dispatch={dispatch},gossip={gossip}"
+        );
+        if self.engine_speed != 1.0 {
+            s.push_str(&format!(",speed={}", self.engine_speed));
+        }
+        s
+    }
+}
+
+/// Top-level scheduler selection — the **legacy closed enum**, kept as
+/// a thin compatibility shim.  Each variant maps into the registry via
+/// [`SchedulerKind::spec`] / `From<SchedulerKind> for PolicySpec`; all
+/// cluster behavior is derived from the spec's axes, never from the
+/// variant itself.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulerKind {
     /// CascadeInfer: planned layout + adaptive refinement + full bid-ask.
@@ -66,47 +396,51 @@ pub enum SchedulerKind {
 }
 
 impl SchedulerKind {
-    pub fn layout(&self) -> Layout {
+    /// Registry key this legacy variant maps to.
+    pub fn registry_name(&self) -> &'static str {
         match self {
-            SchedulerKind::Chain => Layout::Chain,
-            SchedulerKind::NoPipeline
-            | SchedulerKind::RoundRobin
-            | SchedulerKind::SgLangLike
-            | SchedulerKind::LlumnixLike => Layout::Flat,
-            _ => Layout::Planned,
+            SchedulerKind::Cascade => "cascade",
+            SchedulerKind::RoundRobin => "vllm",
+            SchedulerKind::SgLangLike => "sglang",
+            SchedulerKind::LlumnixLike => "llumnix",
+            SchedulerKind::Chain => "chain",
+            SchedulerKind::NoPipeline => "nopipeline",
+            SchedulerKind::CascadeQuantityRefine => "quantity",
+            SchedulerKind::CascadeMemoryRefine => "memory",
+            SchedulerKind::CascadeInterStageOnly => "interstage",
+            SchedulerKind::CascadeRoundRobinIntra => "rrintra",
         }
+    }
+
+    /// The full spec for this variant.
+    ///
+    /// `engine_speed` is normalised to 1.0 — historically
+    /// `ClusterConfig::new` never set a speed for any kind and callers
+    /// (benches, figures) applied their own, so the shim preserves that
+    /// exactly.  Resolving the registry *name* instead (`llumnix`)
+    /// yields the speed the CLI always applied (1.25).
+    pub fn spec(&self) -> PolicySpec {
+        let mut spec = PolicySpec::resolve(self.registry_name())
+            .expect("legacy kinds are always registered");
+        spec.engine_speed = 1.0;
+        spec
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.spec().layout
     }
 
     pub fn refine_policy(&self) -> RefinePolicy {
-        match self {
-            SchedulerKind::Cascade
-            | SchedulerKind::Chain
-            | SchedulerKind::CascadeInterStageOnly
-            | SchedulerKind::CascadeRoundRobinIntra => RefinePolicy::Adaptive,
-            SchedulerKind::CascadeQuantityRefine => RefinePolicy::Quantity,
-            SchedulerKind::CascadeMemoryRefine => RefinePolicy::Memory,
-            _ => RefinePolicy::Off,
-        }
+        self.spec().refine
     }
 
     pub fn balance_policy(&self) -> BalancePolicy {
-        match self {
-            SchedulerKind::Cascade
-            | SchedulerKind::Chain
-            | SchedulerKind::NoPipeline
-            | SchedulerKind::CascadeQuantityRefine
-            | SchedulerKind::CascadeMemoryRefine => BalancePolicy::Full,
-            SchedulerKind::CascadeInterStageOnly => BalancePolicy::InterStageOnly,
-            SchedulerKind::CascadeRoundRobinIntra => BalancePolicy::RoundRobinIntra,
-            SchedulerKind::RoundRobin | SchedulerKind::SgLangLike | SchedulerKind::LlumnixLike => {
-                BalancePolicy::Off
-            }
-        }
+        self.spec().balance
     }
 
     /// Does this policy exchange LoadTracker gossip?
     pub fn uses_gossip(&self) -> bool {
-        self.is_cascade()
+        self.spec().gossip
     }
 
     /// Any CascadeInfer variant (incl. ablations).
@@ -131,6 +465,28 @@ impl SchedulerKind {
             SchedulerKind::CascadeRoundRobinIntra => "RRIntra",
         }
     }
+
+    /// All legacy variants (compat tests iterate this).
+    pub fn all() -> [SchedulerKind; 10] {
+        [
+            SchedulerKind::Cascade,
+            SchedulerKind::RoundRobin,
+            SchedulerKind::SgLangLike,
+            SchedulerKind::LlumnixLike,
+            SchedulerKind::Chain,
+            SchedulerKind::NoPipeline,
+            SchedulerKind::CascadeQuantityRefine,
+            SchedulerKind::CascadeMemoryRefine,
+            SchedulerKind::CascadeInterStageOnly,
+            SchedulerKind::CascadeRoundRobinIntra,
+        ]
+    }
+}
+
+impl From<SchedulerKind> for PolicySpec {
+    fn from(k: SchedulerKind) -> Self {
+        k.spec()
+    }
 }
 
 #[cfg(test)]
@@ -145,6 +501,7 @@ mod tests {
         assert_eq!(k.balance_policy(), BalancePolicy::Full);
         assert!(k.is_cascade());
         assert!(k.uses_gossip());
+        assert_eq!(k.spec().dispatch, DispatchPolicy::StageRouted);
     }
 
     #[test]
@@ -152,10 +509,16 @@ mod tests {
         for k in [SchedulerKind::RoundRobin, SchedulerKind::SgLangLike, SchedulerKind::LlumnixLike]
         {
             assert_eq!(k.layout(), Layout::Flat);
-            assert_eq!(k.balance_policy(), BalancePolicy::Off);
+            assert!(!k.balance_policy().uses_bid_ask());
             assert!(!k.uses_gossip());
             assert!(!k.is_cascade());
         }
+        assert_eq!(SchedulerKind::RoundRobin.balance_policy(), BalancePolicy::Off);
+        assert_eq!(
+            SchedulerKind::LlumnixLike.balance_policy(),
+            BalancePolicy::PeriodicLengthAgnostic
+        );
+        assert_eq!(SchedulerKind::LlumnixLike.spec().dispatch, DispatchPolicy::LeastLoaded);
     }
 
     #[test]
@@ -177,21 +540,88 @@ mod tests {
 
     #[test]
     fn names_unique() {
-        let all = [
-            SchedulerKind::Cascade,
-            SchedulerKind::RoundRobin,
-            SchedulerKind::SgLangLike,
-            SchedulerKind::LlumnixLike,
-            SchedulerKind::Chain,
-            SchedulerKind::NoPipeline,
-            SchedulerKind::CascadeQuantityRefine,
-            SchedulerKind::CascadeMemoryRefine,
-            SchedulerKind::CascadeInterStageOnly,
-            SchedulerKind::CascadeRoundRobinIntra,
-        ];
+        let all = SchedulerKind::all();
         let mut names: Vec<&str> = all.iter().map(|k| k.name()).collect();
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), all.len());
+        let mut keys: Vec<&str> = all.iter().map(|k| k.registry_name()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), all.len());
+    }
+
+    #[test]
+    fn registry_round_trips_every_name() {
+        for &name in PolicySpec::names() {
+            let spec = PolicySpec::resolve(name).unwrap();
+            assert_eq!(spec.name, name, "canonical name must round-trip");
+            assert_eq!(PolicySpec::resolve(&spec.name).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn legacy_kinds_map_into_registry() {
+        for k in SchedulerKind::all() {
+            let via_registry = PolicySpec::resolve(k.registry_name()).unwrap();
+            let mut shim = k.spec();
+            // The shim normalises speed (see `SchedulerKind::spec`);
+            // all other axes must agree with the registry.
+            shim.engine_speed = via_registry.engine_speed;
+            assert_eq!(shim, via_registry, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!(PolicySpec::resolve("RR").unwrap().name, "vllm");
+        assert_eq!(PolicySpec::resolve("CascadeInfer").unwrap().name, "cascade");
+        assert_eq!(PolicySpec::resolve("flat").unwrap().name, "nopipeline");
+        assert_eq!(PolicySpec::resolve("shortestfirst").unwrap().name, "sjf");
+        assert!(PolicySpec::resolve("bogus").is_err());
+    }
+
+    #[test]
+    fn custom_spec_parses_and_round_trips() {
+        let spec =
+            PolicySpec::resolve("custom:layout=planned,refine=memory,balance=rrintra").unwrap();
+        assert_eq!(spec.layout, Layout::Planned);
+        assert_eq!(spec.refine, RefinePolicy::Memory);
+        assert_eq!(spec.balance, BalancePolicy::RoundRobinIntra);
+        assert_eq!(spec.dispatch, DispatchPolicy::StageRouted); // default
+        assert!(spec.gossip);
+        // name is the canonical serialization and resolves back to the
+        // identical spec.
+        assert_eq!(PolicySpec::resolve(&spec.name).unwrap(), spec);
+    }
+
+    #[test]
+    fn custom_spec_speed_and_gossip() {
+        let spec = PolicySpec::resolve(
+            "custom:layout=flat,dispatch=sjf,gossip=off,speed=1.25,refine=off,balance=off",
+        )
+        .unwrap();
+        assert_eq!(spec.dispatch, DispatchPolicy::ShortestFirst);
+        assert!(!spec.gossip);
+        assert_eq!(spec.engine_speed, 1.25);
+        assert_eq!(PolicySpec::resolve(&spec.name).unwrap(), spec);
+    }
+
+    #[test]
+    fn malformed_custom_specs_are_rejected() {
+        for bad in [
+            "custom:",
+            "custom:layout",
+            "custom:layout=weird",
+            "custom:refine=speedy",
+            "custom:balance=maybe",
+            "custom:dispatch=psychic",
+            "custom:gossip=sometimes",
+            "custom:speed=fast",
+            "custom:speed=-1.0",
+            "custom:engine=v8",
+        ] {
+            assert!(PolicySpec::resolve(bad).is_err(), "`{bad}` should be rejected");
+        }
     }
 }

@@ -1,17 +1,19 @@
 //! Request routing & admission — the "router" layer of the cluster
 //! split.
 //!
-//! Decides which instance an arriving request lands on under each
-//! scheduler policy (§3.2 for CascadeInfer: earliest stage covering the
-//! prompt length, least-loaded member within it), and owns the shared
-//! round-robin counter that both RR dispatch and the Fig. 16
+//! Decides which instance an arriving request lands on.  The choice is
+//! driven purely by the spec's [`DispatchPolicy`] axis (plus the
+//! balance axis for the Fig. 16 round-robin-intra ablation) — the
+//! router never inspects a scheduler *kind*, so new dispatch scenarios
+//! are pure [`crate::cluster::PolicySpec`] additions.  The router also
+//! owns the shared round-robin counter that both RR dispatch and the
 //! round-robin-intra ablation rotate on.  Every load probe used here
 //! ([`crate::engine::Engine::token_load`],
 //! [`crate::coordinator::MigrationManager::inbound_tokens`]) is an O(1)
 //! running aggregate, so routing costs O(stage members) per arrival
 //! rather than O(stage members x batch).
 
-use crate::cluster::policy::{BalancePolicy, SchedulerKind};
+use crate::cluster::policy::{BalancePolicy, DispatchPolicy, PolicySpec};
 use crate::coordinator::MigrationManager;
 use crate::workload::Request;
 use crate::{InstanceId, Time, Tokens};
@@ -48,21 +50,20 @@ impl Router {
         v
     }
 
-    /// Pick the target instance for an arrival.
+    /// Pick the target instance for an arrival, per the spec's
+    /// dispatch axis.
     pub fn route(
         &mut self,
-        kind: SchedulerKind,
+        spec: &PolicySpec,
         req: &Request,
         stages: &[Vec<InstanceId>],
         ranges: &[(Tokens, Tokens)],
         instances: &[InstanceState],
         migration: &MigrationManager,
     ) -> InstanceId {
-        match kind {
-            SchedulerKind::RoundRobin | SchedulerKind::SgLangLike => {
-                self.next_rr() % instances.len()
-            }
-            SchedulerKind::LlumnixLike => {
+        match spec.dispatch {
+            DispatchPolicy::RoundRobin => self.next_rr() % instances.len(),
+            DispatchPolicy::LeastLoaded => {
                 // Load-aware, length-agnostic dispatch: least memory
                 // demand (Llumnix's virtual-usage heuristic, simplified).
                 (0..instances.len())
@@ -74,13 +75,26 @@ impl Router {
                     })
                     .expect("cluster has instances")
             }
-            _ => {
+            DispatchPolicy::ShortestFirst => {
+                // SJF-flavoured shortest-expected-wait: least total
+                // outstanding work — `token_load` counts running *and*
+                // queued tokens, plus in-flight migration arrivals;
+                // first index on ties — deterministic.  Short requests
+                // never queue behind a long backlog when an emptier
+                // instance exists.
+                (0..instances.len())
+                    .min_by_key(|&i| {
+                        instances[i].engine.token_load() + migration.inbound_tokens(i)
+                    })
+                    .expect("cluster has instances")
+            }
+            DispatchPolicy::StageRouted => {
                 // CascadeInfer: earliest stage covering the prompt
                 // length (§3.2); within the stage, least-loaded member
                 // — except under the Fig. 16 round-robin ablation,
                 // which dispatches regardless of instance load.
                 let s = stage_for_len(ranges, req.input_len);
-                if kind.balance_policy() == BalancePolicy::RoundRobinIntra {
+                if spec.balance == BalancePolicy::RoundRobinIntra {
                     stages[s][self.next_rr() % stages[s].len()]
                 } else {
                     // Counting in-flight migration arrivals prevents the
@@ -98,11 +112,11 @@ impl Router {
 }
 
 impl Cluster {
-    /// Admission: route the arrival per the scheduler policy, submit it
-    /// to the chosen engine, and kick that engine if idle.
+    /// Admission: route the arrival per the policy spec, submit it to
+    /// the chosen engine, and kick that engine if idle.
     pub(super) fn on_arrival(&mut self, now: Time, req: Request) {
         let target = self.router.route(
-            self.cfg.scheduler,
+            &self.cfg.policy,
             &req,
             &self.stages,
             &self.ranges,

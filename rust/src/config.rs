@@ -222,7 +222,10 @@ fn split_top_level(s: &str) -> Vec<&str> {
     out
 }
 
-/// Typed experiment configuration assembled from a [`Config`].
+/// Typed experiment configuration assembled from a [`Config`] —
+/// the `[experiment]` section of a config file.  Routed into the
+/// builder via [`crate::experiment::Experiment::from_config`]; the
+/// `sim` subcommand's flags override individual fields.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     pub model: String,
@@ -231,7 +234,11 @@ pub struct ExperimentConfig {
     pub rate: f64,
     pub n_requests: usize,
     pub seed: u64,
+    /// Registry name or `custom:` axis string
+    /// (see [`crate::cluster::PolicySpec::resolve`]).
     pub scheduler: String,
+    /// Workload name (see [`crate::workload::WorkloadSpec::parse`]).
+    pub workload: String,
 }
 
 impl Default for ExperimentConfig {
@@ -244,6 +251,7 @@ impl Default for ExperimentConfig {
             n_requests: 2000,
             seed: 42,
             scheduler: "cascade".into(),
+            workload: "sharegpt".into(),
         }
     }
 }
@@ -259,6 +267,7 @@ impl ExperimentConfig {
             n_requests: cfg.get_int("experiment", "requests", d.n_requests as i64) as usize,
             seed: cfg.get_int("experiment", "seed", d.seed as i64) as u64,
             scheduler: cfg.get_str("experiment", "scheduler", &d.scheduler),
+            workload: cfg.get_str("experiment", "workload", &d.workload),
         }
     }
 }

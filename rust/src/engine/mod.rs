@@ -73,10 +73,22 @@ pub struct EngineConfig {
     pub max_batch: usize,
     /// Max new tokens per prefill iteration (chunked prefill budget).
     pub max_batched_tokens: Tokens,
-    /// KV pool size in tokens.
-    pub kv_capacity_tokens: Tokens,
+    /// KV pool size in tokens.  `None` means "derive it": the cluster
+    /// computes the capacity from the GPU memory budget, and a
+    /// standalone [`Engine`] falls back to
+    /// [`EngineConfig::STANDALONE_KV_CAPACITY`].  An explicit
+    /// `Some(v)` is always honoured — there is no sentinel value that
+    /// silently re-derives (the old code compared against the default,
+    /// so explicitly passing the default was indistinguishable from
+    /// not setting it).
+    pub kv_capacity_tokens: Option<Tokens>,
     /// Paged-allocator block size.
     pub block_size: Tokens,
+}
+
+impl EngineConfig {
+    /// KV capacity a standalone engine assumes when none is set.
+    pub const STANDALONE_KV_CAPACITY: Tokens = 1_000_000;
 }
 
 impl Default for EngineConfig {
@@ -84,7 +96,7 @@ impl Default for EngineConfig {
         Self {
             max_batch: 1024,
             max_batched_tokens: 8192,
-            kv_capacity_tokens: 1_000_000,
+            kv_capacity_tokens: None,
             block_size: kvcache::DEFAULT_BLOCK_SIZE,
         }
     }
@@ -195,7 +207,10 @@ pub struct Engine<B: ExecBackend> {
 
 impl<B: ExecBackend> Engine<B> {
     pub fn new(cfg: EngineConfig, backend: B) -> Self {
-        let kv = KvCache::new(cfg.kv_capacity_tokens, cfg.block_size);
+        let kv = KvCache::new(
+            cfg.kv_capacity_tokens.unwrap_or(EngineConfig::STANDALONE_KV_CAPACITY),
+            cfg.block_size,
+        );
         Self {
             cfg,
             backend,
@@ -597,7 +612,7 @@ mod tests {
 
     #[test]
     fn memory_bounded_admission() {
-        let cfg = EngineConfig { kv_capacity_tokens: 160, block_size: 16, ..Default::default() };
+        let cfg = EngineConfig { kv_capacity_tokens: Some(160), block_size: 16, ..Default::default() };
         let mut e = Engine::new(cfg, FakeBackend);
         e.submit(req(1, 0.0, 100, 2));
         e.submit(req(2, 0.0, 100, 2));
@@ -612,7 +627,7 @@ mod tests {
     fn preemption_on_decode_overflow() {
         // Two seqs fit initially but their decode growth overflows; the
         // later one must be preempted and still complete eventually.
-        let cfg = EngineConfig { kv_capacity_tokens: 96, block_size: 16, ..Default::default() };
+        let cfg = EngineConfig { kv_capacity_tokens: Some(96), block_size: 16, ..Default::default() };
         let mut e = Engine::new(cfg, FakeBackend);
         e.submit(req(1, 0.0, 30, 40));
         e.submit(req(2, 0.0, 30, 40));
@@ -662,7 +677,7 @@ mod tests {
 
     #[test]
     fn inject_fails_when_kv_full() {
-        let cfg = EngineConfig { kv_capacity_tokens: 32, block_size: 16, ..Default::default() };
+        let cfg = EngineConfig { kv_capacity_tokens: Some(32), block_size: 16, ..Default::default() };
         let mut e = Engine::new(cfg, FakeBackend);
         e.submit(req(1, 0.0, 32, 5));
         e.step(0.0);
@@ -697,7 +712,7 @@ mod tests {
             let cfg = EngineConfig {
                 max_batch: 8,
                 max_batched_tokens: 256,
-                kv_capacity_tokens: 2048,
+                kv_capacity_tokens: Some(2048),
                 block_size: 16,
             };
             let mut e = Engine::new(cfg, FakeBackend);

@@ -1,0 +1,482 @@
+//! The experiment builder — the single construction path for every
+//! simulated run.
+//!
+//! Before this module, each consumer (the `sim` CLI, the figure
+//! benches, the examples, the integration tests) hand-assembled its
+//! own `(ClusterConfig, Vec<Request>)` pair, each with its own name
+//! resolution, defaults, and engine-speed conventions.  The builder
+//! unifies them:
+//!
+//! ```no_run
+//! use cascade_infer::experiment::Experiment;
+//! use cascade_infer::workload::WorkloadSpec;
+//!
+//! let (report, stats) = Experiment::builder()
+//!     .model("Llama-3.2-3B")
+//!     .gpu("H20")
+//!     .instances(8)
+//!     .scheduler("cascade")           // registry name or custom:...
+//!     .workload(WorkloadSpec::HeavyTail)
+//!     .rate(16.0)
+//!     .requests(500)
+//!     .seed(42)
+//!     .build()
+//!     .unwrap()
+//!     .run();
+//! println!("mean TTFT {:.4}s, {} migrations", report.mean_ttft(), stats.migrations);
+//! ```
+//!
+//! Everything is resolved at [`ExperimentBuilder::build`]: model/GPU
+//! names become profiles (unknown names are hard errors listing the
+//! valid choices — never a silent fallback), scheduler strings go
+//! through the [`PolicySpec`] registry (so `custom:` axis combinations
+//! work anywhere a name does), and the [`WorkloadSpec`] materialises
+//! the request trace.  The resulting [`Experiment`] is a plain
+//! `(ClusterConfig, Vec<Request>)` bundle; [`Experiment::run`] feeds
+//! it to [`crate::cluster::run_experiment`].
+//!
+//! Construction from a parsed config file goes through
+//! [`Experiment::from_config`]; CLI flags then override individual
+//! fields before `build()`.
+
+use crate::cluster::{run_experiment, ClusterConfig, PolicySpec};
+use crate::config::ExperimentConfig;
+use crate::coordinator::plan::Pipeline;
+use crate::gpu::GpuProfile;
+use crate::metrics::Report;
+use crate::models::{self, ModelProfile};
+use crate::workload::{Request, WorkloadSpec};
+use crate::{Time, Tokens};
+
+use std::fmt;
+
+/// Error building an experiment.  Every variant carries a
+/// human-readable message that lists the valid choices.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExperimentError {
+    UnknownModel(String),
+    UnknownGpu(String),
+    Policy(String),
+    Workload(String),
+    Invalid(String),
+}
+
+impl fmt::Display for ExperimentError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExperimentError::UnknownModel(m) => write!(f, "{m}"),
+            ExperimentError::UnknownGpu(m) => write!(f, "{m}"),
+            ExperimentError::Policy(m) => write!(f, "{m}"),
+            ExperimentError::Workload(m) => write!(f, "{m}"),
+            ExperimentError::Invalid(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for ExperimentError {}
+
+/// Resolve a model name, with an error listing the zoo (shared by the
+/// builder and the `plan`/`fit` subcommands so the message never
+/// drifts between the two).
+pub fn resolve_model(name: &str) -> Result<ModelProfile, ExperimentError> {
+    models::by_name(name).ok_or_else(|| {
+        let names: Vec<&str> = models::paper_zoo().iter().map(|m| m.name).collect();
+        ExperimentError::UnknownModel(format!(
+            "unknown model `{name}`; valid: {} (or Llama-70B-TP2/TP4)",
+            names.join(", ")
+        ))
+    })
+}
+
+/// Resolve a GPU name, with an error listing the profiles.
+pub fn resolve_gpu(name: &str) -> Result<GpuProfile, ExperimentError> {
+    GpuProfile::by_name(name).ok_or_else(|| {
+        ExperimentError::UnknownGpu(format!(
+            "unknown gpu `{name}`; valid: {}",
+            GpuProfile::NAMES.join("|")
+        ))
+    })
+}
+
+/// A fully-resolved experiment: cluster configuration + request trace.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub cfg: ClusterConfig,
+    pub requests: Vec<Request>,
+}
+
+impl Experiment {
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder::default()
+    }
+
+    /// Seed a builder from a parsed `[experiment]` config section.
+    /// Individual setters (CLI flags) can still override before
+    /// `build()`.
+    pub fn from_config(cfg: &ExperimentConfig) -> ExperimentBuilder {
+        Experiment::builder()
+            .model(&cfg.model)
+            .gpu(&cfg.gpu)
+            .instances(cfg.n_instances)
+            .rate(cfg.rate)
+            .requests(cfg.n_requests)
+            .seed(cfg.seed)
+            .scheduler(&cfg.scheduler)
+            .workload_name(&cfg.workload)
+    }
+
+    /// Run the experiment end to end.
+    pub fn run(self) -> (Report, crate::cluster::RunStats) {
+        run_experiment(self.cfg, &self.requests)
+    }
+}
+
+/// Builder for [`Experiment`].  All fields optional; defaults mirror
+/// the historical `sim` subcommand (Llama-3.2-3B on H20, 16 instances,
+/// 8 req/s, 2000 requests, seed 42, ShareGPT workload, CascadeInfer).
+#[derive(Debug, Clone)]
+pub struct ExperimentBuilder {
+    model_name: String,
+    model_profile: Option<ModelProfile>,
+    gpu_name: String,
+    gpu_profile: Option<GpuProfile>,
+    instances: usize,
+    scheduler_name: String,
+    policy: Option<PolicySpec>,
+    rate: f64,
+    requests: usize,
+    seed: u64,
+    workload_name: Option<String>,
+    workload: Option<WorkloadSpec>,
+    trace: Option<Vec<Request>>,
+    engine_speed: Option<f64>,
+    kv_capacity: Option<Tokens>,
+    plan_sample: Option<usize>,
+    refine_interval: Option<Time>,
+    replan_interval: Option<Time>,
+    forced_pipeline: Option<Pipeline>,
+}
+
+impl Default for ExperimentBuilder {
+    fn default() -> Self {
+        Self {
+            model_name: "Llama-3.2-3B".into(),
+            model_profile: None,
+            gpu_name: "H20".into(),
+            gpu_profile: None,
+            instances: 16,
+            scheduler_name: "cascade".into(),
+            policy: None,
+            rate: 8.0,
+            requests: 2000,
+            seed: 42,
+            workload_name: None,
+            workload: None,
+            trace: None,
+            engine_speed: None,
+            kv_capacity: None,
+            plan_sample: None,
+            refine_interval: None,
+            replan_interval: None,
+            forced_pipeline: None,
+        }
+    }
+}
+
+impl ExperimentBuilder {
+    /// Model by zoo name (resolved at `build`).
+    pub fn model(mut self, name: &str) -> Self {
+        self.model_name = name.to_string();
+        self.model_profile = None;
+        self
+    }
+
+    /// Model by explicit profile (skips name resolution).
+    pub fn model_profile(mut self, m: ModelProfile) -> Self {
+        self.model_profile = Some(m);
+        self
+    }
+
+    /// GPU by name (`H20`/`L40`/`H100`, resolved at `build`).
+    pub fn gpu(mut self, name: &str) -> Self {
+        self.gpu_name = name.to_string();
+        self.gpu_profile = None;
+        self
+    }
+
+    /// GPU by explicit profile.
+    pub fn gpu_profile(mut self, g: GpuProfile) -> Self {
+        self.gpu_profile = Some(g);
+        self
+    }
+
+    pub fn instances(mut self, n: usize) -> Self {
+        self.instances = n;
+        self
+    }
+
+    /// Scheduler by registry name or `custom:` axis string (resolved
+    /// at `build`).
+    pub fn scheduler(mut self, name: &str) -> Self {
+        self.scheduler_name = name.to_string();
+        self.policy = None;
+        self
+    }
+
+    /// Scheduler by explicit spec.
+    pub fn policy(mut self, spec: PolicySpec) -> Self {
+        self.policy = Some(spec);
+        self
+    }
+
+    pub fn rate(mut self, r: f64) -> Self {
+        self.rate = r;
+        self
+    }
+
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Workload by spec.
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.workload = Some(w);
+        self.workload_name = None;
+        self
+    }
+
+    /// Workload by CLI/config name (`sharegpt`, `heavytail`,
+    /// `uniformshort`, `mix`, `bursty`, `trace:FILE`).
+    pub fn workload_name(mut self, name: &str) -> Self {
+        self.workload_name = Some(name.to_string());
+        self.workload = None;
+        self
+    }
+
+    /// Explicit request trace (bypasses workload generation — used by
+    /// tests and benches that share one trace across systems).
+    pub fn trace(mut self, reqs: Vec<Request>) -> Self {
+        self.trace = Some(reqs);
+        self
+    }
+
+    /// Override the policy's engine speed (e.g. benches modelling a
+    /// faster runtime).
+    pub fn engine_speed(mut self, s: f64) -> Self {
+        self.engine_speed = Some(s);
+        self
+    }
+
+    /// Explicit per-instance KV capacity in tokens (default: derived
+    /// from the GPU memory budget).
+    pub fn kv_capacity(mut self, tokens: Tokens) -> Self {
+        self.kv_capacity = Some(tokens);
+        self
+    }
+
+    /// How many head-of-trace requests feed the offline planner.
+    pub fn plan_sample(mut self, n: usize) -> Self {
+        self.plan_sample = Some(n);
+        self
+    }
+
+    /// Boundary-refinement interval in seconds (0 disables).
+    pub fn refine_interval(mut self, t: Time) -> Self {
+        self.refine_interval = Some(t);
+        self
+    }
+
+    /// Full re-planning interval in seconds (0 disables).
+    pub fn replan_interval(mut self, t: Time) -> Self {
+        self.replan_interval = Some(t);
+        self
+    }
+
+    /// Bypass planning with an explicit layout (ablation experiments).
+    pub fn forced_pipeline(mut self, p: Pipeline) -> Self {
+        self.forced_pipeline = Some(p);
+        self
+    }
+
+    /// Resolve every name, materialise the trace, and assemble the
+    /// cluster configuration.
+    pub fn build(self) -> Result<Experiment, ExperimentError> {
+        if self.instances == 0 {
+            return Err(ExperimentError::Invalid("instances must be >= 1".into()));
+        }
+        let model = match self.model_profile {
+            Some(m) => m,
+            None => resolve_model(&self.model_name)?,
+        };
+        let gpu = match self.gpu_profile {
+            Some(g) => g,
+            None => resolve_gpu(&self.gpu_name)?,
+        };
+        let policy = match self.policy {
+            Some(p) => p,
+            None => PolicySpec::resolve(&self.scheduler_name)
+                .map_err(|e| ExperimentError::Policy(e.to_string()))?,
+        };
+        let requests = match self.trace {
+            Some(t) => t,
+            None => {
+                let spec = match (&self.workload, &self.workload_name) {
+                    (Some(w), _) => w.clone(),
+                    (None, Some(name)) => {
+                        WorkloadSpec::parse(name).map_err(ExperimentError::Workload)?
+                    }
+                    (None, None) => WorkloadSpec::default(),
+                };
+                // CSV traces carry their own arrivals; everything else
+                // draws Poisson gaps and needs a positive rate (a
+                // non-positive rate would otherwise panic deep inside
+                // the generator instead of surfacing as a CLI error).
+                if !matches!(spec, WorkloadSpec::CsvTrace(_))
+                    && (self.rate.is_nan() || self.rate <= 0.0)
+                {
+                    return Err(ExperimentError::Invalid(format!(
+                        "rate must be > 0 (got {})",
+                        self.rate
+                    )));
+                }
+                spec.generate(self.rate, self.requests, self.seed).map_err(|e| {
+                    ExperimentError::Workload(format!("workload generation failed: {e}"))
+                })?
+            }
+        };
+        if requests.is_empty() {
+            return Err(ExperimentError::Invalid("experiment has zero requests".into()));
+        }
+
+        let mut cfg = ClusterConfig::new(gpu, model, self.instances, policy);
+        cfg.seed = self.seed;
+        if let Some(s) = self.engine_speed {
+            cfg.engine_speed = s;
+        }
+        if let Some(kv) = self.kv_capacity {
+            cfg.engine.kv_capacity_tokens = Some(kv);
+        }
+        if let Some(n) = self.plan_sample {
+            cfg.plan_sample = n;
+        }
+        if let Some(t) = self.refine_interval {
+            cfg.refine_interval = t;
+        }
+        if let Some(t) = self.replan_interval {
+            cfg.replan_interval = t;
+        }
+        if let Some(p) = self.forced_pipeline {
+            cfg.forced_pipeline = Some(p);
+        }
+        Ok(Experiment { cfg, requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{BalancePolicy, DispatchPolicy, Layout, RefinePolicy};
+
+    #[test]
+    fn defaults_build() {
+        let exp = Experiment::builder().requests(10).build().unwrap();
+        assert_eq!(exp.cfg.n_instances, 16);
+        assert_eq!(exp.cfg.policy.name, "cascade");
+        assert_eq!(exp.requests.len(), 10);
+    }
+
+    #[test]
+    fn unknown_names_are_hard_errors_listing_choices() {
+        let e = Experiment::builder().model("GPT-9000").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::UnknownModel(_)));
+        assert!(e.to_string().contains("Llama-3.2-3B"), "{e}");
+
+        let e = Experiment::builder().gpu("A100").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::UnknownGpu(_)));
+        assert!(e.to_string().contains("H20|L40|H100"), "{e}");
+
+        let e = Experiment::builder().scheduler("fifo").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Policy(_)));
+        assert!(e.to_string().contains("cascade"), "{e}");
+
+        let e = Experiment::builder().workload_name("poisson2").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Workload(_)));
+        assert!(e.to_string().contains("sharegpt"), "{e}");
+
+        let e = Experiment::builder().instances(0).requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Invalid(_)));
+
+        // A non-positive rate must surface as a build error, not a
+        // panic inside the Poisson generator.
+        let e = Experiment::builder().rate(0.0).requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Invalid(_)));
+        assert!(e.to_string().contains("rate"), "{e}");
+        let e = Experiment::builder().rate(-3.0).requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Invalid(_)));
+    }
+
+    #[test]
+    fn custom_axis_spec_builds() {
+        let exp = Experiment::builder()
+            .scheduler("custom:layout=planned,refine=memory,balance=rrintra,dispatch=stagerouted")
+            .instances(4)
+            .requests(20)
+            .build()
+            .unwrap();
+        assert_eq!(exp.cfg.policy.layout, Layout::Planned);
+        assert_eq!(exp.cfg.policy.refine, RefinePolicy::Memory);
+        assert_eq!(exp.cfg.policy.balance, BalancePolicy::RoundRobinIntra);
+        assert_eq!(exp.cfg.policy.dispatch, DispatchPolicy::StageRouted);
+    }
+
+    #[test]
+    fn config_file_values_feed_builder_and_flags_override() {
+        let cfg = crate::config::Config::parse(
+            "[experiment]\nmodel = \"Llama-3.2-3B\"\ninstances = 4\nrate = 2.5\n\
+             requests = 30\nseed = 7\nscheduler = \"llumnix\"\nworkload = \"heavytail\"\n",
+        )
+        .unwrap();
+        let ec = ExperimentConfig::from_config(&cfg);
+        let exp = Experiment::from_config(&ec).build().unwrap();
+        assert_eq!(exp.cfg.n_instances, 4);
+        assert_eq!(exp.cfg.policy.name, "llumnix");
+        assert_eq!(exp.cfg.engine_speed, 1.25, "registry llumnix carries its engine speed");
+        assert_eq!(exp.requests.len(), 30);
+        // A later setter (the CLI flag path) overrides the file value.
+        let exp = Experiment::from_config(&ec).scheduler("cascade").instances(2).build().unwrap();
+        assert_eq!(exp.cfg.policy.name, "cascade");
+        assert_eq!(exp.cfg.n_instances, 2);
+    }
+
+    #[test]
+    fn explicit_kv_capacity_is_honoured_even_at_the_old_default() {
+        // The old sentinel ("value == default => derive from GPU")
+        // made an explicit 1M indistinguishable from unset; the
+        // Option-based config keeps it.
+        let exp = Experiment::builder().requests(5).kv_capacity(1_000_000).build().unwrap();
+        assert_eq!(exp.cfg.engine.kv_capacity_tokens, Some(1_000_000));
+        let exp = Experiment::builder().requests(5).build().unwrap();
+        assert_eq!(exp.cfg.engine.kv_capacity_tokens, None);
+    }
+
+    #[test]
+    fn small_experiment_runs_end_to_end() {
+        let (report, stats) = Experiment::builder()
+            .instances(4)
+            .scheduler("sjf")
+            .rate(10.0)
+            .requests(60)
+            .plan_sample(200)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.records.len(), 60);
+        assert_eq!(stats.migrations, 0, "sjf has no bid-ask migration");
+    }
+}

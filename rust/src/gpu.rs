@@ -62,6 +62,22 @@ impl GpuProfile {
         launch_overhead_s: 8.0e-6,
     };
 
+    /// Valid `--gpu` names, in presentation order.
+    pub const NAMES: [&'static str; 3] = ["H20", "L40", "H100"];
+
+    /// Resolve a profile by (case-insensitive) name.  Returns `None`
+    /// for unknown names — callers decide whether that is a hard error
+    /// (the CLI lists [`GpuProfile::NAMES`]) instead of the old silent
+    /// fallback to H20.
+    pub fn by_name(name: &str) -> Option<GpuProfile> {
+        match name.to_ascii_uppercase().as_str() {
+            "H20" => Some(GpuProfile::H20),
+            "L40" => Some(GpuProfile::L40),
+            "H100" => Some(GpuProfile::H100),
+            _ => None,
+        }
+    }
+
     /// Effective GEMM throughput (FLOP/s) after the MFU haircut.
     pub fn effective_flops(&self) -> f64 {
         self.fp16_flops * self.mfu

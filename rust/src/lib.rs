@@ -30,6 +30,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod experiment;
 pub mod gpu;
 pub mod kernelmodel;
 pub mod metrics;

@@ -1,26 +1,38 @@
 //! `cascade-infer` — leader entrypoint.
 //!
 //! Subcommands drive the two halves of the reproduction:
-//! * `sim` / `plan` / `fit` / `gen-trace` — the 16-instance simulated
-//!   testbed used by every figure,
+//! * `sim` / `sweep` / `plan` / `fit` / `gen-trace` — the 16-instance
+//!   simulated testbed used by every figure, constructed through the
+//!   [`cascade_infer::experiment::Experiment`] builder,
 //! * `serve` — the real PJRT path over the AOT artifacts.
+//!
+//! Unknown `--model`, `--gpu`, `--scheduler`, and `--workload` values
+//! are hard errors listing the valid choices (exit code 2) — never a
+//! silent fallback.
 
-use cascade_infer::cli::{scheduler_by_name, Args, USAGE};
-use cascade_infer::cluster::{run_experiment, ClusterConfig, SchedulerKind};
+use cascade_infer::cli::{Args, USAGE};
+use cascade_infer::cluster::PolicySpec;
+use cascade_infer::config::{Config, ExperimentConfig};
 use cascade_infer::coordinator::plan::{MigrationCost, Planner};
+use cascade_infer::experiment::{self, Experiment, ExperimentBuilder};
 use cascade_infer::gpu::GpuProfile;
 use cascade_infer::kernelmodel::AttentionModel;
 use cascade_infer::metrics::Slo;
-use cascade_infer::models;
 use cascade_infer::qoe;
 use cascade_infer::workload::{self, LengthHistogram, ShareGptLike};
 
-fn gpu_by_name(name: &str) -> GpuProfile {
-    match name.to_ascii_uppercase().as_str() {
-        "L40" => GpuProfile::L40,
-        "H100" => GpuProfile::H100,
-        _ => GpuProfile::H20,
-    }
+/// Print a CLI-level error and exit 2.
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
+}
+
+fn gpu_by_name_or_die(name: &str) -> GpuProfile {
+    experiment::resolve_gpu(name).unwrap_or_else(|e| die(&e.to_string()))
+}
+
+fn model_by_name_or_die(name: &str) -> cascade_infer::models::ModelProfile {
+    experiment::resolve_model(name).unwrap_or_else(|e| die(&e.to_string()))
 }
 
 fn main() {
@@ -28,36 +40,76 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "sim" => cmd_sim(&args),
+        "sweep" => cmd_sweep(&args),
         "plan" => cmd_plan(&args),
         "fit" => cmd_fit(&args),
         "gen-trace" => cmd_gen_trace(&args),
         "serve" => cmd_serve(&args),
-        _ => println!("{USAGE}"),
+        "help" | "--help" | "-h" => println!("{USAGE}"),
+        other => {
+            eprintln!("error: unknown subcommand `{other}`\n");
+            println!("{USAGE}");
+            std::process::exit(2);
+        }
     }
 }
 
-fn cmd_sim(args: &Args) {
-    let model = models::by_name(&args.get_or("model", "Llama-3.2-3B"))
-        .expect("unknown model; see models::paper_zoo()");
-    let gpu = gpu_by_name(&args.get_or("gpu", "H20"));
-    let n = args.get_usize("instances", 16);
-    let rate = args.get_f64("rate", 8.0);
-    let n_req = args.get_usize("requests", 2000);
-    let seed = args.get_u64("seed", 42);
-    let sched = scheduler_by_name(&args.get_or("scheduler", "cascade"))
-        .expect("unknown scheduler");
-
-    let reqs = workload::generate(&ShareGptLike::default(), rate, n_req, seed);
-    let mut cfg = ClusterConfig::new(gpu, model, n, sched);
-    if sched == SchedulerKind::LlumnixLike {
-        cfg.engine_speed = 1.25; // Llumnix's newer engine (§6.2 Fig. 8)
+/// Shared `sim`/`sweep` construction: config-file defaults, then
+/// explicit CLI flags on top.
+fn builder_from_args(args: &Args) -> ExperimentBuilder {
+    let file_cfg = match args.get("config") {
+        Some(path) => match Config::load(path) {
+            Ok(cfg) => ExperimentConfig::from_config(&cfg),
+            // `Config::load` surfaces `ParseError` with its line
+            // number; IO errors carry the path context here.
+            Err(e) => die(&format!("cannot load config `{path}`: {e}")),
+        },
+        None => ExperimentConfig::default(),
+    };
+    let mut b = Experiment::from_config(&file_cfg);
+    if let Some(m) = args.get("model") {
+        b = b.model(m);
     }
+    if let Some(g) = args.get("gpu") {
+        b = b.gpu(g);
+    }
+    if let Some(n) = args.get("instances") {
+        b = b.instances(n.parse().unwrap_or_else(|_| die("--instances must be an integer")));
+    }
+    if let Some(r) = args.get("rate") {
+        b = b.rate(r.parse().unwrap_or_else(|_| die("--rate must be a number")));
+    }
+    if let Some(n) = args.get("requests") {
+        b = b.requests(n.parse().unwrap_or_else(|_| die("--requests must be an integer")));
+    }
+    if let Some(s) = args.get("seed") {
+        b = b.seed(s.parse().unwrap_or_else(|_| die("--seed must be an integer")));
+    }
+    if let Some(s) = args.get("scheduler") {
+        b = b.scheduler(s);
+    }
+    if let Some(w) = args.get("workload") {
+        b = b.workload_name(w);
+    }
+    b
+}
+
+fn cmd_sim(args: &Args) {
+    let exp = match builder_from_args(args).build() {
+        Ok(e) => e,
+        Err(e) => die(&e.to_string()),
+    };
+    let cfg = &exp.cfg;
     println!(
-        "sim: {} x{} on {}, rate {:.1} req/s, {} requests, scheduler {}",
-        model.name, n, gpu.name, rate, n_req, sched.name()
+        "sim: {} x{} on {}, {} requests, scheduler {}",
+        cfg.model.name,
+        cfg.n_instances,
+        cfg.gpu.name,
+        exp.requests.len(),
+        cfg.policy.name
     );
     let t0 = std::time::Instant::now();
-    let (report, stats) = run_experiment(cfg, &reqs);
+    let (report, stats) = exp.run();
     println!("wall time        {:.2}s", t0.elapsed().as_secs_f64());
     println!("completed        {}", report.records.len());
     println!("mean TTFT        {:.4}s   p95 {:.4}s", report.mean_ttft(), report.p95_ttft());
@@ -74,9 +126,86 @@ fn cmd_sim(args: &Args) {
     println!("boundaries       {:?}", stats.final_boundaries);
 }
 
+/// Grid over rates x schedulers sharing one workload per rate; prints
+/// a comparison table (the shape of Figs. 6/7/10 from the CLI).
+fn cmd_sweep(args: &Args) {
+    // `sweep` grids over --rates/--schedulers; the singular flags
+    // would be silently overridden per cell, so reject the likely typo
+    // instead of running a grid the user never asked for.
+    if args.get("rate").is_some() {
+        die("`sweep` takes --rates R1,R2,.. (plural), not --rate");
+    }
+    if args.get("scheduler").is_some() {
+        die("`sweep` takes --schedulers N1,N2,.. (plural), not --scheduler");
+    }
+    let rates: Vec<f64> = args
+        .get_or("rates", "8,16,32")
+        .split(',')
+        .map(|s| s.trim().parse().unwrap_or_else(|_| die("--rates must be numbers, e.g. 8,16,32")))
+        .collect();
+    // `;` separates schedulers whose names contain commas (custom
+    // axis specs); plain lists use `,`.
+    let scheds_raw = args.get_or("schedulers", "cascade,vllm");
+    let sep = if scheds_raw.contains(';') { ';' } else { ',' };
+    let schedulers: Vec<String> =
+        scheds_raw.split(sep).map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    if rates.is_empty() || schedulers.is_empty() {
+        die("sweep needs at least one rate and one scheduler");
+    }
+    // Fail fast on any unresolvable scheduler *before* running grid
+    // cells — otherwise a comma-split `custom:` spec could silently
+    // run a policy the user never asked for and only error later.
+    for name in &schedulers {
+        if let Err(e) = PolicySpec::resolve(name) {
+            if sep == ',' && scheds_raw.contains("custom:") {
+                die(&format!(
+                    "{e}\nhint: `--schedulers` was split on `,`, which also appears inside \
+                     custom: specs — separate schedulers with `;` instead"
+                ));
+            }
+            die(&e.to_string());
+        }
+    }
+
+    // One resolved builder (config file read, workload parsed) shared
+    // by every cell; each cell only overrides rate + scheduler.
+    let base = builder_from_args(args);
+    println!(
+        "{:<6} {:<42} {:>10} {:>10} {:>10} {:>11} {:>8}",
+        "rate", "scheduler", "TTFT", "TPOT", "p95TPOT", "tok/s", "migr"
+    );
+    for &rate in &rates {
+        // Materialise the workload once per rate; every scheduler cell
+        // shares the identical trace (apples-to-apples columns, and a
+        // `trace:` CSV is read once instead of once per cell).
+        let shared = match base.clone().rate(rate).build() {
+            Ok(e) => e.requests,
+            Err(e) => die(&e.to_string()),
+        };
+        for name in &schedulers {
+            let exp = match base.clone().rate(rate).scheduler(name).trace(shared.clone()).build()
+            {
+                Ok(e) => e,
+                Err(e) => die(&e.to_string()),
+            };
+            let (r, stats) = exp.run();
+            println!(
+                "{:<6.1} {:<42} {:>9.4}s {:>9.5}s {:>9.5}s {:>11.1} {:>8}",
+                rate,
+                name,
+                r.mean_ttft(),
+                r.mean_tpot(),
+                r.p95_tpot(),
+                r.throughput_tokens_per_s(),
+                stats.migrations
+            );
+        }
+    }
+}
+
 fn cmd_plan(args: &Args) {
-    let model = models::by_name(&args.get_or("model", "Llama-3.2-3B")).expect("unknown model");
-    let gpu = gpu_by_name(&args.get_or("gpu", "H20"));
+    let model = model_by_name_or_die(&args.get_or("model", "Llama-3.2-3B"));
+    let gpu = gpu_by_name_or_die(&args.get_or("gpu", "H20"));
     let e = args.get_usize("instances", 16);
     let n_req = args.get_usize("requests", 5000);
     let seed = args.get_u64("seed", 42);
@@ -114,8 +243,8 @@ fn cmd_plan(args: &Args) {
 }
 
 fn cmd_fit(args: &Args) {
-    let model = models::by_name(&args.get_or("model", "Llama-3.2-3B")).expect("unknown model");
-    let gpu = gpu_by_name(&args.get_or("gpu", "H20"));
+    let model = model_by_name_or_die(&args.get_or("model", "Llama-3.2-3B"));
+    let gpu = gpu_by_name_or_die(&args.get_or("gpu", "H20"));
     let am = AttentionModel::new(gpu, model);
     let (qoe_model, samples) = qoe::profile_and_fit(&am, 64, 131_072, 512);
     println!("QoE fit for {} on {} ({} samples)", model.name, gpu.name, samples.len());

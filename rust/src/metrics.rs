@@ -87,6 +87,27 @@ impl Report {
         Self { records, duration }
     }
 
+    /// Stable FNV-style fingerprint over every record's exact bit
+    /// patterns.  Two reports are bit-identical iff their fingerprints
+    /// match — the golden-seed and builder-compat regressions key on
+    /// this, and it is order-sensitive by construction.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for rec in &self.records {
+            mix(rec.id);
+            mix(rec.arrival.to_bits());
+            mix(rec.first_token.to_bits());
+            mix(rec.completion.to_bits());
+            mix(rec.input_len);
+            mix(rec.output_len);
+        }
+        h
+    }
+
     pub fn ttfts(&self) -> Vec<f64> {
         self.records.iter().map(|r| r.ttft()).collect()
     }

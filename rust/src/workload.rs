@@ -142,6 +142,161 @@ pub fn generate_for_duration(dist: &ShareGptLike, rate: f64, duration: Time, see
     }
 }
 
+/// Declarative workload selection — the single vocabulary the
+/// [`crate::experiment`] builder, the CLI (`--workload`), and config
+/// files share.  Every variant generates the same [`Request`] stream
+/// shape, fully determined by `(rate, n, seed)`.
+#[derive(Debug, Clone)]
+pub enum WorkloadSpec {
+    /// The paper's default ShareGPT-like distribution.
+    ShareGpt(ShareGptLike),
+    /// Heavier Pareto tail ([`ShareGptLike::heavy_tail`]).
+    HeavyTail,
+    /// Short-context-only ([`ShareGptLike::uniform_short`]).
+    UniformShort,
+    /// Replay a CSV trace saved by [`save_csv`] (arrivals, lengths and
+    /// ids come from the file; `rate`/`n`/`seed` are ignored).
+    CsvTrace(String),
+    /// Mixture of distributions: each request draws its component by
+    /// weight (weights need not sum to 1).
+    Mixture(Vec<(f64, ShareGptLike)>),
+    /// Bursty on/off arrivals: Poisson at `rate` for `on_s` seconds,
+    /// then at `rate * off_rate_frac` for `off_s` seconds, repeating —
+    /// the diurnal/bursty traffic scenario the steady Poisson default
+    /// cannot express.
+    Bursty { dist: ShareGptLike, on_s: f64, off_s: f64, off_rate_frac: f64 },
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec::ShareGpt(ShareGptLike::default())
+    }
+}
+
+/// Invalid-parameter error for [`WorkloadSpec::generate`] (kept as
+/// `io::Error` so the generation signature stays uniform with the
+/// CSV-replay path).
+fn invalid_spec(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidInput, msg)
+}
+
+impl WorkloadSpec {
+    /// Canonical CLI/config names (plus `trace:FILE`).
+    pub fn names() -> &'static [&'static str] {
+        &["sharegpt", "heavytail", "uniformshort", "mix", "bursty", "trace:FILE"]
+    }
+
+    /// Parse a CLI/config workload name.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let trimmed = s.trim();
+        let lower = trimmed.to_ascii_lowercase();
+        // Prefix is case-insensitive (like every other name here); the
+        // path keeps its original case.
+        if lower.starts_with("trace:") {
+            let path = &trimmed["trace:".len()..];
+            if path.is_empty() {
+                return Err("trace: needs a file path, e.g. trace:trace.csv".into());
+            }
+            return Ok(WorkloadSpec::CsvTrace(path.to_string()));
+        }
+        match lower.as_str() {
+            "sharegpt" | "default" => Ok(WorkloadSpec::default()),
+            "heavytail" | "heavy" => Ok(WorkloadSpec::HeavyTail),
+            "uniformshort" | "short" => Ok(WorkloadSpec::UniformShort),
+            "mix" | "mixture" => Ok(WorkloadSpec::Mixture(vec![
+                (0.5, ShareGptLike::default()),
+                (0.5, ShareGptLike::heavy_tail()),
+            ])),
+            "bursty" => Ok(WorkloadSpec::Bursty {
+                dist: ShareGptLike::default(),
+                on_s: 20.0,
+                off_s: 20.0,
+                off_rate_frac: 0.1,
+            }),
+            _ => Err(format!(
+                "unknown workload `{s}`; valid: {}",
+                Self::names().join("|")
+            )),
+        }
+    }
+
+    /// Materialise the request stream.  Fails on `CsvTrace` IO errors
+    /// and on degenerate spec parameters (zero-mass mixtures,
+    /// non-positive burst phases) — never panics on caller input.
+    pub fn generate(&self, rate: f64, n: usize, seed: u64) -> std::io::Result<Vec<Request>> {
+        match self {
+            WorkloadSpec::ShareGpt(d) => Ok(generate(d, rate, n, seed)),
+            WorkloadSpec::HeavyTail => Ok(generate(&ShareGptLike::heavy_tail(), rate, n, seed)),
+            WorkloadSpec::UniformShort => {
+                Ok(generate(&ShareGptLike::uniform_short(), rate, n, seed))
+            }
+            WorkloadSpec::CsvTrace(path) => load_csv(path),
+            WorkloadSpec::Mixture(parts) => {
+                let total: f64 = parts.iter().map(|(w, _)| w.max(0.0)).sum();
+                if total.is_nan() || total <= 0.0 {
+                    return Err(invalid_spec("mixture weights must have positive mass"));
+                }
+                let mut rng = Rng::new(seed);
+                let gap = Exponential::new(rate);
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    t += gap.sample(&mut rng);
+                    // Weighted component draw, then that component's
+                    // length distributions.
+                    let mut u = rng.next_f64() * total;
+                    let mut dist = &parts[parts.len() - 1].1;
+                    for (w, d) in parts {
+                        u -= w.max(0.0);
+                        if u <= 0.0 {
+                            dist = d;
+                            break;
+                        }
+                    }
+                    let input_len = dist.sample_input(&mut rng);
+                    let output_len = dist.sample_output(&mut rng, input_len);
+                    out.push(Request { id: i as RequestId, arrival: t, input_len, output_len });
+                }
+                Ok(out)
+            }
+            WorkloadSpec::Bursty { dist, on_s, off_s, off_rate_frac } => {
+                let phase_ok = |p: f64| p.is_finite() && p > 0.0;
+                if !phase_ok(*on_s) || !phase_ok(*off_s) {
+                    return Err(invalid_spec("burst phases must be positive"));
+                }
+                let mut rng = Rng::new(seed);
+                let period = on_s + off_s;
+                let off_rate = (rate * off_rate_frac).max(1e-9);
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    // Piecewise-Poisson: sample a gap at the current
+                    // phase's rate; when it crosses the phase boundary,
+                    // advance to the boundary and resample there.
+                    loop {
+                        let phase_t = t % period;
+                        let (r, boundary) = if phase_t < *on_s {
+                            (rate, *on_s - phase_t)
+                        } else {
+                            (off_rate, period - phase_t)
+                        };
+                        let g = Exponential::new(r).sample(&mut rng);
+                        if g < boundary {
+                            t += g;
+                            break;
+                        }
+                        t += boundary;
+                    }
+                    let input_len = dist.sample_input(&mut rng);
+                    let output_len = dist.sample_output(&mut rng, input_len);
+                    out.push(Request { id: i as RequestId, arrival: t, input_len, output_len });
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
 /// Save a trace as CSV (`id,arrival,input_len,output_len`).
 pub fn save_csv(path: &str, reqs: &[Request]) -> std::io::Result<()> {
     use std::io::Write;
@@ -350,6 +505,86 @@ mod tests {
         assert_eq!(h.bucket_of(3), 1);
         assert_eq!(h.bucket_of(4), 2);
         assert_eq!(h.bucket_of(100), 3); // clamped to last
+    }
+
+    #[test]
+    fn workload_spec_parse_and_determinism() {
+        for name in ["sharegpt", "heavytail", "uniformshort", "mix", "bursty"] {
+            let spec = WorkloadSpec::parse(name).unwrap();
+            let a = spec.generate(12.0, 300, 9).unwrap();
+            let b = spec.generate(12.0, 300, 9).unwrap();
+            assert_eq!(a, b, "{name} not deterministic");
+            assert_eq!(a.len(), 300);
+            for w in a.windows(2) {
+                assert!(w[1].arrival >= w[0].arrival, "{name} arrivals must be ordered");
+            }
+        }
+        assert!(WorkloadSpec::parse("nope").is_err());
+        assert!(WorkloadSpec::parse("trace:").is_err());
+        assert!(matches!(
+            WorkloadSpec::parse("trace:foo.csv").unwrap(),
+            WorkloadSpec::CsvTrace(p) if p == "foo.csv"
+        ));
+        // Prefix is case-insensitive; the path keeps its case.
+        assert!(matches!(
+            WorkloadSpec::parse("Trace:Dir/Run.csv").unwrap(),
+            WorkloadSpec::CsvTrace(p) if p == "Dir/Run.csv"
+        ));
+    }
+
+    #[test]
+    fn invalid_spec_parameters_error_instead_of_panicking() {
+        let empty = WorkloadSpec::Mixture(vec![]);
+        assert!(empty.generate(10.0, 5, 1).is_err());
+        let zero_mass = WorkloadSpec::Mixture(vec![(0.0, ShareGptLike::default())]);
+        assert!(zero_mass.generate(10.0, 5, 1).is_err());
+        let bad_burst = WorkloadSpec::Bursty {
+            dist: ShareGptLike::default(),
+            on_s: 0.0,
+            off_s: 10.0,
+            off_rate_frac: 0.1,
+        };
+        assert!(bad_burst.generate(10.0, 5, 1).is_err());
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster_in_on_phases() {
+        let spec = WorkloadSpec::Bursty {
+            dist: ShareGptLike::default(),
+            on_s: 10.0,
+            off_s: 10.0,
+            off_rate_frac: 0.05,
+        };
+        let reqs = spec.generate(20.0, 2000, 3).unwrap();
+        let in_on = reqs.iter().filter(|r| r.arrival % 20.0 < 10.0).count();
+        // With a 20x on/off rate ratio, the overwhelming majority of
+        // arrivals must land in the on-phase.
+        assert!(in_on as f64 > reqs.len() as f64 * 0.9, "{in_on}/{}", reqs.len());
+    }
+
+    #[test]
+    fn mixture_blends_components() {
+        // A mixture of pure-short and pure-heavy components must land
+        // between the two in tail mass.
+        let spec = WorkloadSpec::Mixture(vec![
+            (1.0, ShareGptLike::uniform_short()),
+            (1.0, ShareGptLike::heavy_tail()),
+        ]);
+        let reqs = spec.generate(10.0, 8000, 5).unwrap();
+        let long = reqs.iter().filter(|r| r.input_len >= 4096).count() as f64 / 8000.0;
+        // heavy_tail alone has ~8% tail; the 50/50 blend about half that.
+        assert!(long > 0.01 && long < 0.08, "tail fraction {long}");
+    }
+
+    #[test]
+    fn csv_trace_spec_round_trips() {
+        let reqs = generate(&ShareGptLike::default(), 5.0, 32, 17);
+        let path = std::env::temp_dir().join("cascade_spec_trace.csv");
+        save_csv(path.to_str().unwrap(), &reqs).unwrap();
+        let spec = WorkloadSpec::CsvTrace(path.to_str().unwrap().to_string());
+        let back = spec.generate(0.0, 0, 0).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! API-redesign regression suite.
+//!
+//! 1. **Golden-seed compatibility**: every legacy `SchedulerKind`
+//!    name, resolved through the policy registry and run through the
+//!    `Experiment` builder, must produce a bit-identical `Report` to
+//!    the direct `ClusterConfig::new(kind)` + `run_experiment` path.
+//!    (For `llumnix` the direct path applies the 1.25 engine speed the
+//!    `sim` subcommand always applied — the registry entry carries it.)
+//! 2. **Registry round-trip** and **custom-axis parsing** invariants.
+//! 3. **End-to-end custom spec**: an axis combination the closed enum
+//!    could not express runs from a CLI-style string.
+
+use cascade_infer::cluster::{
+    run_experiment, BalancePolicy, ClusterConfig, DispatchPolicy, Layout, PolicySpec,
+    RefinePolicy, SchedulerKind,
+};
+use cascade_infer::experiment::Experiment;
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::LLAMA_3B;
+use cascade_infer::workload::{generate, Request, ShareGptLike};
+
+fn trace() -> Vec<Request> {
+    generate(&ShareGptLike::default(), 18.0, 150, 42)
+}
+
+#[test]
+fn every_legacy_scheduler_name_is_bit_identical_through_the_builder() {
+    let reqs = trace();
+    for kind in SchedulerKind::all() {
+        let name = kind.registry_name();
+
+        // Direct legacy path, replicating the old `sim` subcommand
+        // (which set Llumnix's engine speed explicitly).
+        let mut cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 4, kind);
+        if kind == SchedulerKind::LlumnixLike {
+            cfg.engine_speed = 1.25;
+        }
+        let (direct, direct_stats) = run_experiment(cfg, &reqs);
+
+        // Registry + builder path.
+        let (built, built_stats) = Experiment::builder()
+            .gpu_profile(GpuProfile::H20)
+            .model_profile(LLAMA_3B)
+            .instances(4)
+            .scheduler(name)
+            .trace(reqs.clone())
+            .build()
+            .unwrap()
+            .run();
+
+        assert_eq!(direct.records.len(), reqs.len(), "{name} dropped requests");
+        assert_eq!(
+            direct.fingerprint(),
+            built.fingerprint(),
+            "{name}: builder/registry path diverged from the legacy path"
+        );
+        assert_eq!(direct_stats.migrations, built_stats.migrations, "{name}");
+        assert_eq!(direct_stats.final_boundaries, built_stats.final_boundaries, "{name}");
+    }
+}
+
+#[test]
+fn registry_round_trips_and_covers_all_legacy_kinds() {
+    for &name in PolicySpec::names() {
+        let spec = PolicySpec::resolve(name).expect(name);
+        assert_eq!(spec.name, name);
+        assert_eq!(PolicySpec::resolve(&spec.name).unwrap(), spec);
+    }
+    for kind in SchedulerKind::all() {
+        assert!(
+            PolicySpec::names().contains(&kind.registry_name()),
+            "{kind:?} missing from the registry"
+        );
+    }
+}
+
+#[test]
+fn custom_axis_parsing_accepts_valid_and_rejects_malformed() {
+    let spec = PolicySpec::resolve(
+        "custom:layout=planned,refine=memory,balance=rrintra,dispatch=stagerouted,gossip=on",
+    )
+    .unwrap();
+    assert_eq!(spec.layout, Layout::Planned);
+    assert_eq!(spec.refine, RefinePolicy::Memory);
+    assert_eq!(spec.balance, BalancePolicy::RoundRobinIntra);
+    assert_eq!(spec.dispatch, DispatchPolicy::StageRouted);
+    assert_eq!(PolicySpec::resolve(&spec.name).unwrap(), spec, "custom name round-trips");
+
+    for bad in [
+        "custom:",
+        "custom:layout",
+        "custom:layout=pyramid",
+        "custom:balance=maybe,layout=planned",
+        "custom:speed=quick",
+        "custom:turbo=on",
+    ] {
+        assert!(PolicySpec::resolve(bad).is_err(), "`{bad}` must be rejected");
+    }
+}
+
+#[test]
+fn custom_combo_unexpressible_before_runs_end_to_end() {
+    // Planned layout + memory-based refinement + round-robin intra
+    // dispatch: no legacy SchedulerKind combines these three.
+    let (report, stats) = Experiment::builder()
+        .gpu_profile(GpuProfile::H20)
+        .model_profile(LLAMA_3B)
+        .instances(4)
+        .scheduler("custom:layout=planned,refine=memory,balance=rrintra")
+        .trace(trace())
+        .plan_sample(400)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(report.records.len(), 150);
+    assert!(report.mean_ttft() > 0.0);
+    assert!(!stats.stages.is_empty());
+}
+
+#[test]
+fn sjf_dispatch_runs_and_balances() {
+    // The new ShortestFirst axis end to end: flat layout, no bid-ask.
+    let reqs = generate(&ShareGptLike::default(), 25.0, 200, 7);
+    let (report, stats) = Experiment::builder()
+        .gpu_profile(GpuProfile::H20)
+        .model_profile(LLAMA_3B)
+        .instances(4)
+        .scheduler("sjf")
+        .trace(reqs)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(report.records.len(), 200);
+    assert_eq!(stats.migrations, 0);
+    // Work-aware dispatch must touch every instance under load.
+    assert_eq!(stats.counters.output_tokens.len(), 4, "{:?}", stats.counters.output_tokens);
+}
+
+#[test]
+fn builder_is_deterministic_across_invocations() {
+    let run = || {
+        Experiment::builder()
+            .gpu_profile(GpuProfile::H20)
+            .model_profile(LLAMA_3B)
+            .instances(4)
+            .scheduler("cascade")
+            .rate(15.0)
+            .requests(120)
+            .seed(9)
+            .build()
+            .unwrap()
+            .run()
+            .0
+            .fingerprint()
+    };
+    assert_eq!(run(), run());
+}

@@ -24,22 +24,10 @@ use std::path::Path;
 
 const GOLDEN_PATH: &str = "tests/golden/seed42.txt";
 
-/// Stable FNV-style fingerprint over every record's exact bit patterns.
+/// Stable FNV-style fingerprint over every record's exact bit patterns
+/// (shared with the builder-compat regression in `experiment_api.rs`).
 fn checksum(r: &Report) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut mix = |v: u64| {
-        h ^= v;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    };
-    for rec in &r.records {
-        mix(rec.id);
-        mix(rec.arrival.to_bits());
-        mix(rec.first_token.to_bits());
-        mix(rec.completion.to_bits());
-        mix(rec.input_len);
-        mix(rec.output_len);
-    }
-    h
+    r.fingerprint()
 }
 
 fn stats_fingerprint(s: &RunStats) -> (u64, u64, u64, u64, Vec<u64>) {
