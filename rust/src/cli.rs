@@ -94,11 +94,12 @@ cascade-infer — length-aware MILS scheduling (CascadeInfer reproduction)
 
 USAGE:
   cascade-infer sim   [--config FILE] [--model NAME] [--gpu H20|L40|H100]
-                      [--instances N] [--rate R] [--requests N] [--seed S]
-                      [--scheduler NAME] [--workload NAME]
+                      [--instances N] [--fleet SPEC] [--rate R] [--requests N]
+                      [--seed S] [--scheduler NAME] [--workload NAME]
   cascade-infer sweep [--rates R1,R2,..] [--schedulers N1,N2,..]
-                      [--model NAME] [--gpu H20|L40|H100] [--instances N]
-                      [--requests N] [--seed S] [--workload NAME]
+                      [--fleets F1;F2;..] [--model NAME] [--gpu H20|L40|H100]
+                      [--instances N] [--requests N] [--seed S]
+                      [--workload NAME]
   cascade-infer plan  [--model NAME] [--instances N] [--requests N] [--seed S]
   cascade-infer fit   [--model NAME] [--gpu H20|L40|H100]
   cascade-infer gen-trace --out FILE [--rate R] [--requests N] [--seed S]
@@ -117,14 +118,26 @@ RUNNING EXPERIMENTS
               dispatch=roundrobin|leastloaded|stagerouted|shortestfirst
               [,gossip=on|off][,speed=F]
   Workloads:  sharegpt|heavytail|uniformshort|mix|bursty|trace:FILE
+  Fleets:     --fleet describes a heterogeneous fleet as comma-separated
+              GPU:COUNT groups, each optionally followed by speed=F for
+              that group, e.g. `h20:12,h100:4,speed=1.37`.  It replaces
+              --gpu/--instances: the instance count is the fleet size,
+              each instance is priced by its own GPU, and the planner,
+              router, and bid-ask balancer normalize load by modeled
+              per-instance capacity.  `sweep` grids over --fleets
+              F1;F2;.. (`;`-separated — fleet specs contain commas).
+              A homogeneous fleet (e.g. `h20:16`) reproduces --gpu
+              H20 --instances 16 bit-for-bit.
   Config:     --config FILE loads an [experiment] section (model, gpu,
-              instances, rate, requests, seed, scheduler, workload);
-              explicit CLI flags override file values.
+              instances, fleet, rate, requests, seed, scheduler,
+              workload); explicit CLI flags override file values.
 
   Examples:
     cascade-infer sim --rate 16 --scheduler cascade --workload heavytail
+    cascade-infer sim --fleet h20:6,h100:2 --scheduler cascade --workload heavytail
     cascade-infer sim --scheduler custom:layout=planned,refine=memory,balance=rrintra
     cascade-infer sweep --rates 8,16,32 --schedulers cascade,vllm,llumnix
+    cascade-infer sweep --rates 8,16 --schedulers cascade,vllm --fleets \"h20:8;h20:6,h100:2\"
 
 `serve` drives the real PJRT-served model end to end.";
 

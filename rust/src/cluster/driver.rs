@@ -104,6 +104,11 @@ impl Cluster {
             }
         }
         self.stats.final_boundaries = self.refiners.iter().map(|r| r.boundary).collect();
+        if self.load_samples > 0 {
+            let n = self.load_samples as f64;
+            self.stats.mean_token_load =
+                self.load_sample_sum.iter().map(|s| s / n).collect();
+        }
         (Report::from_records(std::mem::take(&mut self.records)), self.stats)
     }
 
@@ -181,6 +186,12 @@ impl Cluster {
         // report is O(1) per instance (running aggregates).
         let reports: Vec<LoadReport> =
             self.instances.iter().map(|ins| ins.load_report(now)).collect();
+        // Steady-state load sampling for the per-instance report
+        // (read-only instrumentation; policy never consults it).
+        for (i, r) in reports.iter().enumerate() {
+            self.load_sample_sum[i] += r.token_load as f64;
+        }
+        self.load_samples += 1;
         for i in 0..self.instances.len() {
             let s = self.stage_of[i];
             for &peer in &self.stages[s] {
@@ -290,7 +301,10 @@ impl Cluster {
                     hist.push(sq.req.input_len, sq.current_len());
                 }
             }
-            let pipe = self.planner.plan_dp(&hist, self.cfg.n_instances);
+            // Partition over the (possibly heterogeneous) per-instance
+            // capacities — uniform fleets take the identical legacy
+            // DP path.
+            let pipe = self.planner.plan_dp_weighted(&hist, &self.caps);
             if pipe.stages.len() != self.stages.len()
                 || pipe
                     .stages

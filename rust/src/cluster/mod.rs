@@ -37,6 +37,24 @@
 //! * this file — configuration, cluster construction (offline pipeline
 //!   planning), the §4.4 bid-ask + §5 live-migration protocol
 //!   handlers, and the public API ([`run_experiment`]).
+//!
+//! # Heterogeneous fleets
+//!
+//! The fleet need not be uniform: [`ClusterConfig::fleet`] takes a
+//! [`FleetSpec`] (one `{gpu, engine, speed}` [`InstanceSpec`] per
+//! instance; CLI grammar `--fleet h20:6,h100:2[,speed=F]`), and
+//! [`ClusterConfig::topology`] makes the node layout — and therefore
+//! the [`MigrationCost`] link bandwidth — configurable instead of the
+//! old hardcoded `Topology::sequential(e, 8, NvLink)`.  Construction
+//! builds one attention model / scaled backend / derived KV capacity
+//! *per instance*; the §4.2 DP partitions over per-instance capacity
+//! weights ([`crate::coordinator::plan::Planner::plan_dp_weighted`]);
+//! and every load comparison (router least-loaded, §4.4 bids, overload
+//! outliers) is *capacity-normalized* so a fast H100 correctly outbids
+//! a saturating H20.  Capacities are normalized to the fleet maximum,
+//! so a homogeneous fleet gets exactly 1.0 everywhere and reduces
+//! bit-identically to the legacy single-GPU path (enforced by
+//! `tests/experiment_api.rs` and `tests/golden_seed.rs`).
 
 pub mod policy;
 
@@ -55,6 +73,7 @@ use crate::coordinator::plan::{MigrationCost, Pipeline, Planner};
 use crate::coordinator::refine::{RangeRefiner, RefineConfig};
 use crate::coordinator::LoadTracker;
 use crate::engine::{CostModelBackend, Engine, EngineConfig, ExecBackend, Phase, Sequence};
+use crate::fleet::{FleetSpec, InstanceSpec};
 use crate::gpu::{GpuProfile, Topology};
 use crate::kernelmodel::AttentionModel;
 use crate::metrics::{InstanceCounters, Report, RequestRecord};
@@ -71,16 +90,36 @@ use state::InstanceState;
 /// Cluster-level configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
+    /// GPU profile of a *homogeneous* fleet (ignored for construction
+    /// when [`ClusterConfig::fleet`] is set, but kept as the display /
+    /// compat default).
     pub gpu: GpuProfile,
     pub model: ModelProfile,
     pub n_instances: usize,
+    /// Per-instance hardware when the fleet is heterogeneous.  `None`
+    /// replicates `(gpu, engine, speed 1.0)` across `n_instances` —
+    /// the legacy homogeneous configuration, bit-identical to the
+    /// pre-fleet behavior.  When `Some`, its length must equal
+    /// `n_instances` and each instance gets its own attention cost
+    /// model, engine speed, and derived KV capacity.
+    pub fleet: Option<FleetSpec>,
+    /// Physical placement of instances onto nodes.  `None` keeps the
+    /// historical default (`Topology::sequential(e, 8, NvLink)` — the
+    /// paper's H20 testbed shape); set it to model PCIe nodes, other
+    /// node widths, etc.  The inter-stage [`MigrationCost`] takes its
+    /// link bandwidth from this topology.
+    pub topology: Option<Topology>,
     /// The scheduling policy, as orthogonal axes.  Construct from a
     /// [`PolicySpec`] directly, a registry name via
     /// [`PolicySpec::resolve`], or a legacy [`SchedulerKind`] (which
     /// converts via `Into`).
     pub policy: PolicySpec,
     /// Engine knobs; a `None` KV capacity is derived from the GPU
-    /// memory budget.
+    /// memory budget.  Like `gpu`, this describes the *homogeneous*
+    /// fleet and is ignored for construction when
+    /// [`ClusterConfig::fleet`] is set — each [`InstanceSpec`] then
+    /// carries its own `EngineConfig` (the experiment builder stamps
+    /// builder-level engine knobs into every spec of a parsed fleet).
     pub engine: EngineConfig,
     /// Relative engine speed (1.0 = vLLM-class; Llumnix's newer engine
     /// runs faster — §6.2 Fig. 8).  Seeded from the policy spec;
@@ -117,6 +156,8 @@ impl ClusterConfig {
             gpu,
             model,
             n_instances,
+            fleet: None,
+            topology: None,
             policy,
             engine: EngineConfig::default(),
             engine_speed,
@@ -131,10 +172,28 @@ impl ClusterConfig {
         }
     }
 
-    fn engine_config(&self) -> EngineConfig {
-        let mut e = self.engine;
+    /// The effective per-instance fleet: the explicit one, or
+    /// `n_instances` copies of `(gpu, engine, speed 1.0)`.
+    pub fn resolved_fleet(&self) -> FleetSpec {
+        match &self.fleet {
+            Some(f) => {
+                assert_eq!(
+                    f.len(),
+                    self.n_instances,
+                    "fleet size must match n_instances"
+                );
+                f.clone()
+            }
+            None => FleetSpec::homogeneous(self.gpu, self.engine, 1.0, self.n_instances),
+        }
+    }
+
+    /// Engine knobs for one instance: explicit KV capacity is honoured,
+    /// `None` derives it from *that instance's* GPU memory budget.
+    fn engine_config_for(&self, spec: &InstanceSpec) -> EngineConfig {
+        let mut e = spec.engine;
         if e.kv_capacity_tokens.is_none() {
-            let budget = self.model.kv_budget_bytes(self.gpu.mem_bytes, 0.9);
+            let budget = self.model.kv_budget_bytes(spec.gpu.mem_bytes, 0.9);
             e.kv_capacity_tokens = Some(self.model.kv_capacity_tokens(budget).max(1024));
         }
         e
@@ -169,6 +228,15 @@ pub struct RunStats {
     pub final_boundaries: Vec<Tokens>,
     /// Per-instance output tokens (Fig. 16).
     pub counters: InstanceCounters,
+    /// Per-instance GPU tags, in instance-id order (mixed fleets).
+    pub instance_gpus: Vec<&'static str>,
+    /// Per-instance relative capacity (normalized to the fleet
+    /// maximum; all 1.0 on homogeneous fleets).
+    pub instance_capacity: Vec<f64>,
+    /// Per-instance token load averaged over gossip ticks — the
+    /// steady-state load share of the per-instance report.  Empty when
+    /// the policy never gossips (no sampling clock).
+    pub mean_token_load: Vec<f64>,
     /// stage -> member instances.
     pub stages: Vec<Vec<InstanceId>>,
     /// Batch length snapshots: (sim progress fraction, lens) — Fig. 1.
@@ -205,14 +273,23 @@ pub struct Cluster {
     planner: Planner,
     /// Failed-handover retry gate: request -> earliest next attempt.
     retry_after: std::collections::HashMap<RequestId, Time>,
-    /// Open offers: request -> (sender, seq_len at offer, sender load).
-    offers: std::collections::HashMap<RequestId, (InstanceId, Tokens, Tokens)>,
+    /// Open offers: request -> (sender, seq_len at offer, sender's
+    /// capacity-normalized load).
+    offers: std::collections::HashMap<RequestId, (InstanceId, Tokens, f64)>,
     /// Starvation promises per sender: (pull, receiver) to send
     /// immediately after the current transmission completes.
     promises: std::collections::HashMap<InstanceId, Vec<(PendingPull, InstanceId)>>,
     /// (input_len, final_len) of recently completed requests — the
     /// workload statistics the periodic re-plan consumes.
     observed: Vec<(Tokens, Tokens)>,
+    /// Per-instance relative capacities (normalized; all 1.0 on
+    /// homogeneous fleets).  The periodic re-plan partitions over
+    /// these.
+    caps: Vec<f64>,
+    /// Accumulators for `RunStats::mean_token_load` (sampled at gossip
+    /// ticks — read-only instrumentation, never consulted by policy).
+    load_sample_sum: Vec<f64>,
+    load_samples: u64,
     pub replans: u64,
 }
 
@@ -220,15 +297,28 @@ impl Cluster {
     /// Build a cluster for `cfg`, planning the pipeline from
     /// `plan_trace` (pass the workload itself or a historical slice).
     pub fn new(cfg: ClusterConfig, plan_trace: &[Request]) -> Self {
-        let am = AttentionModel::new(cfg.gpu, cfg.model);
-        let (qoe_model, _) =
-            qoe::profile_and_fit(&am, 64, cfg.max_len, cfg.engine.max_batch.min(512));
         let e = cfg.n_instances;
+        let fleet = cfg.resolved_fleet();
+        // Shared calibration (QoE profile) runs on the fleet's
+        // reference instance — the majority GPU; the per-instance cost
+        // of *executing* always uses each instance's own GPU below.
+        let reference = *fleet.reference();
+        let am = AttentionModel::new(reference.gpu, cfg.model);
+        let (qoe_model, _) =
+            qoe::profile_and_fit(&am, 64, cfg.max_len, reference.engine.max_batch.min(512));
+        // Relative capacities (1.0 everywhere for homogeneous fleets):
+        // the planner partitions over them and every load comparison
+        // normalizes by them.
+        let caps = fleet.normalized_capacities(&cfg.model);
 
         // Build the stage layout per the scheduler policy.
         let sample = &plan_trace[..plan_trace.len().min(cfg.plan_sample)];
         let hist = LengthHistogram::from_requests(sample, cfg.max_len);
-        let topology = Topology::sequential(e, 8, crate::gpu::LinkKind::NvLink);
+        let topology = cfg
+            .topology
+            .clone()
+            .unwrap_or_else(|| Topology::sequential(e, 8, crate::gpu::LinkKind::NvLink));
+        assert_eq!(topology.node_of.len(), e, "topology must cover every instance");
         let mig_cost = MigrationCost::new(
             cfg.model.kv_bytes_per_token() as f64,
             topology.intra_node.bytes_per_s(),
@@ -239,13 +329,15 @@ impl Cluster {
                 assert_eq!(p.total_instances(), e, "forced pipeline must use all instances");
                 p.clone()
             }
-            (None, Layout::Planned) => planner.plan_dp(&hist, e),
+            (None, Layout::Planned) => planner.plan_dp_weighted(&hist, &caps),
             (None, Layout::Chain) => baselines::chain_layout(&planner, &hist, e),
             (None, Layout::Flat) => Pipeline::no_pipeline(e, cfg.max_len),
         };
 
         // Assign instances to stages contiguously (co-locates adjacent
-        // stages on nodes — the §5 placement optimization).
+        // stages on nodes — the §5 placement optimization; for a mixed
+        // fleet the weighted DP already planned against this exact
+        // instance order).
         let mut stage_of = Vec::with_capacity(e);
         let mut stages: Vec<Vec<InstanceId>> = Vec::new();
         for spec in pipeline.stages.iter() {
@@ -257,15 +349,27 @@ impl Cluster {
             stages.push(members);
         }
 
-        let engine_cfg = cfg.engine_config();
-        let backend = ScaledBackend { inner: CostModelBackend::new(am), speed: cfg.engine_speed };
-        let instances: Vec<InstanceState> = (0..e)
-            .map(|i| {
+        // One engine + cost backend + KV pool *per instance*: each is
+        // priced by its own GPU's attention model and runs at its own
+        // engine speed (the config-level `engine_speed` composes as a
+        // fleet-wide multiplier).
+        let instances: Vec<InstanceState> = fleet
+            .instances
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let engine_cfg = cfg.engine_config_for(spec);
+                let backend = ScaledBackend {
+                    inner: CostModelBackend::new(AttentionModel::new(spec.gpu, cfg.model)),
+                    speed: spec.speed * cfg.engine_speed,
+                };
                 InstanceState::new(
                     i,
                     Engine::new(engine_cfg, backend),
                     LoadTracker::new(i, 10.0),
                     BidAskScheduler::new(i, 4),
+                    spec.gpu.name,
+                    caps[i],
                 )
             })
             .collect();
@@ -278,7 +382,12 @@ impl Cluster {
             .collect();
 
         let migration = MigrationManager::new(cfg.model.kv_bytes_per_token() as f64);
-        let stats = RunStats { stages: stages.clone(), ..Default::default() };
+        let stats = RunStats {
+            stages: stages.clone(),
+            instance_gpus: fleet.gpu_names(),
+            instance_capacity: caps.clone(),
+            ..Default::default()
+        };
 
         let mut cluster = Self {
             cfg,
@@ -303,6 +412,9 @@ impl Cluster {
             offers: Default::default(),
             promises: Default::default(),
             observed: Vec::new(),
+            caps,
+            load_sample_sum: vec![0.0; e],
+            load_samples: 0,
             replans: 0,
         };
         cluster.rebuild_ranges();
@@ -376,7 +488,7 @@ impl Cluster {
         if self.cfg.policy.balance == BalancePolicy::Full
             && now - self.instances[i].last_offer >= OFFER_COOLDOWN
         {
-            let my_load = self.instances[i].engine.token_load();
+            let my_load = self.instances[i].norm_load();
             if self.instances[i].tracker.is_overloaded(
                 now,
                 my_load,
@@ -437,7 +549,9 @@ impl Cluster {
             return;
         }
         // --- Asking phase: notify every candidate receiver (§4.4).
-        let sender_load = self.instances[from].engine.token_load();
+        // Loads ride the protocol capacity-normalized so heterogeneous
+        // receivers are compared on equal footing.
+        let sender_load = self.instances[from].norm_load();
         let targets: Vec<InstanceId> =
             candidates.iter().copied().filter(|&c| c != from).collect();
         if targets.is_empty() {
@@ -476,7 +590,12 @@ impl Cluster {
         let bid = Bid {
             receiver,
             request: ask.request,
-            load: self.instances[receiver].engine.token_load() + buffered,
+            // Capacity-normalized: a fast H100 carrying more raw
+            // tokens than a saturating H20 still (correctly) outbids
+            // it.  On homogeneous fleets capacity is exactly 1.0 and
+            // this equals the raw token count.
+            load: (self.instances[receiver].engine.token_load() + buffered) as f64
+                / self.instances[receiver].capacity,
             earliest_start: now
                 + buffered as f64 / self.instances[receiver].tracker.throughput().max(1.0),
             reply_at,

@@ -11,7 +11,11 @@
 //! ([`crate::engine::Engine::token_load`],
 //! [`crate::coordinator::MigrationManager::inbound_tokens`]) is an O(1)
 //! running aggregate, so routing costs O(stage members) per arrival
-//! rather than O(stage members x batch).
+//! rather than O(stage members x batch).  Load-aware choices compare
+//! *capacity-normalized* loads ([`effective_wait`]), so heterogeneous
+//! fleets route proportionally more work to faster instances while
+//! homogeneous fleets (capacity exactly 1.0) behave bit-identically to
+//! the raw-token comparison.
 
 use crate::cluster::policy::{BalancePolicy, DispatchPolicy, PolicySpec};
 use crate::coordinator::MigrationManager;
@@ -20,6 +24,16 @@ use crate::{InstanceId, Time, Tokens};
 
 use super::state::InstanceState;
 use super::Cluster;
+
+/// Outstanding work on an instance, normalized by its relative
+/// capacity: raw token load (running + queued) plus in-flight
+/// migration arrivals, divided by capacity.  With capacity exactly 1.0
+/// (homogeneous fleets) this equals the raw integer load as f64, so
+/// orderings — including ties — match the legacy u64 comparison
+/// bit for bit.
+fn effective_wait(ins: &InstanceState, migration: &MigrationManager) -> f64 {
+    (ins.engine.token_load() + migration.inbound_tokens(ins.id)) as f64 / ins.capacity
+}
 
 /// Index of the stage whose `[lo, hi)` range covers `len` (clamps to
 /// the last stage — §3.2 routes to the earliest covering stage).
@@ -78,13 +92,17 @@ impl Router {
             DispatchPolicy::ShortestFirst => {
                 // SJF-flavoured shortest-expected-wait: least total
                 // outstanding work — `token_load` counts running *and*
-                // queued tokens, plus in-flight migration arrivals;
-                // first index on ties — deterministic.  Short requests
-                // never queue behind a long backlog when an emptier
-                // instance exists.
+                // queued tokens, plus in-flight migration arrivals —
+                // normalized by instance capacity, so a fast instance
+                // with proportionally more queued tokens still reads
+                // as the shorter wait; first index on ties —
+                // deterministic.  Short requests never queue behind a
+                // long backlog when an effectively-emptier instance
+                // exists.
                 (0..instances.len())
-                    .min_by_key(|&i| {
-                        instances[i].engine.token_load() + migration.inbound_tokens(i)
+                    .min_by(|&a, &b| {
+                        effective_wait(&instances[a], migration)
+                            .total_cmp(&effective_wait(&instances[b], migration))
                     })
                     .expect("cluster has instances")
             }
@@ -98,11 +116,15 @@ impl Router {
                     stages[s][self.next_rr() % stages[s].len()]
                 } else {
                     // Counting in-flight migration arrivals prevents the
-                    // herd effect on a momentarily-least-loaded member.
+                    // herd effect on a momentarily-least-loaded member;
+                    // capacity normalization keeps a fast member
+                    // preferred until it carries its fair (larger)
+                    // share.
                     *stages[s]
                         .iter()
-                        .min_by_key(|&&i| {
-                            instances[i].engine.token_load() + migration.inbound_tokens(i)
+                        .min_by(|&&a, &&b| {
+                            effective_wait(&instances[a], migration)
+                                .total_cmp(&effective_wait(&instances[b], migration))
                         })
                         .expect("stage has members")
                 }

@@ -3,11 +3,14 @@
 //! [`InstanceState`] bundles everything the simulator tracks per
 //! engine instance: the engine itself, its token-level load tracker,
 //! the §4.4 bid-ask state machine, the busy flag of the event loop,
-//! and the intra-stage offer cooldown.  All load-shaped queries the
-//! coordination protocol makes against an instance (token load, memory
-//! demand, gossip report) resolve to running aggregates maintained by
-//! the engine/tracker, so touching an instance on the hot path is O(1)
-//! instead of an O(batch) rescan of its sequences.
+//! the intra-stage offer cooldown, and — since fleets may be
+//! heterogeneous — the instance's GPU tag and its *relative capacity*
+//! (normalized to the fleet maximum; exactly 1.0 on homogeneous
+//! fleets).  All load-shaped queries the coordination protocol makes
+//! against an instance (token load, memory demand, gossip report)
+//! resolve to running aggregates maintained by the engine/tracker, so
+//! touching an instance on the hot path is O(1) instead of an
+//! O(batch) rescan of its sequences.
 
 use crate::coordinator::balance::BidAskScheduler;
 use crate::coordinator::loadtracker::LoadReport;
@@ -25,6 +28,13 @@ pub struct InstanceState {
     pub tracker: LoadTracker,
     /// §4.4 sender book + receiver priority queue.
     pub scheduler: BidAskScheduler,
+    /// GPU profile name backing this instance (report tag).
+    pub gpu: &'static str,
+    /// Relative serving capacity in (0, 1], normalized to the fleet
+    /// maximum.  Every cross-instance load comparison divides by this,
+    /// so a homogeneous fleet (capacity exactly 1.0) reduces
+    /// bit-identically to raw token-load comparisons.
+    pub capacity: f64,
     /// True while a StepDone event for this instance is in flight.
     pub busy: bool,
     /// Last intra-stage offer time (rebalance hysteresis).
@@ -37,17 +47,36 @@ impl InstanceState {
         engine: Engine<ScaledBackend>,
         tracker: LoadTracker,
         scheduler: BidAskScheduler,
+        gpu: &'static str,
+        capacity: f64,
     ) -> Self {
-        Self { id, engine, tracker, scheduler, busy: false, last_offer: f64::NEG_INFINITY }
+        Self {
+            id,
+            engine,
+            tracker,
+            scheduler,
+            gpu,
+            capacity,
+            busy: false,
+            last_offer: f64::NEG_INFINITY,
+        }
+    }
+
+    /// This instance's capacity-normalized token load — the value all
+    /// cross-instance comparisons use.
+    pub fn norm_load(&self) -> f64 {
+        self.engine.token_load() as f64 / self.capacity
     }
 
     /// The gossip report this instance broadcasts (§3.2). All inputs
     /// are running aggregates — assembling a report is O(1).
     pub fn load_report(&self, now: Time) -> LoadReport {
+        let token_load = self.engine.token_load();
         LoadReport {
             instance: self.id,
             at: now,
-            token_load: self.engine.token_load(),
+            token_load,
+            norm_load: token_load as f64 / self.capacity,
             n_seqs: self.engine.n_running(),
             memory_demand: self.engine.memory_demand(),
             throughput: self.tracker.throughput(),

@@ -239,6 +239,10 @@ pub struct ExperimentConfig {
     pub scheduler: String,
     /// Workload name (see [`crate::workload::WorkloadSpec::parse`]).
     pub workload: String,
+    /// Optional heterogeneous fleet string
+    /// (see [`crate::fleet::FleetSpec::parse`], e.g. `"h20:6,h100:2"`).
+    /// When set it overrides `instances`/`gpu`.
+    pub fleet: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -252,6 +256,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             scheduler: "cascade".into(),
             workload: "sharegpt".into(),
+            fleet: None,
         }
     }
 }
@@ -268,6 +273,10 @@ impl ExperimentConfig {
             seed: cfg.get_int("experiment", "seed", d.seed as i64) as u64,
             scheduler: cfg.get_str("experiment", "scheduler", &d.scheduler),
             workload: cfg.get_str("experiment", "workload", &d.workload),
+            fleet: cfg
+                .get("experiment", "fleet")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string()),
         }
     }
 }

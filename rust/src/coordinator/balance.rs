@@ -21,6 +21,14 @@
 //! request (sender busy transmitting another); past a threshold it
 //! notifies the sender, which promotes the request to
 //! send-immediately-after-current.
+//!
+//! Heterogeneous fleets: every load carried by the protocol messages
+//! (`Ask::sender_load`, `Bid::load`, `PendingPull::priority`) is
+//! **capacity-normalized** — raw token load divided by the instance's
+//! relative capacity — so a fast H100 at 60% of its (larger) capacity
+//! correctly outbids a saturating H20 at the same raw token count.  On
+//! homogeneous fleets every capacity is exactly 1.0 and the normalized
+//! values equal the raw token loads bit-for-bit.
 
 use crate::{InstanceId, RequestId, Time, Tokens};
 use std::collections::{BinaryHeap, HashMap};
@@ -31,8 +39,9 @@ pub struct Ask {
     pub sender: InstanceId,
     pub request: RequestId,
     pub seq_len: Tokens,
-    /// Total length of all requests buffered at the sender.
-    pub sender_load: Tokens,
+    /// Total length of all requests buffered at the sender, normalized
+    /// by the sender's relative capacity.
+    pub sender_load: f64,
 }
 
 /// Bid message: receiver's counter-offer.
@@ -40,8 +49,9 @@ pub struct Ask {
 pub struct Bid {
     pub receiver: InstanceId,
     pub request: RequestId,
-    /// Receiver's current load (cached tokens + buffered migrations).
-    pub load: Tokens,
+    /// Receiver's current load (cached tokens + buffered migrations),
+    /// normalized by the receiver's relative capacity.
+    pub load: f64,
     /// Earliest time the receiver could start this transfer.
     pub earliest_start: Time,
     /// When the bid reached the sender (for first-reply tie-breaking).
@@ -54,11 +64,13 @@ pub fn select_receiver(bids: &[Bid]) -> Option<InstanceId> {
     if bids.is_empty() {
         return None;
     }
-    // 1. Filter out the half with higher load (keep ceil(n/2) lowest).
+    // 1. Filter out the half with higher (capacity-normalized) load —
+    // keep ceil(n/2) lowest.  total_cmp: a NaN load sorts last instead
+    // of panicking.
     let mut by_load: Vec<&Bid> = bids.iter().collect();
     by_load.sort_by(|a, b| {
         a.load
-            .cmp(&b.load)
+            .total_cmp(&b.load)
             .then(a.receiver.cmp(&b.receiver))
     });
     let keep = by_load.len().div_ceil(2);
@@ -90,8 +102,9 @@ pub struct PendingPull {
     pub sender: InstanceId,
     pub request: RequestId,
     pub seq_len: Tokens,
-    /// Priority = sender's load at confirm time (§4.4).
-    pub priority: Tokens,
+    /// Priority = sender's capacity-normalized load at confirm time
+    /// (§4.4).
+    pub priority: f64,
     pub failed_attempts: u32,
 }
 
@@ -99,9 +112,10 @@ impl Eq for PendingPull {}
 
 impl Ord for PendingPull {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Max-heap on priority; deterministic tie-break on request id.
+        // Max-heap on priority (total_cmp: NaN-safe, total order);
+        // deterministic tie-break on request id.
         self.priority
-            .cmp(&other.priority)
+            .total_cmp(&other.priority)
             .then(other.request.cmp(&self.request))
     }
 }
@@ -285,7 +299,7 @@ impl BidAskScheduler {
 mod tests {
     use super::*;
 
-    fn bid(receiver: usize, load: u64, start: f64, reply: f64) -> Bid {
+    fn bid(receiver: usize, load: f64, start: f64, reply: f64) -> Bid {
         Bid { receiver, request: 1, load, earliest_start: start, reply_at: reply }
     }
 
@@ -294,10 +308,10 @@ mod tests {
         // Receivers 3,4 have much higher load and must be filtered even
         // though they reply first and start earliest.
         let bids = vec![
-            bid(1, 100, 5.0, 5.0),
-            bid(2, 120, 4.0, 4.0),
-            bid(3, 900, 0.0, 0.0),
-            bid(4, 950, 0.0, 0.0),
+            bid(1, 100.0, 5.0, 5.0),
+            bid(2, 120.0, 4.0, 4.0),
+            bid(3, 900.0, 0.0, 0.0),
+            bid(4, 950.0, 0.0, 0.0),
         ];
         let chosen = select_receiver(&bids).unwrap();
         assert!(chosen == 1 || chosen == 2);
@@ -310,25 +324,25 @@ mod tests {
         // 6 low-load receivers; keep 3 earliest starts {a,b,c}; first
         // reply among them wins.
         let bids = vec![
-            bid(1, 10, 1.0, 9.0),
-            bid(2, 10, 2.0, 1.0),
-            bid(3, 10, 3.0, 2.0),
-            bid(4, 10, 4.0, 0.1), // 4th earliest start — excluded
-            bid(5, 11, 5.0, 0.1),
-            bid(6, 11, 6.0, 0.1),
+            bid(1, 10.0, 1.0, 9.0),
+            bid(2, 10.0, 2.0, 1.0),
+            bid(3, 10.0, 3.0, 2.0),
+            bid(4, 10.0, 4.0, 0.1), // 4th earliest start — excluded
+            bid(5, 11.0, 5.0, 0.1),
+            bid(6, 11.0, 6.0, 0.1),
         ];
         assert_eq!(select_receiver(&bids), Some(2));
     }
 
     #[test]
     fn selection_single_bid() {
-        assert_eq!(select_receiver(&[bid(7, 1, 0.0, 0.0)]), Some(7));
+        assert_eq!(select_receiver(&[bid(7, 1.0, 0.0, 0.0)]), Some(7));
         assert_eq!(select_receiver(&[]), None);
     }
 
     #[test]
     fn selection_deterministic_on_ties() {
-        let bids = vec![bid(2, 10, 1.0, 1.0), bid(1, 10, 1.0, 1.0)];
+        let bids = vec![bid(2, 10.0, 1.0, 1.0), bid(1, 10.0, 1.0, 1.0)];
         // Ties broken by receiver id — stable across orderings.
         let a = select_receiver(&bids);
         let rev: Vec<Bid> = bids.into_iter().rev().collect();
@@ -339,9 +353,9 @@ mod tests {
     fn sender_book_waits_for_all_bids() {
         let mut book = SenderBook::default();
         book.open(1, 3);
-        assert_eq!(book.record(bid(1, 10, 0.0, 0.0)), None);
-        assert_eq!(book.record(bid(2, 20, 0.0, 0.1)), None);
-        let chosen = book.record(bid(3, 30, 0.0, 0.2));
+        assert_eq!(book.record(bid(1, 10.0, 0.0, 0.0)), None);
+        assert_eq!(book.record(bid(2, 20.0, 0.0, 0.1)), None);
+        let chosen = book.record(bid(3, 30.0, 0.0, 0.2));
         assert!(chosen.is_some());
         assert!(!book.is_open(1));
     }
@@ -350,7 +364,7 @@ mod tests {
     fn sender_book_timeout_close() {
         let mut book = SenderBook::default();
         book.open(1, 5);
-        book.record(bid(1, 10, 0.0, 0.0));
+        book.record(bid(1, 10.0, 0.0, 0.0));
         assert_eq!(book.close(1), Some(1));
         assert_eq!(book.close(1), None, "already closed");
     }
@@ -358,9 +372,16 @@ mod tests {
     #[test]
     fn receiver_queue_orders_by_sender_load() {
         let mut q = ReceiverQueue::new(3);
-        q.push(PendingPull { sender: 1, request: 1, seq_len: 10, priority: 100, failed_attempts: 0 });
-        q.push(PendingPull { sender: 2, request: 2, seq_len: 10, priority: 900, failed_attempts: 0 });
-        q.push(PendingPull { sender: 3, request: 3, seq_len: 10, priority: 500, failed_attempts: 0 });
+        let p = |sender: usize, request: u64, priority: f64| PendingPull {
+            sender,
+            request,
+            seq_len: 10,
+            priority,
+            failed_attempts: 0,
+        };
+        q.push(p(1, 1, 100.0));
+        q.push(p(2, 2, 900.0));
+        q.push(p(3, 3, 500.0));
         match q.next_action(|_| false) {
             PullAction::Pull(p) => assert_eq!(p.request, 2, "highest sender load first"),
             other => panic!("unexpected {other:?}"),
@@ -370,8 +391,15 @@ mod tests {
     #[test]
     fn receiver_skips_busy_sender() {
         let mut q = ReceiverQueue::new(5);
-        q.push(PendingPull { sender: 1, request: 1, seq_len: 10, priority: 900, failed_attempts: 0 });
-        q.push(PendingPull { sender: 2, request: 2, seq_len: 10, priority: 100, failed_attempts: 0 });
+        let p = |sender: usize, request: u64, priority: f64| PendingPull {
+            sender,
+            request,
+            seq_len: 10,
+            priority,
+            failed_attempts: 0,
+        };
+        q.push(p(1, 1, 900.0));
+        q.push(p(2, 2, 100.0));
         // Sender 1 busy: queue skips to request 2.
         match q.next_action(|s| s == 1) {
             PullAction::Pull(p) => assert_eq!(p.request, 2),
@@ -384,7 +412,9 @@ mod tests {
     #[test]
     fn starvation_escalates_after_threshold() {
         let mut q = ReceiverQueue::new(2);
-        q.push(PendingPull { sender: 1, request: 1, seq_len: 10, priority: 900, failed_attempts: 0 });
+        let pull =
+            PendingPull { sender: 1, request: 1, seq_len: 10, priority: 900.0, failed_attempts: 0 };
+        q.push(pull);
         // Attempt 1: skipped.
         assert!(matches!(q.next_action(|_| true), PullAction::Idle));
         // Attempt 2: hits the threshold -> starved.
@@ -398,8 +428,15 @@ mod tests {
     #[test]
     fn buffered_len_sums_queued() {
         let mut q = ReceiverQueue::new(3);
-        q.push(PendingPull { sender: 1, request: 1, seq_len: 100, priority: 1, failed_attempts: 0 });
-        q.push(PendingPull { sender: 1, request: 2, seq_len: 200, priority: 2, failed_attempts: 0 });
+        let p = |request: u64, seq_len: u64, priority: f64| PendingPull {
+            sender: 1,
+            request,
+            seq_len,
+            priority,
+            failed_attempts: 0,
+        };
+        q.push(p(1, 100, 1.0));
+        q.push(p(2, 200, 2.0));
         assert_eq!(q.buffered_len(), 300);
     }
 
@@ -424,18 +461,22 @@ mod tests {
     fn nan_bids_do_not_panic_and_never_beat_finite_bids() {
         // Pathological bids (NaN earliest_start / reply_at) must not
         // panic selection, and a finite bid of equal load must win.
+        let nan_bid = |receiver: usize, load: f64| Bid {
+            receiver,
+            request: 1,
+            load,
+            earliest_start: f64::NAN,
+            reply_at: f64::NAN,
+        };
         let bids = vec![
-            Bid { receiver: 1, request: 1, load: 10, earliest_start: f64::NAN, reply_at: f64::NAN },
-            bid(2, 10, 1.0, 1.0),
-            bid(3, 900, 0.0, 0.0),
-            bid(4, 900, 0.0, 0.0),
+            nan_bid(1, 10.0),
+            bid(2, 10.0, 1.0, 1.0),
+            bid(3, 900.0, 0.0, 0.0),
+            bid(4, 900.0, 0.0, 0.0),
         ];
         assert_eq!(select_receiver(&bids), Some(2));
         // All-NaN still selects deterministically instead of panicking.
-        let all_nan = vec![
-            Bid { receiver: 5, request: 1, load: 1, earliest_start: f64::NAN, reply_at: f64::NAN },
-            Bid { receiver: 6, request: 1, load: 1, earliest_start: f64::NAN, reply_at: f64::NAN },
-        ];
+        let all_nan = vec![nan_bid(5, 1.0), nan_bid(6, 1.0)];
         assert!(select_receiver(&all_nan).is_some());
     }
 
@@ -451,15 +492,15 @@ mod tests {
                 .map(|i| Bid {
                     receiver: i,
                     request: 9,
-                    load: rng.next_range(1000),
+                    load: rng.next_range(1000) as f64,
                     earliest_start: rng.next_f64(),
                     reply_at: rng.next_f64(),
                 })
                 .collect();
             let chosen = select_receiver(&bids).unwrap();
-            let mut by_load: Vec<(u64, usize)> =
+            let mut by_load: Vec<(f64, usize)> =
                 bids.iter().map(|b| (b.load, b.receiver)).collect();
-            by_load.sort_unstable();
+            by_load.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
             let keep = by_load.len().div_ceil(2);
             assert!(
                 by_load[..keep].iter().any(|&(_, r)| r == chosen),
@@ -471,15 +512,15 @@ mod tests {
     #[test]
     fn buffered_len_incremental_tracks_push_pop_requeue() {
         let mut q = ReceiverQueue::new(2);
-        let p = |request: u64, seq_len: u64, priority: u64| PendingPull {
+        let p = |request: u64, seq_len: u64, priority: f64| PendingPull {
             sender: 1,
             request,
             seq_len,
             priority,
             failed_attempts: 0,
         };
-        q.push(p(1, 100, 5));
-        q.push(p(2, 200, 9));
+        q.push(p(1, 100, 5.0));
+        q.push(p(2, 200, 9.0));
         assert_eq!(q.buffered_len(), 300);
         // Pull removes request 2 (highest priority): 200 leaves.
         match q.next_action(|_| false) {

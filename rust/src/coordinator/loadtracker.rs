@@ -24,6 +24,12 @@ pub struct LoadReport {
     pub at: Time,
     /// Total cached tokens across live sequences.
     pub token_load: Tokens,
+    /// `token_load` divided by the instance's relative capacity — the
+    /// value every cross-instance comparison (overload outliers, bid
+    /// scoring) uses, so a fast instance is not declared overloaded for
+    /// carrying its fair, larger share.  Equals `token_load as f64` on
+    /// homogeneous fleets (capacity exactly 1.0).
+    pub norm_load: f64,
     /// Live sequence count.
     pub n_seqs: usize,
     /// KV-pool utilization in [0,1].
@@ -161,25 +167,28 @@ impl LoadTracker {
 
     /// Is this instance an overloaded outlier within its stage?
     /// (§4.4: request-memory demand 25% above the stage average.)
+    /// `my_load` and the gossiped loads are capacity-normalized, so on
+    /// a mixed fleet "outlier" means *relative to what the instance can
+    /// absorb*, not raw token count.
     ///
     /// Allocation-free: iterates the sorted report list directly (the
     /// old path materialised + sorted a Vec on every post-step check).
     /// Summation order is the fixed instance order, so results are
     /// bit-stable run to run.
-    pub fn is_overloaded(&self, now: Time, my_load: Tokens, threshold: f64, max_age: Time) -> bool {
+    pub fn is_overloaded(&self, now: Time, my_load: f64, threshold: f64, max_age: Time) -> bool {
         let mut total = 0.0f64;
         let mut n_peers = 0usize;
         for r in &self.peer_reports {
             if now - r.at <= max_age {
-                total += r.token_load as f64;
+                total += r.norm_load;
                 n_peers += 1;
             }
         }
         if n_peers == 0 {
             return false;
         }
-        let avg = (total + my_load as f64) / (n_peers + 1) as f64;
-        my_load as f64 > avg * (1.0 + threshold)
+        let avg = (total + my_load) / (n_peers + 1) as f64;
+        my_load > avg * (1.0 + threshold)
     }
 }
 
@@ -192,6 +201,7 @@ mod tests {
             instance,
             at,
             token_load: load,
+            norm_load: load as f64,
             n_seqs: 1,
             memory_demand: 0.5,
             throughput: 100.0,
@@ -235,15 +245,31 @@ mod tests {
         t.record_peer(report(1, 0.0, 100));
         t.record_peer(report(2, 0.0, 100));
         // avg(100,100,140) = 113.3; 140 > 1.25*113 is false.
-        assert!(!t.is_overloaded(0.0, 140, 0.25, 10.0));
+        assert!(!t.is_overloaded(0.0, 140.0, 0.25, 10.0));
         // avg(100,100,200) = 133.3; 200 > 166.7 is true.
-        assert!(t.is_overloaded(0.0, 200, 0.25, 10.0));
+        assert!(t.is_overloaded(0.0, 200.0, 0.25, 10.0));
+    }
+
+    #[test]
+    fn overload_compares_capacity_normalized_loads() {
+        // Peers report raw loads of 100 at capacity 0.5 -> norm 200.
+        // A raw load of 150 at capacity 1.0 (norm 150) is *below* the
+        // normalized stage average even though its raw count is higher.
+        let mut t = LoadTracker::new(0, 10.0);
+        for i in [1usize, 2] {
+            let mut r = report(i, 0.0, 100);
+            r.norm_load = 200.0;
+            t.record_peer(r);
+        }
+        assert!(!t.is_overloaded(0.0, 150.0, 0.25, 10.0));
+        // The same raw count on a half-capacity instance is an outlier.
+        assert!(t.is_overloaded(0.0, 300.0, 0.25, 10.0));
     }
 
     #[test]
     fn no_peers_never_overloaded() {
         let t = LoadTracker::new(0, 10.0);
-        assert!(!t.is_overloaded(0.0, 10_000, 0.25, 10.0));
+        assert!(!t.is_overloaded(0.0, 10_000.0, 0.25, 10.0));
     }
 
     #[test]

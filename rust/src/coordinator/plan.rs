@@ -142,10 +142,63 @@ impl Planner {
         self.qoe.split_batch_qoe(&agg.features(), k)
     }
 
-    /// Exact DP over the histogram's exponential buckets.
+    /// QoE of serving `agg` on a *heterogeneous* instance set.
+    ///
+    /// Model: the runtime's capacity-normalized balancing assigns each
+    /// member the share that *equalizes per-request quality* — on an
+    /// instance with relative speed `s_i` a sub-batch's latency scales
+    /// by `1/s_i`, and solving `(D0 + L*w_i)/s_i = q, sum w_i = 1` for
+    /// the linear QoE gives stage cost `Q_even * k / sum(s_i)`: the
+    /// paper's even set division, discounted by the set's mean relative
+    /// speed.  Speeds are relative to the **fleet mean** (`fleet_mean`
+    /// = mean raw capacity), so a stage of above-average instances
+    /// prices *below* the even-split cost and the DP steers heavy
+    /// length ranges toward capacity-rich stages.  For a homogeneous
+    /// fleet every `cap == fleet_mean` and the factor is exactly 1.0 —
+    /// callers additionally take the legacy `stage_cost` path there so
+    /// bit-identity never rests on this arithmetic.
+    fn stage_cost_weighted(&self, agg: RangeAgg, caps: &[f64], fleet_mean: f64) -> f64 {
+        if agg.n == 0.0 {
+            return 0.0;
+        }
+        let k = caps.len();
+        let sum_rel: f64 = caps.iter().map(|c| c / fleet_mean).sum();
+        self.stage_cost(agg, k) * (k as f64 / sum_rel)
+    }
+
+    /// Exact DP over the histogram's exponential buckets for `e`
+    /// interchangeable instances.  Thin wrapper over
+    /// [`Planner::plan_dp_weighted`] with uniform capacities.
     pub fn plan_dp(&self, hist: &LengthHistogram, e: usize) -> Pipeline {
+        self.plan_dp_weighted(hist, &vec![1.0; e])
+    }
+
+    /// Exact DP over the histogram's exponential buckets, partitioning
+    /// a (possibly heterogeneous) ordered instance list described by
+    /// per-instance capacity weights.  Instances are assigned to stages
+    /// contiguously in list order (the §5 placement property), so the
+    /// DP state is an instance *prefix* rather than a count; stage
+    /// quality is a function of the exact instance subrange assigned
+    /// ([`Planner::stage_cost_weighted`]): a subrange whose mean
+    /// capacity beats the fleet mean prices below the even-split cost,
+    /// so heavy length ranges gravitate to capacity-rich stages.  With
+    /// uniform capacities the recurrence, the float operations, and the
+    /// tie-breaking are identical to the historical count-based DP.
+    pub fn plan_dp_weighted(&self, hist: &LengthHistogram, caps: &[f64]) -> Pipeline {
+        let e = caps.len();
         assert!(e >= 1);
+        debug_assert!(caps.iter().all(|c| c.is_finite() && *c > 0.0), "{caps:?}");
+        let uniform = caps.windows(2).all(|w| w[0] == w[1]);
+        let fleet_mean = caps.iter().sum::<f64>() / e as f64;
         let k = hist.bounds.len();
+        // A histogram with no buckets (empty bounds) cannot seed the
+        // DP; the only valid answer is one stage holding everything.
+        if k == 0 {
+            return Pipeline {
+                stages: vec![StageSpec { lo: 0, hi: Tokens::MAX, n_instances: e }],
+                predicted_quality: 0.0,
+            };
+        }
         let pref = hist.prefix();
         let range = |a: usize, b: usize| -> RangeAgg {
             RangeAgg {
@@ -187,7 +240,16 @@ impl Planner {
                                 continue;
                             }
                             let agg = range(lp, ll);
-                            let stage = self.stage_cost(agg, ee - ep);
+                            // Stage quality over the instance subrange
+                            // (ep..ee]: uniform fleets take the exact
+                            // historical code path (bit-identical
+                            // float ops), heterogeneous ones price the
+                            // capacity-weighted set division.
+                            let stage = if uniform {
+                                self.stage_cost(agg, ee - ep)
+                            } else {
+                                self.stage_cost_weighted(agg, &caps[ep..ee], fleet_mean)
+                            };
                             let cut = if lp == 0 {
                                 0.0
                             } else {
@@ -569,5 +631,113 @@ mod tests {
         let p = Planner::new(qoe(), MigrationCost::free());
         let pipe = p.plan_dp(&h, 4);
         assert_eq!(pipe.total_instances(), 4);
+    }
+
+    #[test]
+    fn empty_histogram_plans_single_stage() {
+        // No observed requests: the only defensible layout is one
+        // stage holding every instance (no data to cut on).
+        let h = LengthHistogram::new(LengthHistogram::exponential_bounds(131_072));
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let pipe = p.plan_dp(&h, 4);
+        assert_eq!(pipe.stages.len(), 1);
+        assert_eq!(pipe.stages[0].n_instances, 4);
+        assert_eq!(pipe.stages[0].lo, 0);
+    }
+
+    #[test]
+    fn no_bucket_histogram_plans_single_stage() {
+        // Degenerate histogram with zero buckets: previously this fell
+        // through to a "no feasible pipeline" panic.
+        let h = LengthHistogram::new(Vec::new());
+        let p = Planner::new(qoe(), MigrationCost::free());
+        for e in [1, 4] {
+            let pipe = p.plan_dp(&h, e);
+            assert_eq!(pipe.stages.len(), 1);
+            assert_eq!(pipe.total_instances(), e);
+            assert_eq!(pipe.stages[0].lo, 0);
+            assert!(pipe.boundaries().is_empty());
+        }
+    }
+
+    #[test]
+    fn single_bucket_histogram_plans_single_stage() {
+        let mut h = LengthHistogram::new(vec![131_072]);
+        h.push(100, 500);
+        h.push(2000, 9000);
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let pipe = p.plan_dp(&h, 8);
+        assert_eq!(pipe.stages.len(), 1);
+        assert_eq!(pipe.stages[0], StageSpec { lo: 0, hi: 131_072, n_instances: 8 });
+    }
+
+    #[test]
+    fn exact_fine_empty_requests_single_stage() {
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let pipe = p.plan_exact_fine(&[], 4, 16_384, 512);
+        assert_eq!(pipe.stages.len(), 1);
+        assert_eq!(pipe.total_instances(), 4);
+        // Degenerate zero-length range collapses to zero buckets; still
+        // a valid single-stage answer rather than a panic.
+        let pipe = p.plan_exact_fine(&[], 2, 0, 512);
+        assert_eq!(pipe.stages.len(), 1);
+        assert_eq!(pipe.total_instances(), 2);
+    }
+
+    #[test]
+    fn weighted_dp_with_uniform_caps_matches_plan_dp() {
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let h = hist();
+        let a = p.plan_dp(&h, 8);
+        let b = p.plan_dp_weighted(&h, &[3.7; 8]);
+        assert_eq!(a.stages, b.stages);
+        assert_eq!(a.predicted_quality.to_bits(), b.predicted_quality.to_bits());
+    }
+
+    #[test]
+    fn weighted_dp_heterogeneous_is_valid_and_contiguous() {
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let h = hist();
+        // 6 slow + 2 fast instances (an h20:6,h100:2-shaped fleet).
+        let caps = [0.35, 0.35, 0.35, 0.35, 0.35, 0.35, 1.0, 1.0];
+        let pipe = p.plan_dp_weighted(&h, &caps);
+        assert_eq!(pipe.total_instances(), 8);
+        assert_eq!(pipe.stages.first().unwrap().lo, 0);
+        assert_eq!(pipe.stages.last().unwrap().hi, 131_072);
+        for w in pipe.stages.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+            assert!(w[0].lo < w[0].hi);
+        }
+        assert!(pipe.predicted_quality.is_finite());
+    }
+
+    #[test]
+    fn weighted_stage_cost_reduces_to_even_split_for_uniform_caps() {
+        // At the fleet mean, the speed discount is exactly 1: the cost
+        // is the paper's k * Q^{n/k} even set division, bit for bit.
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let agg = RangeAgg { n: 64.0, sum_i: 12_000.0, sum_i2: 9.0e6, sum_l: 40_000.0 };
+        let even = p.stage_cost(agg, 4);
+        let weighted = p.stage_cost_weighted(agg, &[2.0; 4], 2.0);
+        assert_eq!(even.to_bits(), weighted.to_bits());
+    }
+
+    #[test]
+    fn weighted_stage_cost_prefers_capacity_where_load_is() {
+        // Against a fleet mean of 1.0: a pair with an above-average
+        // member prices *below* the even-split cost (the DP is drawn to
+        // put heavy ranges there), a below-average pair prices above
+        // it.
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let agg = RangeAgg { n: 128.0, sum_i: 64_000.0, sum_i2: 4.0e7, sum_l: 300_000.0 };
+        let even = p.stage_cost(agg, 2);
+        let fast_pair = p.stage_cost_weighted(agg, &[1.0, 3.0], 1.0);
+        let slow_pair = p.stage_cost_weighted(agg, &[0.5, 0.5], 1.0);
+        assert!(
+            fast_pair < even && even < slow_pair,
+            "fast {fast_pair} < even {even} < slow {slow_pair}"
+        );
+        // The discount is the set's mean relative speed: (1+3)/2 = 2x.
+        assert!((fast_pair * 2.0 - even).abs() <= 1e-12 * even.abs());
     }
 }

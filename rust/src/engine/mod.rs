@@ -67,7 +67,7 @@ impl ExecBackend for CostModelBackend {
 }
 
 /// Engine scheduling limits (vLLM-equivalent knobs).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EngineConfig {
     /// Max sequences in one decode batch (paper caps at 1024).
     pub max_batch: usize,

@@ -42,7 +42,8 @@
 use crate::cluster::{run_experiment, ClusterConfig, PolicySpec};
 use crate::config::ExperimentConfig;
 use crate::coordinator::plan::Pipeline;
-use crate::gpu::GpuProfile;
+use crate::fleet::FleetSpec;
+use crate::gpu::{GpuProfile, Topology};
 use crate::metrics::Report;
 use crate::models::{self, ModelProfile};
 use crate::workload::{Request, WorkloadSpec};
@@ -58,6 +59,8 @@ pub enum ExperimentError {
     UnknownGpu(String),
     Policy(String),
     Workload(String),
+    /// Malformed `--fleet` spec (bad grammar or unknown GPU).
+    Fleet(String),
     Invalid(String),
 }
 
@@ -68,6 +71,7 @@ impl fmt::Display for ExperimentError {
             ExperimentError::UnknownGpu(m) => write!(f, "{m}"),
             ExperimentError::Policy(m) => write!(f, "{m}"),
             ExperimentError::Workload(m) => write!(f, "{m}"),
+            ExperimentError::Fleet(m) => write!(f, "{m}"),
             ExperimentError::Invalid(m) => write!(f, "{m}"),
         }
     }
@@ -114,7 +118,7 @@ impl Experiment {
     /// Individual setters (CLI flags) can still override before
     /// `build()`.
     pub fn from_config(cfg: &ExperimentConfig) -> ExperimentBuilder {
-        Experiment::builder()
+        let mut b = Experiment::builder()
             .model(&cfg.model)
             .gpu(&cfg.gpu)
             .instances(cfg.n_instances)
@@ -122,7 +126,11 @@ impl Experiment {
             .requests(cfg.n_requests)
             .seed(cfg.seed)
             .scheduler(&cfg.scheduler)
-            .workload_name(&cfg.workload)
+            .workload_name(&cfg.workload);
+        if let Some(f) = &cfg.fleet {
+            b = b.fleet(f);
+        }
+        b
     }
 
     /// Run the experiment end to end.
@@ -149,6 +157,9 @@ pub struct ExperimentBuilder {
     workload_name: Option<String>,
     workload: Option<WorkloadSpec>,
     trace: Option<Vec<Request>>,
+    fleet_name: Option<String>,
+    fleet_spec: Option<FleetSpec>,
+    topology: Option<Topology>,
     engine_speed: Option<f64>,
     kv_capacity: Option<Tokens>,
     plan_sample: Option<usize>,
@@ -173,6 +184,9 @@ impl Default for ExperimentBuilder {
             workload_name: None,
             workload: None,
             trace: None,
+            fleet_name: None,
+            fleet_spec: None,
+            topology: None,
             engine_speed: None,
             kv_capacity: None,
             plan_sample: None,
@@ -266,6 +280,31 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Heterogeneous fleet by CLI string (`h20:6,h100:2[,speed=F]`,
+    /// parsed at `build`).  Overrides `instances` and `gpu`: the
+    /// instance count is the fleet size, and each instance carries its
+    /// own GPU profile and engine speed.
+    pub fn fleet(mut self, spec: &str) -> Self {
+        self.fleet_name = Some(spec.to_string());
+        self.fleet_spec = None;
+        self
+    }
+
+    /// Heterogeneous fleet by explicit spec (skips parsing).
+    pub fn fleet_spec(mut self, f: FleetSpec) -> Self {
+        self.fleet_spec = Some(f);
+        self.fleet_name = None;
+        self
+    }
+
+    /// Physical node topology (default: 8-GPU NVLink nodes, sequential
+    /// fill — the paper's H20 testbed shape).  Drives the migration
+    /// cost model's link bandwidth.
+    pub fn topology(mut self, t: Topology) -> Self {
+        self.topology = Some(t);
+        self
+    }
+
     /// Override the policy's engine speed (e.g. benches modelling a
     /// faster runtime).
     pub fn engine_speed(mut self, s: f64) -> Self {
@@ -307,7 +346,18 @@ impl ExperimentBuilder {
     /// Resolve every name, materialise the trace, and assemble the
     /// cluster configuration.
     pub fn build(self) -> Result<Experiment, ExperimentError> {
-        if self.instances == 0 {
+        // The fleet axis, when present, defines the instance count and
+        // per-instance GPUs; otherwise `instances` copies of `gpu`.
+        let fleet_from_name = self.fleet_spec.is_none() && self.fleet_name.is_some();
+        let fleet = match (self.fleet_spec, &self.fleet_name) {
+            (Some(f), _) => Some(f),
+            (None, Some(name)) => {
+                Some(FleetSpec::parse(name).map_err(ExperimentError::Fleet)?)
+            }
+            (None, None) => None,
+        };
+        let n_instances = fleet.as_ref().map(FleetSpec::len).unwrap_or(self.instances);
+        if n_instances == 0 {
             return Err(ExperimentError::Invalid("instances must be >= 1".into()));
         }
         let model = match self.model_profile {
@@ -354,7 +404,7 @@ impl ExperimentBuilder {
             return Err(ExperimentError::Invalid("experiment has zero requests".into()));
         }
 
-        let mut cfg = ClusterConfig::new(gpu, model, self.instances, policy);
+        let mut cfg = ClusterConfig::new(gpu, model, n_instances, policy);
         cfg.seed = self.seed;
         if let Some(s) = self.engine_speed {
             cfg.engine_speed = s;
@@ -373,6 +423,29 @@ impl ExperimentBuilder {
         }
         if let Some(p) = self.forced_pipeline {
             cfg.forced_pipeline = Some(p);
+        }
+        if let Some(mut f) = fleet {
+            if fleet_from_name {
+                // A parsed fleet string cannot express engine knobs:
+                // builder-level engine settings (KV capacity etc.)
+                // apply fleet-wide.  A `None` KV capacity still
+                // derives from each instance's own GPU in the cluster.
+                for spec in &mut f.instances {
+                    spec.engine = cfg.engine;
+                }
+            } else if let Some(kv) = self.kv_capacity {
+                // An explicit FleetSpec keeps its per-instance engine
+                // configs; only the builder's explicit KV override is
+                // applied on top.
+                for spec in &mut f.instances {
+                    spec.engine.kv_capacity_tokens = Some(kv);
+                }
+            }
+            cfg.gpu = f.reference().gpu;
+            cfg.fleet = Some(f);
+        }
+        if let Some(t) = self.topology {
+            cfg.topology = Some(t);
         }
         Ok(Experiment { cfg, requests })
     }
@@ -463,6 +536,57 @@ mod tests {
         assert_eq!(exp.cfg.engine.kv_capacity_tokens, Some(1_000_000));
         let exp = Experiment::builder().requests(5).build().unwrap();
         assert_eq!(exp.cfg.engine.kv_capacity_tokens, None);
+    }
+
+    #[test]
+    fn fleet_string_defines_instances_and_gpus() {
+        let exp = Experiment::builder()
+            .fleet("h20:2,h100:2")
+            .requests(10)
+            .build()
+            .unwrap();
+        assert_eq!(exp.cfg.n_instances, 4);
+        let fleet = exp.cfg.fleet.as_ref().expect("fleet set");
+        assert_eq!(fleet.gpu_names(), vec!["H20", "H20", "H100", "H100"]);
+        // Majority GPU becomes the config-level reference.
+        assert_eq!(exp.cfg.gpu.name, "H20");
+    }
+
+    #[test]
+    fn malformed_fleet_is_a_hard_error_listing_choices() {
+        let e = Experiment::builder().fleet("a100:4").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Fleet(_)));
+        assert!(e.to_string().contains("H20|L40|H100"), "{e}");
+        let e = Experiment::builder().fleet("h20:zero").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Fleet(_)));
+    }
+
+    #[test]
+    fn builder_kv_capacity_applies_fleet_wide() {
+        let exp = Experiment::builder()
+            .fleet("h20:1,h100:1")
+            .kv_capacity(500_000)
+            .requests(5)
+            .build()
+            .unwrap();
+        let fleet = exp.cfg.fleet.as_ref().unwrap();
+        assert!(fleet
+            .instances
+            .iter()
+            .all(|s| s.engine.kv_capacity_tokens == Some(500_000)));
+    }
+
+    #[test]
+    fn config_file_fleet_feeds_builder() {
+        let cfg = crate::config::Config::parse(
+            "[experiment]\nfleet = \"h20:1,h100:1\"\nrequests = 10\nrate = 5.0\n",
+        )
+        .unwrap();
+        let ec = ExperimentConfig::from_config(&cfg);
+        assert_eq!(ec.fleet.as_deref(), Some("h20:1,h100:1"));
+        let exp = Experiment::from_config(&ec).build().unwrap();
+        assert_eq!(exp.cfg.n_instances, 2);
+        assert!(exp.cfg.fleet.is_some());
     }
 
     #[test]

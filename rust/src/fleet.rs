@@ -1,0 +1,357 @@
+//! Heterogeneous fleet description — per-instance GPU/engine/speed.
+//!
+//! The paper's testbeds are homogeneous (16 identical H20s or L40s),
+//! but real multi-instance deployments mix GPU generations and engine
+//! builds: the paper itself models a faster Llumnix engine with a
+//! scalar `engine_speed` (§6.2 Fig. 8), and UELLM / slice-level
+//! scheduling motivate serving across non-uniform resources.  This
+//! module makes the fleet a first-class value:
+//!
+//! * [`InstanceSpec`] — one instance's hardware + runtime: a
+//!   [`GpuProfile`], an [`EngineConfig`], and a relative engine speed.
+//! * [`FleetSpec`] — the ordered instance list.  Order matters: the
+//!   planner assigns instances to pipeline stages contiguously (the §5
+//!   placement optimization), so `h20:6,h100:2` puts the H100s on the
+//!   long-sequence end of the pipeline.
+//!
+//! The CLI grammar (`--fleet`) is a comma-separated list of
+//! `GPU:COUNT` groups, each optionally followed by `speed=F` options
+//! applying to the group, e.g. `h20:12,h100:4,speed=1.37` (12 stock
+//! H20s plus 4 H100s running a 1.37x-faster engine build).
+//!
+//! Capacity: [`InstanceSpec::reference_throughput`] prices a reference
+//! serving mix (prefill + steady-state decode) with the same analytic
+//! cost model the engines execute under, so "capacity" is consistent
+//! with what the simulator will actually measure.  The cluster
+//! normalizes capacities to the fleet maximum; a homogeneous fleet
+//! therefore gets exactly 1.0 everywhere and every capacity-normalized
+//! code path reduces bit-identically to the legacy uniform one.
+
+use crate::engine::EngineConfig;
+use crate::gpu::GpuProfile;
+use crate::kernelmodel::AttentionModel;
+use crate::models::ModelProfile;
+use crate::Tokens;
+
+use std::fmt;
+
+/// One instance's hardware + runtime configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceSpec {
+    pub gpu: GpuProfile,
+    /// Engine knobs; a `None` KV capacity is derived from *this
+    /// instance's* GPU memory budget.
+    pub engine: EngineConfig,
+    /// Relative engine speed (1.0 = vLLM-class).  Composes with
+    /// `ClusterConfig::engine_speed`, which acts as a fleet-wide
+    /// multiplier (so policy-level speeds like Llumnix's 1.25 apply on
+    /// top of per-instance hardware speeds).
+    pub speed: f64,
+}
+
+/// Reference serving mix used to price relative capacity: a 1024-token
+/// prompt producing 256 output tokens, decoded in a 64-deep batch of
+/// 1280-token rows.  Chosen to exercise both the compute-bound prefill
+/// regime (where an H100 crushes an H20) and the bandwidth-bound decode
+/// regime (where the H20's fat HBM nearly evens the score).
+const REF_INPUT: Tokens = 1024;
+const REF_OUTPUT: f64 = 256.0;
+const REF_BATCH: usize = 64;
+const REF_ROW_LEN: Tokens = 1280;
+
+impl InstanceSpec {
+    pub fn new(gpu: GpuProfile) -> Self {
+        Self { gpu, engine: EngineConfig::default(), speed: 1.0 }
+    }
+
+    pub fn with_speed(mut self, speed: f64) -> Self {
+        self.speed = speed;
+        self
+    }
+
+    /// Modeled output tokens/s of this instance on the reference
+    /// serving mix — the capacity weight the planner, router, and
+    /// bid-ask balancer normalize load by.  Deterministic (pure cost
+    /// model, no profiling runs).
+    pub fn reference_throughput(&self, model: &ModelProfile) -> f64 {
+        let am = AttentionModel::new(self.gpu, *model);
+        let t_prefill = am.prefill_latency(REF_INPUT);
+        let t_iter = am.decode_iteration_latency(&[REF_ROW_LEN; REF_BATCH]);
+        // Steady state: the prefill's compute is serialized per request,
+        // decode tokens are amortized over the batch.
+        let per_request = t_prefill + REF_OUTPUT * t_iter / REF_BATCH as f64;
+        self.speed * REF_OUTPUT / per_request
+    }
+}
+
+/// The ordered fleet: one [`InstanceSpec`] per instance id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub instances: Vec<InstanceSpec>,
+}
+
+impl FleetSpec {
+    /// A fleet of `n` identical instances (the legacy configuration).
+    pub fn homogeneous(gpu: GpuProfile, engine: EngineConfig, speed: f64, n: usize) -> Self {
+        Self { instances: vec![InstanceSpec { gpu, engine, speed }; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// True when every instance shares one (GPU, engine, speed) — the
+    /// capacity-normalized paths then reduce exactly to the legacy
+    /// uniform behavior.
+    pub fn is_homogeneous(&self) -> bool {
+        self.instances.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// Per-instance GPU names, in instance-id order (report tags).
+    pub fn gpu_names(&self) -> Vec<&'static str> {
+        self.instances.iter().map(|s| s.gpu.name).collect()
+    }
+
+    /// The fleet's reference instance for shared calibration (QoE
+    /// profiling fits one model): the majority GPU, ties broken by
+    /// earliest appearance.  A homogeneous fleet returns its only kind.
+    pub fn reference(&self) -> &InstanceSpec {
+        assert!(!self.instances.is_empty(), "fleet must have instances");
+        let mut best = &self.instances[0];
+        let mut best_count = 0usize;
+        for s in &self.instances {
+            let count = self.instances.iter().filter(|o| o.gpu.name == s.gpu.name).count();
+            if count > best_count {
+                best = s;
+                best_count = count;
+            }
+        }
+        best
+    }
+
+    /// Raw per-instance capacities (modeled reference throughput).
+    pub fn capacities(&self, model: &ModelProfile) -> Vec<f64> {
+        self.instances.iter().map(|s| s.reference_throughput(model)).collect()
+    }
+
+    /// Capacities normalized to the fleet maximum, in (0, 1].  A
+    /// homogeneous fleet yields exactly 1.0 per instance (x/x == 1.0
+    /// in IEEE 754), so `load / cap` is bit-identical to the raw load
+    /// and the legacy uniform behavior is preserved bit-for-bit.
+    pub fn normalized_capacities(&self, model: &ModelProfile) -> Vec<f64> {
+        let raw = self.capacities(model);
+        let max = raw.iter().copied().fold(f64::MIN, f64::max);
+        assert!(max.is_finite() && max > 0.0, "fleet capacities must be positive");
+        raw.into_iter().map(|c| c / max).collect()
+    }
+
+    /// Parse the `--fleet` grammar: comma-separated `GPU:COUNT` groups
+    /// (count defaults to 1), each optionally followed by `speed=F`
+    /// options that apply to the group just announced.
+    ///
+    /// `h20:6,h100:2` — 6 H20s then 2 H100s.
+    /// `h20:12,h100:4,speed=1.37` — the H100s run a 1.37x engine.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut instances: Vec<InstanceSpec> = Vec::new();
+        let mut last_group: Option<(usize, usize)> = None; // [start, end) of the last group
+        if s.trim().is_empty() {
+            return Err("fleet spec is empty; expected e.g. h20:6,h100:2".into());
+        }
+        for seg in s.split(',') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                return Err(format!("empty fleet segment in `{s}`"));
+            }
+            if let Some((key, value)) = seg.split_once('=') {
+                let (key, value) = (key.trim(), value.trim());
+                let Some((start, end)) = last_group else {
+                    return Err(format!(
+                        "fleet option `{seg}` must follow a GPU:COUNT group"
+                    ));
+                };
+                match key {
+                    "speed" => {
+                        let speed = value
+                            .parse::<f64>()
+                            .ok()
+                            .filter(|v| *v > 0.0 && v.is_finite())
+                            .ok_or_else(|| {
+                                format!("fleet speed `{value}` is not a positive number")
+                            })?;
+                        for spec in &mut instances[start..end] {
+                            spec.speed = speed;
+                        }
+                    }
+                    _ => {
+                        return Err(format!(
+                            "unknown fleet option `{key}`; valid: speed"
+                        ))
+                    }
+                }
+                continue;
+            }
+            let (gpu_name, count) = match seg.split_once(':') {
+                Some((g, c)) => {
+                    let count = c.trim().parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(
+                        || format!("fleet count `{c}` in `{seg}` is not a positive integer"),
+                    )?;
+                    (g.trim(), count)
+                }
+                None => (seg, 1),
+            };
+            let gpu = GpuProfile::by_name(gpu_name).ok_or_else(|| {
+                format!(
+                    "unknown fleet gpu `{gpu_name}`; valid: {}",
+                    GpuProfile::NAMES.join("|")
+                )
+            })?;
+            let start = instances.len();
+            for _ in 0..count {
+                instances.push(InstanceSpec::new(gpu));
+            }
+            last_group = Some((start, instances.len()));
+        }
+        Ok(Self { instances })
+    }
+}
+
+impl fmt::Display for FleetSpec {
+    /// Canonical run-length serialization: `H20:6,H100:2,speed=1.37`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        let mut i = 0;
+        while i < self.instances.len() {
+            let spec = &self.instances[i];
+            let mut j = i + 1;
+            while j < self.instances.len() && self.instances[j] == *spec {
+                j += 1;
+            }
+            if !first {
+                write!(f, ",")?;
+            }
+            first = false;
+            write!(f, "{}:{}", spec.gpu.name, j - i)?;
+            if spec.speed != 1.0 {
+                write!(f, ",speed={}", spec.speed)?;
+            }
+            i = j;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LLAMA_3B;
+
+    #[test]
+    fn parse_counts_and_order() {
+        let f = FleetSpec::parse("h20:6,h100:2").unwrap();
+        assert_eq!(f.len(), 8);
+        assert!(f.instances[..6].iter().all(|s| s.gpu.name == "H20"));
+        assert!(f.instances[6..].iter().all(|s| s.gpu.name == "H100"));
+        assert!(!f.is_homogeneous());
+    }
+
+    #[test]
+    fn parse_speed_applies_to_preceding_group() {
+        let f = FleetSpec::parse("h20:12,h100:4,speed=1.37").unwrap();
+        assert_eq!(f.len(), 16);
+        assert!(f.instances[..12].iter().all(|s| s.speed == 1.0));
+        assert!(f.instances[12..].iter().all(|s| s.speed == 1.37));
+    }
+
+    #[test]
+    fn parse_bare_gpu_is_count_one() {
+        let f = FleetSpec::parse("L40").unwrap();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.instances[0].gpu.name, "L40");
+        assert!(f.is_homogeneous());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            "h20:0",
+            "h20:-1",
+            "h20:two",
+            "a100:4",
+            "speed=1.2",
+            "h20:2,speed=fast",
+            "h20:2,speed=-1",
+            "h20:2,turbo=on",
+            "h20:2,,h100:1",
+        ] {
+            let e = FleetSpec::parse(bad);
+            assert!(e.is_err(), "`{bad}` should be rejected");
+        }
+        // Unknown GPUs name the valid choices.
+        let msg = FleetSpec::parse("a100:4").unwrap_err();
+        assert!(msg.contains("H20|L40|H100"), "{msg}");
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for s in ["H20:6,H100:2", "H20:12,H100:4,speed=1.37", "L40:1"] {
+            let f = FleetSpec::parse(s).unwrap();
+            assert_eq!(f.to_string(), s);
+            assert_eq!(FleetSpec::parse(&f.to_string()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn homogeneous_capacities_normalize_to_exactly_one() {
+        let f = FleetSpec::homogeneous(GpuProfile::H20, EngineConfig::default(), 1.0, 5);
+        let caps = f.normalized_capacities(&LLAMA_3B);
+        assert!(caps.iter().all(|&c| c == 1.0), "{caps:?}");
+        assert!(f.is_homogeneous());
+    }
+
+    #[test]
+    fn h100_outranks_h20_on_reference_mix() {
+        // The H100's compute advantage dominates the reference mix
+        // (prefill is compute-bound), despite the H20's fatter HBM.
+        let h20 = InstanceSpec::new(GpuProfile::H20).reference_throughput(&LLAMA_3B);
+        let h100 = InstanceSpec::new(GpuProfile::H100).reference_throughput(&LLAMA_3B);
+        assert!(
+            h100 > 1.5 * h20,
+            "expected H100 ({h100:.0} tok/s) well above H20 ({h20:.0} tok/s)"
+        );
+    }
+
+    #[test]
+    fn speed_scales_capacity_linearly() {
+        let base = InstanceSpec::new(GpuProfile::H20).reference_throughput(&LLAMA_3B);
+        let fast = InstanceSpec::new(GpuProfile::H20)
+            .with_speed(1.25)
+            .reference_throughput(&LLAMA_3B);
+        assert!((fast / base - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reference_is_majority_gpu() {
+        let f = FleetSpec::parse("h20:6,h100:2").unwrap();
+        assert_eq!(f.reference().gpu.name, "H20");
+        let f = FleetSpec::parse("h100:3,h20:1").unwrap();
+        assert_eq!(f.reference().gpu.name, "H100");
+        // Tie: earliest appearance wins.
+        let f = FleetSpec::parse("l40:2,h20:2").unwrap();
+        assert_eq!(f.reference().gpu.name, "L40");
+    }
+
+    #[test]
+    fn mixed_fleet_normalized_caps_ordered() {
+        let f = FleetSpec::parse("h20:2,h100:2").unwrap();
+        let caps = f.normalized_capacities(&LLAMA_3B);
+        assert_eq!(caps[2], 1.0);
+        assert_eq!(caps[3], 1.0);
+        assert!(caps[0] < 1.0 && caps[0] > 0.0);
+        assert_eq!(caps[0], caps[1]);
+    }
+}

@@ -18,8 +18,8 @@
 //!   attention kernels, AOT-lowered to `artifacts/*.hlo.txt`, which
 //!   [`runtime`] loads and executes with no Python on the request path.
 //!
-//! Substrate modules ([`sim`], [`gpu`], [`kernelmodel`], [`models`],
-//! [`qoe`], [`workload`], [`engine`], [`metrics`]) rebuild everything
+//! Substrate modules ([`sim`], [`gpu`], [`fleet`], [`kernelmodel`],
+//! [`models`], [`qoe`], [`workload`], [`engine`], [`metrics`]) rebuild everything
 //! the paper's evaluation depends on — GPUs, attention-backend cost
 //! behaviour, the model zoo, ShareGPT-like traffic — as faithful,
 //! seedable simulations (see DESIGN.md §1 for the substitution table).
@@ -31,6 +31,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod experiment;
+pub mod fleet;
 pub mod gpu;
 pub mod kernelmodel;
 pub mod metrics;

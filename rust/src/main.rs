@@ -91,6 +91,9 @@ fn builder_from_args(args: &Args) -> ExperimentBuilder {
     if let Some(w) = args.get("workload") {
         b = b.workload_name(w);
     }
+    if let Some(f) = args.get("fleet") {
+        b = b.fleet(f);
+    }
     b
 }
 
@@ -100,14 +103,19 @@ fn cmd_sim(args: &Args) {
         Err(e) => die(&e.to_string()),
     };
     let cfg = &exp.cfg;
+    let hardware = match &cfg.fleet {
+        Some(f) => format!("fleet {f}"),
+        None => cfg.gpu.name.to_string(),
+    };
     println!(
         "sim: {} x{} on {}, {} requests, scheduler {}",
         cfg.model.name,
         cfg.n_instances,
-        cfg.gpu.name,
+        hardware,
         exp.requests.len(),
         cfg.policy.name
     );
+    let has_fleet = cfg.fleet.is_some();
     let t0 = std::time::Instant::now();
     let (report, stats) = exp.run();
     println!("wall time        {:.2}s", t0.elapsed().as_secs_f64());
@@ -124,6 +132,24 @@ fn cmd_sim(args: &Args) {
     );
     println!("stages           {:?}", stats.stages.iter().map(|s| s.len()).collect::<Vec<_>>());
     println!("boundaries       {:?}", stats.final_boundaries);
+    // Per-instance report: GPU tag, relative capacity, output-token
+    // share.  Printed whenever the fleet is explicit so mixed-fleet
+    // balance (does the H100 carry its larger share?) is visible.
+    if has_fleet {
+        let total: u64 = stats.counters.output_tokens.values().sum::<u64>().max(1);
+        println!("per-instance     id  gpu    cap    out-tokens  share");
+        for i in 0..stats.instance_gpus.len() {
+            let toks = *stats.counters.output_tokens.get(&i).unwrap_or(&0);
+            println!(
+                "                 {:<3} {:<6} {:<6.3} {:>10}  {:>5.1}%",
+                i,
+                stats.instance_gpus[i],
+                stats.instance_capacity[i],
+                toks,
+                100.0 * toks as f64 / total as f64
+            );
+        }
+    }
 }
 
 /// Grid over rates x schedulers sharing one workload per rate; prints
@@ -137,6 +163,10 @@ fn cmd_sweep(args: &Args) {
     }
     if args.get("scheduler").is_some() {
         die("`sweep` takes --schedulers N1,N2,.. (plural), not --scheduler");
+    }
+    if args.get("fleet").is_some() && args.get("fleets").is_some() {
+        die("pass either --fleet (one fleet for every cell) or --fleets F1;F2;.. \
+             (grid axis), not both");
     }
     let rates: Vec<f64> = args
         .get_or("rates", "8,16,32")
@@ -167,38 +197,84 @@ fn cmd_sweep(args: &Args) {
         }
     }
 
+    // The fleet grid axis: `;`-separated fleet strings (fleet specs
+    // contain commas).  Absent -> a single "legacy" cell with no fleet.
+    let fleets: Vec<Option<String>> = match args.get("fleets") {
+        Some(s) => s
+            .split(';')
+            .map(str::trim)
+            .filter(|f| !f.is_empty())
+            .map(|f| Some(f.to_string()))
+            .collect(),
+        None => vec![None],
+    };
+    if fleets.is_empty() {
+        die("--fleets needs at least one fleet, e.g. --fleets \"h20:4;h20:2,h100:2\"");
+    }
+    // Fail fast on any unparsable fleet before running grid cells.
+    for f in fleets.iter().flatten() {
+        if let Err(e) = cascade_infer::fleet::FleetSpec::parse(f) {
+            die(&e);
+        }
+    }
+    let fleet_col = fleets.iter().any(Option::is_some);
+
     // One resolved builder (config file read, workload parsed) shared
-    // by every cell; each cell only overrides rate + scheduler.
+    // by every cell; each cell only overrides rate + scheduler (+
+    // fleet when sweeping fleets).
     let base = builder_from_args(args);
+    // The fleet column renders as a prefix string so the row format
+    // exists exactly once.
+    let fleet_cell = |label: &str| -> String {
+        if fleet_col {
+            format!("{label:<20} ")
+        } else {
+            String::new()
+        }
+    };
     println!(
-        "{:<6} {:<42} {:>10} {:>10} {:>10} {:>11} {:>8}",
-        "rate", "scheduler", "TTFT", "TPOT", "p95TPOT", "tok/s", "migr"
+        "{:<6} {}{:<42} {:>10} {:>10} {:>10} {:>11} {:>8}",
+        "rate",
+        fleet_cell("fleet"),
+        "scheduler",
+        "TTFT",
+        "TPOT",
+        "p95TPOT",
+        "tok/s",
+        "migr"
     );
     for &rate in &rates {
-        // Materialise the workload once per rate; every scheduler cell
-        // shares the identical trace (apples-to-apples columns, and a
-        // `trace:` CSV is read once instead of once per cell).
+        // Materialise the workload once per rate; every scheduler and
+        // fleet cell shares the identical trace (apples-to-apples
+        // columns, and a `trace:` CSV is read once instead of once per
+        // cell).
         let shared = match base.clone().rate(rate).build() {
             Ok(e) => e.requests,
             Err(e) => die(&e.to_string()),
         };
-        for name in &schedulers {
-            let exp = match base.clone().rate(rate).scheduler(name).trace(shared.clone()).build()
-            {
-                Ok(e) => e,
-                Err(e) => die(&e.to_string()),
-            };
-            let (r, stats) = exp.run();
-            println!(
-                "{:<6.1} {:<42} {:>9.4}s {:>9.5}s {:>9.5}s {:>11.1} {:>8}",
-                rate,
-                name,
-                r.mean_ttft(),
-                r.mean_tpot(),
-                r.p95_tpot(),
-                r.throughput_tokens_per_s(),
-                stats.migrations
-            );
+        for fleet in &fleets {
+            for name in &schedulers {
+                let mut cell = base.clone().rate(rate).scheduler(name).trace(shared.clone());
+                if let Some(f) = fleet {
+                    cell = cell.fleet(f);
+                }
+                let exp = match cell.build() {
+                    Ok(e) => e,
+                    Err(e) => die(&e.to_string()),
+                };
+                let (r, stats) = exp.run();
+                println!(
+                    "{:<6.1} {}{:<42} {:>9.4}s {:>9.5}s {:>9.5}s {:>11.1} {:>8}",
+                    rate,
+                    fleet_cell(fleet.as_deref().unwrap_or("-")),
+                    name,
+                    r.mean_ttft(),
+                    r.mean_tpot(),
+                    r.p95_tpot(),
+                    r.throughput_tokens_per_s(),
+                    stats.migrations
+                );
+            }
         }
     }
 }

@@ -137,6 +137,53 @@ fn sjf_dispatch_runs_and_balances() {
 }
 
 #[test]
+fn homogeneous_fleet_is_bit_identical_for_every_registry_scheduler() {
+    // The heterogeneous-fleet refactor must be invisible when the
+    // fleet is uniform: `--fleet h20:4` goes through the per-instance
+    // spec list, per-instance backends, capacity normalization, and
+    // the weighted planner, and must still reproduce the legacy
+    // single-GPU path bit for bit — for every registry name (each
+    // exercises a different mix of dispatch/balance/layout axes).
+    let reqs = trace();
+    for &name in PolicySpec::names() {
+        let (legacy, legacy_stats) = Experiment::builder()
+            .gpu("H20")
+            .model_profile(LLAMA_3B)
+            .instances(4)
+            .scheduler(name)
+            .trace(reqs.clone())
+            .build()
+            .unwrap()
+            .run();
+        let (fleet, fleet_stats) = Experiment::builder()
+            .model_profile(LLAMA_3B)
+            .scheduler(name)
+            .fleet("h20:4")
+            .trace(reqs.clone())
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(fleet.records.len(), reqs.len(), "{name} dropped requests");
+        assert_eq!(
+            legacy.fingerprint(),
+            fleet.fingerprint(),
+            "{name}: homogeneous fleet diverged from the legacy single-GPU path"
+        );
+        assert_eq!(legacy_stats.migrations, fleet_stats.migrations, "{name}");
+        assert_eq!(
+            legacy_stats.final_boundaries, fleet_stats.final_boundaries,
+            "{name}"
+        );
+        assert_eq!(fleet_stats.instance_gpus, vec!["H20"; 4], "{name}");
+        assert!(
+            fleet_stats.instance_capacity.iter().all(|&c| c == 1.0),
+            "{name}: homogeneous capacities must normalize to exactly 1.0: {:?}",
+            fleet_stats.instance_capacity
+        );
+    }
+}
+
+#[test]
 fn builder_is_deterministic_across_invocations() {
     let run = || {
         Experiment::builder()

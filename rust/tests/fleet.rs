@@ -1,0 +1,178 @@
+//! Heterogeneous-fleet integration tests.
+//!
+//! Covers the three fleet-facing promises:
+//! 1. a mixed `h20:6,h100:2` cascade run completes end to end and shows
+//!    capacity-aware behavior (the H100s carry a higher steady-state
+//!    token load share than the H20s),
+//! 2. capacity-normalized flat dispatch (`sjf`) shifts the served
+//!    token share toward the fast instances,
+//! 3. the node topology is configurable (satellite: the hardcoded
+//!    `Topology::sequential(e, 8, NvLink)` is now a `ClusterConfig`
+//!    field) and feeds the migration pricing.
+//!
+//! The homogeneous-fleet == legacy-path bit-identity property lives in
+//! `tests/experiment_api.rs` next to the other compat regressions.
+
+use cascade_infer::cluster::{run_experiment, ClusterConfig, SchedulerKind};
+use cascade_infer::experiment::Experiment;
+use cascade_infer::gpu::{GpuProfile, LinkKind, Topology};
+use cascade_infer::models::LLAMA_3B;
+use cascade_infer::workload::{generate, Request, ShareGptLike};
+
+fn heavytail(n: usize, rate: f64, seed: u64) -> Vec<Request> {
+    generate(&ShareGptLike::heavy_tail(), rate, n, seed)
+}
+
+/// Mean of a per-instance statistic over the instances tagged `gpu`.
+fn mean_for_gpu(values: &[f64], gpus: &[&'static str], gpu: &str) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0.0;
+    for (v, g) in values.iter().zip(gpus.iter()) {
+        if *g == gpu {
+            sum += *v;
+            n += 1.0;
+        }
+    }
+    assert!(n > 0.0, "no {gpu} instances in {gpus:?}");
+    sum / n
+}
+
+#[test]
+fn mixed_fleet_cascade_completes_and_h100_carries_higher_load_share() {
+    let reqs = heavytail(400, 24.0, 11);
+    let (report, stats) = Experiment::builder()
+        .model_profile(LLAMA_3B)
+        .scheduler("cascade")
+        .fleet("h20:6,h100:2")
+        .trace(reqs.clone())
+        .plan_sample(400)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(report.records.len(), reqs.len(), "mixed fleet dropped requests");
+    assert_eq!(stats.instance_gpus.len(), 8);
+    assert_eq!(stats.instance_capacity.len(), 8);
+    // The weighted planner still produces a pipeline on a heavy tail.
+    assert!(stats.stages.len() > 1, "expected a pipeline: {:?}", stats.stages);
+    // Capacity-aware behavior: the capacity-rich H100s sit on the
+    // long-sequence end of the pipeline and hold a higher steady-state
+    // token load than the average H20.
+    assert_eq!(stats.mean_token_load.len(), 8, "cascade gossips, so load is sampled");
+    let h100 = mean_for_gpu(&stats.mean_token_load, &stats.instance_gpus, "H100");
+    let h20 = mean_for_gpu(&stats.mean_token_load, &stats.instance_gpus, "H20");
+    assert!(
+        h100 > h20,
+        "H100 mean steady-state token load ({h100:.0}) should exceed H20's ({h20:.0}); \
+         loads {:?} gpus {:?}",
+        stats.mean_token_load,
+        stats.instance_gpus
+    );
+}
+
+#[test]
+fn mixed_fleet_run_is_deterministic() {
+    let reqs = heavytail(200, 16.0, 21);
+    let run = || {
+        Experiment::builder()
+            .model_profile(LLAMA_3B)
+            .scheduler("cascade")
+            .fleet("h20:3,h100:1")
+            .trace(reqs.clone())
+            .plan_sample(200)
+            .build()
+            .unwrap()
+            .run()
+            .0
+            .fingerprint()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn capacity_normalized_dispatch_shifts_share_to_h100() {
+    // Flat SJF dispatch compares capacity-normalized outstanding work:
+    // under sustained load the H100 pair must end up serving more
+    // output tokens than the H20 pair.
+    let reqs = generate(&ShareGptLike::default(), 40.0, 400, 12);
+    let (report, stats) = Experiment::builder()
+        .model_profile(LLAMA_3B)
+        .scheduler("sjf")
+        .fleet("h20:2,h100:2")
+        .trace(reqs)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(report.records.len(), 400);
+    let tok = |i: usize| *stats.counters.output_tokens.get(&i).unwrap_or(&0) as f64;
+    let h20 = tok(0) + tok(1);
+    let h100 = tok(2) + tok(3);
+    assert!(
+        h100 > h20,
+        "H100 pair ({h100}) should out-serve the H20 pair ({h20}) under \
+         capacity-normalized dispatch"
+    );
+}
+
+#[test]
+fn custom_topology_feeds_migration_pricing() {
+    // Same config and workload, but PCIe intra-node links instead of
+    // the default NVLink: 18x less transfer bandwidth and 2x control
+    // latency.  A migration-heavy run must diverge in timing.
+    let mut reqs = generate(&ShareGptLike::default(), 12.0, 150, 13);
+    for r in reqs.iter_mut() {
+        r.output_len = r.output_len.max(1500);
+    }
+    let mut base = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 4, SchedulerKind::Cascade);
+    base.plan_sample = 400;
+    let (r_nvlink, s_nvlink) = run_experiment(base.clone(), &reqs);
+    let mut pcie = base;
+    pcie.topology = Some(Topology::sequential(4, 8, LinkKind::Pcie));
+    let (r_pcie, s_pcie) = run_experiment(pcie, &reqs);
+    assert_eq!(r_nvlink.records.len(), r_pcie.records.len());
+    assert!(s_nvlink.migrations > 0, "forcing workload should migrate: {s_nvlink:?}");
+    assert_ne!(
+        r_nvlink.fingerprint(),
+        r_pcie.fingerprint(),
+        "link technology must affect migration timing (pcie stats: {s_pcie:?})"
+    );
+}
+
+#[test]
+fn default_topology_matches_the_historical_hardcoded_one() {
+    // `topology: None` and an explicit `sequential(e, 8, NvLink)` are
+    // the same configuration and must be bit-identical.
+    let reqs = heavytail(150, 12.0, 14);
+    let mut a = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 4, SchedulerKind::Cascade);
+    a.plan_sample = 300;
+    let mut b = a.clone();
+    b.topology = Some(Topology::sequential(4, 8, LinkKind::NvLink));
+    let (ra, _) = run_experiment(a, &reqs);
+    let (rb, _) = run_experiment(b, &reqs);
+    assert_eq!(ra.fingerprint(), rb.fingerprint());
+}
+
+#[test]
+fn per_instance_kv_capacity_follows_each_gpu() {
+    // An H100 (80 GB) derives a smaller KV pool than an H20 (141 GB);
+    // the mixed cluster must give each instance its own budget instead
+    // of replicating the reference GPU's.
+    let exp = Experiment::builder()
+        .model_profile(LLAMA_3B)
+        .fleet("h20:1,h100:1")
+        .requests(5)
+        .build()
+        .unwrap();
+    let fleet = exp.cfg.resolved_fleet();
+    let caps: Vec<u64> = fleet
+        .instances
+        .iter()
+        .map(|s| {
+            let budget = exp.cfg.model.kv_budget_bytes(s.gpu.mem_bytes, 0.9);
+            exp.cfg.model.kv_capacity_tokens(budget).max(1024)
+        })
+        .collect();
+    assert!(
+        caps[0] > caps[1],
+        "H20 (141 GB) must derive a larger KV pool than H100 (80 GB): {caps:?}"
+    );
+}
