@@ -1,19 +1,36 @@
 //! Perf harness for the L3 hot paths (EXPERIMENTS.md §Perf): cost-model
 //! pricing, engine stepping, planning, and whole-cluster simulation
-//! throughput (simulated decode-iterations per wall-second).
+//! throughput (simulated engine iterations per wall-second).
+//!
+//! Alongside the human table it writes `BENCH_hotpath.json` (override
+//! with `--json PATH`) so the perf trajectory is tracked in a
+//! machine-readable form.  `--quick` shrinks every run to CI-smoke
+//! size.  `--check BASELINE.json [--tolerance F]` compares the
+//! headline cluster-sim throughput against a committed baseline and
+//! exits non-zero on a regression beyond the tolerance (default 30%) —
+//! the CI perf-smoke gate.  A baseline containing `"placeholder": 1`
+//! (the state before the first toolchain-bearing run) skips the gate
+//! and prints blessing instructions instead.
 
 mod common;
 
-use cascade_infer::cluster::{run_experiment, ClusterConfig, SchedulerKind};
 use cascade_infer::engine::{CostModelBackend, Engine, EngineConfig};
+use cascade_infer::experiment::Experiment;
 use cascade_infer::gpu::GpuProfile;
 use cascade_infer::kernelmodel::AttentionModel;
+use cascade_infer::metrics::BenchReport;
 use cascade_infer::models::LLAMA_3B;
 use cascade_infer::sim::Rng;
-use cascade_infer::workload::{generate, Request, ShareGptLike};
+use cascade_infer::workload::{Request, WorkloadSpec};
 use std::time::Instant;
 
-fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
+fn bench<F: FnMut() -> u64>(
+    report: &mut BenchReport,
+    name: &str,
+    key: &str,
+    iters: usize,
+    mut f: F,
+) {
     // Warmup.
     let mut sink = 0u64;
     for _ in 0..(iters / 10).max(1) {
@@ -24,49 +41,194 @@ fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
         sink = sink.wrapping_add(f());
     }
     let dt = t0.elapsed().as_secs_f64();
-    println!("{name:<44} {:>12.2} ops/s   ({:.3} us/op, sink {})",
-             iters as f64 / dt, dt / iters as f64 * 1e6, sink % 10);
+    let ops = iters as f64 / dt;
+    println!(
+        "{name:<44} {ops:>12.2} ops/s   ({:.3} us/op, sink {})",
+        dt / iters as f64 * 1e6,
+        sink % 10
+    );
+    report.push(key, ops);
+}
+
+/// One cluster simulation; returns (wall seconds, engine iterations,
+/// simulated output tokens).
+fn cluster_run(
+    scheduler: &str,
+    workload: WorkloadSpec,
+    instances: usize,
+    rate: f64,
+    requests: usize,
+    seed: u64,
+    micro_step: bool,
+) -> (f64, u64, u64) {
+    let exp = Experiment::builder()
+        .gpu("H20")
+        .instances(instances)
+        .scheduler(scheduler)
+        .workload(workload)
+        .rate(rate)
+        .requests(requests)
+        .seed(seed)
+        .micro_step(micro_step)
+        .build()
+        .expect("bench experiment builds");
+    let tokens: u64 = exp.requests.iter().map(|r| r.output_len).sum();
+    let n = exp.requests.len();
+    let t0 = Instant::now();
+    let (rep, stats) = exp.run();
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(rep.records.len(), n, "bench run dropped requests");
+    (dt, stats.engine_iterations, tokens)
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| args.iter().any(|a| a == name);
+    let opt = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let quick = flag("--quick");
+    let json_path = opt("--json").unwrap_or_else(|| "BENCH_hotpath.json".into());
+    let tolerance: f64 =
+        opt("--tolerance").and_then(|s| s.parse().ok()).unwrap_or(0.30);
+
+    let mut report = BenchReport::default();
+    report.push("quick", f64::from(u8::from(quick)));
+
     let am = AttentionModel::new(GpuProfile::H20, LLAMA_3B);
     let mut rng = Rng::new(99);
     let lens_small: Vec<u64> = (0..32).map(|_| 100 + rng.next_range(4000)).collect();
     let lens_big: Vec<u64> = (0..512).map(|_| 100 + rng.next_range(50_000)).collect();
+    let scale = if quick { 10 } else { 1 };
 
     println!("=== L3 hot-path microbenchmarks ===");
-    bench("decode_iteration_latency (batch 32)", 200_000, || {
-        am.decode_iteration_latency(&lens_small).to_bits()
-    });
-    bench("decode_iteration_latency (batch 512)", 20_000, || {
-        am.decode_iteration_latency(&lens_big).to_bits()
-    });
+    bench(
+        &mut report,
+        "decode_iteration_latency (batch 32)",
+        "decode_iteration_latency_b32_ops_per_s",
+        200_000 / scale,
+        || am.decode_iteration_latency(&lens_small).to_bits(),
+    );
+    bench(
+        &mut report,
+        "decode_iteration_latency (batch 512)",
+        "decode_iteration_latency_b512_ops_per_s",
+        20_000 / scale,
+        || am.decode_iteration_latency(&lens_big).to_bits(),
+    );
 
     // Engine stepping throughput.
-    bench("engine.step (64 live seqs)", 2_000, || {
-        let mut e = Engine::new(EngineConfig::default(), CostModelBackend::new(am));
-        for i in 0..64 {
-            e.submit(Request { id: i, arrival: 0.0, input_len: 200 + i * 10, output_len: 4 });
-        }
-        let mut now = 0.0;
-        let mut n = 0u64;
-        while e.has_work() {
-            let o = e.step(now);
-            now += o.duration.max(1e-9);
-            n += 1;
-        }
-        n
-    });
+    bench(
+        &mut report,
+        "engine.step (64 live seqs)",
+        "engine_step_64seqs_ops_per_s",
+        2_000 / scale,
+        || {
+            let mut e = Engine::new(EngineConfig::default(), CostModelBackend::new(am));
+            for i in 0..64 {
+                e.submit(Request {
+                    id: i,
+                    arrival: 0.0,
+                    input_len: 200 + i * 10,
+                    output_len: 4,
+                });
+            }
+            let mut now = 0.0;
+            let mut n = 0u64;
+            while e.has_work() {
+                let o = e.step(now);
+                now += o.duration.max(1e-9);
+                n += 1;
+            }
+            n
+        },
+    );
 
-    // Whole-cluster simulation rate.
-    let reqs = generate(&ShareGptLike::default(), 32.0, 2000, 7);
-    let total_tokens: u64 = reqs.iter().map(|r| r.output_len).sum();
-    let t0 = Instant::now();
-    let cfg = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 16, SchedulerKind::Cascade);
-    let (rep, _) = run_experiment(cfg, &reqs);
-    let dt = t0.elapsed().as_secs_f64();
+    // Whole-cluster simulation rates.
     println!("\n=== cluster simulation throughput ===");
-    println!("2000 requests / {total_tokens} decode tokens in {dt:.2}s wall");
-    println!("{:.0} simulated output tokens per wall-second", total_tokens as f64 / dt);
-    println!("(completed: {})", rep.records.len());
+    let n16 = if quick { 400 } else { 2000 };
+    let (dt, iters, tokens) =
+        cluster_run("cascade", WorkloadSpec::default(), 16, 32.0, n16, 7, false);
+    println!(
+        "16x sharegpt cascade: {n16} requests / {tokens} decode tokens in {dt:.2}s \
+         ({:.0} tok/s, {:.0} iters/s)",
+        tokens as f64 / dt,
+        iters as f64 / dt
+    );
+    report.push("cluster_sim_16x_sharegpt_tokens_per_s", tokens as f64 / dt);
+
+    // The acceptance workload: 8-instance heavytail, macro-stepped.
+    let n8 = if quick { 400 } else { 1500 };
+    let (dt, iters, _) =
+        cluster_run("cascade", WorkloadSpec::HeavyTail, 8, 24.0, n8, 7, false);
+    let macro_ips = iters as f64 / dt;
+    println!(
+        "8x heavytail cascade (macro): {n8} requests, {iters} engine iterations \
+         in {dt:.2}s = {macro_ips:.0} simulated iters per wall-second"
+    );
+    report.push("cluster_sim_8x_heavytail_iters_per_s", macro_ips);
+    report.push("cluster_sim_8x_heavytail_wall_s", dt);
+    report.push("cluster_sim_8x_heavytail_iterations", iters as f64);
+
+    // The same workload on the --micro-step debug path: the committed
+    // speedup factor of the macro-stepped core (reports bit-identical;
+    // see tests/macro_equivalence.rs).
+    let (dt_micro, iters_micro, _) =
+        cluster_run("cascade", WorkloadSpec::HeavyTail, 8, 24.0, n8, 7, true);
+    assert_eq!(iters, iters_micro, "macro/micro iteration counts must agree");
+    let micro_ips = iters_micro as f64 / dt_micro;
+    println!(
+        "8x heavytail cascade (micro): {dt_micro:.2}s = {micro_ips:.0} iters/s \
+         -> macro speedup {:.2}x",
+        macro_ips / micro_ips
+    );
+    report.push("cluster_sim_8x_heavytail_micro_iters_per_s", micro_ips);
+    report.push("cluster_sim_8x_heavytail_macro_speedup", macro_ips / micro_ips);
+
+    std::fs::write(&json_path, report.to_json()).expect("write bench json");
+    println!("\nwrote {json_path}");
+
+    // --check: the CI regression gate.
+    if let Some(baseline_path) = opt("--check") {
+        let baseline = std::fs::read_to_string(&baseline_path)
+            .unwrap_or_else(|e| panic!("cannot read baseline {baseline_path}: {e}"));
+        if BenchReport::parse_value(&baseline, "placeholder") == Some(1.0) {
+            println!(
+                "baseline {baseline_path} is a placeholder — skipping the regression \
+                 gate.  Bless it by committing the fresh {json_path} over it."
+            );
+            return;
+        }
+        // Quick and full-size runs have systematically different
+        // throughput (startup/planning weight, batch mix) — only gate
+        // like against like.
+        let this_quick = f64::from(u8::from(quick));
+        if BenchReport::parse_value(&baseline, "quick") != Some(this_quick) {
+            println!(
+                "baseline {baseline_path} was measured at a different run size \
+                 (its `quick` field does not match this run's {this_quick}) — \
+                 skipping the regression gate; re-bless with a same-size run."
+            );
+            return;
+        }
+        let key = "cluster_sim_8x_heavytail_iters_per_s";
+        let base = BenchReport::parse_value(&baseline, key)
+            .unwrap_or_else(|| panic!("baseline {baseline_path} lacks {key}"));
+        let floor = base * (1.0 - tolerance);
+        if macro_ips < floor {
+            eprintln!(
+                "PERF REGRESSION: {key} = {macro_ips:.0} is below {floor:.0} \
+                 (baseline {base:.0} - {:.0}% tolerance)",
+                tolerance * 100.0
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "perf gate OK: {key} = {macro_ips:.0} vs baseline {base:.0} \
+             (floor {floor:.0})"
+        );
+    }
 }

@@ -96,10 +96,11 @@ USAGE:
   cascade-infer sim   [--config FILE] [--model NAME] [--gpu H20|L40|H100]
                       [--instances N] [--fleet SPEC] [--rate R] [--requests N]
                       [--seed S] [--scheduler NAME] [--workload NAME]
+                      [--micro-step]
   cascade-infer sweep [--rates R1,R2,..] [--schedulers N1,N2,..]
                       [--fleets F1;F2;..] [--model NAME] [--gpu H20|L40|H100]
                       [--instances N] [--requests N] [--seed S]
-                      [--workload NAME]
+                      [--workload NAME] [--jobs N]
   cascade-infer plan  [--model NAME] [--instances N] [--requests N] [--seed S]
   cascade-infer fit   [--model NAME] [--gpu H20|L40|H100]
   cascade-infer gen-trace --out FILE [--rate R] [--requests N] [--seed S]
@@ -131,6 +132,27 @@ RUNNING EXPERIMENTS
   Config:     --config FILE loads an [experiment] section (model, gpu,
               instances, fleet, rate, requests, seed, scheduler,
               workload); explicit CLI flags override file values.
+  Parallel:   `sweep` cells are independent experiments and run across
+              --jobs N worker threads (default: all cores).  The grid
+              table is byte-identical for any job count.
+  Debugging:  `sim --micro-step` drives every engine iteration through
+              its own queue event (the pre-macro-step hot loop).
+              Reports are bit-identical to the default macro-stepped
+              driver — it exists to verify exactly that, at a large
+              wall-time cost.
+
+PERF BASELINE
+  `cargo bench --bench perf_hotpath` prints the hot-path table and
+  writes machine-readable `BENCH_hotpath.json` (ops/s per hot path,
+  cluster-sim simulated-iterations per wall-second).  Flags after `--`:
+  `--quick` (CI-sized runs), `--json PATH`, and `--check BASELINE.json`
+  which exits non-zero if cluster-sim throughput regressed >30% (use
+  `--tolerance F` to adjust).  The gate only compares runs whose size
+  matches the baseline's recorded `quick` field — quick and full runs
+  are not comparable.  CI runs the check against the committed baseline
+  at rust/benches/baseline/BENCH_hotpath.json and uploads the fresh
+  JSON as an artifact; to re-bless after an intentional change, copy
+  the (--quick) artifact over the committed baseline.
 
   Examples:
     cascade-infer sim --rate 16 --scheduler cascade --workload heavytail

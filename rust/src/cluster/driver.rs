@@ -11,7 +11,7 @@
 use crate::coordinator::balance::{Ask, Bid, PendingPull};
 use crate::coordinator::loadtracker::LoadReport;
 use crate::coordinator::refine::{naive, RangeRefiner, RefineConfig};
-use crate::engine::Phase;
+use crate::engine::{MacroStop, Phase};
 use crate::metrics::Report;
 use crate::workload::{LengthHistogram, Request};
 use crate::{InstanceId, RequestId, Time, Tokens};
@@ -104,6 +104,8 @@ impl Cluster {
             }
         }
         self.stats.final_boundaries = self.refiners.iter().map(|r| r.boundary).collect();
+        self.stats.engine_iterations =
+            self.instances.iter().map(|ins| ins.engine.total_iterations).sum();
         if self.load_samples > 0 {
             let n = self.load_samples as f64;
             self.stats.mean_token_load =
@@ -112,29 +114,138 @@ impl Cluster {
         (Report::from_records(std::mem::take(&mut self.records)), self.stats)
     }
 
-    /// Start the next engine iteration on `i` if it is idle and has
-    /// admittable work.
+    /// Advance instance `i` if it is idle and has admittable work —
+    /// the macro-step hot loop.
+    ///
+    /// Between "interesting" instants (arrivals, timers, protocol
+    /// deliveries) the driver advances as many engine iterations as fit
+    /// *inline*: an iteration whose end precedes every queued event
+    /// would have had its `StepDone` popped next anyway, so its
+    /// boundary work (snapshot marks, §4.4 post-step hooks) runs here
+    /// without any queue traffic, preserving the exact micro-stepped
+    /// event order — including FIFO tie-breaks, because a `StepDone`
+    /// would carry a younger insertion seq than anything already queued
+    /// and therefore loses timestamp ties.  Iterations that overrun the
+    /// next queued event are committed and their completion scheduled
+    /// as a real `StepDone`, exactly like the in-flight iteration of
+    /// the micro-stepped loop.
+    ///
+    /// Policies with no per-iteration driver work (no bid-ask hooks)
+    /// additionally batch whole stretches through
+    /// [`crate::engine::Engine::run_until`] while no snapshot mark is
+    /// near, skipping even the per-iteration driver dispatch.
+    /// `cfg.micro_step` forces the historical one-event-per-iteration
+    /// path for A/B verification.
     pub(super) fn kick(&mut self, now: Time, i: InstanceId) {
-        if self.instances[i].busy || !self.instances[i].engine.has_work() {
-            return;
+        let mut now = now;
+        loop {
+            if self.instances[i].busy || !self.instances[i].engine.has_work() {
+                return;
+            }
+            let bid_ask = self.cfg.policy.balance.uses_bid_ask();
+            if !self.cfg.micro_step && !bid_ask && !self.snapshot_mark_near() {
+                // Engine-side macro stretch: no per-iteration driver
+                // work can occur, so let the engine rip until the next
+                // queued event, a completion (progress moves — the
+                // snapshot check must rerun), or idleness.
+                let horizon = self.events.peek_time().unwrap_or(f64::INFINITY);
+                let ins = &mut self.instances[i];
+                let engine = &mut ins.engine;
+                let tracker = &mut ins.tracker;
+                let mo = engine.run_until(now, horizon, |t, tokens| {
+                    tracker.observe_tokens(t, tokens);
+                });
+                if mo.iterations == 0 {
+                    return; // idle or memory-blocked, nothing committed
+                }
+                self.stats.preemptions += mo.preempted;
+                self.stats.counters.add(i, mo.tokens_emitted);
+                for rec in mo.completed {
+                    self.observed.push((rec.input_len, rec.input_len + rec.output_len));
+                    self.records.push(rec);
+                }
+                match mo.stop {
+                    MacroStop::Idle => return,
+                    MacroStop::Event => {
+                        self.instances[i].busy = true;
+                        self.events.schedule(mo.end, Event::StepDone(i));
+                        return;
+                    }
+                    MacroStop::Boundary => {
+                        now = mo.end;
+                        self.maybe_snapshot(i);
+                        continue;
+                    }
+                }
+            }
+
+            // Per-iteration path: bid-ask policies (per-step §4.4
+            // hooks), an active snapshot mark, or --micro-step.
+            let Some(end) = self.step_once(now, i) else {
+                // Queued-but-unadmittable work (e.g. memory full); it
+                // will be re-kicked when something frees.
+                return;
+            };
+            let inline = !self.cfg.micro_step
+                && self.events.peek_time().map_or(true, |t| end < t);
+            if !inline {
+                self.instances[i].busy = true;
+                self.events.schedule(end, Event::StepDone(i));
+                return;
+            }
+            // Inline iteration boundary: nothing else pops before
+            // `end`, so handle the StepDone right here.
+            now = end;
+            self.maybe_snapshot(i);
+            if bid_ask {
+                self.cascade_post_step(now, i);
+            }
         }
+    }
+
+    /// Run exactly one engine iteration on `i` at `now`, committing
+    /// its boundary accounting — records (with their exact
+    /// end-of-iteration timestamps), preemption/token counters, and
+    /// the per-instance throughput EMA.  Returns the iteration's end
+    /// time, or `None` if nothing ran (idle or memory-blocked; the
+    /// zero-duration outcome is discarded, the historical gate).
+    /// Every per-iteration driver path (`kick`'s per-step loop and
+    /// [`Cluster::kick_scheduled`]) shares this helper so their
+    /// accounting can never drift apart — drift here is exactly the
+    /// macro-vs-micro divergence the equivalence suite pins.
+    fn step_once(&mut self, now: Time, i: InstanceId) -> Option<Time> {
         let outcome = self.instances[i].engine.step(now);
         if outcome.duration <= 0.0 {
-            // Queued-but-unadmittable work (e.g. memory full); it will
-            // be re-kicked when something frees.
-            return;
+            return None;
         }
-        self.instances[i].busy = true;
         self.stats.preemptions += outcome.preempted;
         let end = now + outcome.duration;
-        self.events.schedule(end, Event::StepDone(i));
-        // Completions carry their end-of-iteration timestamps already.
         for rec in outcome.completed {
             self.observed.push((rec.input_len, rec.input_len + rec.output_len));
             self.records.push(rec);
         }
         self.stats.counters.add(i, outcome.tokens_emitted);
         self.instances[i].tracker.observe_tokens(end, outcome.tokens_emitted);
+        Some(end)
+    }
+
+    /// Start (at most) one iteration on `i`, parking its completion in
+    /// the event queue — the historical single-step kick.
+    ///
+    /// Handlers that do more work after kicking (`on_migration_done`
+    /// kicks two instances and then serves starvation promises) MUST
+    /// use this variant: advancing `i` inline there would run
+    /// iterations *before* driver work that, under micro-stepping,
+    /// happens first at the same instant — reordering records and
+    /// tracker updates.  The parked `StepDone` resumes macro-stepping
+    /// through [`Cluster::kick`] when it pops.
+    pub(super) fn kick_scheduled(&mut self, now: Time, i: InstanceId) {
+        if self.instances[i].busy || !self.instances[i].engine.has_work() {
+            return;
+        }
+        let Some(end) = self.step_once(now, i) else { return };
+        self.instances[i].busy = true;
+        self.events.schedule(end, Event::StepDone(i));
     }
 
     fn on_step_done(&mut self, now: Time, i: InstanceId) {
@@ -150,16 +261,33 @@ impl Cluster {
         self.kick(now, i);
     }
 
+    /// Index of the snapshot mark whose window current run progress is
+    /// inside, if any — THE firing predicate of the Fig. 1 sampling.
+    /// [`Cluster::maybe_snapshot`] and the macro stretch gate in
+    /// [`Cluster::kick`] both consult this single definition, so the
+    /// window width and progress formula cannot drift apart between
+    /// them (drift would make macro-stepping skip boundaries where
+    /// micro-stepping records snapshots).
+    fn snapshot_mark_pos(&self) -> Option<usize> {
+        if self.n_requests_total == 0 || self.snapshot_marks.is_empty() {
+            return None;
+        }
+        let progress = self.records.len() as f64 / self.n_requests_total as f64;
+        self.snapshot_marks.iter().position(|&m| (progress - m).abs() < 0.01)
+    }
+
+    /// Is run progress currently inside a snapshot-mark window?
+    /// Progress only moves on completions, so between completions this
+    /// is constant and the engine-side macro stretch can skip the
+    /// per-iteration check entirely.
+    fn snapshot_mark_near(&self) -> bool {
+        self.snapshot_mark_pos().is_some()
+    }
+
     /// Record a Fig. 1 batch-length snapshot when run progress crosses
     /// one of the marks.
     fn maybe_snapshot(&mut self, i: InstanceId) {
-        if self.n_requests_total == 0 || self.snapshot_marks.is_empty() {
-            return;
-        }
-        let progress = self.records.len() as f64 / self.n_requests_total as f64;
-        let Some(pos) =
-            self.snapshot_marks.iter().position(|&m| (progress - m).abs() < 0.01)
-        else {
+        let Some(pos) = self.snapshot_mark_pos() else {
             return;
         };
         let lens: Vec<Tokens> = self.instances[i]

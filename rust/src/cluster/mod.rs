@@ -38,6 +38,40 @@
 //!   planning), the §4.4 bid-ask + §5 live-migration protocol
 //!   handlers, and the public API ([`run_experiment`]).
 //!
+//! # Simulation core: the two-level macro-stepped loop
+//!
+//! The driver runs a **two-level loop**.  The outer level is a classic
+//! discrete-event loop over *interesting* instants only — arrivals,
+//! periodic timers (gossip / refine / replan / baseline rebalance), and
+//! §4.4 protocol deliveries.  The inner level advances each engine
+//! **inline between those instants**: when instance `i` finishes an
+//! iteration that ends before every queued event, its `StepDone` would
+//! have popped next anyway, so the driver handles the iteration
+//! boundary (snapshot marks, §4.4 post-step hooks) and starts the next
+//! iteration immediately — zero event-queue pushes/pops, zero dispatch
+//! branches, zero timer checks per decode iteration.  Policies with no
+//! per-iteration hooks (no bid-ask balancing) go further and batch
+//! whole stretches through [`crate::engine::Engine::run_until`], which
+//! returns a compact [`crate::engine::MacroOutcome`] (completions with
+//! exact timestamps, iterations run, tokens advanced).  The
+//! [`crate::sim::EventQueue`] backs the outer level with a one-slot
+//! front register so the residual schedule-then-pop pattern also skips
+//! the heap.
+//!
+//! **Bit-identity invariant**: macro-stepping is a *traversal* change,
+//! never a *semantics* change.  Per-iteration latencies, float
+//! arithmetic order, admission/preemption decisions, FIFO tie-breaks
+//! (an inline boundary corresponds to a `StepDone` that would have
+//! carried the youngest insertion seq, so it loses every timestamp
+//! tie — exactly like the inline path, which yields to any queued
+//! event at or before its end), gossip sampling instants, and record
+//! order are all preserved exactly.  `ClusterConfig::micro_step`
+//! (CLI `sim --micro-step`) retains the historical
+//! one-event-per-iteration loop, and `tests/macro_equivalence.rs`
+//! asserts equal `Report::fingerprint()`s between the two paths for
+//! every registry scheduler on sharegpt, heavytail, and bursty
+//! workloads.
+//!
 //! # Heterogeneous fleets
 //!
 //! The fleet need not be uniform: [`ClusterConfig::fleet`] takes a
@@ -141,6 +175,13 @@ pub struct ClusterConfig {
     /// e.g. the paper's forced 4-stage x 4-instance Fig. 16 pipeline).
     /// Disables periodic re-planning.
     pub forced_pipeline: Option<Pipeline>,
+    /// Debug path: drive every engine iteration through its own
+    /// `StepDone` queue event (the pre-macro-step hot loop) instead of
+    /// the inline macro-step loop.  Reports are bit-identical either
+    /// way — `tests/macro_equivalence.rs` enforces it — so this exists
+    /// purely to *prove* that equivalence and to bisect any future
+    /// divergence.  CLI: `sim --micro-step`.
+    pub micro_step: bool,
 }
 
 impl ClusterConfig {
@@ -169,6 +210,7 @@ impl ClusterConfig {
             plan_sample: 2000,
             max_len: 131_072,
             forced_pipeline: None,
+            micro_step: false,
         }
     }
 
@@ -225,6 +267,10 @@ pub struct RunStats {
     pub migrations_skipped: u64,
     pub preemptions: u64,
     pub refinements: u64,
+    /// Total engine iterations simulated across all instances — the
+    /// numerator of the perf harness's iterations-per-wall-second
+    /// cluster throughput metric (`BENCH_hotpath.json`).
+    pub engine_iterations: u64,
     pub final_boundaries: Vec<Tokens>,
     /// Per-instance output tokens (Fig. 16).
     pub counters: InstanceCounters,
@@ -327,6 +373,16 @@ impl Cluster {
         let pipeline = match (&cfg.forced_pipeline, cfg.policy.layout) {
             (Some(p), _) => {
                 assert_eq!(p.total_instances(), e, "forced pipeline must use all instances");
+                // Routing does a binary search over stage boundaries
+                // (`Pipeline::stage_for`, router `stage_for_len`), so a
+                // hand-built ablation layout must be length-ordered —
+                // reject it here, in release builds too, rather than
+                // silently misrouting.
+                assert!(
+                    p.stages.windows(2).all(|w| w[0].hi <= w[1].hi),
+                    "forced pipeline stages must have ascending upper bounds: {:?}",
+                    p.stages
+                );
                 p.clone()
             }
             (None, Layout::Planned) => planner.plan_dp_weighted(&hist, &caps),
@@ -458,7 +514,12 @@ impl Cluster {
         let last_stage = stage + 1 >= self.stages.len();
 
         // --- Inter-stage handover: sequences that outgrew the range.
-        if !last_stage {
+        // Gate the O(batch) scan on the engine's monotone length bound:
+        // while every row is provably below `hi` the scan would find
+        // nothing, and this check is O(1) per iteration.  When the scan
+        // does run, re-tighten the bound so a departed long sequence
+        // stops triggering it.
+        if !last_stage && self.instances[i].engine.max_len_upper() >= hi {
             let outgrown: Vec<(RequestId, Tokens)> = self.instances[i]
                 .engine
                 .running()
@@ -471,6 +532,7 @@ impl Cluster {
                 })
                 .map(|s| (s.req.id, s.current_len()))
                 .collect();
+            self.instances[i].engine.tighten_len_hint();
             for (rid, len) in outgrown {
                 let next_stage =
                     self.stage_for_len(len).max(stage + 1).min(self.stages.len() - 1);
@@ -753,7 +815,12 @@ impl Cluster {
             if self.instances[to].engine.inject(seq) {
                 self.stats.migrations += 1;
                 self.stats.migration_tokens += t.tokens_moved;
-                self.kick(now, to);
+                // Single-step kicks: more driver work follows at this
+                // same instant (the second kick, starvation promises),
+                // and under micro-stepping it runs before any later
+                // iteration of `to`/`from` — inline advancement here
+                // would reorder it.  See `Cluster::kick_scheduled`.
+                self.kick_scheduled(now, to);
             } else {
                 // Destination filled up mid-flight: keep on source
                 // (§5: requests exceeding the cap keep running there).
@@ -762,7 +829,7 @@ impl Cluster {
                 self.stats.migrations_skipped += 1;
             }
         }
-        self.kick(now, from);
+        self.kick_scheduled(now, from);
         // Starvation promises: the sender transmits the starved pull
         // immediately after completing its current transfer (§4.4).
         if let Some(mut list) = self.promises.remove(&from) {

@@ -37,13 +37,15 @@ fn effective_wait(ins: &InstanceState, migration: &MigrationManager) -> f64 {
 
 /// Index of the stage whose `[lo, hi)` range covers `len` (clamps to
 /// the last stage — §3.2 routes to the earliest covering stage).
+/// Binary search over the ascending `hi` boundaries: this runs per
+/// arrival and per outgrown-sequence probe, and the cached ranges are
+/// kept sorted by construction ([`super::Cluster`]'s `rebuild_ranges`).
 pub fn stage_for_len(ranges: &[(Tokens, Tokens)], len: Tokens) -> usize {
-    for (i, &(_, hi)) in ranges.iter().enumerate() {
-        if len < hi {
-            return i;
-        }
-    }
-    ranges.len() - 1
+    debug_assert!(
+        ranges.windows(2).all(|w| w[0].1 <= w[1].1),
+        "stage ranges must have ascending upper bounds: {ranges:?}"
+    );
+    ranges.partition_point(|&(_, hi)| hi <= len).min(ranges.len() - 1)
 }
 
 /// Stateful router: dispatch policy + the shared round-robin counter.

@@ -35,7 +35,12 @@ pub struct InstanceState {
     /// so a homogeneous fleet (capacity exactly 1.0) reduces
     /// bit-identically to raw token-load comparisons.
     pub capacity: f64,
-    /// True while a StepDone event for this instance is in flight.
+    /// True while a `StepDone` event for this instance is in flight.
+    /// Under macro-stepping this is rarer than "an iteration is
+    /// running": iterations whose end precedes every queued event are
+    /// advanced inline by the driver without ever setting it — only an
+    /// iteration that overruns the next interesting instant parks its
+    /// completion in the queue.
     pub busy: bool,
     /// Last intra-stage offer time (rebalance hysteresis).
     pub last_offer: Time,

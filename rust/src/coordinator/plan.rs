@@ -44,13 +44,16 @@ pub struct Pipeline {
 impl Pipeline {
     /// Index of the stage serving length `len` (clamps to the ends —
     /// §3.2 routes a request to the earliest stage covering it).
+    /// Binary search over the ascending stage boundaries — this runs
+    /// per arrival and per rebalance probe, and stages tile the length
+    /// axis contiguously by construction.
     pub fn stage_for(&self, len: Tokens) -> usize {
-        for (i, s) in self.stages.iter().enumerate() {
-            if len < s.hi {
-                return i;
-            }
-        }
-        self.stages.len() - 1
+        debug_assert!(
+            self.stages.windows(2).all(|w| w[0].hi <= w[1].hi),
+            "stages must have ascending upper bounds: {:?}",
+            self.stages
+        );
+        self.stages.partition_point(|s| s.hi <= len).min(self.stages.len() - 1)
     }
 
     pub fn total_instances(&self) -> usize {
@@ -142,7 +145,9 @@ impl Planner {
         self.qoe.split_batch_qoe(&agg.features(), k)
     }
 
-    /// QoE of serving `agg` on a *heterogeneous* instance set.
+    /// QoE of serving `agg` on a *heterogeneous* instance set of `k`
+    /// members whose relative speeds (each capacity over the fleet
+    /// mean) sum to `sum_rel`.
     ///
     /// Model: the runtime's capacity-normalized balancing assigns each
     /// member the share that *equalizes per-request quality* — on an
@@ -150,19 +155,20 @@ impl Planner {
     /// by `1/s_i`, and solving `(D0 + L*w_i)/s_i = q, sum w_i = 1` for
     /// the linear QoE gives stage cost `Q_even * k / sum(s_i)`: the
     /// paper's even set division, discounted by the set's mean relative
-    /// speed.  Speeds are relative to the **fleet mean** (`fleet_mean`
-    /// = mean raw capacity), so a stage of above-average instances
-    /// prices *below* the even-split cost and the DP steers heavy
-    /// length ranges toward capacity-rich stages.  For a homogeneous
-    /// fleet every `cap == fleet_mean` and the factor is exactly 1.0 —
-    /// callers additionally take the legacy `stage_cost` path there so
-    /// bit-identity never rests on this arithmetic.
-    fn stage_cost_weighted(&self, agg: RangeAgg, caps: &[f64], fleet_mean: f64) -> f64 {
+    /// speed.  Speeds are relative to the **fleet mean** (mean raw
+    /// capacity), so a stage of above-average instances prices *below*
+    /// the even-split cost and the DP steers heavy length ranges toward
+    /// capacity-rich stages.  For a homogeneous fleet every cap equals
+    /// the fleet mean and the factor is exactly 1.0 — callers
+    /// additionally take the legacy `stage_cost` path there so
+    /// bit-identity never rests on this arithmetic.  `sum_rel` arrives
+    /// precomputed (a prefix-sum difference in the DP) because
+    /// rescanning `caps[ep..ee]` per candidate made the heterogeneous
+    /// DP an O(E) factor slower than it needs to be.
+    fn stage_cost_weighted(&self, agg: RangeAgg, k: usize, sum_rel: f64) -> f64 {
         if agg.n == 0.0 {
             return 0.0;
         }
-        let k = caps.len();
-        let sum_rel: f64 = caps.iter().map(|c| c / fleet_mean).sum();
         self.stage_cost(agg, k) * (k as f64 / sum_rel)
     }
 
@@ -185,11 +191,42 @@ impl Planner {
     /// uniform capacities the recurrence, the float operations, and the
     /// tie-breaking are identical to the historical count-based DP.
     pub fn plan_dp_weighted(&self, hist: &LengthHistogram, caps: &[f64]) -> Pipeline {
+        self.plan_dp_weighted_impl(hist, caps, true)
+    }
+
+    /// Direct-summation variant of the heterogeneous DP: recomputes
+    /// each candidate's relative-speed sum by rescanning `caps[ep..ee]`
+    /// (the historical inner loop).  Kept as the reference the
+    /// prefix-sum optimization is regression-pinned against — see the
+    /// `weighted_dp_prefix_sums_match_reference` test.
+    #[doc(hidden)]
+    pub fn plan_dp_weighted_reference(&self, hist: &LengthHistogram, caps: &[f64]) -> Pipeline {
+        self.plan_dp_weighted_impl(hist, caps, false)
+    }
+
+    fn plan_dp_weighted_impl(
+        &self,
+        hist: &LengthHistogram,
+        caps: &[f64],
+        prefix_caps: bool,
+    ) -> Pipeline {
         let e = caps.len();
         assert!(e >= 1);
         debug_assert!(caps.iter().all(|c| c.is_finite() && *c > 0.0), "{caps:?}");
         let uniform = caps.windows(2).all(|w| w[0] == w[1]);
         let fleet_mean = caps.iter().sum::<f64>() / e as f64;
+        // Prefix sums over raw capacities: `sum(caps[ep..ee])` becomes
+        // one subtraction per DP candidate instead of an O(E) rescan.
+        let cap_pref: Vec<f64> = {
+            let mut v = Vec::with_capacity(e + 1);
+            let mut acc = 0.0;
+            v.push(acc);
+            for &c in caps {
+                acc += c;
+                v.push(acc);
+            }
+            v
+        };
         let k = hist.bounds.len();
         // A histogram with no buckets (empty bounds) cannot seed the
         // DP; the only valid answer is one stage holding everything.
@@ -248,7 +285,12 @@ impl Planner {
                             let stage = if uniform {
                                 self.stage_cost(agg, ee - ep)
                             } else {
-                                self.stage_cost_weighted(agg, &caps[ep..ee], fleet_mean)
+                                let sum_rel = if prefix_caps {
+                                    (cap_pref[ee] - cap_pref[ep]) / fleet_mean
+                                } else {
+                                    caps[ep..ee].iter().map(|c| c / fleet_mean).sum()
+                                };
+                                self.stage_cost_weighted(agg, ee - ep, sum_rel)
                             };
                             let cut = if lp == 0 {
                                 0.0
@@ -711,6 +753,12 @@ mod tests {
         assert!(pipe.predicted_quality.is_finite());
     }
 
+    /// Sum of relative speeds the production DP derives from prefix
+    /// sums; tests compute it directly.
+    fn sum_rel(caps: &[f64], fleet_mean: f64) -> f64 {
+        caps.iter().map(|c| c / fleet_mean).sum()
+    }
+
     #[test]
     fn weighted_stage_cost_reduces_to_even_split_for_uniform_caps() {
         // At the fleet mean, the speed discount is exactly 1: the cost
@@ -718,7 +766,7 @@ mod tests {
         let p = Planner::new(qoe(), MigrationCost::free());
         let agg = RangeAgg { n: 64.0, sum_i: 12_000.0, sum_i2: 9.0e6, sum_l: 40_000.0 };
         let even = p.stage_cost(agg, 4);
-        let weighted = p.stage_cost_weighted(agg, &[2.0; 4], 2.0);
+        let weighted = p.stage_cost_weighted(agg, 4, sum_rel(&[2.0; 4], 2.0));
         assert_eq!(even.to_bits(), weighted.to_bits());
     }
 
@@ -731,13 +779,62 @@ mod tests {
         let p = Planner::new(qoe(), MigrationCost::free());
         let agg = RangeAgg { n: 128.0, sum_i: 64_000.0, sum_i2: 4.0e7, sum_l: 300_000.0 };
         let even = p.stage_cost(agg, 2);
-        let fast_pair = p.stage_cost_weighted(agg, &[1.0, 3.0], 1.0);
-        let slow_pair = p.stage_cost_weighted(agg, &[0.5, 0.5], 1.0);
+        let fast_pair = p.stage_cost_weighted(agg, 2, sum_rel(&[1.0, 3.0], 1.0));
+        let slow_pair = p.stage_cost_weighted(agg, 2, sum_rel(&[0.5, 0.5], 1.0));
         assert!(
             fast_pair < even && even < slow_pair,
             "fast {fast_pair} < even {even} < slow {slow_pair}"
         );
         // The discount is the set's mean relative speed: (1+3)/2 = 2x.
         assert!((fast_pair * 2.0 - even).abs() <= 1e-12 * even.abs());
+    }
+
+    #[test]
+    fn weighted_dp_prefix_sums_match_reference() {
+        // Pin the prefix-sum optimization to the direct-summation
+        // reference on the seed histograms: identical pipelines (the
+        // float-op reassociation must not flip any DP choice).
+        let p = Planner::new(qoe(), MigrationCost::free());
+        for seed in [77u64, 5, 42] {
+            let reqs = generate(&ShareGptLike::default(), 10.0, 3000, seed);
+            let h = LengthHistogram::from_requests(&reqs, 131_072);
+            for caps in [
+                vec![0.35, 0.35, 0.35, 0.35, 0.35, 0.35, 1.0, 1.0],
+                vec![1.0, 0.5, 0.25, 1.0, 0.5, 0.25, 1.0, 0.5],
+                vec![0.9; 8],
+            ] {
+                let fast = p.plan_dp_weighted(&h, &caps);
+                let reference = p.plan_dp_weighted_reference(&h, &caps);
+                assert_eq!(fast.stages, reference.stages, "seed {seed}, caps {caps:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_for_binary_search_matches_linear_reference() {
+        use crate::sim::Rng;
+        let mut rng = Rng::new(0x57A6E);
+        for _ in 0..200 {
+            // Random contiguous ascending stages.
+            let n = 1 + rng.next_range(8) as usize;
+            let mut lo = 0u64;
+            let mut stages = Vec::new();
+            for _ in 0..n {
+                let hi = lo + 1 + rng.next_range(4000);
+                stages.push(StageSpec { lo, hi, n_instances: 1 });
+                lo = hi;
+            }
+            let pipe = Pipeline { stages, predicted_quality: 0.0 };
+            for _ in 0..32 {
+                let len = rng.next_range(lo + 100);
+                // Linear reference: first stage with len < hi, else last.
+                let want = pipe
+                    .stages
+                    .iter()
+                    .position(|s| len < s.hi)
+                    .unwrap_or(pipe.stages.len() - 1);
+                assert_eq!(pipe.stage_for(len), want, "len {len} in {:?}", pipe.stages);
+            }
+        }
     }
 }

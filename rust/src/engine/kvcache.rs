@@ -76,17 +76,23 @@ impl KvCache {
 
     /// Grow a sequence by `delta` tokens (decode step / prefill chunk).
     /// Returns false if the growth doesn't fit (caller must preempt).
+    /// Single map probe: this runs once per row per decode iteration,
+    /// so the old lookup-then-insert pair was two hashes on the
+    /// simulator's hottest path.
     pub fn grow(&mut self, id: RequestId, delta: Tokens) -> bool {
-        let Some(&(tokens, blocks)) = self.seqs.get(&id) else {
+        let block_size = self.block_size;
+        let free = self.free_blocks;
+        let Some(entry) = self.seqs.get_mut(&id) else {
             return false;
         };
-        let need = self.blocks_for(tokens + delta);
+        let (tokens, blocks) = *entry;
+        let need = (tokens + delta).div_ceil(block_size);
         let extra = need.saturating_sub(blocks);
-        if extra > self.free_blocks {
+        if extra > free {
             return false;
         }
+        *entry = (tokens + delta, blocks + extra);
         self.free_blocks -= extra;
-        self.seqs.insert(id, (tokens + delta, blocks + extra));
         true
     }
 

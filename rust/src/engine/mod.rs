@@ -178,6 +178,47 @@ pub struct StepOutcome {
     pub was_prefill: bool,
 }
 
+/// Why [`Engine::run_until`] handed control back to the driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MacroStop {
+    /// No runnable work: the engine is empty, or everything queued is
+    /// memory-blocked (mirrors a zero-duration [`Engine::step`]).
+    #[default]
+    Idle,
+    /// The last committed iteration ends at or after the horizon; the
+    /// driver must schedule its completion as a queue event, because
+    /// another event pops first (or ties, and FIFO gives it priority).
+    Event,
+    /// The last committed iteration completed at least one request.
+    /// Run progress changed, so the driver must take its per-boundary
+    /// actions (records, snapshot marks) before continuing inline.
+    Boundary,
+}
+
+/// Outcome of a macro-step: as many engine iterations as fit before
+/// `horizon` without requiring driver attention, advanced in one
+/// inline loop with zero event-queue traffic.  Per-iteration effects
+/// are identical to calling [`Engine::step`] in a loop — same
+/// latencies, same arithmetic order, same admission/preemption and
+/// completion decisions — and completions carry their exact
+/// end-of-iteration timestamps in iteration order.
+#[derive(Debug, Clone, Default)]
+pub struct MacroOutcome {
+    /// End time of the last committed iteration (== the start time
+    /// when no iteration ran).
+    pub end: Time,
+    /// Iterations committed by this macro-step.
+    pub iterations: u64,
+    /// Requests that finished, in iteration order with exact times.
+    pub completed: Vec<RequestRecord>,
+    /// Total output tokens emitted across the committed iterations.
+    pub tokens_emitted: u64,
+    /// Total preemptions across the committed iterations.
+    pub preempted: u64,
+    /// Why the macro-step stopped.
+    pub stop: MacroStop,
+}
+
 /// Single-instance continuous-batching engine.
 #[derive(Debug, Clone)]
 pub struct Engine<B: ExecBackend> {
@@ -199,6 +240,28 @@ pub struct Engine<B: ExecBackend> {
     /// one or two Vec allocations per simulated engine step).
     scratch_lens: Vec<Tokens>,
     scratch_chunks: Vec<(Tokens, Tokens)>,
+    /// True when `scratch_lens` still holds the previous decode
+    /// iteration's per-row lengths for an unchanged batch: the next
+    /// decode input is then `lens[j] + 1` in place, so steady-state
+    /// decoding never re-materialises the length slice.  Any batch
+    /// mutation (admit, preempt, reap, extract, inject, prefill)
+    /// clears it.
+    lens_cached: bool,
+    /// Running count of admitted sequences still in `Phase::Prefilling`
+    /// (replaces the per-iteration O(batch) phase scan).
+    n_prefilling: usize,
+    /// Monotone upper bound on `max(current_len())` over `running`:
+    /// bumped on every token of growth, never decreased on removal
+    /// (callers re-tighten via [`Engine::tighten_len_hint`] after a
+    /// scan).  Lets the driver skip outgrown-sequence scans entirely
+    /// while the whole batch is provably below a stage boundary.
+    max_len_hint: Tokens,
+    /// True while every decoding sequence's KV-cache token count equals
+    /// its `kv_len` (the invariant behind the arithmetic block-boundary
+    /// fast path in decode).  Falsified permanently by degenerate
+    /// admissions (zero-length prompts / empty injected sequences),
+    /// which allocate a 1-token minimum the `kv_len` does not reflect.
+    kv_len_exact: bool,
     /// Cumulative stats.
     pub total_output_tokens: u64,
     pub total_iterations: u64,
@@ -221,6 +284,10 @@ impl<B: ExecBackend> Engine<B> {
             queued_tokens: 0,
             scratch_lens: Vec::new(),
             scratch_chunks: Vec::new(),
+            lens_cached: false,
+            n_prefilling: 0,
+            max_len_hint: 0,
+            kv_len_exact: true,
             total_output_tokens: 0,
             total_iterations: 0,
             busy_time: 0.0,
@@ -245,8 +312,26 @@ impl<B: ExecBackend> Engine<B> {
         if !self.kv.allocate(seq.req.id, seq.current_len().max(1)) {
             return false;
         }
+        if seq.current_len() == 0 {
+            // The allocator reserved a 1-token minimum the sequence
+            // length does not reflect — disable the arithmetic
+            // block-boundary fast path for this engine.
+            self.kv_len_exact = false;
+        }
+        if seq.phase == Phase::Prefilling {
+            // A mid-prefill injection reserved only `current_len()`
+            // tokens, but its remaining prefill chunks advance kv_len
+            // without allocator growth (admission-path sequences have
+            // the whole prompt reserved up front) — the allocator's
+            // count permanently lags kv_len, so the arithmetic fast
+            // path no longer holds for this engine.
+            self.kv_len_exact = false;
+            self.n_prefilling += 1;
+        }
+        self.max_len_hint = self.max_len_hint.max(seq.current_len());
         self.running_tokens += seq.current_len();
         self.running.push(seq);
+        self.lens_cached = false;
         true
     }
 
@@ -256,6 +341,10 @@ impl<B: ExecBackend> Engine<B> {
             let seq = self.running.remove(pos);
             self.kv.free(id);
             self.running_tokens -= seq.current_len();
+            if seq.phase == Phase::Prefilling {
+                self.n_prefilling -= 1;
+            }
+            self.lens_cached = false;
             return Some(seq);
         }
         if let Some(pos) = self.queue.iter().position(|s| s.req.id == id) {
@@ -330,11 +419,21 @@ impl<B: ExecBackend> Engine<B> {
             // Reserve the prompt's KV up front (vLLM reserves on admit).
             let ok = self.kv.allocate(seq.req.id, need);
             debug_assert!(ok);
+            if seq.prompt_len == 0 {
+                // 1-token minimum reservation without a matching
+                // kv_len: the arithmetic fast path no longer holds.
+                self.kv_len_exact = false;
+            }
             if seq.phase == Phase::Queued {
                 seq.phase = Phase::Prefilling;
             }
+            if seq.phase == Phase::Prefilling {
+                self.n_prefilling += 1;
+            }
+            self.max_len_hint = self.max_len_hint.max(seq.current_len());
             self.running_tokens += seq.current_len();
             self.running.push(seq);
+            self.lens_cached = false;
         }
     }
 
@@ -349,8 +448,12 @@ impl<B: ExecBackend> Engine<B> {
             return StepOutcome::default();
         }
 
-        let any_prefill = self.running.iter().any(|s| s.phase == Phase::Prefilling);
-        let outcome = if any_prefill {
+        debug_assert_eq!(
+            self.n_prefilling,
+            self.running.iter().filter(|s| s.phase == Phase::Prefilling).count(),
+            "prefill counter drifted from the phase scan"
+        );
+        let outcome = if self.n_prefilling > 0 {
             self.prefill_iteration(now)
         } else {
             self.decode_iteration(now)
@@ -358,6 +461,81 @@ impl<B: ExecBackend> Engine<B> {
         self.total_iterations += 1;
         self.busy_time += outcome.duration;
         outcome
+    }
+
+    /// Advance as many iterations as fit before `horizon` in one
+    /// inline loop — the macro-step fast path of the cluster driver.
+    ///
+    /// Semantics are *exactly* a [`Engine::step`] loop: each iteration
+    /// starts at the previous one's end, costs the same backend
+    /// arithmetic in the same order, and takes the same admission,
+    /// preemption, and completion decisions.  `on_iteration(end,
+    /// tokens)` fires once per committed iteration with its exact end
+    /// time and emitted tokens (the driver feeds its per-instance
+    /// throughput tracker with it, preserving the per-iteration EMA
+    /// updates bit for bit).
+    ///
+    /// The loop hands control back ([`MacroStop`]) when:
+    /// * nothing is runnable (`Idle` — including the memory-blocked
+    ///   zero-duration case, whose outcome is discarded exactly like
+    ///   the driver's historical `duration <= 0` gate);
+    /// * an iteration ends at/after `horizon` (`Event` — that
+    ///   iteration is committed, like the in-flight iteration the
+    ///   micro-stepped driver had already scheduled);
+    /// * an iteration completed a request (`Boundary` — run progress
+    ///   changed, so per-boundary driver logic must run before the
+    ///   next iteration).
+    pub fn run_until(
+        &mut self,
+        start: Time,
+        horizon: Time,
+        mut on_iteration: impl FnMut(Time, u64),
+    ) -> MacroOutcome {
+        let mut out = MacroOutcome { end: start, ..Default::default() };
+        let mut now = start;
+        loop {
+            if !self.has_work() {
+                return out;
+            }
+            let o = self.step(now);
+            if o.duration <= 0.0 {
+                // Queued-but-unadmittable work; outcome discarded to
+                // mirror the driver's historical early return.
+                return out;
+            }
+            let end = now + o.duration;
+            out.iterations += 1;
+            out.tokens_emitted += o.tokens_emitted;
+            out.preempted += o.preempted;
+            on_iteration(end, o.tokens_emitted);
+            let completed_any = !o.completed.is_empty();
+            out.completed.extend(o.completed);
+            out.end = end;
+            if end >= horizon {
+                out.stop = MacroStop::Event;
+                return out;
+            }
+            if completed_any {
+                out.stop = MacroStop::Boundary;
+                return out;
+            }
+            now = end;
+        }
+    }
+
+    /// Monotone upper bound on the longest running sequence (grows
+    /// with every token, never shrinks on removal).  O(1); see
+    /// [`Engine::tighten_len_hint`].
+    pub fn max_len_upper(&self) -> Tokens {
+        self.max_len_hint
+    }
+
+    /// Recompute the length bound exactly (O(batch)); called by the
+    /// driver after a boundary scan so a departed long sequence stops
+    /// triggering scans forever.
+    pub fn tighten_len_hint(&mut self) {
+        self.max_len_hint =
+            self.running.iter().map(Sequence::current_len).max().unwrap_or(0);
     }
 
     fn prefill_iteration(&mut self, now: Time) -> StepOutcome {
@@ -393,6 +571,7 @@ impl<B: ExecBackend> Engine<B> {
             self.running_tokens += take;
             if seq.kv_len >= seq.prompt_len {
                 seq.phase = Phase::Decoding;
+                self.n_prefilling -= 1;
                 if seq.generated == 0 {
                     // Fresh prefill completes: emits the first token.
                     seq.generated = 1;
@@ -405,7 +584,9 @@ impl<B: ExecBackend> Engine<B> {
                 }
                 // Recompute re-prefill: KV rebuilt, no token emitted.
             }
+            self.max_len_hint = self.max_len_hint.max(self.running[i].kv_len);
         }
+        self.lens_cached = false;
         // A prompt of output_len==1 is done right after prefill.
         self.reap(end, &mut outcome);
         outcome
@@ -415,22 +596,43 @@ impl<B: ExecBackend> Engine<B> {
         // Grow every decoding sequence by one token; preempt from the
         // back (latest arrivals) if memory runs out — vLLM recompute.
         let mut preempted = 0u64;
+        // For a purely-decoding batch with exact KV accounting, "needs
+        // a fresh block" is pure arithmetic: the sequence exactly fills
+        // its blocks iff its length is a block multiple (lengths are
+        // >= 1 here).  Avoids one allocator-map lookup per row per
+        // iteration; the budget-starved fallback (prefilling rows in a
+        // decode pass) and degenerate admissions take the exact
+        // allocator path.
+        let fast = self.kv_len_exact && self.n_prefilling == 0;
+        let bs = self.kv.block_size();
         // First ensure memory for everyone by preempting from the back.
         loop {
-            // O(batch) feasibility check without cloning the allocator:
-            // a +1-token grow needs a new block only for sequences that
-            // exactly fill their current blocks.
-            let blocks_needed = self
-                .running
-                .iter()
-                .filter(|s| self.kv.next_token_needs_block(s.req.id))
-                .count() as u64;
+            let blocks_needed = if fast {
+                self.running.iter().filter(|s| s.kv_len % bs == 0).count() as u64
+            } else {
+                self.running
+                    .iter()
+                    .filter(|s| self.kv.next_token_needs_block(s.req.id))
+                    .count() as u64
+            };
+            debug_assert_eq!(
+                blocks_needed,
+                self.running
+                    .iter()
+                    .filter(|s| self.kv.next_token_needs_block(s.req.id))
+                    .count() as u64,
+                "arithmetic block-boundary fast path diverged from the allocator"
+            );
             if blocks_needed <= self.kv.free_blocks() || self.running.is_empty() {
                 break;
             }
             let victim = self.running.remove(self.running.len() - 1);
             self.kv.free(victim.req.id);
             self.running_tokens -= victim.current_len();
+            if victim.phase == Phase::Prefilling {
+                self.n_prefilling -= 1;
+            }
+            self.lens_cached = false;
             // Recompute mode: back to queue, lose the cached KV but
             // keep logical progress — prompt + generated become the new
             // "prompt" to re-prefill (vLLM recompute preemption).
@@ -450,15 +652,30 @@ impl<B: ExecBackend> Engine<B> {
             debug_assert!(ok);
         }
 
+        // Cost-model input: for an unchanged batch this is last
+        // iteration's slice advanced by one token per row in place —
+        // the steady-state decode loop never rebuilds it.
         let mut lens = std::mem::take(&mut self.scratch_lens);
-        lens.clear();
-        lens.extend(self.running.iter().map(|s| s.current_len()));
+        if self.lens_cached && lens.len() == self.running.len() {
+            for l in lens.iter_mut() {
+                *l += 1;
+            }
+        } else {
+            lens.clear();
+            lens.extend(self.running.iter().map(|s| s.current_len()));
+        }
+        debug_assert!(
+            lens.iter().zip(self.running.iter()).all(|(l, s)| *l == s.current_len()),
+            "cached length slice drifted from the live batch"
+        );
         let duration = self.backend.decode_cost(&lens);
         self.scratch_lens = lens;
+        self.lens_cached = true;
         let end = now + duration;
 
         let mut outcome =
             StepOutcome { duration, preempted, was_prefill: false, ..Default::default() };
+        let mut any_finished = false;
         for seq in &mut self.running {
             seq.generated += 1;
             seq.kv_len += 1;
@@ -467,9 +684,16 @@ impl<B: ExecBackend> Engine<B> {
             if seq.first_token_at.is_none() {
                 seq.first_token_at = Some(end);
             }
+            any_finished |= seq.is_finished();
         }
         self.running_tokens += self.running.len() as Tokens;
-        self.reap(end, &mut outcome);
+        // Every row grew by one, so the bound advances by one.
+        self.max_len_hint += 1;
+        if any_finished {
+            // Reap only when the growth pass saw a finished row (the
+            // scan is a no-op otherwise — bit-identical decisions).
+            self.reap(end, &mut outcome);
+        }
         outcome
     }
 
@@ -481,6 +705,10 @@ impl<B: ExecBackend> Engine<B> {
                 let seq = self.running.remove(i);
                 self.kv.free(seq.req.id);
                 self.running_tokens -= seq.current_len();
+                if seq.phase == Phase::Prefilling {
+                    self.n_prefilling -= 1;
+                }
+                self.lens_cached = false;
                 outcome.completed.push(RequestRecord {
                     id: seq.req.id,
                     arrival: seq.req.arrival,
@@ -748,6 +976,158 @@ mod tests {
                 assert_eq!(e.token_load(), e.token_load_naive());
             }
         });
+    }
+
+    /// Drive an engine with a per-step loop (the micro reference),
+    /// collecting records and iteration-end observations.
+    fn drive_micro(e: &mut Engine<FakeBackend>) -> (Vec<RequestRecord>, Vec<(Time, u64)>) {
+        let mut now = 0.0;
+        let mut records = Vec::new();
+        let mut observed = Vec::new();
+        let mut guard = 0;
+        while e.has_work() {
+            let out = e.step(now);
+            if out.duration <= 0.0 {
+                break;
+            }
+            now += out.duration;
+            observed.push((now, out.tokens_emitted));
+            records.extend(out.completed);
+            guard += 1;
+            assert!(guard < 1_000_000);
+        }
+        (records, observed)
+    }
+
+    /// Drive an engine with `run_until` (optionally in bounded horizon
+    /// chunks), collecting the same observables.
+    fn drive_macro(
+        e: &mut Engine<FakeBackend>,
+        chunk: Option<Time>,
+    ) -> (Vec<RequestRecord>, Vec<(Time, u64)>) {
+        let mut now = 0.0;
+        let mut records = Vec::new();
+        let mut observed = Vec::new();
+        let mut guard = 0;
+        loop {
+            let horizon = chunk.map(|c| now + c).unwrap_or(f64::INFINITY);
+            let mo = e.run_until(now, horizon, |t, k| observed.push((t, k)));
+            records.extend(mo.completed);
+            match mo.stop {
+                MacroStop::Idle => {
+                    if mo.iterations == 0 {
+                        break;
+                    }
+                    now = mo.end;
+                }
+                MacroStop::Event | MacroStop::Boundary => now = mo.end,
+            }
+            guard += 1;
+            assert!(guard < 1_000_000);
+        }
+        (records, observed)
+    }
+
+    #[test]
+    fn run_until_matches_per_step_loop() {
+        // The macro-step hard requirement at engine scope: identical
+        // records (exact timestamps), identical iteration-end
+        // observations, identical cumulative stats — with and without
+        // horizon chunking that cuts the run at arbitrary instants.
+        use crate::sim::Rng;
+        use crate::testutil::for_all;
+        for_all("engine-macro-equivalence", 0xACE5, 24, |rng: &mut Rng| {
+            let cfg = EngineConfig {
+                max_batch: 16,
+                max_batched_tokens: 512,
+                // Ample memory: no zero-duration stalls, so the micro
+                // loop needs no stall guard.
+                kv_capacity_tokens: Some(4_000_000),
+                block_size: 16,
+            };
+            let mut micro = Engine::new(cfg, FakeBackend);
+            for i in 0..30u64 {
+                micro.submit(req(
+                    i,
+                    0.0,
+                    1 + rng.next_range(800),
+                    1 + rng.next_range(60),
+                ));
+            }
+            let mut macro_inf = micro.clone();
+            let mut macro_chunked = micro.clone();
+
+            let (r_micro, o_micro) = drive_micro(&mut micro);
+            let (r_inf, o_inf) = drive_macro(&mut macro_inf, None);
+            let chunk = 0.001 + rng.next_range(50) as f64 * 1e-3;
+            let (r_chunk, o_chunk) = drive_macro(&mut macro_chunked, Some(chunk));
+
+            assert_eq!(r_micro, r_inf, "infinite-horizon macro diverged");
+            assert_eq!(r_micro, r_chunk, "chunked macro diverged (chunk {chunk})");
+            assert_eq!(o_micro, o_inf);
+            assert_eq!(o_micro, o_chunk);
+            assert_eq!(micro.total_iterations, macro_inf.total_iterations);
+            assert_eq!(micro.total_iterations, macro_chunked.total_iterations);
+            assert_eq!(micro.busy_time.to_bits(), macro_inf.busy_time.to_bits());
+            assert_eq!(micro.busy_time.to_bits(), macro_chunked.busy_time.to_bits());
+            assert_eq!(micro.token_load(), macro_chunked.token_load());
+        });
+    }
+
+    #[test]
+    fn run_until_stops_at_boundaries_and_horizon() {
+        let mut e = engine();
+        e.submit(req(1, 0.0, 100, 5));
+        e.submit(req(2, 0.0, 100, 40));
+        // A tiny horizon: the first committed iteration overruns it.
+        let mo = e.run_until(0.0, 1e-9, |_, _| {});
+        assert_eq!(mo.stop, MacroStop::Event);
+        assert_eq!(mo.iterations, 1);
+        assert!(mo.end >= 1e-9);
+        // Run to the first completion: must stop there, not later.
+        let mo = e.run_until(mo.end, f64::INFINITY, |_, _| {});
+        assert_eq!(mo.stop, MacroStop::Boundary);
+        assert_eq!(mo.completed.len(), 1);
+        assert_eq!(mo.completed[0].id, 1);
+        // And drain the rest.
+        let mo = e.run_until(mo.end, f64::INFINITY, |_, _| {});
+        assert_eq!(mo.stop, MacroStop::Boundary);
+        assert_eq!(mo.completed[0].id, 2);
+        assert!(!e.has_work());
+        let mo = e.run_until(mo.end, f64::INFINITY, |_, _| {});
+        assert_eq!(mo.stop, MacroStop::Idle);
+        assert_eq!(mo.iterations, 0);
+    }
+
+    #[test]
+    fn zero_length_prompt_takes_the_exact_allocator_path() {
+        // input_len == 0 allocates a 1-token minimum the kv_len never
+        // reflects; the engine must fall back to allocator-backed
+        // block-boundary checks (the debug_assert in decode enforces
+        // agreement) and still complete the request.
+        let mut e = engine();
+        e.submit(req(7, 0.0, 0, 3));
+        e.submit(req(8, 0.0, 50, 3));
+        let recs = run_to_completion(&mut e);
+        assert_eq!(recs.len(), 2);
+        assert!(!e.kv_len_exact);
+    }
+
+    #[test]
+    fn max_len_hint_is_a_sound_upper_bound() {
+        let mut e = engine();
+        e.submit(req(1, 0.0, 300, 40));
+        e.submit(req(2, 0.0, 50, 10));
+        let mut now = 0.0;
+        while e.has_work() {
+            let out = e.step(now);
+            now += out.duration.max(1e-9);
+            let true_max =
+                e.running().iter().map(Sequence::current_len).max().unwrap_or(0);
+            assert!(e.max_len_upper() >= true_max);
+        }
+        e.tighten_len_hint();
+        assert_eq!(e.max_len_upper(), 0);
     }
 
     #[test]

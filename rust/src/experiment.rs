@@ -166,6 +166,7 @@ pub struct ExperimentBuilder {
     refine_interval: Option<Time>,
     replan_interval: Option<Time>,
     forced_pipeline: Option<Pipeline>,
+    micro_step: bool,
 }
 
 impl Default for ExperimentBuilder {
@@ -193,6 +194,7 @@ impl Default for ExperimentBuilder {
             refine_interval: None,
             replan_interval: None,
             forced_pipeline: None,
+            micro_step: false,
         }
     }
 }
@@ -343,6 +345,14 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Drive every engine iteration through its own queue event (the
+    /// pre-macro-step debug path; bit-identical reports, much slower).
+    /// CLI: `sim --micro-step`.
+    pub fn micro_step(mut self, on: bool) -> Self {
+        self.micro_step = on;
+        self
+    }
+
     /// Resolve every name, materialise the trace, and assemble the
     /// cluster configuration.
     pub fn build(self) -> Result<Experiment, ExperimentError> {
@@ -424,6 +434,7 @@ impl ExperimentBuilder {
         if let Some(p) = self.forced_pipeline {
             cfg.forced_pipeline = Some(p);
         }
+        cfg.micro_step = self.micro_step;
         if let Some(mut f) = fleet {
             if fleet_from_name {
                 // A parsed fleet string cannot express engine knobs:

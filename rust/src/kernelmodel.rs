@@ -97,17 +97,20 @@ impl AttentionModel {
         let heads = self.model.n_kv_heads as u64;
         let row_heads = lens.len() as u64 * heads;
         let bph = self.bytes_per_token_head();
-        let len_max = lens.iter().copied().max().unwrap_or(1).max(1);
 
         // Split policy (the real kernels' heuristic, not an oracle):
         // enough (row, head) programs -> no split; occupancy-starved ->
-        // split the longest row into ~conc/row_heads pieces.
+        // split the longest row into ~conc/row_heads pieces.  The max
+        // scan only runs in the starved branch: at full occupancy (the
+        // common case for every per-decode-iteration call) the slice is
+        // priced in a single pass.
         let split = match split_tokens {
             Some(s) => s.max(1),
             None => {
                 if row_heads >= SPLIT_OCCUPANCY_FACTOR * sm {
                     u64::MAX // no split
                 } else {
+                    let len_max = lens.iter().copied().max().unwrap_or(1).max(1);
                     let target = (conc / row_heads.max(1)).max(1);
                     (len_max.div_ceil(target)).max(SPLIT_TOKEN_MIN)
                 }

@@ -42,6 +42,7 @@ pub mod runtime;
 #[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
+pub mod sweep;
 pub mod testutil;
 pub mod workload;
 

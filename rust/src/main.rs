@@ -19,6 +19,7 @@ use cascade_infer::gpu::GpuProfile;
 use cascade_infer::kernelmodel::AttentionModel;
 use cascade_infer::metrics::Slo;
 use cascade_infer::qoe;
+use cascade_infer::sweep;
 use cascade_infer::workload::{self, LengthHistogram, ShareGptLike};
 
 /// Print a CLI-level error and exit 2.
@@ -93,6 +94,9 @@ fn builder_from_args(args: &Args) -> ExperimentBuilder {
     }
     if let Some(f) = args.get("fleet") {
         b = b.fleet(f);
+    }
+    if args.has_flag("micro-step") {
+        b = b.micro_step(true);
     }
     b
 }
@@ -208,74 +212,22 @@ fn cmd_sweep(args: &Args) {
             .collect(),
         None => vec![None],
     };
-    if fleets.is_empty() {
-        die("--fleets needs at least one fleet, e.g. --fleets \"h20:4;h20:2,h100:2\"");
-    }
-    // Fail fast on any unparsable fleet before running grid cells.
-    for f in fleets.iter().flatten() {
-        if let Err(e) = cascade_infer::fleet::FleetSpec::parse(f) {
-            die(&e);
-        }
-    }
-    let fleet_col = fleets.iter().any(Option::is_some);
 
     // One resolved builder (config file read, workload parsed) shared
     // by every cell; each cell only overrides rate + scheduler (+
-    // fleet when sweeping fleets).
+    // fleet when sweeping fleets).  Cells are independent experiments,
+    // so they run across `--jobs` worker threads (default: available
+    // parallelism); the table is byte-identical for any job count.
     let base = builder_from_args(args);
-    // The fleet column renders as a prefix string so the row format
-    // exists exactly once.
-    let fleet_cell = |label: &str| -> String {
-        if fleet_col {
-            format!("{label:<20} ")
-        } else {
-            String::new()
-        }
+    let spec = sweep::SweepSpec {
+        rates,
+        schedulers,
+        fleets,
+        jobs: args.get_usize("jobs", sweep::default_jobs()),
     };
-    println!(
-        "{:<6} {}{:<42} {:>10} {:>10} {:>10} {:>11} {:>8}",
-        "rate",
-        fleet_cell("fleet"),
-        "scheduler",
-        "TTFT",
-        "TPOT",
-        "p95TPOT",
-        "tok/s",
-        "migr"
-    );
-    for &rate in &rates {
-        // Materialise the workload once per rate; every scheduler and
-        // fleet cell shares the identical trace (apples-to-apples
-        // columns, and a `trace:` CSV is read once instead of once per
-        // cell).
-        let shared = match base.clone().rate(rate).build() {
-            Ok(e) => e.requests,
-            Err(e) => die(&e.to_string()),
-        };
-        for fleet in &fleets {
-            for name in &schedulers {
-                let mut cell = base.clone().rate(rate).scheduler(name).trace(shared.clone());
-                if let Some(f) = fleet {
-                    cell = cell.fleet(f);
-                }
-                let exp = match cell.build() {
-                    Ok(e) => e,
-                    Err(e) => die(&e.to_string()),
-                };
-                let (r, stats) = exp.run();
-                println!(
-                    "{:<6.1} {}{:<42} {:>9.4}s {:>9.5}s {:>9.5}s {:>11.1} {:>8}",
-                    rate,
-                    fleet_cell(fleet.as_deref().unwrap_or("-")),
-                    name,
-                    r.mean_ttft(),
-                    r.mean_tpot(),
-                    r.p95_tpot(),
-                    r.throughput_tokens_per_s(),
-                    stats.migrations
-                );
-            }
-        }
+    match sweep::run_sweep(&base, &spec) {
+        Ok(table) => println!("{table}"),
+        Err(e) => die(&e),
     }
 }
 

@@ -238,6 +238,55 @@ impl InstanceCounters {
     }
 }
 
+/// Machine-readable perf output (`BENCH_hotpath.json`): a flat map of
+/// metric name to finite number.  The repo is dependency-free, so this
+/// is a tiny hand-rolled emitter/reader pair covering exactly the
+/// format the perf harness writes and the CI regression gate reads —
+/// not a general JSON implementation.
+#[derive(Debug, Clone, Default)]
+pub struct BenchReport {
+    pub entries: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    pub fn push(&mut self, key: &str, value: f64) {
+        debug_assert!(value.is_finite(), "{key}: {value} is not JSON-representable");
+        self.entries.push((key.to_string(), value));
+    }
+
+    /// Serialize to a JSON object (insertion order preserved).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            s.push_str("  \"");
+            s.push_str(k);
+            s.push_str("\": ");
+            s.push_str(&format!("{v}"));
+            if i + 1 < self.entries.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    /// Read one numeric value back out of a flat JSON object (accepts
+    /// this emitter's output and hand-edited baselines with the same
+    /// `"key": number` shape).  Returns `None` for missing keys or
+    /// non-numeric values.
+    pub fn parse_value(json: &str, key: &str) -> Option<f64> {
+        let needle = format!("\"{key}\"");
+        let pos = json.find(&needle)?;
+        let rest = json[pos + needle.len()..].trim_start();
+        let rest = rest.strip_prefix(':')?.trim_start();
+        let end = rest
+            .find(|c: char| c == ',' || c == '}' || c.is_whitespace())
+            .unwrap_or(rest.len());
+        rest[..end].parse().ok()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,5 +377,21 @@ mod tests {
         assert_eq!(r.mean_ttft(), 0.0);
         assert_eq!(r.throughput_tokens_per_s(), 0.0);
         assert_eq!(r.slo_attainment(Slo { ttft: 1.0, tpot: 1.0 }), 0.0);
+    }
+
+    #[test]
+    fn bench_report_round_trips() {
+        let mut b = BenchReport::default();
+        b.push("cluster_iters_per_s", 12345.5);
+        b.push("ops", 2.0);
+        let json = b.to_json();
+        assert_eq!(BenchReport::parse_value(&json, "cluster_iters_per_s"), Some(12345.5));
+        assert_eq!(BenchReport::parse_value(&json, "ops"), Some(2.0));
+        assert_eq!(BenchReport::parse_value(&json, "missing"), None);
+        // Hand-edited baselines (extra whitespace, string notes) parse.
+        let hand = "{\n  \"note\": \"text\",\n  \"placeholder\": 1,\n  \"x\" : 3.5\n}\n";
+        assert_eq!(BenchReport::parse_value(hand, "placeholder"), Some(1.0));
+        assert_eq!(BenchReport::parse_value(hand, "x"), Some(3.5));
+        assert_eq!(BenchReport::parse_value(hand, "note"), None);
     }
 }

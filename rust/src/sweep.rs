@@ -1,0 +1,234 @@
+//! Parallel rate x scheduler (x fleet) sweep grids — the engine behind
+//! the `sweep` subcommand.
+//!
+//! Every grid cell is an independently seeded [`Experiment`]: cells
+//! share nothing but the immutable request trace of their rate, so
+//! they parallelize embarrassingly.  [`run_sweep`] builds every cell
+//! up front (serial — name resolution and trace generation stay
+//! deterministic and fail fast), then runs the cells across
+//! `jobs` scoped worker threads pulling from an atomic cursor.
+//! Results land in their cell's slot, so the rendered table is
+//! **byte-identical for any job count** — enforced by the
+//! `parallel_table_matches_serial` test below.
+
+use crate::cluster::{run_experiment, ClusterConfig, PolicySpec};
+use crate::experiment::ExperimentBuilder;
+use crate::fleet::FleetSpec;
+use crate::workload::Request;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// The grid axes of one sweep invocation.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub rates: Vec<f64>,
+    /// Registry names or `custom:` axis strings.
+    pub schedulers: Vec<String>,
+    /// Fleet grid axis; `[None]` is the single legacy (homogeneous
+    /// `--gpu`/`--instances`) cell.
+    pub fleets: Vec<Option<String>>,
+    /// Worker threads; clamped to the cell count, minimum 1.
+    pub jobs: usize,
+}
+
+/// Default worker count: the machine's available parallelism.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One materialised grid cell, ready to run.  Holds only the resolved
+/// cluster configuration — the (potentially large) request trace is
+/// shared per rate through `traces[rate_idx]`, not cloned per cell.
+struct Cell {
+    rate: f64,
+    /// Index into the per-rate shared traces.
+    rate_idx: usize,
+    fleet: Option<String>,
+    scheduler: String,
+    cfg: ClusterConfig,
+}
+
+/// Run the whole grid and render the comparison table (the shape of
+/// Figs. 6/7/10 from the CLI).  Validation errors (unknown scheduler,
+/// malformed fleet, empty axes) return `Err` before any cell runs.
+pub fn run_sweep(base: &ExperimentBuilder, spec: &SweepSpec) -> Result<String, String> {
+    if spec.rates.is_empty() || spec.schedulers.is_empty() {
+        return Err("sweep needs at least one rate and one scheduler".into());
+    }
+    if spec.fleets.is_empty() {
+        return Err(
+            "--fleets needs at least one fleet, e.g. --fleets \"h20:4;h20:2,h100:2\"".into(),
+        );
+    }
+    // Fail fast on any unresolvable scheduler or fleet *before*
+    // running grid cells.
+    for name in &spec.schedulers {
+        PolicySpec::resolve(name).map_err(|e| e.to_string())?;
+    }
+    for f in spec.fleets.iter().flatten() {
+        FleetSpec::parse(f)?;
+    }
+    let fleet_col = spec.fleets.iter().any(Option::is_some);
+
+    // Materialise every cell serially: one shared workload per rate
+    // (identical trace across that rate's schedulers and fleets —
+    // apples-to-apples columns, and a `trace:` CSV is read once).
+    // Cell configs are fully resolved up front (fail fast on any bad
+    // combination), but each holds only a ClusterConfig: the builder
+    // probe uses a one-request stand-in trace, because the resolved
+    // configuration does not depend on the trace contents and cloning
+    // the real trace per cell would hold cells x trace in memory.
+    let mut traces: Vec<Vec<Request>> = Vec::new();
+    let mut cells: Vec<Cell> = Vec::new();
+    for &rate in &spec.rates {
+        let shared = base.clone().rate(rate).build().map_err(|e| e.to_string())?.requests;
+        let probe = vec![shared[0]];
+        for fleet in &spec.fleets {
+            for name in &spec.schedulers {
+                let mut b = base.clone().rate(rate).scheduler(name).trace(probe.clone());
+                if let Some(f) = fleet {
+                    b = b.fleet(f);
+                }
+                let exp = b.build().map_err(|e| e.to_string())?;
+                cells.push(Cell {
+                    rate,
+                    rate_idx: traces.len(),
+                    fleet: fleet.clone(),
+                    scheduler: name.clone(),
+                    cfg: exp.cfg,
+                });
+            }
+        }
+        traces.push(shared);
+    }
+
+    // The fleet column renders as a prefix string so the row format
+    // exists exactly once.
+    let fleet_cell = |label: &str| -> String {
+        if fleet_col {
+            format!("{label:<20} ")
+        } else {
+            String::new()
+        }
+    };
+    let mut table = format!(
+        "{:<6} {}{:<42} {:>10} {:>10} {:>10} {:>11} {:>8}",
+        "rate",
+        fleet_cell("fleet"),
+        "scheduler",
+        "TTFT",
+        "TPOT",
+        "p95TPOT",
+        "tok/s",
+        "migr"
+    );
+
+    // Run the cells across scoped workers; each slot is claimed once
+    // through the cursor and filled in place, so assembly order (and
+    // therefore the table bytes) is independent of scheduling.
+    let jobs = spec.jobs.max(1).min(cells.len());
+    let cursor = AtomicUsize::new(0);
+    let rows: Mutex<Vec<Option<String>>> = Mutex::new(vec![None; cells.len()]);
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let cell = &cells[i];
+                let (r, stats) = run_experiment(cell.cfg.clone(), &traces[cell.rate_idx]);
+                let row = format!(
+                    "{:<6.1} {}{:<42} {:>9.4}s {:>9.5}s {:>9.5}s {:>11.1} {:>8}",
+                    cell.rate,
+                    fleet_cell(cell.fleet.as_deref().unwrap_or("-")),
+                    cell.scheduler,
+                    r.mean_ttft(),
+                    r.mean_tpot(),
+                    r.p95_tpot(),
+                    r.throughput_tokens_per_s(),
+                    stats.migrations
+                );
+                rows.lock().expect("no poisoned sweep rows")[i] = Some(row);
+            });
+        }
+    });
+
+    for row in rows.into_inner().expect("no poisoned sweep rows") {
+        table.push('\n');
+        table.push_str(&row.expect("every claimed cell produced a row"));
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::Experiment;
+
+    fn tiny_base() -> ExperimentBuilder {
+        Experiment::builder().instances(4).requests(60).plan_sample(200).seed(9)
+    }
+
+    fn tiny_spec(jobs: usize) -> SweepSpec {
+        SweepSpec {
+            rates: vec![8.0, 16.0],
+            schedulers: vec!["cascade".into(), "vllm".into()],
+            fleets: vec![None],
+            jobs,
+        }
+    }
+
+    #[test]
+    fn parallel_table_matches_serial() {
+        // The satellite guarantee: the grid table is byte-identical
+        // between a serial run and any parallel job count.
+        let base = tiny_base();
+        let serial = run_sweep(&base, &tiny_spec(1)).unwrap();
+        let parallel = run_sweep(&base, &tiny_spec(4)).unwrap();
+        assert_eq!(serial, parallel);
+        // Sanity on shape: header + one row per cell.
+        assert_eq!(serial.lines().count(), 1 + 4);
+        assert!(serial.lines().next().unwrap().contains("scheduler"));
+    }
+
+    #[test]
+    fn oversubscribed_jobs_are_clamped() {
+        let base = tiny_base();
+        let mut spec = tiny_spec(64);
+        spec.rates = vec![10.0];
+        spec.schedulers = vec!["sjf".into()];
+        let table = run_sweep(&base, &spec).unwrap();
+        assert_eq!(table.lines().count(), 2);
+    }
+
+    #[test]
+    fn fleet_axis_renders_a_fleet_column() {
+        let base = tiny_base();
+        let spec = SweepSpec {
+            rates: vec![8.0],
+            schedulers: vec!["cascade".into()],
+            fleets: vec![None, Some("h20:2,h100:2".into())],
+            jobs: 2,
+        };
+        let table = run_sweep(&base, &spec).unwrap();
+        assert!(table.lines().next().unwrap().contains("fleet"));
+        assert!(table.contains("h20:2,h100:2"));
+        assert!(table.contains(" - "), "legacy cell renders a dash");
+    }
+
+    #[test]
+    fn invalid_axes_fail_fast() {
+        let base = tiny_base();
+        let mut spec = tiny_spec(1);
+        spec.schedulers = vec!["bogus".into()];
+        assert!(run_sweep(&base, &spec).is_err());
+        let mut spec = tiny_spec(1);
+        spec.fleets = vec![Some("a100:4".into())];
+        assert!(run_sweep(&base, &spec).is_err());
+        let mut spec = tiny_spec(1);
+        spec.rates.clear();
+        assert!(run_sweep(&base, &spec).is_err());
+    }
+}

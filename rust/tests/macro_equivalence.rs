@@ -1,0 +1,177 @@
+//! Macro-vs-micro driver equivalence — the macro-step hard gate.
+//!
+//! The macro-stepped simulation core (inline iteration advancement
+//! between interesting events, `Engine::run_until` stretches, the
+//! event-queue front register) must be a pure *traversal* change:
+//! every registry scheduler on every workload family must produce a
+//! bit-identical seeded `Report` (and run stats) against the retained
+//! `--micro-step` one-event-per-iteration debug path.  A property test
+//! additionally interleaves arrivals and periodic timers so macro
+//! horizons land on, just before, and just after completion instants.
+
+use cascade_infer::cluster::{PolicySpec, RunStats};
+use cascade_infer::experiment::Experiment;
+use cascade_infer::metrics::Report;
+use cascade_infer::sim::Rng;
+use cascade_infer::testutil::for_all;
+use cascade_infer::workload::{Request, WorkloadSpec};
+use cascade_infer::Tokens;
+
+/// Everything a run exposes, flattened to a comparable value.
+fn observables(report: &Report, stats: &RunStats) -> (u64, usize, Vec<u64>, Vec<Tokens>, usize) {
+    (
+        report.fingerprint(),
+        report.records.len(),
+        vec![
+            stats.migrations,
+            stats.migration_tokens,
+            stats.migrations_skipped,
+            stats.preemptions,
+            stats.refinements,
+            stats.engine_iterations,
+        ],
+        stats.final_boundaries.clone(),
+        stats.batch_snapshots.len(),
+    )
+}
+
+fn run(
+    scheduler: &str,
+    workload: &WorkloadSpec,
+    rate: f64,
+    requests: usize,
+    seed: u64,
+    micro: bool,
+) -> (Report, RunStats) {
+    Experiment::builder()
+        .instances(4)
+        .scheduler(scheduler)
+        .workload(workload.clone())
+        .rate(rate)
+        .requests(requests)
+        .seed(seed)
+        .plan_sample(400)
+        .micro_step(micro)
+        .build()
+        .expect("equivalence experiment builds")
+        .run()
+}
+
+#[test]
+fn every_registry_scheduler_is_macro_micro_identical() {
+    let workloads: Vec<(&str, WorkloadSpec, f64)> = vec![
+        ("sharegpt", WorkloadSpec::parse("sharegpt").unwrap(), 18.0),
+        ("heavytail", WorkloadSpec::parse("heavytail").unwrap(), 12.0),
+        ("bursty", WorkloadSpec::parse("bursty").unwrap(), 18.0),
+    ];
+    for &name in PolicySpec::names() {
+        for (wl_name, wl, rate) in &workloads {
+            let (r_macro, s_macro) = run(name, wl, *rate, 140, 11, false);
+            let (r_micro, s_micro) = run(name, wl, *rate, 140, 11, true);
+            assert_eq!(
+                observables(&r_macro, &s_macro),
+                observables(&r_micro, &s_micro),
+                "{name} on {wl_name}: macro and micro drivers diverged"
+            );
+            // The mark-triggered batch snapshots must match exactly,
+            // not just in count — per-iteration sampling near marks is
+            // the subtlest part of the macro gating.
+            assert_eq!(
+                s_macro.batch_snapshots, s_micro.batch_snapshots,
+                "{name} on {wl_name}: snapshot marks diverged"
+            );
+            assert_eq!(
+                s_macro.mean_token_load, s_micro.mean_token_load,
+                "{name} on {wl_name}: gossip-sampled load diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn randomized_horizon_interleavings_stay_identical() {
+    // Random rates and refine/replan-interval jitter move the periodic
+    // timers (and therefore macro horizons) onto, before, and after
+    // completion instants; every draw must stay bit-identical.
+    let schedulers = ["cascade", "vllm", "llumnix", "sjf", "rrintra"];
+    for_all("macro-horizon-interleavings", 0xCAFE, 8, |rng: &mut Rng| {
+        let scheduler = schedulers[rng.next_range(schedulers.len() as u64) as usize];
+        let rate = 6.0 + rng.next_range(30) as f64;
+        let seed = rng.next_range(1 << 20);
+        let refine = 0.3 + rng.next_range(40) as f64 * 0.1;
+        let build = |micro: bool| {
+            Experiment::builder()
+                .instances(4)
+                .scheduler(scheduler)
+                .rate(rate)
+                .requests(90)
+                .seed(seed)
+                .plan_sample(300)
+                .refine_interval(refine)
+                .micro_step(micro)
+                .build()
+                .unwrap()
+                .run()
+        };
+        let (r_macro, s_macro) = build(false);
+        let (r_micro, s_micro) = build(true);
+        assert_eq!(
+            observables(&r_macro, &s_macro),
+            observables(&r_micro, &s_micro),
+            "{scheduler} rate {rate} seed {seed} refine {refine} diverged"
+        );
+    });
+}
+
+#[test]
+fn arrivals_at_exact_completion_instants_stay_identical() {
+    // Adversarial tie construction: take completion timestamps from a
+    // first run and inject new arrivals at *exactly* those instants
+    // (plus one just before and one just after), so the macro horizon
+    // logic faces `end == next event` ties that FIFO order must
+    // resolve identically to the event-queue path.
+    let base = Experiment::builder()
+        .instances(4)
+        .scheduler("cascade")
+        .rate(20.0)
+        .requests(80)
+        .seed(5)
+        .plan_sample(200)
+        .build()
+        .unwrap();
+    let (first, _) = base.clone().run();
+
+    let mut reqs = base.requests.clone();
+    let mut id = 10_000u64;
+    for rec in first.records.iter().take(24) {
+        for arrival in [rec.completion, rec.completion - 1e-9, rec.completion + 1e-9] {
+            reqs.push(Request {
+                id,
+                arrival: arrival.max(0.0),
+                input_len: 64 + id % 512,
+                output_len: 16 + id % 64,
+            });
+            id += 1;
+        }
+    }
+
+    let run_trace = |micro: bool| {
+        Experiment::builder()
+            .instances(4)
+            .scheduler("cascade")
+            .plan_sample(200)
+            .trace(reqs.clone())
+            .micro_step(micro)
+            .build()
+            .unwrap()
+            .run()
+    };
+    let (r_macro, s_macro) = run_trace(false);
+    let (r_micro, s_micro) = run_trace(true);
+    assert_eq!(r_macro.records.len(), reqs.len());
+    assert_eq!(
+        observables(&r_macro, &s_macro),
+        observables(&r_micro, &s_micro),
+        "tie-arrival trace diverged between macro and micro drivers"
+    );
+}
