@@ -1,19 +1,25 @@
 //! Mixed-fleet comparison: CascadeInfer vs round-robin on a
-//! heterogeneous `h20:6,h100:2` fleet under the heavy-tail workload.
+//! heterogeneous `h20:6,h100:2` fleet under the heavy-tail workload,
+//! plus a tensor-parallel variant serving Llama-70B on mixed
+//! TP2/TP4 H20 slices.
 //!
 //! Shows the fleet axis end to end: the experiment builder parses the
-//! fleet string, the planner partitions over per-instance capacity,
-//! capacity-normalized routing/bidding shifts load toward the H100s,
-//! and the per-instance report tags each instance with its GPU.
+//! fleet string, the planner partitions over per-instance capacity
+//! (and, for TP fleets, KV feasibility + collective premiums),
+//! capacity-normalized routing/bidding shifts load toward the fast
+//! instances, and the per-instance report tags each instance with its
+//! GPU and TP degree.
 //!
 //! ```bash
 //! cargo run --release --example mixed_fleet
 //! ```
 
 use cascade_infer::experiment::Experiment;
+use cascade_infer::models::llama_70b;
 use cascade_infer::workload::{generate, ShareGptLike};
 
 const FLEET: &str = "h20:6,h100:2";
+const TP_FLEET: &str = "h20:4,tp=2,h20:2,tp=4";
 
 fn main() {
     // Heavy-tail traffic (8% of prompts on a fat Pareto tail) — the
@@ -75,6 +81,54 @@ fn main() {
             "{:<4} {:<6} {:>9.3} {:>16.0} {:>14}",
             i,
             stats.instance_gpus[i],
+            stats.instance_capacity[i],
+            stats.mean_token_load.get(i).copied().unwrap_or(0.0),
+            stats.counters.output_tokens.get(&i).unwrap_or(&0)
+        );
+    }
+
+    // --- Tensor-parallel variant: Llama-70B, a model no single H20
+    // serves at FP16, on mixed TP2/TP4 slices.  The TP-aware planner
+    // puts the long-sequence stage on the TP4 slices (they stream
+    // weights/KV 2x faster than TP2 and pool the deepest KV), and the
+    // per-instance view shows the load concentrating there.
+    let tp_requests = generate(&ShareGptLike::heavy_tail(), 12.0, 400, 42);
+    println!(
+        "\n=== tensor-parallel fleet {TP_FLEET}, Llama-3.1-70B, {} requests ===",
+        tp_requests.len()
+    );
+    let (report, stats) = Experiment::builder()
+        .model_profile(llama_70b(1))
+        .fleet(TP_FLEET)
+        .scheduler("cascade")
+        .trace(tp_requests)
+        .build()
+        .expect("tp experiment builds")
+        .run();
+    println!(
+        "cascade: mean TTFT {:.4}s, norm lat {:.5}s/t, throughput {:.1} tok/s, {} migrations",
+        report.mean_ttft(),
+        report.mean_normalized_latency(),
+        report.throughput_tokens_per_s(),
+        stats.migrations
+    );
+    println!(
+        "pipeline: {} stages {:?}, boundaries {:?}",
+        stats.stages.len(),
+        stats.stages.iter().map(|s| s.len()).collect::<Vec<_>>(),
+        stats.final_boundaries
+    );
+    println!("\nper-instance (cascade, tp fleet):");
+    println!(
+        "{:<4} {:<6} {:<4} {:>9} {:>16} {:>14}",
+        "id", "gpu", "tp", "capacity", "mean token load", "out tokens"
+    );
+    for i in 0..stats.instance_gpus.len() {
+        println!(
+            "{:<4} {:<6} {:<4} {:>9.3} {:>16.0} {:>14}",
+            i,
+            stats.instance_gpus[i],
+            stats.instance_tp[i],
             stats.instance_capacity[i],
             stats.mean_token_load.get(i).copied().unwrap_or(0.0),
             stats.counters.output_tokens.get(&i).unwrap_or(&0)

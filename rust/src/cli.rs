@@ -120,15 +120,26 @@ RUNNING EXPERIMENTS
               [,gossip=on|off][,speed=F]
   Workloads:  sharegpt|heavytail|uniformshort|mix|bursty|trace:FILE
   Fleets:     --fleet describes a heterogeneous fleet as comma-separated
-              GPU:COUNT groups, each optionally followed by speed=F for
-              that group, e.g. `h20:12,h100:4,speed=1.37`.  It replaces
-              --gpu/--instances: the instance count is the fleet size,
-              each instance is priced by its own GPU, and the planner,
-              router, and bid-ask balancer normalize load by modeled
-              per-instance capacity.  `sweep` grids over --fleets
-              F1;F2;.. (`;`-separated — fleet specs contain commas).
-              A homogeneous fleet (e.g. `h20:16`) reproduces --gpu
-              H20 --instances 16 bit-for-bit.
+              GPU:COUNT groups, each optionally followed by speed=F
+              and/or tp=N options for that group, e.g.
+              `h20:12,h100:4,speed=1.37` or `h20:4,tp=2,h20:2,tp=4`.
+              It replaces --gpu/--instances: the instance count is the
+              fleet size, each instance is priced by its own GPU, and
+              the planner, router, and bid-ask balancer normalize load
+              by modeled per-instance capacity.  tp=N serves the model
+              as a tensor-parallel N-way slice on that group: per-GPU
+              weight/KV traffic shrink Nx, the KV pool derives ~Nx the
+              token headroom (how a 70B model holds 128K contexts), and
+              every forward pass pays per-layer all-reduce collectives
+              priced from the topology's intra-node link.  The stage
+              planner prices KV feasibility and the collective premium,
+              so long-sequence stages land on TP-sharded instances —
+              list sharded groups last (stages are contiguous in fleet
+              order; long ranges sit at the end).  `sweep` grids over
+              --fleets F1;F2;.. (`;`-separated — fleet specs contain
+              commas).  A homogeneous fleet (e.g. `h20:16`, tp=1)
+              reproduces --gpu H20 --instances 16 bit-for-bit.
+              Unknown option keys are hard errors listing valid keys.
   Config:     --config FILE loads an [experiment] section (model, gpu,
               instances, fleet, rate, requests, seed, scheduler,
               workload); explicit CLI flags override file values.
@@ -157,6 +168,7 @@ PERF BASELINE
   Examples:
     cascade-infer sim --rate 16 --scheduler cascade --workload heavytail
     cascade-infer sim --fleet h20:6,h100:2 --scheduler cascade --workload heavytail
+    cascade-infer sim --fleet h20:4,tp=2,h20:2,tp=4 --model llama70b --workload heavytail
     cascade-infer sim --scheduler custom:layout=planned,refine=memory,balance=rrintra
     cascade-infer sweep --rates 8,16,32 --schedulers cascade,vllm,llumnix
     cascade-infer sweep --rates 8,16 --schedulers cascade,vllm --fleets \"h20:8;h20:6,h100:2\"

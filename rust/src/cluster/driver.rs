@@ -431,8 +431,12 @@ impl Cluster {
             }
             // Partition over the (possibly heterogeneous) per-instance
             // capacities — uniform fleets take the identical legacy
-            // DP path.
-            let pipe = self.planner.plan_dp_weighted(&hist, &self.caps);
+            // DP path; TP-sharded fleets re-plan through the TP-aware
+            // DP with the same KV/collective inputs as construction.
+            let pipe = match &self.plan_insts {
+                Some(insts) => self.planner.plan_dp_instances(&hist, insts),
+                None => self.planner.plan_dp_weighted(&hist, &self.caps),
+            };
             if pipe.stages.len() != self.stages.len()
                 || pipe
                     .stages

@@ -75,8 +75,8 @@
 //! # Heterogeneous fleets
 //!
 //! The fleet need not be uniform: [`ClusterConfig::fleet`] takes a
-//! [`FleetSpec`] (one `{gpu, engine, speed}` [`InstanceSpec`] per
-//! instance; CLI grammar `--fleet h20:6,h100:2[,speed=F]`), and
+//! [`FleetSpec`] (one `{gpu, engine, speed, tp}` [`InstanceSpec`] per
+//! instance; CLI grammar `--fleet h20:6,h100:2[,speed=F][,tp=N]`), and
 //! [`ClusterConfig::topology`] makes the node layout — and therefore
 //! the [`MigrationCost`] link bandwidth — configurable instead of the
 //! old hardcoded `Topology::sequential(e, 8, NvLink)`.  Construction
@@ -89,6 +89,51 @@
 //! so a homogeneous fleet gets exactly 1.0 everywhere and reduces
 //! bit-identically to the legacy single-GPU path (enforced by
 //! `tests/experiment_api.rs` and `tests/golden_seed.rs`).
+//!
+//! # Tensor-parallel stages
+//!
+//! Each [`InstanceSpec`] additionally carries a **TP degree** (CLI
+//! `--fleet h20:4,tp=2,h20:2,tp=4`): a `tp=N` instance serves the
+//! configured model re-sliced at degree `N`
+//! ([`crate::fleet::InstanceSpec::model_for`]).  Three things change
+//! per instance:
+//!
+//! * its cost backend prices the slice — per-GPU weight and KV
+//!   traffic shrink `N`x, but every forward pass pays two per-layer
+//!   all-reduces over the topology's intra-node link
+//!   ([`crate::kernelmodel::AttentionModel::tp_comm_latency`]), so
+//!   the speedup is sublinear;
+//! * its derived KV pool grows ~`N`x (the slice's per-token bytes
+//!   shrink while the per-GPU budget is fixed) — the only way a
+//!   70B-class model holds 128K-token KV on single-GPU memory;
+//! * its capacity weight reflects both, so routing/bidding shift the
+//!   right share of load onto the sharded instances.
+//!
+//! Planning goes through the TP-aware DP
+//! ([`crate::coordinator::plan::Planner::plan_dp_instances`]): stage
+//! cost scales by a KV feasibility pressure (`max(1, hi / min member
+//! KV)`) and adds the members' collective premium on the range's
+//! generated tokens, so long-sequence stages gravitate to TP-sharded
+//! instances that can actually hold their KV.  List sharded instances
+//! *last* in the fleet: stages are contiguous in instance order and
+//! the long ranges sit at the end.  Inter-instance KV migration keeps
+//! pricing the base model's per-GPU footprint (a mixed-degree
+//! transfer re-shards in flight; the simplification is noted rather
+//! than modeled).  Fleets with `tp=1` everywhere never touch these
+//! paths — construction and re-planning gate on
+//! [`crate::fleet::FleetSpec::has_tensor_parallel`], and
+//! `tests/tp_fleet.rs` pins fingerprint-equality against the legacy
+//! no-TP path for every registry scheduler.
+//!
+//! Caveat: a configuration whose per-instance KV pool is smaller than
+//! a sequence's *final* length cannot ever admit that sequence — the
+//! FCFS queue head then blocks the instance forever (pre-existing
+//! engine behavior, newly reachable through small TP slices, e.g.
+//! 70B at TP2 on an H100 pools only ~28K tokens).  The KV pressure
+//! term keeps the *planner* from creating such stages, but workloads
+//! whose lengths exceed every member's pool are unservable by
+//! construction — pick TP degrees so the long-stage instances hold
+//! `max_len`.
 
 pub mod policy;
 
@@ -103,7 +148,7 @@ pub use policy::{
 use crate::baselines;
 use crate::coordinator::balance::{Ask, Bid, BidAskScheduler, PendingPull, PullAction};
 use crate::coordinator::migrate::MigrationManager;
-use crate::coordinator::plan::{MigrationCost, Pipeline, Planner};
+use crate::coordinator::plan::{MigrationCost, Pipeline, PlanInstance, Planner};
 use crate::coordinator::refine::{RangeRefiner, RefineConfig};
 use crate::coordinator::LoadTracker;
 use crate::engine::{CostModelBackend, Engine, EngineConfig, ExecBackend, Phase, Sequence};
@@ -231,12 +276,16 @@ impl ClusterConfig {
     }
 
     /// Engine knobs for one instance: explicit KV capacity is honoured,
-    /// `None` derives it from *that instance's* GPU memory budget.
+    /// `None` derives it from *that instance's* GPU memory budget under
+    /// *that instance's* resolved model slice — a TP4 instance's
+    /// per-GPU weights and KV bytes shrink 4x, so its pool derives 4x
+    /// the per-instance token headroom from the same device memory.
     fn engine_config_for(&self, spec: &InstanceSpec) -> EngineConfig {
         let mut e = spec.engine;
         if e.kv_capacity_tokens.is_none() {
-            let budget = self.model.kv_budget_bytes(spec.gpu.mem_bytes, 0.9);
-            e.kv_capacity_tokens = Some(self.model.kv_capacity_tokens(budget).max(1024));
+            let model = spec.model_for(&self.model);
+            let budget = model.kv_budget_bytes(spec.gpu.mem_bytes, 0.9);
+            e.kv_capacity_tokens = Some(model.kv_capacity_tokens(budget).max(1024));
         }
         e
     }
@@ -276,6 +325,9 @@ pub struct RunStats {
     pub counters: InstanceCounters,
     /// Per-instance GPU tags, in instance-id order (mixed fleets).
     pub instance_gpus: Vec<&'static str>,
+    /// Per-instance tensor-parallel degrees, in instance-id order
+    /// (all 1 on TP-free fleets).
+    pub instance_tp: Vec<u32>,
     /// Per-instance relative capacity (normalized to the fleet
     /// maximum; all 1.0 on homogeneous fleets).
     pub instance_capacity: Vec<f64>,
@@ -332,6 +384,10 @@ pub struct Cluster {
     /// homogeneous fleets).  The periodic re-plan partitions over
     /// these.
     caps: Vec<f64>,
+    /// TP-aware per-instance planning inputs — `Some` only when the
+    /// fleet actually shards (the re-plan then runs the TP-aware DP;
+    /// TP-free fleets keep the exact legacy `plan_dp_weighted` path).
+    plan_insts: Option<Vec<PlanInstance>>,
     /// Accumulators for `RunStats::mean_token_load` (sampled at gossip
     /// ticks — read-only instrumentation, never consulted by policy).
     load_sample_sum: Vec<f64>,
@@ -345,26 +401,55 @@ impl Cluster {
     pub fn new(cfg: ClusterConfig, plan_trace: &[Request]) -> Self {
         let e = cfg.n_instances;
         let fleet = cfg.resolved_fleet();
-        // Shared calibration (QoE profile) runs on the fleet's
-        // reference instance — the majority GPU; the per-instance cost
-        // of *executing* always uses each instance's own GPU below.
-        let reference = *fleet.reference();
-        let am = AttentionModel::new(reference.gpu, cfg.model);
-        let (qoe_model, _) =
-            qoe::profile_and_fit(&am, 64, cfg.max_len, reference.engine.max_batch.min(512));
-        // Relative capacities (1.0 everywhere for homogeneous fleets):
-        // the planner partitions over them and every load comparison
-        // normalizes by them.
-        let caps = fleet.normalized_capacities(&cfg.model);
-
-        // Build the stage layout per the scheduler policy.
-        let sample = &plan_trace[..plan_trace.len().min(cfg.plan_sample)];
-        let hist = LengthHistogram::from_requests(sample, cfg.max_len);
         let topology = cfg
             .topology
             .clone()
             .unwrap_or_else(|| Topology::sequential(e, 8, crate::gpu::LinkKind::NvLink));
         assert_eq!(topology.node_of.len(), e, "topology must cover every instance");
+        // Shared calibration (QoE profile) runs on the fleet's
+        // reference instance — the majority GPU, serving its *resolved*
+        // model slice (TP collectives priced over the intra-node link);
+        // the per-instance cost of *executing* always uses each
+        // instance's own GPU + slice below.
+        let reference = *fleet.reference();
+        let am = AttentionModel::new(reference.gpu, reference.model_for(&cfg.model))
+            .with_tp_link(topology.intra_node);
+        let (qoe_model, _) =
+            qoe::profile_and_fit(&am, 64, cfg.max_len, reference.engine.max_batch.min(512));
+        // Relative capacities (1.0 everywhere for homogeneous fleets):
+        // the planner partitions over them and every load comparison
+        // normalizes by them.  TP-sharded instances price their slice
+        // (faster weight/KV streaming minus the all-reduce premium,
+        // collectives over the same intra-node link the backends use).
+        let caps = fleet.normalized_capacities_with_link(&cfg.model, topology.intra_node);
+        // TP-aware planning inputs, built only when some instance is
+        // actually sharded: TP-free fleets take the exact legacy
+        // `plan_dp_weighted` path (bit-identity gate, same pattern as
+        // the uniform-capacity fast path inside the DP).  Planner
+        // capacities are *collective-free* — the DP prices collectives
+        // through `comm_s_per_token`, and a comm-inclusive capacity
+        // would double-count the premium.
+        let plan_insts: Option<Vec<PlanInstance>> = fleet.has_tensor_parallel().then(|| {
+            let plan_caps = fleet.plan_capacities(&cfg.model);
+            fleet
+                .instances
+                .iter()
+                .enumerate()
+                .map(|(i, spec)| PlanInstance {
+                    cap: plan_caps[i],
+                    kv_tokens: cfg
+                        .engine_config_for(spec)
+                        .kv_capacity_tokens
+                        .expect("engine_config_for always resolves a KV capacity")
+                        as f64,
+                    comm_s_per_token: spec.tp_comm_s_per_token(&cfg.model, topology.intra_node),
+                })
+                .collect()
+        });
+
+        // Build the stage layout per the scheduler policy.
+        let sample = &plan_trace[..plan_trace.len().min(cfg.plan_sample)];
+        let hist = LengthHistogram::from_requests(sample, cfg.max_len);
         let mig_cost = MigrationCost::new(
             cfg.model.kv_bytes_per_token() as f64,
             topology.intra_node.bytes_per_s(),
@@ -385,7 +470,10 @@ impl Cluster {
                 );
                 p.clone()
             }
-            (None, Layout::Planned) => planner.plan_dp_weighted(&hist, &caps),
+            (None, Layout::Planned) => match &plan_insts {
+                Some(insts) => planner.plan_dp_instances(&hist, insts),
+                None => planner.plan_dp_weighted(&hist, &caps),
+            },
             (None, Layout::Chain) => baselines::chain_layout(&planner, &hist, e),
             (None, Layout::Flat) => Pipeline::no_pipeline(e, cfg.max_len),
         };
@@ -406,9 +494,10 @@ impl Cluster {
         }
 
         // One engine + cost backend + KV pool *per instance*: each is
-        // priced by its own GPU's attention model and runs at its own
-        // engine speed (the config-level `engine_speed` composes as a
-        // fleet-wide multiplier).
+        // priced by its own GPU's attention model over its own
+        // resolved model slice (TP collectives ride the intra-node
+        // link) and runs at its own engine speed (the config-level
+        // `engine_speed` composes as a fleet-wide multiplier).
         let instances: Vec<InstanceState> = fleet
             .instances
             .iter()
@@ -416,7 +505,10 @@ impl Cluster {
             .map(|(i, spec)| {
                 let engine_cfg = cfg.engine_config_for(spec);
                 let backend = ScaledBackend {
-                    inner: CostModelBackend::new(AttentionModel::new(spec.gpu, cfg.model)),
+                    inner: CostModelBackend::new(
+                        AttentionModel::new(spec.gpu, spec.model_for(&cfg.model))
+                            .with_tp_link(topology.intra_node),
+                    ),
                     speed: spec.speed * cfg.engine_speed,
                 };
                 InstanceState::new(
@@ -441,6 +533,7 @@ impl Cluster {
         let stats = RunStats {
             stages: stages.clone(),
             instance_gpus: fleet.gpu_names(),
+            instance_tp: fleet.tp_degrees(),
             instance_capacity: caps.clone(),
             ..Default::default()
         };
@@ -469,6 +562,7 @@ impl Cluster {
             promises: Default::default(),
             observed: Vec::new(),
             caps,
+            plan_insts,
             load_sample_sum: vec![0.0; e],
             load_samples: 0,
             replans: 0,

@@ -116,6 +116,38 @@ pub struct Planner {
     pub migration: MigrationCost,
 }
 
+/// One instance's planning view for the tensor-parallel-aware DP
+/// ([`Planner::plan_dp_instances`]).
+///
+/// Beyond the relative capacity weight the heterogeneous DP already
+/// partitions over, a TP-aware plan needs to know (a) how much KV each
+/// instance can actually hold — a TP4 slice pools 4x the per-GPU
+/// headroom, and a stage serving 128K-token sequences is useless on an
+/// instance whose pool tops out at a few thousand tokens — and (b) the
+/// per-token collective premium its sharding pays, so the DP can trade
+/// all-reduce overhead against KV feasibility when it decides which
+/// length ranges land on the sharded instances.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanInstance {
+    /// Relative capacity weight (TP-adjusted modeled throughput; same
+    /// convention as [`Planner::plan_dp_weighted`]'s `caps`).
+    pub cap: f64,
+    /// KV pool of this instance, in tokens (shards pooled).
+    pub kv_tokens: f64,
+    /// Amortized tensor-parallel collective seconds per generated
+    /// token (0.0 for TP1 instances).
+    pub comm_s_per_token: f64,
+}
+
+impl PlanInstance {
+    /// A TP-free instance: ample KV, no collective premium.  A fleet
+    /// of these makes [`Planner::plan_dp_instances`] price every stage
+    /// exactly like [`Planner::plan_dp_weighted`].
+    pub fn uniform(cap: f64) -> Self {
+        Self { cap, kv_tokens: f64::INFINITY, comm_s_per_token: 0.0 }
+    }
+}
+
 /// Aggregate view of the requests in a bucket range, as QoE features.
 #[derive(Debug, Clone, Copy)]
 struct RangeAgg {
@@ -128,6 +160,121 @@ struct RangeAgg {
 impl RangeAgg {
     fn features(&self) -> Features {
         Features([1.0, self.n, self.sum_i, self.sum_i2, self.sum_l])
+    }
+}
+
+/// Shared stage/cut pricing for the TP-aware DP
+/// ([`Planner::plan_dp_instances`]) and its exhaustive reference
+/// ([`Planner::plan_exhaustive_instances`]): both sides price every
+/// candidate with the exact same float expressions, so the property
+/// suite can compare their optima directly.
+struct TpPlanCtx<'a> {
+    planner: &'a Planner,
+    bounds: &'a [Tokens],
+    pref: Vec<(f64, f64, f64, f64)>,
+    total_n: f64,
+    uniform: bool,
+    fleet_mean: f64,
+    /// Prefix sums of raw capacities (`sum(caps[ep..ee])` is one
+    /// subtraction per candidate — same trick as the weighted DP).
+    cap_pref: Vec<f64>,
+    /// Prefix sums of `cap * comm_s_per_token`: the capacity-share-
+    /// weighted mean collective premium of a subrange is one
+    /// subtraction + division per candidate.
+    capcomm_pref: Vec<f64>,
+    /// `min(kv_tokens)` over `[ep, ee)`, flattened `(e+1)^2` table
+    /// (range-min has no prefix trick; E is small, build it once).
+    min_kv: Vec<f64>,
+    e: usize,
+}
+
+impl<'a> TpPlanCtx<'a> {
+    fn new(planner: &'a Planner, hist: &'a LengthHistogram, insts: &[PlanInstance]) -> Self {
+        let e = insts.len();
+        let uniform = insts.windows(2).all(|w| w[0].cap == w[1].cap);
+        let fleet_mean = insts.iter().map(|i| i.cap).sum::<f64>() / e as f64;
+        let mut cap_pref = Vec::with_capacity(e + 1);
+        let mut capcomm_pref = Vec::with_capacity(e + 1);
+        let (mut acc_cap, mut acc_comm) = (0.0f64, 0.0f64);
+        cap_pref.push(acc_cap);
+        capcomm_pref.push(acc_comm);
+        for inst in insts {
+            acc_cap += inst.cap;
+            acc_comm += inst.cap * inst.comm_s_per_token;
+            cap_pref.push(acc_cap);
+            capcomm_pref.push(acc_comm);
+        }
+        let mut min_kv = vec![f64::INFINITY; (e + 1) * (e + 1)];
+        for ep in 0..e {
+            let mut m = f64::INFINITY;
+            for ee in (ep + 1)..=e {
+                m = m.min(insts[ee - 1].kv_tokens);
+                min_kv[ep * (e + 1) + ee] = m;
+            }
+        }
+        let pref = hist.prefix();
+        let total_n = pref[hist.bounds.len()].0;
+        Self {
+            planner,
+            bounds: &hist.bounds,
+            pref,
+            total_n,
+            uniform,
+            fleet_mean,
+            cap_pref,
+            capcomm_pref,
+            min_kv,
+            e,
+        }
+    }
+
+    fn range(&self, a: usize, b: usize) -> RangeAgg {
+        RangeAgg {
+            n: self.pref[b].0 - self.pref[a].0,
+            sum_i: self.pref[b].1 - self.pref[a].1,
+            sum_i2: self.pref[b].2 - self.pref[a].2,
+            sum_l: self.pref[b].3 - self.pref[a].3,
+        }
+    }
+
+    /// Migration cost of the cut at bucket boundary `lp` (0.0 for the
+    /// leading edge) — same formula as the weighted DP.
+    fn cut(&self, lp: usize) -> f64 {
+        if lp == 0 {
+            0.0
+        } else {
+            self.planner
+                .migration
+                .cut_cost(self.bounds[lp - 1], self.total_n - self.pref[lp].0)
+        }
+    }
+
+    /// Cost of serving buckets `[lp, ll)` on instances `[ep, ee)`:
+    /// the capacity-weighted set-division cost, scaled by the KV
+    /// feasibility pressure, plus the collective premium on the
+    /// range's generated tokens.  Both TP terms are bit-transparent
+    /// for TP-free members (`* 1.0` and `+ 0.0`).
+    fn stage(&self, ep: usize, ee: usize, lp: usize, ll: usize) -> f64 {
+        let agg = self.range(lp, ll);
+        let k = ee - ep;
+        let base = if self.uniform {
+            self.planner.stage_cost(agg, k)
+        } else {
+            let sum_rel = (self.cap_pref[ee] - self.cap_pref[ep]) / self.fleet_mean;
+            self.planner.stage_cost_weighted(agg, k, sum_rel)
+        };
+        // KV pressure: the stage's upper length bound over the
+        // smallest member pool.  <= 1 means every member can hold the
+        // longest resident sequence — no penalty.
+        let hi = self.bounds[ll - 1] as f64;
+        let pressure = (hi / self.min_kv[ep * (self.e + 1) + ee]).max(1.0);
+        // Collective premium: generated tokens (final minus input
+        // lengths) times the members' capacity-share-weighted mean
+        // per-token all-reduce time.
+        let cap_sum = self.cap_pref[ee] - self.cap_pref[ep];
+        let comm_per_token = (self.capcomm_pref[ee] - self.capcomm_pref[ep]) / cap_sum;
+        let out_tokens = (agg.sum_l - agg.sum_i).max(0.0);
+        base * pressure + comm_per_token * out_tokens
     }
 }
 
@@ -335,6 +482,224 @@ impl Planner {
             first.lo = 0;
         }
         Pipeline { stages: stages_rev, predicted_quality: quality }
+    }
+
+    /// Tensor-parallel-aware exact DP: partition an ordered instance
+    /// list described by [`PlanInstance`]s (capacity + KV pool +
+    /// collective premium) over the histogram's buckets.
+    ///
+    /// Same recurrence and state space as
+    /// [`Planner::plan_dp_weighted`], with two TP terms in the stage
+    /// cost ([`TpPlanCtx::stage`]):
+    ///
+    /// * **KV feasibility pressure** — a stage must hold its longest
+    ///   resident sequences, so its cost scales by
+    ///   `max(1, hi / min member KV)`.  Length ranges that outgrow a
+    ///   TP1 instance's pool are steeply penalized there and gravitate
+    ///   to the TP-sharded stages that can actually hold their KV
+    ///   (list the sharded instances *last*: stages are contiguous in
+    ///   instance order and long ranges sit at the end).
+    /// * **Collective premium** — the stage's generated tokens pay the
+    ///   capacity-share-weighted mean `comm_s_per_token` of its
+    ///   members, so the DP only concentrates load on sharded
+    ///   instances when their KV/throughput advantage covers the
+    ///   all-reduce cost.  The term is additive and linear in the comm
+    ///   weights, so predicted quality degrades monotonically as TP
+    ///   communication grows.
+    ///
+    /// With [`PlanInstance::uniform`] members (ample KV, zero comm)
+    /// every stage prices exactly like `plan_dp_weighted` — the
+    /// pressure multiplier is exactly 1.0 and the comm term exactly
+    /// 0.0, both bit-transparent — and the cluster additionally gates
+    /// TP-free fleets onto the legacy entry point so bit-identity
+    /// never rests on this arithmetic.
+    ///
+    /// The DP skeleton deliberately *mirrors* `plan_dp_weighted_impl`
+    /// instead of sharing it: the legacy float path must stay
+    /// untouched, and the
+    /// `dp_instances_with_trivial_extras_matches_plan_dp_weighted`
+    /// test pins the two skeletons bit-equal so they cannot silently
+    /// drift apart.
+    pub fn plan_dp_instances(&self, hist: &LengthHistogram, insts: &[PlanInstance]) -> Pipeline {
+        let e = insts.len();
+        assert!(e >= 1);
+        debug_assert!(
+            insts.iter().all(|i| {
+                i.cap.is_finite()
+                    && i.cap > 0.0
+                    && i.kv_tokens > 0.0
+                    && i.comm_s_per_token >= 0.0
+            }),
+            "invalid plan instances: {insts:?}"
+        );
+        let k = hist.bounds.len();
+        if k == 0 {
+            return Pipeline {
+                stages: vec![StageSpec { lo: 0, hi: Tokens::MAX, n_instances: e }],
+                predicted_quality: 0.0,
+            };
+        }
+        let ctx = TpPlanCtx::new(self, hist, insts);
+
+        const INF: f64 = f64::INFINITY;
+        let idx = |ee: usize, ll: usize| ee * (k + 1) + ll;
+        let mut prev = vec![INF; (e + 1) * (k + 1)];
+        // Base: 0 stages serve 0 buckets with any instance count >= 0
+        // (same prefix-skip freedom as the weighted DP).
+        for ee in 0..=e {
+            prev[idx(ee, 0)] = 0.0;
+        }
+        let mut choice: Vec<Vec<(usize, usize)>> = Vec::new();
+        let mut best: Option<(f64, usize)> = None;
+        let max_stages = e.min(k);
+        for s in 1..=max_stages {
+            let mut cur = vec![INF; (e + 1) * (k + 1)];
+            let mut ch = vec![(0usize, 0usize); (e + 1) * (k + 1)];
+            for ee in s..=e {
+                for ll in s..=k {
+                    let mut bv = INF;
+                    let mut barg = (0usize, 0usize);
+                    for ep in (s - 1)..ee {
+                        for lp in (s - 1)..ll {
+                            let base = prev[idx(ep, lp)];
+                            if !base.is_finite() {
+                                continue;
+                            }
+                            let v = base + ctx.stage(ep, ee, lp, ll) + ctx.cut(lp);
+                            if v < bv {
+                                bv = v;
+                                barg = (ep, lp);
+                            }
+                        }
+                    }
+                    cur[idx(ee, ll)] = bv;
+                    ch[idx(ee, ll)] = barg;
+                }
+            }
+            let q = cur[idx(e, k)];
+            if q.is_finite() && best.map(|(b, _)| q < b).unwrap_or(true) {
+                best = Some((q, s));
+            }
+            choice.push(ch);
+            prev = cur;
+        }
+
+        let (quality, n_stages) = best.expect("at least one feasible pipeline");
+        let mut stages_rev: Vec<StageSpec> = Vec::new();
+        let (mut ee, mut ll) = (e, k);
+        for s in (1..=n_stages).rev() {
+            let (ep, lp) = choice[s - 1][idx(ee, ll)];
+            let lo = if lp == 0 { 0 } else { hist.bounds[lp - 1] };
+            let hi = hist.bounds[ll - 1];
+            stages_rev.push(StageSpec { lo, hi, n_instances: ee - ep });
+            ee = ep;
+            ll = lp;
+        }
+        stages_rev.reverse();
+        if let Some(first) = stages_rev.first_mut() {
+            first.lo = 0;
+        }
+        // The base case allows an unused instance *prefix* (inherited
+        // from the weighted DP, where extra instances never hurt a
+        // stage).  Under KV pressure skipping can be genuinely optimal
+        // — but a cluster needs every instance owned by some stage, so
+        // fold any skipped prefix into the first (shortest-range)
+        // stage, exactly where a low-KV instance is least harmful.
+        let assigned: usize = stages_rev.iter().map(|s| s.n_instances).sum();
+        if assigned < e {
+            if let Some(first) = stages_rev.first_mut() {
+                first.n_instances += e - assigned;
+            }
+        }
+        Pipeline { stages: stages_rev, predicted_quality: quality }
+    }
+
+    /// Brute-force reference for [`Planner::plan_dp_instances`]:
+    /// enumerate every contiguous (instance, bucket) partition —
+    /// including the DP's prefix-skip freedom — and price each with
+    /// the exact same [`TpPlanCtx`] arithmetic, accumulated in the
+    /// same stage order.  Exponential; property-test sizes only.
+    /// Tie-breaking between equal-quality layouts may differ from the
+    /// DP, so compare `predicted_quality`, not stages.
+    #[doc(hidden)]
+    pub fn plan_exhaustive_instances(
+        &self,
+        hist: &LengthHistogram,
+        insts: &[PlanInstance],
+    ) -> Pipeline {
+        let e = insts.len();
+        assert!(e >= 1);
+        let k = hist.bounds.len();
+        if k == 0 {
+            return Pipeline {
+                stages: vec![StageSpec { lo: 0, hi: Tokens::MAX, n_instances: e }],
+                predicted_quality: 0.0,
+            };
+        }
+        let ctx = TpPlanCtx::new(self, hist, insts);
+        let max_stages = e.min(k);
+
+        #[allow(clippy::too_many_arguments)]
+        fn go(
+            ctx: &TpPlanCtx<'_>,
+            e: usize,
+            k: usize,
+            max_stages: usize,
+            ep: usize,
+            lp: usize,
+            acc: f64,
+            n_stages: usize,
+            trail: &mut Vec<(usize, usize, usize, usize)>,
+            best: &mut Option<(f64, Vec<(usize, usize, usize, usize)>)>,
+        ) {
+            if ep == e && lp == k {
+                if best.as_ref().map(|(b, _)| acc < *b).unwrap_or(true) {
+                    *best = Some((acc, trail.clone()));
+                }
+                return;
+            }
+            if n_stages == max_stages || ep == e || lp == k {
+                return;
+            }
+            for ee in (ep + 1)..=e {
+                for ll in (lp + 1)..=k {
+                    let v = acc + ctx.stage(ep, ee, lp, ll) + ctx.cut(lp);
+                    trail.push((ep, ee, lp, ll));
+                    go(ctx, e, k, max_stages, ee, ll, v, n_stages + 1, trail, best);
+                    trail.pop();
+                }
+            }
+        }
+
+        let mut best: Option<(f64, Vec<(usize, usize, usize, usize)>)> = None;
+        // The DP's base case allows any unused instance *prefix*;
+        // mirror it so neither side can find a layout the other
+        // cannot express.
+        for ep0 in 0..e {
+            let mut trail = Vec::new();
+            go(&ctx, e, k, max_stages, ep0, 0, 0.0, 0, &mut trail, &mut best);
+        }
+        let (quality, trail) = best.expect("at least one feasible pipeline");
+        let mut stages: Vec<StageSpec> = trail
+            .iter()
+            .map(|&(ep, ee, lp, ll)| StageSpec {
+                lo: if lp == 0 { 0 } else { hist.bounds[lp - 1] },
+                hi: hist.bounds[ll - 1],
+                n_instances: ee - ep,
+            })
+            .collect();
+        if let Some(first) = stages.first_mut() {
+            first.lo = 0;
+        }
+        // Fold a skipped instance prefix into the first stage, like
+        // the DP does (structural parity; quality is the raw optimum).
+        let assigned: usize = stages.iter().map(|s| s.n_instances).sum();
+        if assigned < e {
+            if let Some(first) = stages.first_mut() {
+                first.n_instances += e - assigned;
+            }
+        }
+        Pipeline { stages, predicted_quality: quality }
     }
 
     /// The naive `O(E^3 L^2)` DP over raw cut points `0..=max_len` at
@@ -806,8 +1171,115 @@ mod tests {
                 let fast = p.plan_dp_weighted(&h, &caps);
                 let reference = p.plan_dp_weighted_reference(&h, &caps);
                 assert_eq!(fast.stages, reference.stages, "seed {seed}, caps {caps:?}");
+                // The TP-aware DP with trivial extras sits in the same
+                // equivalence class (chains it to the pinned
+                // direct-summation reference).
+                let insts: Vec<PlanInstance> =
+                    caps.iter().map(|&c| PlanInstance::uniform(c)).collect();
+                let tp = p.plan_dp_instances(&h, &insts);
+                assert_eq!(tp.stages, reference.stages, "seed {seed}, caps {caps:?}");
             }
         }
+    }
+
+    #[test]
+    fn dp_instances_with_trivial_extras_matches_plan_dp_weighted() {
+        // PlanInstance::uniform / ample-KV fleets must price every
+        // stage exactly like the weighted DP: the pressure multiplier
+        // is exactly 1.0 and the comm term exactly 0.0, both
+        // bit-transparent in IEEE 754.
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let h = hist();
+        for caps in [vec![1.0; 8], vec![0.35, 0.35, 0.35, 0.35, 0.35, 0.35, 1.0, 1.0]] {
+            let insts: Vec<PlanInstance> =
+                caps.iter().map(|&c| PlanInstance::uniform(c)).collect();
+            let weighted = p.plan_dp_weighted(&h, &caps);
+            let tp = p.plan_dp_instances(&h, &insts);
+            assert_eq!(weighted.stages, tp.stages, "caps {caps:?}");
+            assert_eq!(
+                weighted.predicted_quality.to_bits(),
+                tp.predicted_quality.to_bits(),
+                "caps {caps:?}"
+            );
+            // Finite (non-infinite) ample KV behaves identically as
+            // long as it covers the top bound.
+            let insts: Vec<PlanInstance> = caps
+                .iter()
+                .map(|&c| PlanInstance { cap: c, kv_tokens: 1e9, comm_s_per_token: 0.0 })
+                .collect();
+            let tp = p.plan_dp_instances(&h, &insts);
+            assert_eq!(weighted.stages, tp.stages);
+            assert_eq!(weighted.predicted_quality.to_bits(), tp.predicted_quality.to_bits());
+        }
+    }
+
+    #[test]
+    fn kv_pressure_steers_long_ranges_to_big_kv_instances() {
+        // Two KV-starved instances (pools of 2000 tokens) followed by
+        // two ample ones: every stage whose range tops out above the
+        // small pool must sit entirely on the ample tail — the 70B
+        // story, where only TP-sharded slices can hold long-context
+        // KV.
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let h = hist();
+        let insts = [
+            PlanInstance { cap: 1.0, kv_tokens: 2_000.0, comm_s_per_token: 0.0 },
+            PlanInstance { cap: 1.0, kv_tokens: 2_000.0, comm_s_per_token: 0.0 },
+            PlanInstance::uniform(1.0),
+            PlanInstance::uniform(1.0),
+        ];
+        let pipe = p.plan_dp_instances(&h, &insts);
+        assert_eq!(pipe.total_instances(), 4);
+        assert!(pipe.stages.len() > 1, "{:?}", pipe.stages);
+        let mut start = 0usize;
+        for s in &pipe.stages {
+            // Stages whose upper bound exceeds the starved pool (with
+            // slack for the adjacent exponential bucket) must start at
+            // or after the ample suffix.
+            if s.hi > 4096 {
+                assert!(
+                    start >= 2,
+                    "stage {s:?} starting at instance {start} includes a KV-starved member: {:?}",
+                    pipe.stages
+                );
+            }
+            start += s.n_instances;
+        }
+    }
+
+    #[test]
+    fn dp_instances_quality_degrades_monotonically_in_comm_cost() {
+        // The collective premium is additive and linear in the comm
+        // weights, so the optimum over partitions is monotone in a
+        // global comm scale.
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let h = hist();
+        let mut last = f64::NEG_INFINITY;
+        for scale in [0.0, 1e-7, 1e-6, 1e-5, 1e-4] {
+            let insts: Vec<PlanInstance> = (0..8)
+                .map(|i| PlanInstance {
+                    cap: if i >= 6 { 2.0 } else { 1.0 },
+                    kv_tokens: f64::INFINITY,
+                    comm_s_per_token: if i >= 6 { scale } else { 0.0 },
+                })
+                .collect();
+            let q = p.plan_dp_instances(&h, &insts).predicted_quality;
+            assert!(q.is_finite());
+            assert!(
+                q >= last - 1e-12,
+                "quality must not improve as comm grows: {q} after {last} at {scale}"
+            );
+            last = q;
+        }
+    }
+
+    #[test]
+    fn dp_instances_no_bucket_histogram_plans_single_stage() {
+        let h = LengthHistogram::new(Vec::new());
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let pipe = p.plan_dp_instances(&h, &[PlanInstance::uniform(1.0); 4]);
+        assert_eq!(pipe.stages.len(), 1);
+        assert_eq!(pipe.total_instances(), 4);
     }
 
     #[test]

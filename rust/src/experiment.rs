@@ -282,10 +282,11 @@ impl ExperimentBuilder {
         self
     }
 
-    /// Heterogeneous fleet by CLI string (`h20:6,h100:2[,speed=F]`,
-    /// parsed at `build`).  Overrides `instances` and `gpu`: the
-    /// instance count is the fleet size, and each instance carries its
-    /// own GPU profile and engine speed.
+    /// Heterogeneous fleet by CLI string
+    /// (`h20:6,h100:2[,speed=F][,tp=N]`, parsed at `build`).
+    /// Overrides `instances` and `gpu`: the instance count is the
+    /// fleet size, and each instance carries its own GPU profile,
+    /// engine speed, and tensor-parallel degree.
     pub fn fleet(mut self, spec: &str) -> Self {
         self.fleet_name = Some(spec.to_string());
         self.fleet_spec = None;
@@ -570,6 +571,40 @@ mod tests {
         assert!(e.to_string().contains("H20|L40|H100"), "{e}");
         let e = Experiment::builder().fleet("h20:zero").requests(1).build().unwrap_err();
         assert!(matches!(e, ExperimentError::Fleet(_)));
+        // Malformed / unknown fleet options surface through the
+        // builder with the valid keys named.
+        let e = Experiment::builder().fleet("h20:2,tp=0").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Fleet(_)), "{e}");
+        let e = Experiment::builder().fleet("h20:2,turbo=on").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Fleet(_)));
+        assert!(e.to_string().contains("speed") && e.to_string().contains("tp"), "{e}");
+    }
+
+    #[test]
+    fn tp_fleet_string_reaches_cluster_config() {
+        let exp = Experiment::builder()
+            .fleet("h20:2,h20:2,tp=4")
+            .requests(10)
+            .build()
+            .unwrap();
+        assert_eq!(exp.cfg.n_instances, 4);
+        let fleet = exp.cfg.fleet.as_ref().expect("fleet set");
+        assert_eq!(fleet.tp_degrees(), vec![1, 1, 4, 4]);
+        assert!(fleet.has_tensor_parallel());
+        // Builder-level engine knobs stamp fleet-wide without
+        // clobbering the parsed TP degrees.
+        let exp = Experiment::builder()
+            .fleet("h20:1,h20:1,tp=2")
+            .kv_capacity(500_000)
+            .requests(5)
+            .build()
+            .unwrap();
+        let fleet = exp.cfg.fleet.as_ref().unwrap();
+        assert_eq!(fleet.tp_degrees(), vec![1, 2]);
+        assert!(fleet
+            .instances
+            .iter()
+            .all(|s| s.engine.kv_capacity_tokens == Some(500_000)));
     }
 
     #[test]

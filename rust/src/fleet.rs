@@ -15,9 +15,19 @@
 //!   long-sequence end of the pipeline.
 //!
 //! The CLI grammar (`--fleet`) is a comma-separated list of
-//! `GPU:COUNT` groups, each optionally followed by `speed=F` options
-//! applying to the group, e.g. `h20:12,h100:4,speed=1.37` (12 stock
-//! H20s plus 4 H100s running a 1.37x-faster engine build).
+//! `GPU:COUNT` groups, each optionally followed by `speed=F` / `tp=N`
+//! options applying to the group, e.g. `h20:12,h100:4,speed=1.37` (12
+//! stock H20s plus 4 H100s running a 1.37x-faster engine build) or
+//! `h20:4,tp=2,h20:2,tp=4` (four TP2 slices feeding two TP4 slices).
+//!
+//! Tensor parallelism: an instance with `tp=N` serves the configured
+//! model re-sliced at degree `N` ([`InstanceSpec::model_for`]) — its
+//! per-GPU weight and KV traffic shrink `N`x and its KV pool derives
+//! `N`x the per-instance token headroom, at the cost of per-layer
+//! all-reduce collectives priced by the attention model
+//! ([`crate::kernelmodel::AttentionModel::tp_comm_latency`]).  `tp=1`
+//! (the default) leaves the base model untouched, so TP-free fleets
+//! stay bit-identical to the pre-TP behavior.
 //!
 //! Capacity: [`InstanceSpec::reference_throughput`] prices a reference
 //! serving mix (prefill + steady-state decode) with the same analytic
@@ -28,7 +38,7 @@
 //! code path reduces bit-identically to the legacy uniform one.
 
 use crate::engine::EngineConfig;
-use crate::gpu::GpuProfile;
+use crate::gpu::{GpuProfile, LinkKind};
 use crate::kernelmodel::AttentionModel;
 use crate::models::ModelProfile;
 use crate::Tokens;
@@ -47,6 +57,12 @@ pub struct InstanceSpec {
     /// multiplier (so policy-level speeds like Llumnix's 1.25 apply on
     /// top of per-instance hardware speeds).
     pub speed: f64,
+    /// Tensor-parallel degree of this instance (1 = whole model per
+    /// GPU, the legacy configuration).  `tp > 1` re-slices the base
+    /// model ([`InstanceSpec::model_for`]): per-GPU weights/KV shrink,
+    /// the pooled KV headroom grows, and every forward pass pays the
+    /// per-layer all-reduce collectives.
+    pub tp: u32,
 }
 
 /// Reference serving mix used to price relative capacity: a 1024-token
@@ -61,7 +77,7 @@ const REF_ROW_LEN: Tokens = 1280;
 
 impl InstanceSpec {
     pub fn new(gpu: GpuProfile) -> Self {
-        Self { gpu, engine: EngineConfig::default(), speed: 1.0 }
+        Self { gpu, engine: EngineConfig::default(), speed: 1.0, tp: 1 }
     }
 
     pub fn with_speed(mut self, speed: f64) -> Self {
@@ -69,18 +85,81 @@ impl InstanceSpec {
         self
     }
 
+    pub fn with_tp(mut self, tp: u32) -> Self {
+        assert!(tp >= 1, "tp degree must be >= 1");
+        self.tp = tp;
+        self
+    }
+
+    /// The model profile this instance actually serves: the base model
+    /// re-sliced at this instance's TP degree.  `tp == 1` returns the
+    /// base untouched — including base profiles that already carry a
+    /// degree in their name (e.g. `llama_70b(2)`), so the legacy
+    /// "model-level TP" configurations keep their exact meaning.
+    pub fn model_for(&self, base: &ModelProfile) -> ModelProfile {
+        if self.tp <= 1 {
+            *base
+        } else {
+            base.with_tp(self.tp)
+        }
+    }
+
     /// Modeled output tokens/s of this instance on the reference
-    /// serving mix — the capacity weight the planner, router, and
-    /// bid-ask balancer normalize load by.  Deterministic (pure cost
-    /// model, no profiling runs).
+    /// serving mix — the capacity weight the router and bid-ask
+    /// balancer normalize load by.  Deterministic (pure cost model, no
+    /// profiling runs).  TP-sharded instances are priced on their
+    /// resolved slice — faster weight/KV streaming minus the
+    /// all-reduce premium, with collectives at the NVLink default;
+    /// the cluster uses [`InstanceSpec::reference_throughput_with_link`]
+    /// to price them over its actual intra-node link.
     pub fn reference_throughput(&self, model: &ModelProfile) -> f64 {
-        let am = AttentionModel::new(self.gpu, *model);
+        self.reference_mix_throughput(AttentionModel::new(self.gpu, self.model_for(model)))
+    }
+
+    /// [`InstanceSpec::reference_throughput`] with TP collectives
+    /// priced over `link` — keeps capacity weights consistent with the
+    /// per-instance cost backends, which ride the topology's
+    /// intra-node link.  TP1 instances are link-independent
+    /// (collectives are exactly 0.0), so TP-free fleets stay
+    /// bit-identical regardless of the link passed.
+    pub fn reference_throughput_with_link(&self, model: &ModelProfile, link: LinkKind) -> f64 {
+        self.reference_mix_throughput(
+            AttentionModel::new(self.gpu, self.model_for(model)).with_tp_link(link),
+        )
+    }
+
+    /// Collective-free throughput on the reference mix — the TP-aware
+    /// planner's capacity weight.  The DP charges collectives as a
+    /// separate additive term ([`crate::coordinator::plan::PlanInstance`]
+    /// `::comm_s_per_token`); baking them into the capacity as well
+    /// would double-count the premium.
+    pub fn plan_capacity(&self, model: &ModelProfile) -> f64 {
+        self.reference_mix_throughput(
+            AttentionModel::new(self.gpu, self.model_for(model)).without_tp_collectives(),
+        )
+    }
+
+    /// Shared reference-mix pricing behind the capacity weights.
+    fn reference_mix_throughput(&self, am: AttentionModel) -> f64 {
         let t_prefill = am.prefill_latency(REF_INPUT);
         let t_iter = am.decode_iteration_latency(&[REF_ROW_LEN; REF_BATCH]);
         // Steady state: the prefill's compute is serialized per request,
         // decode tokens are amortized over the batch.
         let per_request = t_prefill + REF_OUTPUT * t_iter / REF_BATCH as f64;
         self.speed * REF_OUTPUT / per_request
+    }
+
+    /// Amortized tensor-parallel collective seconds per generated
+    /// token at the reference decode batch, priced over `link` — the
+    /// planner's per-instance communication weight.  Exactly 0.0 for
+    /// TP1 instances.
+    pub fn tp_comm_s_per_token(&self, model: &ModelProfile, link: LinkKind) -> f64 {
+        let m = self.model_for(model);
+        if m.tp <= 1 {
+            return 0.0;
+        }
+        let am = AttentionModel::new(self.gpu, m).with_tp_link(link);
+        am.tp_comm_latency(REF_BATCH as u64) / REF_BATCH as f64
     }
 }
 
@@ -93,7 +172,7 @@ pub struct FleetSpec {
 impl FleetSpec {
     /// A fleet of `n` identical instances (the legacy configuration).
     pub fn homogeneous(gpu: GpuProfile, engine: EngineConfig, speed: f64, n: usize) -> Self {
-        Self { instances: vec![InstanceSpec { gpu, engine, speed }; n] }
+        Self { instances: vec![InstanceSpec { gpu, engine, speed, tp: 1 }; n] }
     }
 
     pub fn len(&self) -> usize {
@@ -116,6 +195,18 @@ impl FleetSpec {
         self.instances.iter().map(|s| s.gpu.name).collect()
     }
 
+    /// Per-instance tensor-parallel degrees, in instance-id order.
+    pub fn tp_degrees(&self) -> Vec<u32> {
+        self.instances.iter().map(|s| s.tp).collect()
+    }
+
+    /// True when any instance is tensor-parallel sharded (`tp > 1`) —
+    /// the gate that routes planning through the TP-aware DP.  TP-free
+    /// fleets take the exact legacy code paths.
+    pub fn has_tensor_parallel(&self) -> bool {
+        self.instances.iter().any(|s| s.tp > 1)
+    }
+
     /// The fleet's reference instance for shared calibration (QoE
     /// profiling fits one model): the majority GPU, ties broken by
     /// earliest appearance.  A homogeneous fleet returns its only kind.
@@ -133,7 +224,8 @@ impl FleetSpec {
         best
     }
 
-    /// Raw per-instance capacities (modeled reference throughput).
+    /// Raw per-instance capacities (modeled reference throughput, TP
+    /// collectives at the NVLink default).
     pub fn capacities(&self, model: &ModelProfile) -> Vec<f64> {
         self.instances.iter().map(|s| s.reference_throughput(model)).collect()
     }
@@ -143,18 +235,52 @@ impl FleetSpec {
     /// in IEEE 754), so `load / cap` is bit-identical to the raw load
     /// and the legacy uniform behavior is preserved bit-for-bit.
     pub fn normalized_capacities(&self, model: &ModelProfile) -> Vec<f64> {
-        let raw = self.capacities(model);
+        Self::normalize(self.capacities(model))
+    }
+
+    /// [`FleetSpec::normalized_capacities`] with TP collectives priced
+    /// over `link` — what the cluster uses, so capacity weights agree
+    /// with the per-instance cost backends on the same topology.
+    /// Identical to the NVLink default for TP-free fleets.
+    pub fn normalized_capacities_with_link(
+        &self,
+        model: &ModelProfile,
+        link: LinkKind,
+    ) -> Vec<f64> {
+        Self::normalize(
+            self.instances
+                .iter()
+                .map(|s| s.reference_throughput_with_link(model, link))
+                .collect(),
+        )
+    }
+
+    /// Collective-free capacities normalized to the fleet maximum —
+    /// the TP-aware planner's weights (see
+    /// [`InstanceSpec::plan_capacity`] for why collectives are
+    /// excluded here).
+    pub fn plan_capacities(&self, model: &ModelProfile) -> Vec<f64> {
+        Self::normalize(self.instances.iter().map(|s| s.plan_capacity(model)).collect())
+    }
+
+    fn normalize(raw: Vec<f64>) -> Vec<f64> {
         let max = raw.iter().copied().fold(f64::MIN, f64::max);
         assert!(max.is_finite() && max > 0.0, "fleet capacities must be positive");
         raw.into_iter().map(|c| c / max).collect()
     }
 
     /// Parse the `--fleet` grammar: comma-separated `GPU:COUNT` groups
-    /// (count defaults to 1), each optionally followed by `speed=F`
-    /// options that apply to the group just announced.
+    /// (count defaults to 1), each optionally followed by `speed=F` /
+    /// `tp=N` options that apply to the group just announced.
     ///
     /// `h20:6,h100:2` — 6 H20s then 2 H100s.
     /// `h20:12,h100:4,speed=1.37` — the H100s run a 1.37x engine.
+    /// `h20:4,tp=2,h20:2,tp=4` — four TP2 slices, then two TP4 slices.
+    ///
+    /// Malformed options — unknown keys, non-positive `tp`, bad
+    /// numbers — are hard errors listing the valid keys (the same
+    /// policy as unknown `--gpu`/`--model` names: never a silent
+    /// fallback).
     pub fn parse(s: &str) -> Result<Self, String> {
         let mut instances: Vec<InstanceSpec> = Vec::new();
         let mut last_group: Option<(usize, usize)> = None; // [start, end) of the last group
@@ -186,9 +312,24 @@ impl FleetSpec {
                             spec.speed = speed;
                         }
                     }
+                    "tp" => {
+                        let tp = value
+                            .parse::<u32>()
+                            .ok()
+                            .filter(|&v| v >= 1)
+                            .ok_or_else(|| {
+                                format!(
+                                    "fleet tp `{value}` is not a positive integer \
+                                     (tensor-parallel degree, e.g. tp=4)"
+                                )
+                            })?;
+                        for spec in &mut instances[start..end] {
+                            spec.tp = tp;
+                        }
+                    }
                     _ => {
                         return Err(format!(
-                            "unknown fleet option `{key}`; valid: speed"
+                            "unknown fleet option `{key}`; valid: speed, tp"
                         ))
                     }
                 }
@@ -220,7 +361,8 @@ impl FleetSpec {
 }
 
 impl fmt::Display for FleetSpec {
-    /// Canonical run-length serialization: `H20:6,H100:2,speed=1.37`.
+    /// Canonical run-length serialization:
+    /// `H20:6,H100:2,speed=1.37` / `H20:4,tp=2,H20:2,tp=4`.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         let mut first = true;
         let mut i = 0;
@@ -237,6 +379,9 @@ impl fmt::Display for FleetSpec {
             write!(f, "{}:{}", spec.gpu.name, j - i)?;
             if spec.speed != 1.0 {
                 write!(f, ",speed={}", spec.speed)?;
+            }
+            if spec.tp != 1 {
+                write!(f, ",tp={}", spec.tp)?;
             }
             i = j;
         }
@@ -287,6 +432,12 @@ mod tests {
             "h20:2,speed=-1",
             "h20:2,turbo=on",
             "h20:2,,h100:1",
+            "tp=2",
+            "h20:2,tp=0",
+            "h20:2,tp=-2",
+            "h20:2,tp=four",
+            "h20:2,tp=1.5",
+            "h20:2,tp=",
         ] {
             let e = FleetSpec::parse(bad);
             assert!(e.is_err(), "`{bad}` should be rejected");
@@ -294,11 +445,54 @@ mod tests {
         // Unknown GPUs name the valid choices.
         let msg = FleetSpec::parse("a100:4").unwrap_err();
         assert!(msg.contains("H20|L40|H100"), "{msg}");
+        // Unknown option keys list the valid keys (hard-error policy).
+        let msg = FleetSpec::parse("h20:2,turbo=on").unwrap_err();
+        assert!(msg.contains("speed") && msg.contains("tp"), "{msg}");
+        // A bad tp value says what a tp is.
+        let msg = FleetSpec::parse("h20:2,tp=0").unwrap_err();
+        assert!(msg.contains("tensor-parallel"), "{msg}");
+        // Options before any group are rejected for tp like for speed.
+        let msg = FleetSpec::parse("tp=2").unwrap_err();
+        assert!(msg.contains("must follow"), "{msg}");
+    }
+
+    #[test]
+    fn parse_tp_applies_to_preceding_group() {
+        let f = FleetSpec::parse("h20:4,tp=2,h20:2,tp=4").unwrap();
+        assert_eq!(f.len(), 6);
+        assert!(f.instances[..4].iter().all(|s| s.tp == 2));
+        assert!(f.instances[4..].iter().all(|s| s.tp == 4));
+        assert!(f.has_tensor_parallel());
+        assert_eq!(f.tp_degrees(), vec![2, 2, 2, 2, 4, 4]);
+        // tp=1 is explicit legacy: no TP anywhere.
+        let f = FleetSpec::parse("h20:4,tp=1").unwrap();
+        assert!(!f.has_tensor_parallel());
+        assert!(f.instances.iter().all(|s| s.tp == 1));
+    }
+
+    #[test]
+    fn parse_speed_and_tp_combine_in_any_order() {
+        let a = FleetSpec::parse("h100:4,speed=1.25,tp=4").unwrap();
+        let b = FleetSpec::parse("h100:4,tp=4,speed=1.25").unwrap();
+        assert_eq!(a, b);
+        assert!(a.instances.iter().all(|s| s.speed == 1.25 && s.tp == 4));
+        // Options bind to their own group only.
+        let f = FleetSpec::parse("h20:2,tp=2,h100:1,speed=1.5").unwrap();
+        assert_eq!(f.instances[0].tp, 2);
+        assert_eq!(f.instances[0].speed, 1.0);
+        assert_eq!(f.instances[2].tp, 1);
+        assert_eq!(f.instances[2].speed, 1.5);
     }
 
     #[test]
     fn display_round_trips() {
-        for s in ["H20:6,H100:2", "H20:12,H100:4,speed=1.37", "L40:1"] {
+        for s in [
+            "H20:6,H100:2",
+            "H20:12,H100:4,speed=1.37",
+            "L40:1",
+            "H20:4,tp=2,H20:2,tp=4",
+            "H100:2,speed=1.25,tp=4",
+        ] {
             let f = FleetSpec::parse(s).unwrap();
             assert_eq!(f.to_string(), s);
             assert_eq!(FleetSpec::parse(&f.to_string()).unwrap(), f);
@@ -343,6 +537,83 @@ mod tests {
         // Tie: earliest appearance wins.
         let f = FleetSpec::parse("l40:2,h20:2").unwrap();
         assert_eq!(f.reference().gpu.name, "L40");
+    }
+
+    #[test]
+    fn model_for_resolves_tp_and_preserves_legacy() {
+        use crate::models::llama_70b;
+        let base = llama_70b(1);
+        // tp=1 returns the base untouched — even a base that already
+        // carries a degree (the legacy model-level TP configurations).
+        assert_eq!(InstanceSpec::new(GpuProfile::H20).model_for(&base), base);
+        assert_eq!(
+            InstanceSpec::new(GpuProfile::H20).model_for(&llama_70b(2)),
+            llama_70b(2)
+        );
+        // tp>1 overrides whatever the base carries.
+        let tp4 = InstanceSpec::new(GpuProfile::H20).with_tp(4);
+        assert_eq!(tp4.model_for(&base), llama_70b(4));
+        assert_eq!(tp4.model_for(&llama_70b(2)), llama_70b(4));
+    }
+
+    #[test]
+    fn tp_sharding_raises_70b_capacity_sublinearly() {
+        use crate::models::llama_70b;
+        let base = llama_70b(1);
+        let t1 = InstanceSpec::new(GpuProfile::H20).reference_throughput(&base);
+        let t2 = InstanceSpec::new(GpuProfile::H20).with_tp(2).reference_throughput(&base);
+        let t4 = InstanceSpec::new(GpuProfile::H20).with_tp(4).reference_throughput(&base);
+        assert!(t1 < t2 && t2 < t4, "{t1} {t2} {t4}");
+        // All-reduce premium: sharding never scales linearly.
+        assert!(t4 < 4.0 * t1, "tp4 {t4} vs 4x tp1 {t1}");
+    }
+
+    #[test]
+    fn plan_capacity_excludes_collectives() {
+        use crate::models::llama_70b;
+        let base = llama_70b(1);
+        let tp4 = InstanceSpec::new(GpuProfile::H20).with_tp(4);
+        // The planner weight strips the all-reduce premium (the DP
+        // charges it separately), so it must exceed the comm-inclusive
+        // throughput for a sharded instance...
+        assert!(tp4.plan_capacity(&base) > tp4.reference_throughput(&base));
+        // ...and match it exactly for a TP1 instance (both collective
+        // terms are exactly 0.0).
+        let tp1 = InstanceSpec::new(GpuProfile::H20);
+        assert_eq!(
+            tp1.plan_capacity(&LLAMA_3B).to_bits(),
+            tp1.reference_throughput(&LLAMA_3B).to_bits()
+        );
+        // The link-aware variant agrees with the default at NVLink and
+        // drops on slower links for sharded instances only.
+        assert_eq!(
+            tp4.reference_throughput_with_link(&base, LinkKind::NvLink).to_bits(),
+            tp4.reference_throughput(&base).to_bits()
+        );
+        assert!(
+            tp4.reference_throughput_with_link(&base, LinkKind::Pcie)
+                < tp4.reference_throughput(&base)
+        );
+        assert_eq!(
+            tp1.reference_throughput_with_link(&LLAMA_3B, LinkKind::Pcie).to_bits(),
+            tp1.reference_throughput(&LLAMA_3B).to_bits()
+        );
+    }
+
+    #[test]
+    fn tp_comm_weight_is_zero_only_without_sharding() {
+        use crate::models::llama_70b;
+        let base = llama_70b(1);
+        let tp1 = InstanceSpec::new(GpuProfile::H20);
+        assert_eq!(tp1.tp_comm_s_per_token(&base, LinkKind::NvLink), 0.0);
+        let tp4 = tp1.with_tp(4);
+        let nv = tp4.tp_comm_s_per_token(&base, LinkKind::NvLink);
+        let pcie = tp4.tp_comm_s_per_token(&base, LinkKind::Pcie);
+        assert!(nv > 0.0);
+        assert!(pcie > nv, "slower TP links must cost more: {pcie} vs {nv}");
+        // A tp=1 instance serving an already-sliced base still pays
+        // that slice's collectives.
+        assert!(tp1.tp_comm_s_per_token(&llama_70b(2), LinkKind::NvLink) > 0.0);
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! §2.2 attention-share numbers and the Fig. 2 penalty band reproduce
 //! (see DESIGN.md §Calibration).
 
-use crate::gpu::GpuProfile;
+use crate::gpu::{GpuProfile, LinkKind};
 use crate::models::ModelProfile;
 
 /// Candidate split sizes (tokens) for the fixed-split ablation sweep —
@@ -65,15 +65,74 @@ const SPLIT_TOKEN_MIN: u64 = 256;
 pub type RowLen = u64;
 
 /// The attention cost model bound to one (GPU, model) pair.
+///
+/// When the model is tensor-parallel (`model.tp > 1`) every forward
+/// pass additionally pays per-layer collective costs: TP shards the
+/// attention output projection and the MLP down projection, so each
+/// transformer layer runs **two all-reduces** over the activations
+/// (`tokens x d_model` at FP16) across the `tp` ranks.  The collective
+/// is priced as a bandwidth-optimal ring over the configured TP link
+/// ([`AttentionModel::with_tp_link`]; NVLink by default — TP groups
+/// are intra-node), which is exactly why a TP4 slice does not decode
+/// 4x faster than a TP1 replica even though its per-GPU weight and KV
+/// traffic shrink 4x.
 #[derive(Debug, Clone, Copy)]
 pub struct AttentionModel {
     pub gpu: GpuProfile,
     pub model: ModelProfile,
+    /// Bandwidth of the link TP collectives ride (bytes/s).
+    pub tp_link_bytes_per_s: f64,
+    /// Per-collective launch/synchronization latency (seconds).
+    pub tp_link_latency_s: f64,
 }
 
 impl AttentionModel {
     pub fn new(gpu: GpuProfile, model: ModelProfile) -> Self {
-        Self { gpu, model }
+        Self {
+            gpu,
+            model,
+            tp_link_bytes_per_s: LinkKind::NvLink.bytes_per_s(),
+            tp_link_latency_s: LinkKind::NvLink.latency_s(),
+        }
+    }
+
+    /// Price TP collectives over `link` instead of the NVLink default
+    /// (the cluster passes its topology's intra-node link here).
+    pub fn with_tp_link(mut self, link: LinkKind) -> Self {
+        self.tp_link_bytes_per_s = link.bytes_per_s();
+        self.tp_link_latency_s = link.latency_s();
+        self
+    }
+
+    /// Zero the collective term exactly (infinite link bandwidth, no
+    /// latency) — the TP-aware planner prices a slice's compute/memory
+    /// capacity with this and charges the collectives as a separate
+    /// additive term, so the premium is never counted twice.
+    pub fn without_tp_collectives(mut self) -> Self {
+        self.tp_link_bytes_per_s = f64::INFINITY;
+        self.tp_link_latency_s = 0.0;
+        self
+    }
+
+    /// One ring all-reduce over `tokens` activation rows of `d_model`
+    /// FP16 values: `2(tp-1)/tp` of the payload crosses the link
+    /// (reduce-scatter + all-gather), plus one launch latency (the
+    /// ring pipelines the per-hop latencies away for these sizes).
+    fn allreduce_latency(&self, tokens: u64) -> f64 {
+        let tp = self.model.tp as f64;
+        let bytes = tokens as f64 * self.model.d_model as f64 * 2.0;
+        2.0 * (tp - 1.0) / tp * bytes / self.tp_link_bytes_per_s + self.tp_link_latency_s
+    }
+
+    /// Tensor-parallel collective time of one full forward pass over
+    /// `tokens` (a decode iteration's batch rows, or a prefill chunk's
+    /// token count): two all-reduces per layer.  Exactly 0.0 when the
+    /// model is not sharded — TP1 configurations stay bit-identical.
+    pub fn tp_comm_latency(&self, tokens: u64) -> f64 {
+        if self.model.tp <= 1 || tokens == 0 {
+            return 0.0;
+        }
+        2.0 * self.model.n_layers as f64 * self.allreduce_latency(tokens)
     }
 
     /// KV bytes per token per layer per kv-head.
@@ -183,8 +242,9 @@ impl AttentionModel {
     }
 
     /// Full decode-iteration latency for a batch with per-row KV lens:
-    /// `max(weights, linear) + attention + engine overhead` (weight
-    /// streaming overlaps GEMV compute; attention is a separate pass).
+    /// `max(weights, linear) + attention + engine overhead + TP
+    /// collectives` (weight streaming overlaps GEMV compute; attention
+    /// is a separate pass; the collective term is 0.0 at TP1).
     pub fn decode_iteration_latency(&self, lens: &[RowLen]) -> f64 {
         if lens.is_empty() {
             return 0.0;
@@ -192,7 +252,10 @@ impl AttentionModel {
         let dense = self.weight_access_latency().max(self.linear_compute_latency(lens.len()));
         // Per-token sampling/dispatch overhead of the serving engine.
         let engine = 1.5e-6 * lens.len() as f64 + 150.0e-6;
-        dense + self.decode_attention_latency(lens) + engine
+        dense
+            + self.decode_attention_latency(lens)
+            + engine
+            + self.tp_comm_latency(lens.len() as u64)
     }
 
     /// Fraction of decode-iteration latency spent in attention — the
@@ -203,8 +266,10 @@ impl AttentionModel {
     }
 
     /// Prefill latency for a prompt of `t` tokens (compute-bound,
-    /// quadratic attention term; §2.1).
+    /// quadratic attention term; §2.1).  TP-sharded models pay the
+    /// per-layer all-reduces over the whole chunk (0.0 at TP1).
     pub fn prefill_latency(&self, t: u64) -> f64 {
+        let comm = self.tp_comm_latency(t);
         let t = t as f64;
         let dense = t * self.model.flops_per_token() / self.gpu.effective_flops();
         // Attention FLOPs: 2 * T^2 * d per layer (QK^T and PV).
@@ -218,6 +283,7 @@ impl AttentionModel {
         self.gpu.launch_overhead_s
             + dense.max(weights)
             + attn_flops / self.gpu.effective_flops()
+            + comm
     }
 
     /// The Fig. 2 statistic: latency of a mixed batch over the latency
@@ -376,6 +442,59 @@ mod tests {
         let m2 = AttentionModel::new(GpuProfile::H20, llama_70b(2));
         let m4 = AttentionModel::new(GpuProfile::H20, llama_70b(4));
         assert!(m4.weight_access_latency() < m2.weight_access_latency());
+    }
+
+    #[test]
+    fn tp1_pays_no_collectives() {
+        let m = h20_3b();
+        assert_eq!(m.tp_comm_latency(256), 0.0);
+        // And the iteration/prefill sums are bit-identical to adding
+        // a literal 0.0 — the TP1 legacy guarantee.
+        let lens = vec![1000u64; 32];
+        let base = m.weight_access_latency().max(m.linear_compute_latency(32))
+            + m.decode_attention_latency(&lens)
+            + (1.5e-6 * 32.0 + 150.0e-6);
+        assert_eq!(m.decode_iteration_latency(&lens).to_bits(), base.to_bits());
+    }
+
+    #[test]
+    fn tp_collective_grows_with_degree_and_slower_links() {
+        use crate::models::llama_70b;
+        let m2 = AttentionModel::new(GpuProfile::H20, llama_70b(2));
+        let m4 = AttentionModel::new(GpuProfile::H20, llama_70b(4));
+        let m8 = AttentionModel::new(GpuProfile::H20, llama_70b(8));
+        let c2 = m2.tp_comm_latency(64);
+        let c4 = m4.tp_comm_latency(64);
+        let c8 = m8.tp_comm_latency(64);
+        assert!(c2 > 0.0);
+        // Ring factor 2(tp-1)/tp rises with the degree at fixed bytes.
+        assert!(c2 < c4 && c4 < c8, "{c2} {c4} {c8}");
+        // A PCIe TP group pays far more than the NVLink default.
+        let pcie = m4.with_tp_link(LinkKind::Pcie);
+        assert!(pcie.tp_comm_latency(64) > c4);
+        assert!(
+            pcie.decode_iteration_latency(&[4000; 64])
+                > m4.decode_iteration_latency(&[4000; 64])
+        );
+    }
+
+    #[test]
+    fn tp4_70b_iteration_still_beats_tp1_despite_collectives() {
+        // The whole point of sharding: per-GPU weight and KV traffic
+        // shrink 4x, which on a 70B model dwarfs the all-reduce
+        // premium — but the speedup is sublinear (< 4x).
+        use crate::models::llama_70b;
+        let m1 = AttentionModel::new(GpuProfile::H20, llama_70b(1));
+        let m4 = AttentionModel::new(GpuProfile::H20, llama_70b(4));
+        let lens = vec![1280u64; 64];
+        let t1 = m1.decode_iteration_latency(&lens);
+        let t4 = m4.decode_iteration_latency(&lens);
+        assert!(t4 < t1, "tp4 {t4} vs tp1 {t1}");
+        assert!(t4 > t1 / 4.0, "collectives must make the speedup sublinear");
+        // Prefill pays the collectives too.
+        assert!(m4.prefill_latency(2048) > 0.0);
+        let m4_pcie = m4.with_tp_link(LinkKind::Pcie);
+        assert!(m4_pcie.prefill_latency(2048) > m4.prefill_latency(2048));
     }
 
     #[test]

@@ -141,13 +141,14 @@ fn cmd_sim(args: &Args) {
     // balance (does the H100 carry its larger share?) is visible.
     if has_fleet {
         let total: u64 = stats.counters.output_tokens.values().sum::<u64>().max(1);
-        println!("per-instance     id  gpu    cap    out-tokens  share");
+        println!("per-instance     id  gpu    tp  cap    out-tokens  share");
         for i in 0..stats.instance_gpus.len() {
             let toks = *stats.counters.output_tokens.get(&i).unwrap_or(&0);
             println!(
-                "                 {:<3} {:<6} {:<6.3} {:>10}  {:>5.1}%",
+                "                 {:<3} {:<6} {:<3} {:<6.3} {:>10}  {:>5.1}%",
                 i,
                 stats.instance_gpus[i],
+                stats.instance_tp.get(i).copied().unwrap_or(1),
                 stats.instance_capacity[i],
                 toks,
                 100.0 * toks as f64 / total as f64

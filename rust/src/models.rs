@@ -28,6 +28,26 @@ pub struct ModelProfile {
 }
 
 impl ModelProfile {
+    /// The same architecture re-sliced at tensor-parallel degree `tp`
+    /// — the per-instance resolution step of a TP-aware fleet: an
+    /// `InstanceSpec` carrying `tp=4` serves
+    /// `base.with_tp(4)` regardless of the degree baked into the base
+    /// profile's name.  Weights, KV bytes, and dense FLOPs all divide
+    /// by the new degree; the architecture numbers are untouched.
+    pub const fn with_tp(self, tp: u32) -> ModelProfile {
+        ModelProfile {
+            name: self.name,
+            params: self.params,
+            n_layers: self.n_layers,
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            n_kv_heads: self.n_kv_heads,
+            head_dim: self.head_dim,
+            max_context: self.max_context,
+            tp,
+        }
+    }
+
     /// FP16 weight bytes *per GPU* (TP slices weights evenly).
     pub fn weight_bytes(&self) -> u64 {
         2 * self.params / self.tp as u64
@@ -219,6 +239,16 @@ mod tests {
         let m4 = llama_70b(4);
         assert_eq!(m2.weight_bytes(), 2 * m4.weight_bytes());
         assert_eq!(m2.kv_bytes_per_token(), 2 * m4.kv_bytes_per_token());
+    }
+
+    #[test]
+    fn with_tp_reslices_any_base_profile() {
+        assert_eq!(llama_70b(1).with_tp(4), llama_70b(4));
+        assert_eq!(llama_70b(2).with_tp(2), llama_70b(2));
+        let m = LLAMA_3B.with_tp(2);
+        assert_eq!(m.tp, 2);
+        assert_eq!(m.weight_bytes(), LLAMA_3B.weight_bytes() / 2);
+        assert_eq!(m.n_layers, LLAMA_3B.n_layers);
     }
 
     #[test]

@@ -89,6 +89,51 @@ fn every_registry_scheduler_is_macro_micro_identical() {
 }
 
 #[test]
+fn tp_fleet_scenarios_stay_macro_micro_identical() {
+    // The TP axis adds per-instance model slices, TP-derived KV
+    // pools, collective-inclusive iteration costs, and the TP-aware
+    // DP — all of it must remain a pure cost-model/planning change
+    // with zero effect on driver traversal equivalence.  Cover a
+    // bid-ask policy (per-iteration hooks) and a macro-stretch policy
+    // (no hooks) on mixed-TP fleets.
+    for (scheduler, fleet) in
+        [("cascade", "h20:2,h20:2,tp=4"), ("sjf", "h20:4,tp=2,h20:2,tp=4")]
+    {
+        let build = |micro: bool| {
+            Experiment::builder()
+                .scheduler(scheduler)
+                .fleet(fleet)
+                .workload(WorkloadSpec::parse("heavytail").unwrap())
+                .rate(12.0)
+                .requests(120)
+                .seed(11)
+                .plan_sample(400)
+                .micro_step(micro)
+                .build()
+                .expect("tp equivalence experiment builds")
+                .run()
+        };
+        let (r_macro, s_macro) = build(false);
+        let (r_micro, s_micro) = build(true);
+        assert_eq!(r_macro.records.len(), 120, "{scheduler} on {fleet} dropped requests");
+        assert_eq!(
+            observables(&r_macro, &s_macro),
+            observables(&r_micro, &s_micro),
+            "{scheduler} on {fleet}: macro and micro drivers diverged"
+        );
+        assert_eq!(
+            s_macro.batch_snapshots, s_micro.batch_snapshots,
+            "{scheduler} on {fleet}: snapshot marks diverged"
+        );
+        assert_eq!(
+            s_macro.mean_token_load, s_micro.mean_token_load,
+            "{scheduler} on {fleet}: gossip-sampled load diverged"
+        );
+        assert_eq!(s_macro.instance_tp, s_micro.instance_tp);
+    }
+}
+
+#[test]
 fn randomized_horizon_interleavings_stay_identical() {
     // Random rates and refine/replan-interval jitter move the periodic
     // timers (and therefore macro horizons) onto, before, and after

@@ -1,0 +1,284 @@
+//! Tensor-parallel fleet suite — the TP-axis hard gates.
+//!
+//! 1. **Bit-identity**: a `tp=1` fleet must reproduce the legacy
+//!    no-TP path fingerprint-for-fingerprint across every registry
+//!    scheduler — the TP refactor threads per-instance model slices,
+//!    TP-derived KV pools, and the TP-aware DP through construction,
+//!    and all of it must be invisible when nothing shards.
+//! 2. **Mixed-TP acceptance**: on a `tp=2 x4 + tp=4 x4` 70B fleet
+//!    under heavytail, the TP4 slices own the longest stage and carry
+//!    the top token-load share.
+//! 3. **Randomized DP properties**: on random histograms and fleets,
+//!    `plan_dp_instances` never beats (and matches) the exhaustive
+//!    reference partition, predicted quality degrades monotonically
+//!    as TP communication cost grows, and per-stage capacities stay
+//!    positive.
+
+use cascade_infer::cluster::PolicySpec;
+use cascade_infer::coordinator::plan::{MigrationCost, PlanInstance, Planner};
+use cascade_infer::experiment::Experiment;
+use cascade_infer::fleet::InstanceSpec;
+use cascade_infer::gpu::GpuProfile;
+use cascade_infer::models::{llama_70b, LLAMA_3B};
+use cascade_infer::qoe::QoeModel;
+use cascade_infer::sim::Rng;
+use cascade_infer::testutil::for_all;
+use cascade_infer::workload::{generate, LengthHistogram, Request, ShareGptLike};
+
+fn heavytail(n: usize, rate: f64, seed: u64) -> Vec<Request> {
+    generate(&ShareGptLike::heavy_tail(), rate, n, seed)
+}
+
+// ---------------------------------------------------------------- 1.
+
+#[test]
+fn tp1_fleet_is_bit_identical_to_legacy_for_every_registry_scheduler() {
+    // `tp=1` spelled explicitly must take the exact legacy code paths:
+    // same resolved model, same KV derivation, same planner entry
+    // point — enforced per registry name because each exercises a
+    // different mix of layout/dispatch/balance axes.
+    let reqs = generate(&ShareGptLike::default(), 18.0, 150, 42);
+    for &name in PolicySpec::names() {
+        let (legacy, legacy_stats) = Experiment::builder()
+            .gpu("H20")
+            .model_profile(LLAMA_3B)
+            .instances(4)
+            .scheduler(name)
+            .trace(reqs.clone())
+            .build()
+            .unwrap()
+            .run();
+        let (tp, tp_stats) = Experiment::builder()
+            .model_profile(LLAMA_3B)
+            .scheduler(name)
+            .fleet("h20:4,tp=1")
+            .trace(reqs.clone())
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(tp.records.len(), reqs.len(), "{name} dropped requests");
+        assert_eq!(
+            legacy.fingerprint(),
+            tp.fingerprint(),
+            "{name}: tp=1 fleet diverged from the legacy no-TP path"
+        );
+        assert_eq!(legacy_stats.migrations, tp_stats.migrations, "{name}");
+        assert_eq!(legacy_stats.final_boundaries, tp_stats.final_boundaries, "{name}");
+        assert_eq!(legacy_stats.preemptions, tp_stats.preemptions, "{name}");
+        assert_eq!(tp_stats.instance_tp, vec![1; 4], "{name}");
+    }
+}
+
+// ---------------------------------------------------------------- 2.
+
+/// Mean of a per-instance statistic over instances with TP degree `tp`.
+fn mean_for_tp(values: &[f64], tps: &[u32], tp: u32) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0.0;
+    for (v, t) in values.iter().zip(tps.iter()) {
+        if *t == tp {
+            sum += *v;
+            n += 1.0;
+        }
+    }
+    assert!(n > 0.0, "no tp={tp} instances in {tps:?}");
+    sum / n
+}
+
+#[test]
+fn mixed_tp_70b_fleet_long_stage_lands_on_tp4_slices() {
+    // The scenario the repo could not express before: a 70B model on
+    // single-GPU-memory instances, servable only as TP slices.  The
+    // TP4 slices are roughly twice as fast as the TP2 slices (per-GPU
+    // weight/KV traffic shrink 2x more, minus the bigger all-reduce
+    // ring), so the TP-aware DP must plan the long-sequence end of
+    // the pipeline onto them, and the steady-state token load must
+    // concentrate there.
+    let reqs = heavytail(300, 12.0, 17);
+    let (report, stats) = Experiment::builder()
+        .model_profile(llama_70b(1))
+        .scheduler("cascade")
+        .fleet("h20:4,tp=2,h20:4,tp=4")
+        .trace(reqs.clone())
+        .plan_sample(300)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(report.records.len(), reqs.len(), "mixed-TP fleet dropped requests");
+    assert_eq!(stats.instance_tp, vec![2, 2, 2, 2, 4, 4, 4, 4]);
+    assert!(stats.stages.len() > 1, "expected a pipeline: {:?}", stats.stages);
+    // TP4 capacity outranks TP2 (sublinearly — the ring premium).
+    let cap2 = mean_for_tp(&stats.instance_capacity, &stats.instance_tp, 2);
+    let cap4 = mean_for_tp(&stats.instance_capacity, &stats.instance_tp, 4);
+    assert!(cap4 > cap2, "tp4 capacity {cap4} must outrank tp2 {cap2}");
+    // The longest stage is owned by TP4 slices only.
+    let last = stats.stages.last().unwrap();
+    assert!(
+        last.iter().all(|&i| stats.instance_tp[i] == 4),
+        "long stage members {last:?} must all be tp4 (tps {:?}, stages {:?})",
+        stats.instance_tp,
+        stats.stages
+    );
+    // ...and they carry the top steady-state token-load share.
+    assert_eq!(stats.mean_token_load.len(), 8, "cascade gossips, so load is sampled");
+    let load2 = mean_for_tp(&stats.mean_token_load, &stats.instance_tp, 2);
+    let load4 = mean_for_tp(&stats.mean_token_load, &stats.instance_tp, 4);
+    assert!(
+        load4 > load2,
+        "tp4 mean token load ({load4:.0}) should exceed tp2's ({load2:.0}); \
+         loads {:?}",
+        stats.mean_token_load
+    );
+}
+
+#[test]
+fn mixed_tp_run_is_deterministic() {
+    let reqs = heavytail(150, 10.0, 23);
+    let run = || {
+        Experiment::builder()
+            .model_profile(llama_70b(1))
+            .scheduler("cascade")
+            .fleet("h20:2,tp=2,h20:2,tp=4")
+            .trace(reqs.clone())
+            .plan_sample(150)
+            .build()
+            .unwrap()
+            .run()
+            .0
+            .fingerprint()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn tp_slicing_multiplies_derived_kv_headroom() {
+    // A TP4 slice splits both weights and per-token KV across 4 GPUs:
+    // from the same device memory its per-instance pool must derive
+    // *more* than 4x the tokens (weights shrink too).
+    let base = llama_70b(2);
+    let gpu = GpuProfile::H20;
+    let kv_tokens = |spec: InstanceSpec| {
+        let m = spec.model_for(&base);
+        m.kv_capacity_tokens(m.kv_budget_bytes(gpu.mem_bytes, 0.9))
+    };
+    let t2 = kv_tokens(InstanceSpec::new(gpu));
+    let t4 = kv_tokens(InstanceSpec::new(gpu).with_tp(4));
+    assert!(t2 > 131_072, "a TP2 70B slice must hold full-context KV on an H20: {t2}");
+    assert!(t4 > 2 * t2, "tp4 pool {t4} must more-than-double the tp2 pool {t2}");
+}
+
+// ---------------------------------------------------------------- 3.
+
+/// A QoE model shaped like real fits (same coefficients as the plan.rs
+/// unit suite).
+fn qoe() -> QoeModel {
+    QoeModel::new([5e-3, 2e-4, 1e-6, 1e-11, 2e-6])
+}
+
+/// Random small histogram over exponential-ish bounds.
+fn random_hist(rng: &mut Rng) -> LengthHistogram {
+    let all_bounds: [u64; 6] = [512, 2048, 8192, 32_768, 65_536, 131_072];
+    let k = 2 + rng.next_range(4) as usize; // 2..=5 buckets
+    let bounds: Vec<u64> = all_bounds[all_bounds.len() - k..].to_vec();
+    let mut h = LengthHistogram::new(bounds);
+    let n = 30 + rng.next_range(200);
+    for _ in 0..n {
+        let input = 1 + rng.next_range(100_000);
+        let output = 1 + rng.next_range(4_000);
+        h.push(input, (input + output).min(131_072));
+    }
+    h
+}
+
+/// Random small TP fleet: 2..=4 instances with mixed caps, KV pools,
+/// and collective premiums.
+fn random_insts(rng: &mut Rng) -> Vec<PlanInstance> {
+    let e = 2 + rng.next_range(3) as usize;
+    (0..e)
+        .map(|_| PlanInstance {
+            cap: 0.3 + rng.next_f64() * 1.7,
+            kv_tokens: match rng.next_range(4) {
+                0 => 2_000.0,
+                1 => 50_000.0,
+                2 => 1.0e9,
+                _ => f64::INFINITY,
+            },
+            comm_s_per_token: if rng.next_range(2) == 0 {
+                0.0
+            } else {
+                rng.next_f64() * 1e-4
+            },
+        })
+        .collect()
+}
+
+#[test]
+fn tp_dp_matches_and_never_beats_the_exhaustive_reference() {
+    for_all("tp-dp-vs-exhaustive", 0x7B4, 32, |rng: &mut Rng| {
+        let h = random_hist(rng);
+        let insts = random_insts(rng);
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let dp = p.plan_dp_instances(&h, &insts);
+        let ex = p.plan_exhaustive_instances(&h, &insts);
+        let tol = 1e-9 * dp.predicted_quality.abs().max(1.0);
+        // Optimality, both directions: the DP can never beat a true
+        // exhaustive optimum, and being exact it cannot lose to it
+        // either.
+        assert!(
+            dp.predicted_quality >= ex.predicted_quality - tol,
+            "DP {} beats the exhaustive optimum {} on {insts:?}",
+            dp.predicted_quality,
+            ex.predicted_quality
+        );
+        assert!(
+            dp.predicted_quality <= ex.predicted_quality + tol,
+            "DP {} lost to the exhaustive optimum {} on {insts:?}",
+            dp.predicted_quality,
+            ex.predicted_quality
+        );
+        // Structural invariants: every instance owned, contiguous
+        // ascending ranges, positive per-stage capacity.
+        assert_eq!(dp.total_instances(), insts.len());
+        let mut start = 0usize;
+        for (i, s) in dp.stages.iter().enumerate() {
+            assert!(s.n_instances >= 1);
+            let members = &insts[start..start + s.n_instances];
+            let cap_sum: f64 = members.iter().map(|m| m.cap).sum();
+            assert!(
+                cap_sum > 0.0 && cap_sum.is_finite(),
+                "stage {i} capacity {cap_sum} must stay positive"
+            );
+            start += s.n_instances;
+            if i > 0 {
+                assert_eq!(dp.stages[i - 1].hi, s.lo);
+            }
+            assert!(s.lo < s.hi, "{:?}", dp.stages);
+        }
+    });
+}
+
+#[test]
+fn tp_dp_quality_degrades_monotonically_in_comm_cost_randomized() {
+    for_all("tp-dp-comm-monotone", 0xC0111, 16, |rng: &mut Rng| {
+        let h = random_hist(rng);
+        let base = random_insts(rng);
+        let p = Planner::new(qoe(), MigrationCost::free());
+        let mut last = f64::NEG_INFINITY;
+        for scale in [0.0, 0.5, 1.0, 2.0, 8.0] {
+            let insts: Vec<PlanInstance> = base
+                .iter()
+                .map(|i| PlanInstance {
+                    comm_s_per_token: i.comm_s_per_token * scale,
+                    ..*i
+                })
+                .collect();
+            let q = p.plan_dp_instances(&h, &insts).predicted_quality;
+            assert!(q.is_finite(), "{insts:?}");
+            assert!(
+                q >= last - 1e-12,
+                "quality improved as comm grew: {q} after {last} at scale {scale}"
+            );
+            last = q;
+        }
+    });
+}
