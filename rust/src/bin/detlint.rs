@@ -1,0 +1,88 @@
+//! `detlint` — determinism & invariant lint for the simulator crate.
+//!
+//! ```text
+//! detlint [--list-allows] [rust-root]
+//! ```
+//!
+//! Walks `src/` under `rust-root` (default: this crate's manifest
+//! directory) and enforces rules D1–D4 — see the `cascade_infer::lint`
+//! module docs for the rule catalogue and the allow-annotation
+//! grammar.  Exit codes: 0 clean, 1 unsuppressed findings, 2 usage or
+//! I/O error.
+
+use cascade_infer::lint;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut list_allows = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--list-allows" => list_allows = true,
+            "--help" | "-h" => {
+                println!("usage: detlint [--list-allows] [rust-root]");
+                println!("  --list-allows  print the allow-annotation audit trail and exit");
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("detlint: unknown flag `{other}` (try --help)");
+                return ExitCode::from(2);
+            }
+            other => {
+                if root.replace(PathBuf::from(other)).is_some() {
+                    eprintln!("detlint: more than one root argument (try --help)");
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+
+    let report = match lint::check_crate(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: failed to lint {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if list_allows {
+        if report.allows.is_empty() {
+            println!("no detlint allow annotations in {}", root.display());
+        }
+        for a in &report.allows {
+            let stale = if a.used { "" } else { "  [STALE: suppresses nothing]" };
+            println!("{}:{}: allow({}) -- {}{stale}", a.file, a.line, a.rule, a.reason);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    for a in report.allows.iter().filter(|a| !a.used) {
+        eprintln!(
+            "detlint: warning: stale allow({}) at {}:{} suppresses nothing \
+             (run --list-allows for the audit trail)",
+            a.rule, a.file, a.line
+        );
+    }
+    if report.findings.is_empty() {
+        let allows = report.allows.len();
+        println!(
+            "detlint: clean — 0 findings, {allows} justified allow annotation{} \
+             (rules D1-D4; see `cascade_infer::lint` docs)",
+            if allows == 1 { "" } else { "s" }
+        );
+        ExitCode::SUCCESS
+    } else {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        eprintln!(
+            "detlint: {} unsuppressed finding{} — migrate to a deterministic structure \
+             or justify with `// detlint: allow(<rule>) -- <reason>` on the offending line",
+            report.findings.len(),
+            if report.findings.len() == 1 { "" } else { "s" }
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -152,6 +152,17 @@ RUNNING EXPERIMENTS
               driver — it exists to verify exactly that, at a large
               wall-time cost.
 
+STATIC ANALYSIS
+  `cargo run --release --bin detlint` lints src/ for determinism
+  hazards (D1 hash-order iteration, D2 NaN-unsafe partial_cmp, D3
+  wall-clock/entropy in sim paths, D4 registry schedulers missing
+  from the golden-seed/macro-equivalence coverage lists) and exits
+  non-zero on any unsuppressed finding; CI gates on it.  Suppress a
+  finding only with a justified annotation on the offending line:
+  `// detlint: allow(<rule>) -- <reason>`.  `detlint --list-allows`
+  prints the annotation audit trail (stale ones are marked).  See the
+  `cascade_infer::lint` module docs for the rule catalogue.
+
 PERF BASELINE
   `cargo bench --bench perf_hotpath` prints the hot-path table and
   writes machine-readable `BENCH_hotpath.json` (ops/s per hot path,

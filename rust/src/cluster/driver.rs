@@ -94,9 +94,9 @@ impl Cluster {
                     self.on_starve(now, sender, pull, receiver)
                 }
             }
-            // Stop once all requests completed and only periodic timers
-            // remain in the queue.
-            if self.records.len() >= self.n_requests_total
+            // Stop once all requests completed (or were rejected at
+            // admission) and only periodic timers remain in the queue.
+            if self.records.len() + self.stats.rejected as usize >= self.n_requests_total
                 && !self.instances.iter().any(|ins| ins.engine.has_work())
                 && self.in_flight.is_empty()
             {

@@ -126,14 +126,49 @@
 //! no-TP path for every registry scheduler.
 //!
 //! Caveat: a configuration whose per-instance KV pool is smaller than
-//! a sequence's *final* length cannot ever admit that sequence — the
-//! FCFS queue head then blocks the instance forever (pre-existing
-//! engine behavior, newly reachable through small TP slices, e.g.
-//! 70B at TP2 on an H100 pools only ~28K tokens).  The KV pressure
-//! term keeps the *planner* from creating such stages, but workloads
-//! whose lengths exceed every member's pool are unservable by
-//! construction — pick TP degrees so the long-stage instances hold
-//! `max_len`.
+//! a sequence's *final* length cannot ever admit that sequence
+//! (reachable through small TP slices, e.g. 70B at TP2 on an H100
+//! pools only ~28K tokens).  The router rejects such requests at
+//! admission — counted in [`RunStats::rejected`] with per-request
+//! diagnostics in [`RunStats::rejections`] — instead of letting the
+//! FCFS queue head wedge the instance forever.  The KV pressure term
+//! keeps the *planner* from creating such stages in the first place;
+//! pick TP degrees so the long-stage instances hold `max_len` if every
+//! request must complete.
+//!
+//! # Determinism invariants
+//!
+//! Every regression this repo leans on — golden-seed checksums,
+//! macro-vs-`--micro-step` bit-identity, TP fingerprint equivalence —
+//! requires a run to be a pure function of `(config, trace, seed)`.
+//! The `detlint` binary (`cargo run --release --bin detlint`, gated in
+//! CI) statically enforces that contract over simulator-scoped code
+//! (`cluster/`, `coordinator/`, `sim/`, `engine/`, `fleet.rs`,
+//! `kernelmodel.rs`, `workload.rs`, `metrics.rs`):
+//!
+//! * **D1** — no `HashMap`/`HashSet` *iteration*: entries come out in
+//!   hash order, which is not stable across std versions or hasher
+//!   seeds.  Keyed lookup is fine; anything scheduler-visible that
+//!   iterates must use `BTreeMap`/sorted order (`retry_after`,
+//!   `offers`, `promises` here, and the `MigrationManager` maps, are
+//!   `BTreeMap` for exactly this reason).
+//! * **D2** — no `.partial_cmp(..)` calls on floats: a NaN collapses
+//!   to `Equal` (or panics through `unwrap`) and the resulting order
+//!   depends on comparison sequence; use `f64::total_cmp`.
+//! * **D3** — no `Instant::now` / `SystemTime` / `thread_rng` /
+//!   `from_entropy` outside `main.rs`, `bin/`, and the pjrt-gated
+//!   `server/`: simulated time flows from the event queue and
+//!   randomness from the seeded [`crate::sim::Rng`].
+//! * **D4** — every scheduler name in the [`PolicySpec`] registry must
+//!   appear in the coverage lists of `tests/golden_seed.rs` *and*
+//!   `tests/macro_equivalence.rs`, so a new policy cannot ship with
+//!   its seeded behavior unpinned.
+//!
+//! A finding is suppressed only by a justified annotation on the
+//! offending line — `// detlint: allow(<rule>) -- <reason>` — and
+//! `detlint --list-allows` prints the audit trail.  See
+//! [`crate::lint`] for the rule implementations and their (lexical)
+//! approximations.
 
 pub mod policy;
 
@@ -308,9 +343,30 @@ impl ExecBackend for ScaledBackend {
     }
 }
 
+/// One request turned away at router admission: its final length
+/// exceeds the routed instance's *total* KV pool, so admitting it
+/// would wedge the instance's FCFS queue head forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RejectedRequest {
+    pub request: RequestId,
+    pub instance: InstanceId,
+    /// `input_len + output_len` — the KV the sequence would need.
+    pub final_len: Tokens,
+    /// The routed instance's total KV pool.
+    pub pool_tokens: Tokens,
+}
+
+/// Detail rows kept in [`RunStats::rejections`]; the count in
+/// [`RunStats::rejected`] is always exact.
+pub const MAX_REJECTION_DETAILS: usize = 32;
+
 /// Run statistics beyond the per-request report.
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
+    /// Requests rejected at admission (never submitted, no record).
+    pub rejected: u64,
+    /// Per-rejection diagnostics, capped at [`MAX_REJECTION_DETAILS`].
+    pub rejections: Vec<RejectedRequest>,
     pub migrations: u64,
     pub migration_tokens: Tokens,
     pub migrations_skipped: u64,
@@ -370,13 +426,13 @@ pub struct Cluster {
     /// Planner kept for periodic re-planning.
     planner: Planner,
     /// Failed-handover retry gate: request -> earliest next attempt.
-    retry_after: std::collections::HashMap<RequestId, Time>,
+    retry_after: std::collections::BTreeMap<RequestId, Time>,
     /// Open offers: request -> (sender, seq_len at offer, sender's
     /// capacity-normalized load).
-    offers: std::collections::HashMap<RequestId, (InstanceId, Tokens, f64)>,
+    offers: std::collections::BTreeMap<RequestId, (InstanceId, Tokens, f64)>,
     /// Starvation promises per sender: (pull, receiver) to send
     /// immediately after the current transmission completes.
-    promises: std::collections::HashMap<InstanceId, Vec<(PendingPull, InstanceId)>>,
+    promises: std::collections::BTreeMap<InstanceId, Vec<(PendingPull, InstanceId)>>,
     /// (input_len, final_len) of recently completed requests — the
     /// workload statistics the periodic re-plan consumes.
     observed: Vec<(Tokens, Tokens)>,

@@ -138,6 +138,13 @@ impl Router {
 impl Cluster {
     /// Admission: route the arrival per the policy spec, submit it to
     /// the chosen engine, and kick that engine if idle.
+    ///
+    /// A request whose *final* length exceeds the routed instance's
+    /// total KV pool can never be admitted by the FCFS engine — it
+    /// would sit at the queue head and wedge the instance forever
+    /// (reachable through small TP slices, e.g. 70B at TP2 on an H100
+    /// pools only ~28K tokens).  Such requests are rejected here with
+    /// a diagnostic instead of submitted.
     pub(super) fn on_arrival(&mut self, now: Time, req: Request) {
         let target = self.router.route(
             &self.cfg.policy,
@@ -147,6 +154,19 @@ impl Cluster {
             &self.instances,
             &self.migration,
         );
+        let final_len = req.final_len();
+        if !self.instances[target].engine.can_ever_hold(final_len) {
+            self.stats.rejected += 1;
+            if self.stats.rejections.len() < super::MAX_REJECTION_DETAILS {
+                self.stats.rejections.push(super::RejectedRequest {
+                    request: req.id,
+                    instance: target,
+                    final_len,
+                    pool_tokens: self.instances[target].engine.kv().capacity_tokens(),
+                });
+            }
+            return;
+        }
         self.instances[target].engine.submit(req);
         self.kick(now, target);
     }

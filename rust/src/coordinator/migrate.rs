@@ -14,7 +14,7 @@
 
 use crate::gpu::LinkKind;
 use crate::{InstanceId, RequestId, Time, Tokens};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// §5: "a strict concurrency limit (capped at three parallel
 /// transfers in our implementation)".
@@ -81,16 +81,18 @@ pub fn live_migration_schedule(
 #[derive(Debug, Clone)]
 pub struct MigrationManager {
     pub kv_bytes_per_token: f64,
-    /// Active transfers keyed by request.
-    active: HashMap<RequestId, Transfer>,
+    /// Active transfers keyed by request.  `BTreeMap` (not `HashMap`)
+    /// so the bandwidth-sharing scans below visit transfers in a
+    /// deterministic order — detlint rule D1.
+    active: BTreeMap<RequestId, Transfer>,
     /// Per-instance active-transfer counts (as source or destination).
-    busy: HashMap<InstanceId, usize>,
+    busy: BTreeMap<InstanceId, usize>,
     /// Per-receiver running sum of in-flight tokens, so
     /// [`Self::inbound_tokens`] is O(1) on the routing/bid hot paths.
-    inbound: HashMap<InstanceId, Tokens>,
+    inbound: BTreeMap<InstanceId, Tokens>,
     /// Per-sender count of outgoing transfers, so [`Self::sender_busy`]
     /// is O(1) in the receiver pull loop.
-    outbound: HashMap<InstanceId, usize>,
+    outbound: BTreeMap<InstanceId, usize>,
     pub total_completed: u64,
     pub total_tokens_moved: Tokens,
     pub total_skipped_no_slot: u64,
@@ -101,10 +103,10 @@ impl MigrationManager {
     pub fn new(kv_bytes_per_token: f64) -> Self {
         Self {
             kv_bytes_per_token,
-            active: HashMap::new(),
-            busy: HashMap::new(),
-            inbound: HashMap::new(),
-            outbound: HashMap::new(),
+            active: BTreeMap::new(),
+            busy: BTreeMap::new(),
+            inbound: BTreeMap::new(),
+            outbound: BTreeMap::new(),
             total_completed: 0,
             total_tokens_moved: 0,
             total_skipped_no_slot: 0,

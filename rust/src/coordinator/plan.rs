@@ -999,14 +999,14 @@ mod tests {
         // touches O(E log^2 L) states vs the fine DP's O(E^3 (L/g)^2).
         let p = Planner::new(qoe(), MigrationCost::free());
         let h = hist();
-        let t0 = std::time::Instant::now();
+        let t0 = std::time::Instant::now(); // detlint: allow(D3) -- wall-clock bound on a test-only complexity check, not simulated time
         let _ = p.plan_heuristic(&h, 16);
         let heur_t = t0.elapsed();
         let reqs: Vec<(u64, u64)> = generate(&ShareGptLike::default(), 10.0, 500, 3)
             .iter()
             .map(|r| (r.input_len, r.final_len()))
             .collect();
-        let t0 = std::time::Instant::now();
+        let t0 = std::time::Instant::now(); // detlint: allow(D3) -- wall-clock bound on a test-only complexity check, not simulated time
         let _ = p.plan_exact_fine(&reqs, 8, 16_384, 512); // 32 cut points
         let fine_t = t0.elapsed();
         // Both should run, heuristic comfortably under a second.

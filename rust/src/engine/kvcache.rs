@@ -42,12 +42,12 @@ impl KvCache {
     }
 
     pub fn used_tokens(&self) -> Tokens {
-        self.seqs.values().map(|(t, _)| *t).sum()
+        self.seqs.values().map(|(t, _)| *t).sum() // detlint: allow(D1) -- u64 sum over values; order-insensitive, result independent of hash order
     }
 
     /// Tokens reserved (block-granular) — what actually occupies HBM.
     pub fn reserved_tokens(&self) -> Tokens {
-        self.seqs.values().map(|(_, b)| b * self.block_size).sum()
+        self.seqs.values().map(|(_, b)| b * self.block_size).sum() // detlint: allow(D1) -- u64 sum over values; order-insensitive, result independent of hash order
     }
 
     fn blocks_for(&self, tokens: Tokens) -> u64 {
@@ -57,6 +57,13 @@ impl KvCache {
     /// Can a new sequence of `tokens` be admitted right now?
     pub fn can_allocate(&self, tokens: Tokens) -> bool {
         self.blocks_for(tokens.max(1)) <= self.free_blocks
+    }
+
+    /// Could a sequence of `tokens` *ever* fit, even on an empty
+    /// cache?  `false` means admitting it would wedge the FCFS queue
+    /// head forever — the router rejects such requests up front.
+    pub fn can_ever_hold(&self, tokens: Tokens) -> bool {
+        self.blocks_for(tokens.max(1)) <= self.capacity_blocks
     }
 
     /// Allocate a fresh sequence. Returns false (no change) if it

@@ -378,6 +378,13 @@ impl<B: ExecBackend> Engine<B> {
         &self.kv
     }
 
+    /// Could a sequence of `tokens` ever fit in this engine's KV
+    /// pool?  Admission-time guard against the FCFS head-of-line wedge
+    /// (see [`KvCache::can_ever_hold`]).
+    pub fn can_ever_hold(&self, tokens: Tokens) -> bool {
+        self.kv.can_ever_hold(tokens)
+    }
+
     /// Token-level load: total cached tokens (the LoadTracker metric).
     /// Maintained as a running aggregate; O(1).
     pub fn token_load(&self) -> Tokens {

@@ -34,6 +34,7 @@ pub mod experiment;
 pub mod fleet;
 pub mod gpu;
 pub mod kernelmodel;
+pub mod lint;
 pub mod metrics;
 pub mod models;
 pub mod qoe;

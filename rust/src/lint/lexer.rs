@@ -1,0 +1,351 @@
+//! Hand-rolled Rust lexer for the determinism lint.
+//!
+//! The container is offline and the crate is dependency-free, so
+//! `detlint` cannot lean on `syn`.  It does not need to: the D1–D4
+//! rules only consult the *token stream* (identifiers, punctuation,
+//! string-literal contents) plus the line comments (for the
+//! `// detlint: allow(..)` grammar).  This lexer therefore produces
+//! exactly that — a flat token list with line numbers — and is careful
+//! about the only genuinely tricky parts of Rust's lexical grammar:
+//!
+//! * `//` line comments and *nested* `/* */` block comments are
+//!   skipped (line comments are captured for allow parsing);
+//! * string literals (plain, byte, and raw with any `#` count) are
+//!   emitted as [`TokKind::Str`] tokens carrying their contents, so
+//!   the D4 registry cross-reference can match names while D1–D3 can
+//!   never fire on text inside a string;
+//! * lifetimes (`'a`) are distinguished from char literals (`'x'`,
+//!   `'\n'`) so an apostrophe never desynchronizes the stream.
+//!
+//! Numeric literals are folded into a single [`TokKind::Num`] token;
+//! every other non-whitespace character becomes a one-character
+//! [`TokKind::Punct`] token (`::` is two `:` tokens — the rules match
+//! on that shape).
+
+/// Token class; see module docs for what each carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// String literal; `text` holds the *contents* (delimiters and any
+    /// raw-string hashes stripped, escapes left as written).
+    Str,
+    /// Char or byte-char literal (contents, no quotes).
+    Char,
+    /// Lifetime, without the leading apostrophe.
+    Lifetime,
+    Num,
+    /// Single punctuation character.
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    /// Is this the identifier `s`?
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Is this the punctuation character `c`?
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+/// Lexer output: the token stream plus captured `//` comments
+/// (1-based line, text after the `//`).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub line_comments: Vec<(usize, String)>,
+}
+
+/// Lex `src` into tokens and line comments.  Never fails: unknown
+/// bytes become punct tokens, an unterminated literal runs to EOF.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0;
+    let mut line = 1;
+    let n = chars.len();
+
+    let is_ident_start = |c: char| c.is_alphabetic() || c == '_';
+    let is_ident_cont = |c: char| c.is_alphanumeric() || c == '_';
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            out.line_comments.push((line, chars[start..j].iter().collect()));
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw strings: r"..." / r#"..."# (optionally byte: br).
+        if c == 'r' || (c == 'b' && i + 1 < n && chars[i + 1] == 'r') {
+            let prefix_len = if c == 'b' { 2 } else { 1 };
+            if let Some((content, consumed, newlines)) = try_raw_string(&chars[i + prefix_len..])
+            {
+                out.toks.push(Tok { kind: TokKind::Str, text: content, line });
+                line += newlines;
+                i += prefix_len + consumed;
+                continue;
+            }
+        }
+        // Byte strings / byte chars: b"..." / b'x'.
+        if c == 'b' && i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '\'') {
+            i += 1; // fall through to the quote handling below
+            continue;
+        }
+        if c == '"' {
+            let (content, consumed, newlines) = quoted(&chars[i..], '"');
+            out.toks.push(Tok { kind: TokKind::Str, text: content, line });
+            line += newlines;
+            i += consumed;
+            continue;
+        }
+        if c == '\'' {
+            // Lifetime iff an identifier follows and the char after it
+            // is not a closing quote ('a' is a char, 'a a lifetime).
+            let mut j = i + 1;
+            if j < n && is_ident_start(chars[j]) {
+                let mut k = j;
+                while k < n && is_ident_cont(chars[k]) {
+                    k += 1;
+                }
+                if !(k < n && chars[k] == '\'') {
+                    out.toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: chars[j..k].iter().collect(),
+                        line,
+                    });
+                    i = k;
+                    continue;
+                }
+            }
+            // Char literal (possibly escaped).
+            if j < n && chars[j] == '\\' {
+                j += 2; // skip the escape lead; scan to the close below
+            }
+            while j < n && chars[j] != '\'' {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Char,
+                text: chars[i + 1..j.min(n)].iter().collect(),
+                line,
+            });
+            i = (j + 1).min(n);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (is_ident_cont(chars[j]) || chars[j] == '.') {
+                // Stop at a range operator (`0..x`) or method call on a
+                // literal — a '.' not followed by a digit ends the token.
+                if chars[j] == '.' && !(j + 1 < n && chars[j + 1].is_ascii_digit()) {
+                    break;
+                }
+                j += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Num, text: chars[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(chars[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: chars[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+/// Attempt to lex a raw string starting at `rest` (positioned just
+/// after the `r` / `br` prefix).  Returns `(contents, chars consumed
+/// after the prefix, newlines inside)`.
+fn try_raw_string(rest: &[char]) -> Option<(String, usize, usize)> {
+    let mut hashes = 0;
+    while hashes < rest.len() && rest[hashes] == '#' {
+        hashes += 1;
+    }
+    if hashes >= rest.len() || rest[hashes] != '"' {
+        return None;
+    }
+    let body_start = hashes + 1;
+    let mut j = body_start;
+    while j < rest.len() {
+        if rest[j] == '"'
+            && rest[j + 1..].iter().take(hashes).filter(|&&c| c == '#').count() == hashes
+        {
+            let content: String = rest[body_start..j].iter().collect();
+            let newlines = content.matches('\n').count();
+            return Some((content, j + 1 + hashes, newlines));
+        }
+        j += 1;
+    }
+    let content: String = rest[body_start..].iter().collect();
+    let newlines = content.matches('\n').count();
+    Some((content, rest.len(), newlines))
+}
+
+/// Lex a quoted literal with backslash escapes, starting at the
+/// opening quote.  Returns `(contents, chars consumed, newlines)`.
+fn quoted(rest: &[char], quote: char) -> (String, usize, usize) {
+    let mut j = 1;
+    let mut content = String::new();
+    let mut newlines = 0;
+    while j < rest.len() {
+        match rest[j] {
+            '\\' if j + 1 < rest.len() => {
+                content.push(rest[j]);
+                content.push(rest[j + 1]);
+                if rest[j + 1] == '\n' {
+                    newlines += 1;
+                }
+                j += 2;
+            }
+            c if c == quote => return (content, j + 1, newlines),
+            c => {
+                if c == '\n' {
+                    newlines += 1;
+                }
+                content.push(c);
+                j += 1;
+            }
+        }
+    }
+    (content, rest.len(), newlines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_are_skipped_and_captured() {
+        let l = lex("let x = 1; // detlint: allow(D1) -- ok\n/* skip /* nested */ me */ y");
+        assert_eq!(l.line_comments.len(), 1);
+        assert!(l.line_comments[0].1.contains("allow(D1)"));
+        assert_eq!(idents("let x = 1; // HashMap\n/* HashMap */ y"), ["let", "x", "y"]);
+    }
+
+    #[test]
+    fn strings_emit_contents_not_code() {
+        let l = lex(r#"let s = "HashMap.iter()"; call(s);"#);
+        let strs: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == TokKind::Str).map(|t| t.text.clone()).collect();
+        assert_eq!(strs, ["HashMap.iter()"]);
+        // The string contents never appear as idents.
+        assert!(!idents(r#"let s = "HashMap";"#).contains(&"HashMap".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let l = lex(r##"let s = r#"a "quoted" name"#; x"##);
+        let strs: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == TokKind::Str).map(|t| t.text.clone()).collect();
+        assert_eq!(strs, [r#"a "quoted" name"#]);
+        assert!(l.toks.iter().any(|t| t.is_ident("x")));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        let lifetimes: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(lifetimes, ["a", "a"]);
+        let chars: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == TokKind::Char).map(|t| t.text.clone()).collect();
+        assert_eq!(chars, ["x", "\\n"]);
+    }
+
+    #[test]
+    fn lines_are_tracked_through_literals() {
+        let l = lex("a\nb \"two\nlines\" c\nd");
+        let find = |name: &str| l.toks.iter().find(|t| t.is_ident(name)).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("b"), 2);
+        assert_eq!(find("c"), 3);
+        assert_eq!(find("d"), 4);
+    }
+
+    #[test]
+    fn double_colon_is_two_colon_puncts() {
+        let l = lex("std::time::Instant::now()");
+        let colons = l.toks.iter().filter(|t| t.is_punct(':')).count();
+        assert_eq!(colons, 6);
+        assert_eq!(idents("std::time::Instant::now()"), ["std", "time", "Instant", "now"]);
+    }
+
+    #[test]
+    fn numeric_literals_do_not_absorb_methods_or_ranges() {
+        // `1.0f64` is one Num token (suffix included); the method name
+        // after the second dot must still surface as an ident.
+        assert_eq!(idents("1.0f64.total_cmp(&x); 0..10"), ["total_cmp", "x"]);
+        let l = lex("1.0.partial_cmp(&x)");
+        assert!(l.toks.iter().any(|t| t.is_ident("partial_cmp")));
+    }
+}

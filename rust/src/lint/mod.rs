@@ -1,0 +1,434 @@
+//! `detlint` — the repo-native determinism & invariant lint.
+//!
+//! Everything this repo claims — golden-seed checksums, macro-vs-micro
+//! bit-identity, TP fingerprint equivalences — rests on the simulator
+//! being a pure function of its seed.  This module enforces that
+//! contract statically, over the token stream of `src/` (lexed by the
+//! dependency-free [`lexer`] — no `syn`, the container is offline):
+//!
+//! * **D1** — no `HashMap`/`HashSet` *iteration* in simulator scope.
+//!   Keyed lookup (`get`/`insert`/`entry`/..) is deterministic and
+//!   fine; `iter`/`keys`/`values`/`drain`/`retain`/`for .. in map`
+//!   visit entries in hash order and are flagged.  Migrate to
+//!   `BTreeMap`/sorted order, or annotate with the bit-identity
+//!   argument (e.g. an order-insensitive integer sum).
+//! * **D2** — no `.partial_cmp(..)` call sites in simulator scope;
+//!   use the NaN-total `f64::total_cmp`.  `fn partial_cmp`
+//!   *definitions* that delegate to a total `cmp` are not flagged.
+//! * **D3** — no `Instant::now` / `SystemTime` / `thread_rng` /
+//!   `from_entropy` anywhere in `src/` except `main.rs`, `bin/`, and
+//!   the pjrt-gated `server/` — wall-clock and ambient entropy must
+//!   never leak into simulated time.
+//! * **D4** — every scheduler name in the `PolicySpec` registry
+//!   (`cluster/policy.rs`, `fn names`) must appear in the coverage
+//!   lists of both `tests/golden_seed.rs` and
+//!   `tests/macro_equivalence.rs`, so a new policy cannot ship with
+//!   its seeded behavior unpinned.
+//!
+//! Simulator scope is `cluster/`, `coordinator/`, `sim/`, `engine/`,
+//! plus `fleet.rs`, `kernelmodel.rs`, `workload.rs`, `metrics.rs`.
+//!
+//! ## Suppression grammar
+//!
+//! A finding is suppressed only by a justified annotation **on the
+//! offending line**:
+//!
+//! ```text
+//! // detlint: allow(D1) -- u64 sum over values; order-insensitive
+//! ```
+//!
+//! The reason after `--` is mandatory; a malformed or reason-less
+//! annotation is itself a finding (`allow`).  `detlint --list-allows`
+//! prints the full audit trail; annotations that no longer suppress
+//! anything are marked `STALE` (warning, not failure, so a detector
+//! refinement cannot brick CI).
+//!
+//! ## Honest limits
+//!
+//! The detectors are lexical, not semantic: D1 only tracks names
+//! declared as hash containers *in the same file* (field, annotated
+//! `let`, or `let .. = HashMap::new()`), so a map smuggled through a
+//! type alias or returned by reference escapes it.  That bounds
+//! false positives (a `Vec` named like a map never fires) at the cost
+//! of known blind spots; the golden-seed suite remains the dynamic
+//! backstop.
+
+pub mod lexer;
+pub mod rules;
+
+use lexer::lex;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lint rule identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Hash-order iteration in sim scope.
+    D1,
+    /// NaN-unsafe `partial_cmp` in sim scope.
+    D2,
+    /// Wall-clock / ambient entropy on the simulation path.
+    D3,
+    /// Registry scheduler missing from coverage tests.
+    D4,
+    /// Malformed `// detlint: allow(..)` annotation.
+    BadAllow,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::D1 => "D1",
+            Rule::D2 => "D2",
+            Rule::D3 => "D3",
+            Rule::D4 => "D4",
+            Rule::BadAllow => "allow",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Rule> {
+        match s {
+            "D1" => Some(Rule::D1),
+            "D2" => Some(Rule::D2),
+            "D3" => Some(Rule::D3),
+            "D4" => Some(Rule::D4),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One unsuppressed diagnostic.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// A parsed `// detlint: allow(<rule>) -- <reason>` annotation.
+#[derive(Debug, Clone)]
+pub struct AllowRecord {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub reason: String,
+    /// Did this annotation suppress a finding in this run?  `false`
+    /// means the annotation is stale (reported as a warning).
+    pub used: bool,
+}
+
+/// Lint result for one source file.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub allows: Vec<AllowRecord>,
+}
+
+/// Lint result for the whole crate.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub allows: Vec<AllowRecord>,
+}
+
+/// Strip a leading `src/` so callers can pass either crate-relative
+/// (`src/cluster/mod.rs`) or scope-relative (`cluster/mod.rs`) paths.
+fn scope_rel(rel: &str) -> &str {
+    rel.strip_prefix("src/").unwrap_or(rel)
+}
+
+/// Is `rel` (relative to `src/`) inside simulator scope (D1/D2)?
+pub fn sim_scoped(rel: &str) -> bool {
+    let rel = scope_rel(rel);
+    ["cluster/", "coordinator/", "sim/", "engine/"].iter().any(|p| rel.starts_with(p))
+        || matches!(rel, "fleet.rs" | "kernelmodel.rs" | "workload.rs" | "metrics.rs")
+}
+
+/// May `rel` touch the wall clock / ambient entropy (D3 exempt)?
+pub fn wallclock_allowed(rel: &str) -> bool {
+    let rel = scope_rel(rel);
+    rel == "main.rs" || rel.starts_with("server/") || rel.starts_with("bin/")
+}
+
+/// Parse one line comment.  `None`: not a detlint annotation.
+/// `Some(Ok(..))`: well-formed allow.  `Some(Err(msg))`: malformed.
+fn parse_allow(text: &str) -> Option<Result<(Rule, String), String>> {
+    let idx = text.find("detlint:")?;
+    let rest = text[idx + "detlint:".len()..].trim_start();
+    let Some(r) = rest.strip_prefix("allow(") else {
+        return Some(Err("expected `allow(<rule>)` after `detlint:`".to_string()));
+    };
+    let Some(close) = r.find(')') else {
+        return Some(Err("unclosed `allow(`".to_string()));
+    };
+    let rule_s = r[..close].trim();
+    let Some(rule) = Rule::parse(rule_s) else {
+        return Some(Err(format!("unknown rule `{rule_s}` (expected D1..D4)")));
+    };
+    let after = r[close + 1..].trim_start();
+    let Some(reason) = after.strip_prefix("--") else {
+        return Some(Err(format!(
+            "allow({rule}) without a justification; write `allow({rule}) -- <reason>`"
+        )));
+    };
+    let reason = reason.trim();
+    if reason.is_empty() {
+        return Some(Err(format!(
+            "allow({rule}) with an empty justification; write `allow({rule}) -- <reason>`"
+        )));
+    }
+    Some(Ok((rule, reason.to_string())))
+}
+
+/// Lint a single source file.  `rel` is the path relative to `src/`
+/// (a leading `src/` is tolerated); it selects which rules apply and
+/// becomes the `file` field of the produced findings/allows.
+pub fn check_source(rel: &str, src: &str) -> FileReport {
+    let lexed = lex(src);
+    let mut raw: Vec<(usize, Rule, String)> = Vec::new();
+    if sim_scoped(rel) {
+        for (line, msg) in rules::d1_hash_iteration(&lexed) {
+            raw.push((line, Rule::D1, msg));
+        }
+        for (line, msg) in rules::d2_partial_cmp(&lexed) {
+            raw.push((line, Rule::D2, msg));
+        }
+    }
+    if !wallclock_allowed(rel) {
+        for (line, msg) in rules::d3_wall_clock(&lexed) {
+            raw.push((line, Rule::D3, msg));
+        }
+    }
+    raw.sort_by_key(|r| (r.0, r.1.id()));
+
+    let mut report = FileReport::default();
+    for (line, comment) in &lexed.line_comments {
+        match parse_allow(comment) {
+            None => {}
+            Some(Ok((rule, reason))) => report.allows.push(AllowRecord {
+                file: rel.to_string(),
+                line: *line,
+                rule,
+                reason,
+                used: false,
+            }),
+            Some(Err(msg)) => report.findings.push(Finding {
+                file: rel.to_string(),
+                line: *line,
+                rule: Rule::BadAllow,
+                message: msg,
+            }),
+        }
+    }
+    for (line, rule, message) in raw {
+        let allow = report
+            .allows
+            .iter_mut()
+            .find(|a| a.line == line && a.rule == rule);
+        if let Some(a) = allow {
+            a.used = true;
+        } else {
+            report.findings.push(Finding { file: rel.to_string(), line, rule, message });
+        }
+    }
+    report.findings.sort_by_key(|f| (f.line, f.rule.id()));
+    report
+}
+
+/// D4 as a pure function, exposed for fixture tests: cross-reference
+/// the registry literals in `policy_src` against each `(path, source)`
+/// coverage file.  Returns *unsuppressed* findings anchored at
+/// `policy_path`; [`check_crate`] applies allow suppression on top.
+pub fn check_registry_coverage(
+    policy_path: &str,
+    policy_src: &str,
+    coverage: &[(&str, &str)],
+) -> Vec<Finding> {
+    let policy = lex(policy_src);
+    let names = rules::registry_names(&policy);
+    let lexed: Vec<(&str, lexer::Lexed)> = coverage.iter().map(|(p, s)| (*p, lex(s))).collect();
+    let refs: Vec<(&str, &lexer::Lexed)> = lexed.iter().map(|(p, l)| (*p, l)).collect();
+    rules::d4_registry_coverage(&names, policy_path, &refs)
+        .into_iter()
+        .map(|(file, line, message)| Finding { file, line, rule: Rule::D4, message })
+        .collect()
+}
+
+/// Deterministic (sorted) recursive walk collecting `.rs` files.
+fn walk_sorted(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_sorted(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole crate rooted at `rust_root` (the directory holding
+/// `src/` and `tests/`): D1–D3 over every file under `src/`, then the
+/// D4 registry cross-reference.  File paths in the report are
+/// `rust_root`-relative (`src/cluster/mod.rs`, ..).
+pub fn check_crate(rust_root: &Path) -> io::Result<LintReport> {
+    let src_dir = rust_root.join("src");
+    let mut files = Vec::new();
+    walk_sorted(&src_dir, &mut files)?;
+
+    let mut report = LintReport::default();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_dir)
+            .expect("walked file under src/")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path)?;
+        let mut file_report = check_source(&rel, &src);
+        let display = format!("src/{rel}");
+        for f in &mut file_report.findings {
+            f.file = display.clone();
+        }
+        for a in &mut file_report.allows {
+            a.file = display.clone();
+        }
+        report.findings.extend(file_report.findings);
+        report.allows.extend(file_report.allows);
+    }
+
+    // D4: registry names vs. coverage test files.
+    const POLICY: &str = "src/cluster/policy.rs";
+    const COVERAGE: [&str; 2] = ["tests/golden_seed.rs", "tests/macro_equivalence.rs"];
+    let policy_src = fs::read_to_string(rust_root.join(POLICY))?;
+    let mut coverage_srcs = Vec::new();
+    for t in COVERAGE {
+        match fs::read_to_string(rust_root.join(t)) {
+            Ok(s) => coverage_srcs.push((t, s)),
+            Err(_) => report.findings.push(Finding {
+                file: t.to_string(),
+                line: 1,
+                rule: Rule::D4,
+                message: format!(
+                    "coverage test file {t} is missing; the registry cross-reference \
+                     cannot hold without it"
+                ),
+            }),
+        }
+    }
+    let coverage: Vec<(&str, &str)> =
+        coverage_srcs.iter().map(|(p, s)| (*p, s.as_str())).collect();
+    for f in check_registry_coverage(POLICY, &policy_src, &coverage) {
+        let allow = report
+            .allows
+            .iter_mut()
+            .find(|a| a.file == POLICY && a.line == f.line && a.rule == Rule::D4);
+        if let Some(a) = allow {
+            a.used = true;
+        } else {
+            report.findings.push(f);
+        }
+    }
+    report.findings.sort_by(|a, b| {
+        a.file.cmp(&b.file).then(a.line.cmp(&b.line)).then_with(|| a.rule.id().cmp(b.rule.id()))
+    });
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_classification() {
+        assert!(sim_scoped("cluster/mod.rs"));
+        assert!(sim_scoped("src/coordinator/migrate.rs"));
+        assert!(sim_scoped("metrics.rs"));
+        assert!(!sim_scoped("cli.rs"));
+        assert!(!sim_scoped("lint/mod.rs"));
+        assert!(wallclock_allowed("main.rs"));
+        assert!(wallclock_allowed("bin/detlint.rs"));
+        assert!(wallclock_allowed("server/pjrt.rs"));
+        assert!(!wallclock_allowed("cluster/mod.rs"));
+    }
+
+    #[test]
+    fn allow_suppresses_on_same_line_only() {
+        let src = "struct S { m: HashMap<u64, u64> }\n\
+                   impl S {\n\
+                   fn a(&self) -> u64 { self.m.values().sum() } // detlint: allow(D1) -- u64 sum, order-insensitive\n\
+                   fn b(&self) -> u64 { self.m.values().count() as u64 }\n\
+                   }\n";
+        let rep = check_source("cluster/x.rs", src);
+        assert_eq!(rep.findings.len(), 1, "{:?}", rep.findings);
+        assert_eq!(rep.findings[0].line, 4);
+        assert_eq!(rep.findings[0].rule, Rule::D1);
+        assert_eq!(rep.allows.len(), 1);
+        assert!(rep.allows[0].used);
+    }
+
+    #[test]
+    fn allow_with_wrong_rule_does_not_suppress() {
+        let src = "fn f(a: f64, b: f64) { a.partial_cmp(&b); } // detlint: allow(D1) -- wrong rule\n";
+        let rep = check_source("sim/x.rs", src);
+        assert_eq!(rep.findings.len(), 1);
+        assert_eq!(rep.findings[0].rule, Rule::D2);
+        assert!(!rep.allows[0].used, "mismatched allow must stay stale");
+    }
+
+    #[test]
+    fn malformed_allows_are_findings() {
+        for bad in [
+            "fn f() {} // detlint: allow(D1)\n",
+            "fn f() {} // detlint: allow(D1) --   \n",
+            "fn f() {} // detlint: allow(D9) -- nope\n",
+            "fn f() {} // detlint: disable(D1) -- nope\n",
+        ] {
+            let rep = check_source("cluster/x.rs", bad);
+            assert_eq!(rep.findings.len(), 1, "{bad:?} -> {:?}", rep.findings);
+            assert_eq!(rep.findings[0].rule, Rule::BadAllow);
+        }
+    }
+
+    #[test]
+    fn rules_scope_by_path() {
+        let d1 = "struct S { m: HashMap<u64, u64> }\n\
+                  impl S { fn f(&self) -> u64 { self.m.values().sum() } }\n";
+        assert!(check_source("cli.rs", d1).findings.is_empty(), "D1 only fires in sim scope");
+        assert!(!check_source("engine/x.rs", d1).findings.is_empty());
+        let d3 = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert!(check_source("main.rs", d3).findings.is_empty(), "main.rs may read the clock");
+        assert!(!check_source("workload.rs", d3).findings.is_empty());
+        assert!(!check_source("cli.rs", d3).findings.is_empty(), "D3 covers non-sim library code");
+    }
+
+    #[test]
+    fn registry_coverage_cross_reference() {
+        let policy = "impl PolicySpec { pub fn names() -> &'static [&'static str] { \
+                      &[\"cascade\", \"vllm\"] } }";
+        let both = "const REGISTRY_COVERAGE: [&str; 2] = [\"cascade\", \"vllm\"];";
+        let one = "const REGISTRY_COVERAGE: [&str; 1] = [\"cascade\"];";
+        assert!(check_registry_coverage("p.rs", policy, &[("a.rs", both), ("b.rs", both)])
+            .is_empty());
+        let f = check_registry_coverage("p.rs", policy, &[("a.rs", both), ("b.rs", one)]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::D4);
+        assert!(f[0].message.contains("vllm") && f[0].message.contains("b.rs"));
+    }
+}

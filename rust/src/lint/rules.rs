@@ -1,0 +1,394 @@
+//! The determinism rules D1–D4.
+//!
+//! Each rule is a pure function over the lexed token stream (plus, for
+//! D4, the registry/test cross-reference inputs) returning raw
+//! findings — `(line, message)` pairs.  Suppression via
+//! `// detlint: allow(..)` annotations happens one layer up, in
+//! [`crate::lint::check_source`], so the rules stay trivially
+//! testable.
+//!
+//! The detectors are deliberately lexical, not semantic — see the
+//! module docs of [`crate::lint`] for the exact approximations and
+//! their known blind spots.
+
+use super::lexer::{Lexed, Tok, TokKind};
+
+/// Map/set methods whose results depend on hash iteration order.
+/// Keyed probes (`get`, `insert`, `remove`, `contains_key`, `entry`,
+/// `len`, `is_empty`) are deterministic and deliberately absent.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Identifiers in `toks` declared with a `HashMap`/`HashSet` type.
+///
+/// Two declaration shapes are recognised (they cover every struct
+/// field, annotated `let`, and function parameter in this crate):
+///
+/// * `name : [path::]HashMap<` / `HashSet<` — type-annotated binding;
+/// * `let [mut] name = [path::]HashMap::new()` (or `::default()` /
+///   `::with_capacity(..)` / `::from(..)`) — inferred binding.
+fn hash_container_names(toks: &[Tok]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if !(t.is_ident("HashMap") || t.is_ident("HashSet")) {
+            continue;
+        }
+        // Walk backward over the `::`-separated path to its start.
+        let mut j = i;
+        while j >= 3
+            && toks[j - 1].is_punct(':')
+            && toks[j - 2].is_punct(':')
+            && toks[j - 3].kind == TokKind::Ident
+        {
+            j -= 3;
+        }
+        // Shape 1: `name : path HashMap <`.
+        if i + 1 < toks.len()
+            && toks[i + 1].is_punct('<')
+            && j >= 2
+            && toks[j - 1].is_punct(':')
+            && !toks[j - 2].is_punct(':')
+            && toks[j - 2].kind == TokKind::Ident
+        {
+            push_unique(&mut names, &toks[j - 2].text);
+            continue;
+        }
+        // Shape 2: `let [mut] name = path HashMap :: ctor`.
+        let is_ctor_call = toks[i + 1..]
+            .iter()
+            .take(3)
+            .enumerate()
+            .all(|(k, t)| match k {
+                0 | 1 => t.is_punct(':'),
+                _ => {
+                    t.kind == TokKind::Ident
+                        && matches!(t.text.as_str(), "new" | "default" | "with_capacity" | "from")
+                }
+            });
+        if is_ctor_call && j >= 2 && toks[j - 1].is_punct('=') && toks[j - 2].kind == TokKind::Ident
+        {
+            let name = &toks[j - 2].text;
+            let let_pos = j.checked_sub(3).map(|k| &toks[k]);
+            let is_let = matches!(let_pos, Some(t) if t.is_ident("let") || t.is_ident("mut"));
+            if is_let {
+                push_unique(&mut names, name);
+            }
+        }
+    }
+    names
+}
+
+fn push_unique(names: &mut Vec<String>, name: &str) {
+    if !names.iter().any(|n| n == name) {
+        names.push(name.to_string());
+    }
+}
+
+/// D1: iteration over a `HashMap`/`HashSet` in simulator scope.
+///
+/// Flags `name.iter()`-style calls (any of [`ITER_METHODS`]) and
+/// `for .. in [&[mut]] [self.]name` loops where `name` was declared as
+/// a hash container in the same file.  Keyed lookups never fire.
+pub fn d1_hash_iteration(lexed: &Lexed) -> Vec<(usize, String)> {
+    let toks = &lexed.toks;
+    let names = hash_container_names(toks);
+    if names.is_empty() {
+        return Vec::new();
+    }
+    let known = |t: &Tok| t.kind == TokKind::Ident && names.iter().any(|n| *n == t.text);
+    let mut findings = Vec::new();
+    for i in 0..toks.len() {
+        // `name . method (`
+        if i + 2 < toks.len()
+            && toks[i].is_punct('.')
+            && i >= 1
+            && known(&toks[i - 1])
+            && toks[i + 1].kind == TokKind::Ident
+            && ITER_METHODS.iter().any(|m| toks[i + 1].text == *m)
+            && toks[i + 2].is_punct('(')
+        {
+            findings.push((
+                toks[i + 1].line,
+                format!(
+                    "hash-order iteration: `{}.{}()` on a HashMap/HashSet in sim scope; \
+                     use BTreeMap/sorted order or justify with an allow annotation",
+                    toks[i - 1].text, toks[i + 1].text
+                ),
+            ));
+        }
+        // `for <pat> in <expr> {` where <expr> reduces to a known name.
+        if toks[i].is_ident("for") {
+            let Some(in_pos) = toks[i + 1..]
+                .iter()
+                .take(24)
+                .position(|t| t.is_ident("in"))
+                .map(|p| i + 1 + p)
+            else {
+                continue;
+            };
+            let Some(body_pos) = toks[in_pos + 1..]
+                .iter()
+                .take(12)
+                .position(|t| t.is_punct('{'))
+                .map(|p| in_pos + 1 + p)
+            else {
+                continue;
+            };
+            let expr: Vec<&Tok> = toks[in_pos + 1..body_pos]
+                .iter()
+                .filter(|t| {
+                    !(t.is_punct('&')
+                        || t.is_punct('(')
+                        || t.is_punct(')')
+                        || t.is_punct('.')
+                        || t.is_ident("mut")
+                        || t.is_ident("self"))
+                })
+                .collect();
+            if let [only] = expr.as_slice() {
+                if known(only) {
+                    findings.push((
+                        only.line,
+                        format!(
+                            "hash-order iteration: `for .. in {}` over a HashMap/HashSet \
+                             in sim scope; use BTreeMap/sorted order or justify with an \
+                             allow annotation",
+                            only.text
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    findings
+}
+
+/// D2: `.partial_cmp(..)` call sites in simulator scope.
+///
+/// Sim-scope float orderings must be NaN-safe (`f64::total_cmp`): a
+/// single NaN under `partial_cmp` silently degrades to `Equal` (or
+/// panics through `unwrap`), and the resulting ordering depends on the
+/// comparison sequence.  Trait *definitions* (`fn partial_cmp`) that
+/// delegate to a total `cmp` are idiomatic and not flagged — the
+/// pattern requires a preceding `.`, i.e. an actual call.
+pub fn d2_partial_cmp(lexed: &Lexed) -> Vec<(usize, String)> {
+    let toks = &lexed.toks;
+    let mut findings = Vec::new();
+    for i in 1..toks.len() {
+        if toks[i].is_ident("partial_cmp")
+            && toks[i - 1].is_punct('.')
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct('(')
+        {
+            findings.push((
+                toks[i].line,
+                "NaN-unsafe float ordering: `.partial_cmp(..)` in sim scope; \
+                 use `f64::total_cmp` (or justify with an allow annotation)"
+                    .to_string(),
+            ));
+        }
+    }
+    findings
+}
+
+/// D3: wall-clock / ambient-entropy access on the simulation path.
+///
+/// Simulated time flows from the event queue and randomness from the
+/// seeded [`crate::sim::Rng`]; `Instant::now`, `SystemTime`,
+/// `thread_rng`, and `from_entropy` all smuggle host state into what
+/// must be a pure function of the seed.
+pub fn d3_wall_clock(lexed: &Lexed) -> Vec<(usize, String)> {
+    let toks = &lexed.toks;
+    let mut findings = Vec::new();
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let hit = match t.text.as_str() {
+            "Instant" => {
+                i + 3 < toks.len()
+                    && toks[i + 1].is_punct(':')
+                    && toks[i + 2].is_punct(':')
+                    && toks[i + 3].is_ident("now")
+            }
+            "SystemTime" | "thread_rng" | "from_entropy" => true,
+            _ => false,
+        };
+        if hit {
+            findings.push((
+                t.line,
+                format!(
+                    "wall-clock/entropy access: `{}` outside main.rs/bin//server/; \
+                     simulation paths must be pure functions of the seed \
+                     (or justify with an allow annotation)",
+                    t.text
+                ),
+            ));
+        }
+    }
+    findings
+}
+
+/// Extract the registry names from `PolicySpec::names()`: the string
+/// literals of the array between the first `[`/`]` pair after
+/// `fn names`.  Returns `(name, line-of-literal)` pairs; empty when
+/// the function is not found (the caller reports that as a finding).
+pub fn registry_names(policy: &Lexed) -> Vec<(String, usize)> {
+    let toks = &policy.toks;
+    let Some(fn_pos) = toks
+        .windows(2)
+        .position(|w| w[0].is_ident("fn") && w[1].is_ident("names"))
+    else {
+        return Vec::new();
+    };
+    // Skip past the signature (whose return type contains a `[`) to
+    // the body, then take the first array literal.
+    let Some(body) = toks[fn_pos..].iter().position(|t| t.is_punct('{')).map(|p| fn_pos + p)
+    else {
+        return Vec::new();
+    };
+    let Some(open) = toks[body..].iter().position(|t| t.is_punct('[')).map(|p| body + p) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for t in &toks[open + 1..] {
+        if t.is_punct(']') {
+            break;
+        }
+        if t.kind == TokKind::Str {
+            out.push((t.text.clone(), t.line));
+        }
+    }
+    out
+}
+
+/// D4: every registry scheduler name must appear as a string literal
+/// in each listed coverage test file, so a newly registered policy
+/// cannot ship without a pinned golden-seed / macro-equivalence entry.
+pub fn d4_registry_coverage(
+    names: &[(String, usize)],
+    policy_path: &str,
+    coverage: &[(&str, &Lexed)],
+) -> Vec<(String, usize, String)> {
+    let mut findings = Vec::new();
+    if names.is_empty() {
+        findings.push((
+            policy_path.to_string(),
+            1,
+            "registry cross-reference: could not locate string literals in \
+             `PolicySpec::names()` — the D4 anchor moved; update the lint"
+                .to_string(),
+        ));
+        return findings;
+    }
+    for (name, line) in names {
+        for (test_path, lexed) in coverage {
+            let present = lexed
+                .toks
+                .iter()
+                .any(|t| t.kind == TokKind::Str && t.text == *name);
+            if !present {
+                findings.push((
+                    policy_path.to_string(),
+                    *line,
+                    format!(
+                        "registry scheduler `{name}` is missing from the coverage list \
+                         in {test_path}; add it so the scheduler's seeded behavior is pinned"
+                    ),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    #[test]
+    fn d1_flags_iteration_not_lookup() {
+        let src = "
+            struct S { m: std::collections::HashMap<u64, u64>, v: Vec<u64> }
+            impl S {
+                fn bad(&self) -> u64 { self.m.values().sum() }
+                fn also_bad(&mut self) { for (k, v) in &self.m { self.use_(k, v); } }
+                fn fine(&self) -> Option<&u64> { self.m.get(&1) }
+                fn vec_ok(&self) -> u64 { self.v.iter().sum() }
+            }";
+        let f = d1_hash_iteration(&lex(src));
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f[0].1.contains("m.values()"));
+        assert!(f[1].1.contains("for .. in m"));
+    }
+
+    #[test]
+    fn d1_sees_let_bindings_and_hashset() {
+        let src = "
+            fn f() {
+                let mut seen = HashSet::new();
+                seen.insert(1);
+                for x in seen.iter() { use_(x); }
+            }";
+        let f = d1_hash_iteration(&lex(src));
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn d1_ignores_strings_and_comments() {
+        let src = "// self.m.values() in a comment\nfn f() -> &'static str { \"m.iter()\" }";
+        assert!(d1_hash_iteration(&lex(src)).is_empty());
+    }
+
+    #[test]
+    fn d2_flags_calls_not_definitions() {
+        let good = "impl PartialOrd for X { fn partial_cmp(&self, o: &X) -> Option<Ordering> \
+                    { Some(self.cmp(o)) } }";
+        assert!(d2_partial_cmp(&lex(good)).is_empty());
+        let bad = "fn f(a: f64, b: f64) { a.partial_cmp(&b).unwrap(); }";
+        assert_eq!(d2_partial_cmp(&lex(bad)).len(), 1);
+    }
+
+    #[test]
+    fn d3_flags_wall_clock_tokens() {
+        let src = "let t = std::time::Instant::now(); let s = SystemTime::now();";
+        assert_eq!(d3_wall_clock(&lex(src)).len(), 2);
+        // `Instant` as a plain type (no ::now) passes — storing one is
+        // not the same as reading the clock.
+        assert!(d3_wall_clock(&lex("fn f(t: Instant) {}")).is_empty());
+    }
+
+    #[test]
+    fn d4_cross_reference() {
+        let policy = lex("pub fn names() -> &'static [&'static str] { &[\"a\", \"b\"] }");
+        let names = registry_names(&policy);
+        assert_eq!(names.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(), ["a", "b"]);
+        let has_both = lex("const C: [&str; 2] = [\"a\", \"b\"];");
+        let missing_b = lex("const C: [&str; 1] = [\"a\"];");
+        assert!(d4_registry_coverage(
+            &names,
+            "policy.rs",
+            &[("t1.rs", &has_both), ("t2.rs", &has_both)]
+        )
+        .is_empty());
+        let f = d4_registry_coverage(
+            &names,
+            "policy.rs",
+            &[("t1.rs", &has_both), ("t2.rs", &missing_b)],
+        );
+        assert_eq!(f.len(), 1);
+        assert!(f[0].2.contains('b') && f[0].2.contains("t2.rs"));
+    }
+}

@@ -134,6 +134,18 @@ fn cmd_sim(args: &Args) {
         "migrations       {} ({} skipped), preemptions {}",
         stats.migrations, stats.migrations_skipped, stats.preemptions
     );
+    if stats.rejected > 0 {
+        println!(
+            "rejected         {} (final length exceeds the routed instance's KV pool)",
+            stats.rejected
+        );
+        for r in &stats.rejections {
+            println!(
+                "                 request {} -> instance {}: needs {} tokens, pool {}",
+                r.request, r.instance, r.final_len, r.pool_tokens
+            );
+        }
+    }
     println!("stages           {:?}", stats.stages.iter().map(|s| s.len()).collect::<Vec<_>>());
     println!("boundaries       {:?}", stats.final_boundaries);
     // Per-instance report: GPU tag, relative capacity, output-token

@@ -44,11 +44,10 @@ impl<E> PartialOrd for Scheduled<E> {
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; invert for earliest-first.
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
+        // `total_cmp` (not `partial_cmp`): event times are finite and
+        // non-negative, but a NaN-total order keeps the heap invariant
+        // unconditionally — detlint rule D2.
+        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 

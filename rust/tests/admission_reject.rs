@@ -1,0 +1,92 @@
+//! Admission-rejection regression (the PR 5 deadlock hazard): on a
+//! fleet whose per-instance KV pool is smaller than a request's final
+//! length (70B at TP2 on H100 pools only ~28K tokens), the oversized
+//! request must be rejected at router admission with a diagnostic —
+//! not parked at the FCFS queue head where it wedges the instance and
+//! the run forever.
+
+use cascade_infer::experiment::Experiment;
+use cascade_infer::workload::Request;
+
+fn trace_with_oversized(oversized_final: u64) -> Vec<Request> {
+    let mut reqs: Vec<Request> = (0..40u64)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.05,
+            input_len: 256 + i * 8,
+            output_len: 64,
+        })
+        .collect();
+    // One sequence whose *final* length can never fit the TP2 slice's
+    // pool, arriving in the middle of the normal traffic.
+    reqs.push(Request {
+        id: 1000,
+        arrival: 0.4,
+        input_len: oversized_final - 10_000,
+        output_len: 10_000,
+    });
+    reqs
+}
+
+fn run(reqs: &[Request]) -> (cascade_infer::metrics::Report, cascade_infer::cluster::RunStats) {
+    Experiment::builder()
+        .fleet("h100:2,tp=2")
+        .model("llama70b")
+        .scheduler("cascade")
+        .trace(reqs.to_vec())
+        .build()
+        .expect("70B TP2 experiment builds")
+        .run()
+}
+
+#[test]
+fn oversized_request_is_rejected_not_wedged() {
+    let reqs = trace_with_oversized(100_000);
+    let (report, stats) = run(&reqs);
+
+    assert_eq!(stats.rejected, 1, "exactly the oversized request is rejected");
+    assert_eq!(stats.rejections.len(), 1);
+    let rej = stats.rejections[0];
+    assert_eq!(rej.request, 1000);
+    assert_eq!(rej.final_len, 100_000);
+    assert!(
+        rej.pool_tokens < rej.final_len,
+        "diagnostic records a pool ({}) the sequence ({}) cannot fit",
+        rej.pool_tokens,
+        rej.final_len
+    );
+
+    // Every normal request still completes: the run terminates (this
+    // test hanging forever was the failure mode) and no head-of-line
+    // request starves behind the oversized one.
+    assert_eq!(report.records.len(), reqs.len() - 1);
+    assert!(report.records.iter().all(|r| r.id != 1000));
+}
+
+#[test]
+fn rejection_path_is_run_to_run_deterministic() {
+    let reqs = trace_with_oversized(100_000);
+    let (r1, s1) = run(&reqs);
+    let (r2, s2) = run(&reqs);
+    assert_eq!(r1.fingerprint(), r2.fingerprint());
+    assert_eq!(s1.rejected, s2.rejected);
+    assert_eq!(s1.rejections, s2.rejections);
+}
+
+#[test]
+fn fitting_requests_are_not_rejected() {
+    // Same fleet, all requests within the pool: nothing is rejected
+    // and every request completes.
+    let reqs: Vec<Request> = (0..40u64)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.05,
+            input_len: 256 + i * 8,
+            output_len: 64,
+        })
+        .collect();
+    let (report, stats) = run(&reqs);
+    assert_eq!(stats.rejected, 0);
+    assert!(stats.rejections.is_empty());
+    assert_eq!(report.records.len(), reqs.len());
+}

@@ -1,0 +1,96 @@
+//! detlint self-coverage: each rule D1–D4 must fire on its seeded
+//! fixture (`tests/lint_fixtures/`), the allow grammar must suppress
+//! (and reject malformed annotations), and the live tree must be
+//! lint-clean with every allow annotation earning its keep.
+
+use cascade_infer::lint::{check_crate, check_registry_coverage, check_source, Rule};
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures").join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+#[test]
+fn d1_fixture_flags_iteration_sites() {
+    let rep = check_source("cluster/fixture.rs", &fixture("d1_hashmap_iter.rs"));
+    assert_eq!(rep.findings.len(), 2, "{:#?}", rep.findings);
+    assert!(rep.findings.iter().all(|f| f.rule == Rule::D1));
+    assert!(rep.findings[0].message.contains("loads.values()"));
+    assert!(rep.findings[1].message.contains("for .. in loads"));
+}
+
+#[test]
+fn d2_fixture_flags_call_site_not_definition() {
+    let rep = check_source("sim/fixture.rs", &fixture("d2_partial_cmp.rs"));
+    assert_eq!(rep.findings.len(), 1, "{:#?}", rep.findings);
+    assert_eq!(rep.findings[0].rule, Rule::D2);
+}
+
+#[test]
+fn d3_fixture_flags_clock_read_and_respects_exemptions() {
+    let src = fixture("d3_wallclock.rs");
+    let rep = check_source("workload.rs", &src);
+    assert_eq!(rep.findings.len(), 1, "{:#?}", rep.findings);
+    assert_eq!(rep.findings[0].rule, Rule::D3);
+    // The same source under an exempt path is clean.
+    assert!(check_source("main.rs", &src).findings.is_empty());
+    assert!(check_source("bin/tool.rs", &src).findings.is_empty());
+}
+
+#[test]
+fn d4_fixture_flags_uncovered_registry_name() {
+    let policy = fixture("d4_policy.rs");
+    let covered = fixture("d4_covered.rs");
+    let missing = fixture("d4_missing.rs");
+    let clean = check_registry_coverage(
+        "cluster/policy.rs",
+        &policy,
+        &[("d4_covered.rs", &covered), ("also_covered.rs", &covered)],
+    );
+    assert!(clean.is_empty(), "{clean:#?}");
+    let findings = check_registry_coverage(
+        "cluster/policy.rs",
+        &policy,
+        &[("d4_covered.rs", &covered), ("d4_missing.rs", &missing)],
+    );
+    assert_eq!(findings.len(), 1, "{findings:#?}");
+    assert_eq!(findings[0].rule, Rule::D4);
+    assert!(findings[0].message.contains("newpolicy"));
+    assert!(findings[0].message.contains("d4_missing.rs"));
+}
+
+#[test]
+fn justified_allow_suppresses() {
+    let rep = check_source("cluster/fixture.rs", &fixture("allow_ok.rs"));
+    assert!(rep.findings.is_empty(), "{:#?}", rep.findings);
+    assert_eq!(rep.allows.len(), 1);
+    assert!(rep.allows[0].used, "the allow must be credited as used");
+}
+
+#[test]
+fn reasonless_allow_is_a_finding_and_does_not_suppress() {
+    let rep = check_source("cluster/fixture.rs", &fixture("allow_missing_reason.rs"));
+    let mut rules: Vec<&str> = rep.findings.iter().map(|f| f.rule.id()).collect();
+    rules.sort_unstable();
+    assert_eq!(rules, ["D1", "allow"], "{:#?}", rep.findings);
+}
+
+#[test]
+fn live_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = check_crate(root).expect("lint the live tree");
+    assert!(
+        report.findings.is_empty(),
+        "unsuppressed detlint findings in the live tree:\n{}",
+        report.findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+    assert!(!report.allows.is_empty(), "the triaged tree carries justified allows");
+    let stale: Vec<String> = report
+        .allows
+        .iter()
+        .filter(|a| !a.used)
+        .map(|a| format!("{}:{}: allow({})", a.file, a.line, a.rule))
+        .collect();
+    assert!(stale.is_empty(), "stale allow annotations (suppress nothing):\n{}", stale.join("\n"));
+}

@@ -15,7 +15,8 @@
 //!    To re-bless after an *intentional* behavior change, delete the
 //!    file, re-run, and commit the regenerated copy.
 
-use cascade_infer::cluster::{run_experiment, ClusterConfig, RunStats, SchedulerKind};
+use cascade_infer::cluster::{run_experiment, ClusterConfig, PolicySpec, RunStats, SchedulerKind};
+use cascade_infer::experiment::Experiment;
 use cascade_infer::gpu::GpuProfile;
 use cascade_infer::metrics::Report;
 use cascade_infer::models::LLAMA_3B;
@@ -23,6 +24,24 @@ use cascade_infer::workload::{generate, Request, ShareGptLike};
 use std::path::Path;
 
 const GOLDEN_PATH: &str = "tests/golden/seed42.txt";
+
+/// Seeded-coverage list, cross-referenced against the `PolicySpec`
+/// registry by detlint rule D4 (and by the assertion test below): a
+/// newly registered scheduler must be added here — and thereby to the
+/// run-to-run bit-identity gate — before it can ship.
+const REGISTRY_COVERAGE: [&str; 11] = [
+    "cascade",
+    "vllm",
+    "sglang",
+    "llumnix",
+    "chain",
+    "nopipeline",
+    "quantity",
+    "memory",
+    "interstage",
+    "rrintra",
+    "sjf",
+];
 
 /// Stable FNV-style fingerprint over every record's exact bit patterns
 /// (shared with the builder-compat regression in `experiment_api.rs`).
@@ -115,6 +134,41 @@ fn golden_seed_checksum_is_order_sensitive() {
     bumped[0].completion += 1e-9;
     let bumped = Report::from_records(bumped);
     assert_ne!(base, checksum(&bumped));
+}
+
+#[test]
+fn registry_coverage_list_matches_registry() {
+    assert_eq!(
+        REGISTRY_COVERAGE.as_slice(),
+        PolicySpec::names(),
+        "REGISTRY_COVERAGE must mirror the PolicySpec registry exactly \
+         (detlint rule D4 cross-references the literals)"
+    );
+}
+
+#[test]
+fn every_registry_scheduler_is_run_to_run_bit_identical() {
+    // The named-scheduler counterpart of the SchedulerKind loop above:
+    // every registry entry (including axis-spec composites without a
+    // SchedulerKind) must be deterministic under its string name.
+    let reqs = generate(&ShareGptLike::default(), 20.0, 150, 7);
+    for name in REGISTRY_COVERAGE {
+        let run = || {
+            Experiment::builder()
+                .instances(4)
+                .scheduler(name)
+                .trace(reqs.clone())
+                .plan_sample(300)
+                .build()
+                .expect("registry experiment builds")
+                .run()
+        };
+        let (r1, s1) = run();
+        let (r2, s2) = run();
+        assert_eq!(r1.records.len(), reqs.len(), "{name} dropped requests");
+        assert_eq!(checksum(&r1), checksum(&r2), "{name} report not bit-identical");
+        assert_eq!(stats_fingerprint(&s1), stats_fingerprint(&s2), "{name} stats diverged");
+    }
 }
 
 #[test]

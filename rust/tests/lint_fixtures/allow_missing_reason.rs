@@ -1,0 +1,14 @@
+// detlint fixture: an allow annotation without a justification is
+// itself a finding AND fails to suppress the underlying violation.
+
+use std::collections::HashMap;
+
+pub struct Counters {
+    per_instance: HashMap<usize, u64>,
+}
+
+impl Counters {
+    pub fn total(&self) -> u64 {
+        self.per_instance.values().sum() // detlint: allow(D1)
+    }
+}

@@ -1,0 +1,14 @@
+// detlint fixture: a D1 violation suppressed by a well-formed,
+// justified allow annotation on the offending line — lints clean.
+
+use std::collections::HashMap;
+
+pub struct Counters {
+    per_instance: HashMap<usize, u64>,
+}
+
+impl Counters {
+    pub fn total(&self) -> u64 {
+        self.per_instance.values().sum() // detlint: allow(D1) -- u64 sum over values; order-insensitive
+    }
+}

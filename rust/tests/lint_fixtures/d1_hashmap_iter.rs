@@ -1,0 +1,28 @@
+// detlint fixture: D1 — hash-order iteration in sim scope.
+// Not compiled; lexed by tests/detlint.rs with a sim-scoped virtual path.
+
+use std::collections::{HashMap, HashSet};
+
+pub struct Tracker {
+    loads: HashMap<u64, u64>,
+}
+
+impl Tracker {
+    // Keyed lookups are fine — none of these may fire.
+    pub fn get(&self, id: u64) -> Option<&u64> {
+        self.loads.get(&id)
+    }
+
+    // VIOLATION: `.values()` visits entries in hash order.
+    pub fn total(&self) -> u64 {
+        self.loads.values().sum()
+    }
+
+    // VIOLATION: `for .. in` over a hash container.
+    pub fn drop_all(&mut self) {
+        let mut seen = HashSet::new();
+        for (id, _) in &self.loads {
+            seen.insert(*id);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+// detlint fixture: D2 — NaN-unsafe float ordering in sim scope.
+// Not compiled; lexed by tests/detlint.rs with a sim-scoped virtual path.
+
+// VIOLATION: `.partial_cmp(..)` call site; a NaN collapses to Equal.
+pub fn earliest(times: &mut Vec<f64>) {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+// A delegating trait definition must NOT fire (no preceding `.`).
+pub struct At(pub u64);
+impl PartialOrd for At {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.0.cmp(&other.0))
+    }
+}
+impl PartialEq for At {
+    fn eq(&self, other: &Self) -> bool {
+        self.0 == other.0
+    }
+}

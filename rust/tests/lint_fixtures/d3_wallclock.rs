@@ -1,0 +1,12 @@
+// detlint fixture: D3 — wall-clock access on the simulation path.
+// Not compiled; lexed by tests/detlint.rs with a non-exempt virtual path.
+
+// VIOLATION: reads the host clock inside simulator code.
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+// Merely naming the type (storing a caller-provided instant) is fine.
+pub fn hold(t: std::time::Instant) -> std::time::Instant {
+    t
+}

@@ -1,0 +1,3 @@
+// detlint fixture: D4 coverage list naming every registry scheduler.
+
+const REGISTRY_COVERAGE: [&str; 3] = ["cascade", "vllm", "newpolicy"];

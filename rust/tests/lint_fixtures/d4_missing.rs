@@ -1,0 +1,3 @@
+// detlint fixture: D4 coverage list missing `newpolicy`.
+
+const REGISTRY_COVERAGE: [&str; 2] = ["cascade", "vllm"];

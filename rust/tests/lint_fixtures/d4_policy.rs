@@ -1,0 +1,11 @@
+// detlint fixture: D4 — a miniature PolicySpec registry.
+// Not compiled; cross-referenced by tests/detlint.rs against the
+// d4_covered.rs / d4_missing.rs coverage fixtures.
+
+pub struct PolicySpec;
+
+impl PolicySpec {
+    pub fn names() -> &'static [&'static str] {
+        &["cascade", "vllm", "newpolicy"]
+    }
+}

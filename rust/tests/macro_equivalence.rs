@@ -17,6 +17,36 @@ use cascade_infer::testutil::for_all;
 use cascade_infer::workload::{Request, WorkloadSpec};
 use cascade_infer::Tokens;
 
+/// Macro-equivalence coverage list, cross-referenced against the
+/// `PolicySpec` registry by detlint rule D4 (and the assertion test
+/// below).  `every_registry_scheduler_is_macro_micro_identical`
+/// iterates `PolicySpec::names()` directly, so coverage is live; the
+/// literal list exists so the static pass can prove it without
+/// executing tests.
+const REGISTRY_COVERAGE: [&str; 11] = [
+    "cascade",
+    "vllm",
+    "sglang",
+    "llumnix",
+    "chain",
+    "nopipeline",
+    "quantity",
+    "memory",
+    "interstage",
+    "rrintra",
+    "sjf",
+];
+
+#[test]
+fn registry_coverage_list_matches_registry() {
+    assert_eq!(
+        REGISTRY_COVERAGE.as_slice(),
+        PolicySpec::names(),
+        "REGISTRY_COVERAGE must mirror the PolicySpec registry exactly \
+         (detlint rule D4 cross-references the literals)"
+    );
+}
+
 /// Everything a run exposes, flattened to a comparable value.
 fn observables(report: &Report, stats: &RunStats) -> (u64, usize, Vec<u64>, Vec<Tokens>, usize) {
     (
