@@ -1,0 +1,60 @@
+//! Predictor-robustness sweep: how cascade's QoE degrades as length
+//! prediction gets worse, and what the mid-flight recovery machinery
+//! (misprediction re-routes, admission escalations) does about it.
+//!
+//! Runs the heavy-tail workload under every predictor family — the
+//! exact oracle, mean-preserving lognormal noise at growing CV,
+//! bucket-classifier confusion, and a rank-only (`ltr`) predictor —
+//! and prints the QoE-vs-accuracy table behind
+//! `sweep --predictors "oracle;noisy:0.2;noisy:0.5;bucket:0.7;ltr:0.8"`.
+//!
+//! ```bash
+//! cargo run --release --example predictor_robustness
+//! ```
+
+use cascade_infer::experiment::Experiment;
+use cascade_infer::metrics::Slo;
+use cascade_infer::workload::{generate, ShareGptLike};
+
+const PREDICTORS: [&str; 6] =
+    ["oracle", "noisy:0.2", "noisy:0.5", "noisy:0.8", "bucket:0.7", "ltr:0.8"];
+
+fn main() {
+    let requests = generate(&ShareGptLike::heavy_tail(), 24.0, 800, 42);
+    let slo = Slo { ttft: 1.0, tpot: 0.1 };
+    println!(
+        "workload: {} heavy-tail requests over {:.1}s, 8 instances, cascade",
+        requests.len(),
+        requests.last().unwrap().arrival
+    );
+    println!(
+        "\n{:<12} {:>7} {:>11} {:>11} {:>9} {:>9} {:>9} {:>9}",
+        "predictor", "SLO%", "mean TTFT", "norm lat.", "migr", "mispred", "reroute", "escal"
+    );
+    for p in PREDICTORS {
+        let (report, stats) = Experiment::builder()
+            .instances(8)
+            .scheduler("cascade")
+            .predictor(p)
+            .trace(requests.clone())
+            .build()
+            .expect("experiment builds")
+            .run();
+        println!(
+            "{:<12} {:>6.1}% {:>10.4}s {:>8.5}s/t {:>9} {:>9} {:>9} {:>9}",
+            p,
+            100.0 * report.slo_attainment(slo),
+            report.mean_ttft(),
+            report.mean_normalized_latency(),
+            stats.migrations,
+            stats.mispredictions,
+            stats.predict_reroutes,
+            stats.predict_escalations
+        );
+    }
+    println!(
+        "\nThe oracle row is the legacy simulator bit-for-bit; rising CV \
+         degrades SLO attainment while re-routes recover sequences that \
+         outgrew their predicted stage mid-flight."
+    );
+}

@@ -196,6 +196,14 @@ fn main() {
         let baseline = std::fs::read_to_string(&baseline_path)
             .unwrap_or_else(|e| panic!("cannot read baseline {baseline_path}: {e}"));
         if BenchReport::parse_value(&baseline, "placeholder") == Some(1.0) {
+            // GitHub Actions surfaces `::warning::` lines as loud
+            // annotations on the run — an unblessed baseline must not
+            // pass silently forever.
+            println!(
+                "::warning title=perf baseline is a placeholder::{baseline_path} still \
+                 carries `placeholder: 1`, so the perf regression gate is NOT running. \
+                 Bless it by committing the fresh --quick BENCH_hotpath.json over it."
+            );
             println!(
                 "baseline {baseline_path} is a placeholder — skipping the regression \
                  gate.  Bless it by committing the fresh {json_path} over it."

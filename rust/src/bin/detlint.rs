@@ -8,7 +8,8 @@
 //! directory) and enforces rules D1–D4 — see the `cascade_infer::lint`
 //! module docs for the rule catalogue and the allow-annotation
 //! grammar.  Exit codes: 0 clean, 1 unsuppressed findings, 2 usage or
-//! I/O error.
+//! I/O error.  `--list-allows` additionally exits 1 when any allow
+//! annotation is stale (suppresses nothing).
 
 use cascade_infer::lint;
 use std::path::PathBuf;
@@ -54,6 +55,18 @@ fn main() -> ExitCode {
         for a in &report.allows {
             let stale = if a.used { "" } else { "  [STALE: suppresses nothing]" };
             println!("{}:{}: allow({}) -- {}{stale}", a.file, a.line, a.rule, a.reason);
+        }
+        // The audit mode is the enforcement point for annotation
+        // hygiene: a stale allow is a failure here (delete it or fix
+        // the detector), while the regular run only warns.
+        let stale = report.allows.iter().filter(|a| !a.used).count();
+        if stale > 0 {
+            eprintln!(
+                "detlint: {stale} stale allow annotation{} — each suppresses nothing; \
+                 remove them (or fix the detector they were written for)",
+                if stale == 1 { "" } else { "s" }
+            );
+            return ExitCode::FAILURE;
         }
         return ExitCode::SUCCESS;
     }

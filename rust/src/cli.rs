@@ -96,9 +96,10 @@ USAGE:
   cascade-infer sim   [--config FILE] [--model NAME] [--gpu H20|L40|H100]
                       [--instances N] [--fleet SPEC] [--rate R] [--requests N]
                       [--seed S] [--scheduler NAME] [--workload NAME]
-                      [--micro-step]
+                      [--predictor P] [--micro-step]
   cascade-infer sweep [--rates R1,R2,..] [--schedulers N1,N2,..]
-                      [--fleets F1;F2;..] [--model NAME] [--gpu H20|L40|H100]
+                      [--fleets F1;F2;..] [--predictors P1;P2;..]
+                      [--model NAME] [--gpu H20|L40|H100]
                       [--instances N] [--requests N] [--seed S]
                       [--workload NAME] [--jobs N]
   cascade-infer plan  [--model NAME] [--instances N] [--requests N] [--seed S]
@@ -119,6 +120,8 @@ RUNNING EXPERIMENTS
               dispatch=roundrobin|leastloaded|stagerouted|shortestfirst
               [,gossip=on|off][,speed=F]
   Workloads:  sharegpt|heavytail|uniformshort|mix|bursty|trace:FILE
+  Predictors: oracle|noisy:CV|bucket:ACC|ltr:PACC (see Length
+              prediction below)
   Fleets:     --fleet describes a heterogeneous fleet as comma-separated
               GPU:COUNT groups, each optionally followed by speed=F
               and/or tp=N options for that group, e.g.
@@ -140,9 +143,38 @@ RUNNING EXPERIMENTS
               commas).  A homogeneous fleet (e.g. `h20:16`, tp=1)
               reproduces --gpu H20 --instances 16 bit-for-bit.
               Unknown option keys are hard errors listing valid keys.
+  Length prediction:
+              The scheduler plans on *predicted* output lengths while
+              execution runs on ground truth, so predictor quality is
+              an experimental axis.  --predictor P (also available as
+              `custom:..,predictor=P` and the config `predictor` key):
+                oracle      perfect foresight — bit-identical to the
+                            pre-predictor simulator (the default)
+                noisy:CV    lognormal multiplicative error with
+                            coefficient of variation CV on the output
+                            length (e.g. noisy:0.5)
+                bucket:ACC  exponential length-bucket classifier that
+                            picks the true bucket with probability ACC
+                            and a neighbor otherwise
+                ltr:PACC    rank-only (learning-to-rank) predictor:
+                            pairwise-accuracy PACC ordering, no
+                            absolute lengths — stages route by rank
+                            quantile, admission falls back to prompt
+                            length
+              Predictions are deterministic per (seed, request id).
+              When a running request outgrows its predicted stage
+              boundary it re-routes once via live KV migration
+              (counted in `re-routes`); an under-predicted request
+              that cannot fit its true length escalates through
+              admission rejection (`escalations`).  `sim` prints the
+              misprediction/recovery counters for non-oracle runs;
+              `sweep --predictors P1;P2;..` grids predictors as an
+              axis and adds SLO%/reroute/mispred columns — the
+              QoE-vs-accuracy robustness table.
   Config:     --config FILE loads an [experiment] section (model, gpu,
               instances, fleet, rate, requests, seed, scheduler,
-              workload); explicit CLI flags override file values.
+              workload, predictor); explicit CLI flags override file
+              values.
   Parallel:   `sweep` cells are independent experiments and run across
               --jobs N worker threads (default: all cores).  The grid
               table is byte-identical for any job count.
@@ -155,13 +187,15 @@ RUNNING EXPERIMENTS
 STATIC ANALYSIS
   `cargo run --release --bin detlint` lints src/ for determinism
   hazards (D1 hash-order iteration, D2 NaN-unsafe partial_cmp, D3
-  wall-clock/entropy in sim paths, D4 registry schedulers missing
-  from the golden-seed/macro-equivalence coverage lists) and exits
-  non-zero on any unsuppressed finding; CI gates on it.  Suppress a
-  finding only with a justified annotation on the offending line:
-  `// detlint: allow(<rule>) -- <reason>`.  `detlint --list-allows`
-  prints the annotation audit trail (stale ones are marked).  See the
-  `cascade_infer::lint` module docs for the rule catalogue.
+  wall-clock/entropy in sim paths, D4 registry schedulers *and
+  predictors* missing from the golden-seed/macro-equivalence coverage
+  lists) and exits non-zero on any unsuppressed finding; CI gates on
+  it.  Suppress a finding only with a justified annotation on the
+  offending line: `// detlint: allow(<rule>) -- <reason>`.
+  `detlint --list-allows` prints the annotation audit trail and fails
+  when any annotation is stale (suppresses nothing) — dead allows
+  must be deleted.  See the `cascade_infer::lint` module docs for the
+  rule catalogue.
 
 PERF BASELINE
   `cargo bench --bench perf_hotpath` prints the hot-path table and
@@ -181,8 +215,11 @@ PERF BASELINE
     cascade-infer sim --fleet h20:6,h100:2 --scheduler cascade --workload heavytail
     cascade-infer sim --fleet h20:4,tp=2,h20:2,tp=4 --model llama70b --workload heavytail
     cascade-infer sim --scheduler custom:layout=planned,refine=memory,balance=rrintra
+    cascade-infer sim --scheduler cascade --predictor noisy:0.5 --workload heavytail
     cascade-infer sweep --rates 8,16,32 --schedulers cascade,vllm,llumnix
     cascade-infer sweep --rates 8,16 --schedulers cascade,vllm --fleets \"h20:8;h20:6,h100:2\"
+    cascade-infer sweep --rates 16 --schedulers cascade,vllm \\
+                        --predictors \"oracle;noisy:0.2;noisy:0.5;bucket:0.7;ltr:0.8\"
 
 `serve` drives the real PJRT-served model end to end.";
 

@@ -12,7 +12,7 @@ use crate::coordinator::balance::{Ask, Bid, PendingPull};
 use crate::coordinator::loadtracker::LoadReport;
 use crate::coordinator::refine::{naive, RangeRefiner, RefineConfig};
 use crate::engine::{MacroStop, Phase};
-use crate::metrics::Report;
+use crate::metrics::{Report, RequestRecord};
 use crate::workload::{LengthHistogram, Request};
 use crate::{InstanceId, RequestId, Time, Tokens};
 
@@ -161,8 +161,7 @@ impl Cluster {
                 self.stats.preemptions += mo.preempted;
                 self.stats.counters.add(i, mo.tokens_emitted);
                 for rec in mo.completed {
-                    self.observed.push((rec.input_len, rec.input_len + rec.output_len));
-                    self.records.push(rec);
+                    self.record_completion(rec);
                 }
                 match mo.stop {
                     MacroStop::Idle => return,
@@ -221,12 +220,33 @@ impl Cluster {
         self.stats.preemptions += outcome.preempted;
         let end = now + outcome.duration;
         for rec in outcome.completed {
-            self.observed.push((rec.input_len, rec.input_len + rec.output_len));
-            self.records.push(rec);
+            self.record_completion(rec);
         }
         self.stats.counters.add(i, outcome.tokens_emitted);
         self.instances[i].tracker.observe_tokens(end, outcome.tokens_emitted);
         Some(end)
+    }
+
+    /// Commit one completed request: the `(input, final)` sample the
+    /// periodic re-plan consumes, the report record, and — under
+    /// non-oracle predictors — the misprediction count (true final
+    /// exceeded the predicted one).  Both completion paths (the engine
+    /// macro stretch and [`Cluster::step_once`]'s per-iteration loop)
+    /// share this helper so their accounting can never drift apart.
+    fn record_completion(&mut self, rec: RequestRecord) {
+        self.observed.push((rec.input_len, rec.input_len + rec.output_len));
+        if !self.predictor.is_oracle() {
+            let req = Request {
+                id: rec.id,
+                arrival: rec.arrival,
+                input_len: rec.input_len,
+                output_len: rec.output_len,
+            };
+            if req.final_len() > self.predictor.predicted_final(&req) {
+                self.stats.mispredictions += 1;
+            }
+        }
+        self.records.push(rec);
     }
 
     /// Start (at most) one iteration on `i`, parking its completion in
@@ -423,10 +443,19 @@ impl Cluster {
             for &(i, f) in self.observed.iter().rev().take(4000) {
                 hist.push(i, f);
             }
-            // Include live sequences so long-runners are represented.
+            // Include live sequences so long-runners are represented —
+            // at the length the *predictor* expects them to reach (a
+            // live sequence's true final is unknowable mid-decode;
+            // under `oracle` this is its current length, the exact
+            // legacy statistic).  Completed requests above enter at
+            // their true lengths: post-hoc observation is legitimate
+            // even in a real system.
             for ins in &self.instances {
                 for sq in ins.engine.running() {
-                    hist.push(sq.req.input_len, sq.current_len());
+                    hist.push(
+                        sq.req.input_len,
+                        self.predictor.replan_live_len(&sq.req, sq.current_len()),
+                    );
                 }
             }
             // Partition over the (possibly heterogeneous) per-instance

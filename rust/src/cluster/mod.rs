@@ -116,10 +116,13 @@
 //! generated tokens, so long-sequence stages gravitate to TP-sharded
 //! instances that can actually hold their KV.  List sharded instances
 //! *last* in the fleet: stages are contiguous in instance order and
-//! the long ranges sit at the end.  Inter-instance KV migration keeps
-//! pricing the base model's per-GPU footprint (a mixed-degree
-//! transfer re-shards in flight; the simplification is noted rather
-//! than modeled).  Fleets with `tp=1` everywhere never touch these
+//! the long ranges sit at the end.  Inter-instance KV migration is
+//! priced from the **sender's** resolved TP slice — a TP4 sender
+//! streams 4x fewer bytes per token than the base model
+//! ([`MigrationManager::set_instance_footprints`]); only the *offline
+//! planner's* [`MigrationCost`] keeps the base-model footprint, a
+//! deliberately conservative bound.  Fleets with `tp=1` everywhere
+//! never touch these
 //! paths — construction and re-planning gate on
 //! [`crate::fleet::FleetSpec::has_tensor_parallel`], and
 //! `tests/tp_fleet.rs` pins fingerprint-equality against the legacy
@@ -135,6 +138,40 @@
 //! keeps the *planner* from creating such stages in the first place;
 //! pick TP degrees so the long-stage instances hold `max_len` if every
 //! request must complete.
+//!
+//! # Prediction & misprediction recovery
+//!
+//! Real systems never know a request's output length up front, so the
+//! policy carries a **length predictor** axis
+//! ([`PolicySpec::resolve`] grammar `predictor=oracle|noisy:CV|`
+//! `bucket:ACC|ltr:PACC` — see [`crate::predict`]).  The split of who
+//! sees what is the whole design:
+//!
+//! * **Predicted lengths** drive every *scheduling* consumer: §3.2
+//!   stage routing and the admission-reject check (`router.rs`),
+//!   shortest-first/least-wait dispatch, the §4.2 planner histogram at
+//!   construction, and the live re-plan's length statistics
+//!   (`driver.rs`).  The `ltr` family is rank-only: routing consumes
+//!   quantiles of its rank score and admission falls back to the
+//!   prompt length — absolute lengths never leak in.
+//! * **True lengths** keep driving *execution*: decode progress, KV
+//!   growth, completion, and the engine's admission of resident
+//!   sequences are untouched, so a bad prediction becomes an
+//!   observable event rather than a silent re-simulation.
+//!
+//! Recovery rides machinery that already exists.  A decode that
+//! outgrows the stage its predicted length routed it to is handed to
+//! the next stage through the ordinary §4.4 bid-ask migration — the
+//! outgrown scan in [`Cluster`]'s post-step hook counts it once per
+//! request in [`RunStats::predict_reroutes`].  An under-prediction
+//! whose true final can never fit the routed instance's KV pool
+//! escalates through the admission-reject path
+//! ([`RunStats::predict_escalations`]) instead of wedging the FCFS
+//! queue head.  Completions whose true final exceeded the prediction
+//! count [`RunStats::mispredictions`].  The `oracle` predictor (the
+//! default) reproduces the legacy consumers expression-for-expression
+//! — `tests/predict.rs` pins fingerprint identity for every registry
+//! scheduler.
 //!
 //! # Determinism invariants
 //!
@@ -159,10 +196,11 @@
 //!   `from_entropy` outside `main.rs`, `bin/`, and the pjrt-gated
 //!   `server/`: simulated time flows from the event queue and
 //!   randomness from the seeded [`crate::sim::Rng`].
-//! * **D4** — every scheduler name in the [`PolicySpec`] registry must
+//! * **D4** — every scheduler name in the [`PolicySpec`] registry and
+//!   every predictor family in the [`crate::predict`] registry must
 //!   appear in the coverage lists of `tests/golden_seed.rs` *and*
-//!   `tests/macro_equivalence.rs`, so a new policy cannot ship with
-//!   its seeded behavior unpinned.
+//!   `tests/macro_equivalence.rs`, so a new policy or predictor cannot
+//!   ship with its seeded behavior unpinned.
 //!
 //! A finding is suppressed only by a justified annotation on the
 //! offending line — `// detlint: allow(<rule>) -- <reason>` — and
@@ -192,6 +230,7 @@ use crate::gpu::{GpuProfile, Topology};
 use crate::kernelmodel::AttentionModel;
 use crate::metrics::{InstanceCounters, Report, RequestRecord};
 use crate::models::ModelProfile;
+use crate::predict::LengthPredictor;
 use crate::qoe::{self, QoeModel};
 use crate::sim::EventQueue;
 use crate::workload::{LengthHistogram, Request};
@@ -372,6 +411,16 @@ pub struct RunStats {
     pub migrations_skipped: u64,
     pub preemptions: u64,
     pub refinements: u64,
+    /// Completions whose true final length exceeded the predicted one
+    /// (always 0 under the `oracle` predictor).
+    pub mispredictions: u64,
+    /// Sequences re-routed after outgrowing their *predicted* stage
+    /// boundary (counted once per request; 0 under `oracle`).
+    pub predict_reroutes: u64,
+    /// Under-predictions rejected at admission: the predicted length
+    /// fit the routed instance's KV pool but the true final never
+    /// could (0 under `oracle`, whose admission check *is* the truth).
+    pub predict_escalations: u64,
     /// Total engine iterations simulated across all instances — the
     /// numerator of the perf harness's iterations-per-wall-second
     /// cluster throughput metric (`BENCH_hotpath.json`).
@@ -421,6 +470,12 @@ pub struct Cluster {
     qoe: QoeModel,
     /// Dispatch policy + shared round-robin counter.
     router: Router,
+    /// Length predictor every scheduling consumer reads request
+    /// lengths through (`oracle` = ground truth, bit-identical legacy).
+    predictor: LengthPredictor,
+    /// Requests already counted in `RunStats::predict_reroutes` — the
+    /// once-per-request gate for misprediction re-routing.
+    rerouted: std::collections::BTreeSet<RequestId>,
     n_requests_total: usize,
     snapshot_marks: Vec<f64>,
     /// Planner kept for periodic re-planning.
@@ -503,9 +558,13 @@ impl Cluster {
                 .collect()
         });
 
-        // Build the stage layout per the scheduler policy.
+        // Build the stage layout per the scheduler policy.  The
+        // planner's histogram is fed *predicted* final lengths — under
+        // `oracle` this is exactly `LengthHistogram::from_requests`
+        // (bit-identical legacy planning).
+        let predictor = LengthPredictor::new(cfg.policy.predictor, cfg.seed, cfg.max_len);
         let sample = &plan_trace[..plan_trace.len().min(cfg.plan_sample)];
-        let hist = LengthHistogram::from_requests(sample, cfg.max_len);
+        let hist = predictor.histogram(sample, cfg.max_len);
         let mig_cost = MigrationCost::new(
             cfg.model.kv_bytes_per_token() as f64,
             topology.intra_node.bytes_per_s(),
@@ -585,7 +644,20 @@ impl Cluster {
             .map(|&b| RangeRefiner::new(qoe_model, b, RefineConfig::default()))
             .collect();
 
-        let migration = MigrationManager::new(cfg.model.kv_bytes_per_token() as f64);
+        let mut migration = MigrationManager::new(cfg.model.kv_bytes_per_token() as f64);
+        if fleet.has_tensor_parallel() {
+            // Price each transfer from the *sender's* resolved TP
+            // slice: a TP4 sender moves 4x fewer bytes per token than
+            // the base model.  TP-free fleets skip the table and keep
+            // the single-footprint legacy path bit-identically.
+            migration.set_instance_footprints(
+                fleet
+                    .instances
+                    .iter()
+                    .map(|spec| spec.model_for(&cfg.model).kv_bytes_per_token() as f64)
+                    .collect(),
+            );
+        }
         let stats = RunStats {
             stages: stages.clone(),
             instance_gpus: fleet.gpu_names(),
@@ -610,6 +682,8 @@ impl Cluster {
             stats,
             qoe: qoe_model,
             router: Router::new(),
+            predictor,
+            rerouted: Default::default(),
             n_requests_total: 0,
             snapshot_marks: vec![0.2, 0.4, 0.6, 0.8],
             planner,
@@ -670,7 +744,7 @@ impl Cluster {
         // does run, re-tighten the bound so a departed long sequence
         // stops triggering it.
         if !last_stage && self.instances[i].engine.max_len_upper() >= hi {
-            let outgrown: Vec<(RequestId, Tokens)> = self.instances[i]
+            let outgrown: Vec<(Request, Tokens)> = self.instances[i]
                 .engine
                 .running()
                 .iter()
@@ -680,14 +754,26 @@ impl Cluster {
                         && !self.migration.is_migrating(s.req.id)
                         && s.remaining() > 8 // not worth moving a nearly-done seq
                 })
-                .map(|s| (s.req.id, s.current_len()))
+                .map(|s| (s.req, s.current_len()))
                 .collect();
             self.instances[i].engine.tighten_len_hint();
-            for (rid, len) in outgrown {
+            for (req, len) in outgrown {
+                // Misprediction recovery: a sequence that grew past its
+                // *predicted* final outlived the stage the predictor
+                // routed it to — the handover below is its re-route.
+                // Counted once per request; under `oracle` current
+                // length never exceeds the true final, so the gate is
+                // never taken.
+                if !self.predictor.is_oracle()
+                    && len > self.predictor.predicted_final(&req)
+                    && self.rerouted.insert(req.id)
+                {
+                    self.stats.predict_reroutes += 1;
+                }
                 let next_stage =
                     self.stage_for_len(len).max(stage + 1).min(self.stages.len() - 1);
                 let candidates = self.stages[next_stage].clone();
-                self.bid_ask_migrate(now, i, rid, len, &candidates);
+                self.bid_ask_migrate(now, i, req.id, len, &candidates);
             }
         }
 

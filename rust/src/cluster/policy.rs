@@ -28,6 +28,8 @@
 //!    survives for existing call sites and converts losslessly via
 //!    `From<SchedulerKind> for PolicySpec`.
 
+use crate::predict::PredictorSpec;
+
 use std::fmt;
 
 /// Stage layout policy (Fig. 14).
@@ -121,6 +123,11 @@ pub struct PolicySpec {
     /// Relative engine speed (1.0 = vLLM-class; Llumnix's newer engine
     /// runs faster — §6.2 Fig. 8).  Seeds `ClusterConfig::engine_speed`.
     pub engine_speed: f64,
+    /// Length predictor every scheduling consumer reads request
+    /// lengths through (`oracle` = ground truth, the legacy default —
+    /// see [`crate::predict`]).  Orthogonal to every other axis: any
+    /// registry scheduler composes with any predictor.
+    pub predictor: PredictorSpec,
 }
 
 /// Error resolving or parsing a policy name.
@@ -147,6 +154,7 @@ impl PolicySpec {
             dispatch: DispatchPolicy::StageRouted,
             gossip: true,
             engine_speed: 1.0,
+            predictor: PredictorSpec::Oracle,
         }
     }
 
@@ -159,6 +167,7 @@ impl PolicySpec {
             dispatch: DispatchPolicy::RoundRobin,
             gossip: false,
             engine_speed: 1.0,
+            predictor: PredictorSpec::Oracle,
         }
     }
 
@@ -240,7 +249,7 @@ impl PolicySpec {
             _ => {
                 return Err(PolicyError(format!(
                     "unknown scheduler `{name}`; valid: {}, or custom:layout=..,refine=..,\
-                     balance=..,dispatch=..[,gossip=on|off][,speed=F]",
+                     balance=..,dispatch=..[,gossip=on|off][,speed=F][,predictor=P]",
                     Self::names().join("|")
                 )))
             }
@@ -315,10 +324,15 @@ impl PolicySpec {
                         || PolicyError(format!("speed `{value}` is not a positive number")),
                     )?;
                 }
+                "predictor" => {
+                    // `noisy:0.5`-style values survive the comma split
+                    // intact — the parameter separator is `:`.
+                    spec.predictor = PredictorSpec::parse(value).map_err(PolicyError)?;
+                }
                 _ => {
                     return Err(PolicyError(format!(
                         "unknown custom axis `{key}`; valid: \
-                         layout|refine|balance|dispatch|gossip|speed"
+                         layout|refine|balance|dispatch|gossip|speed|predictor"
                     )))
                 }
             }
@@ -360,6 +374,9 @@ impl PolicySpec {
         );
         if self.engine_speed != 1.0 {
             s.push_str(&format!(",speed={}", self.engine_speed));
+        }
+        if !self.predictor.is_oracle() {
+            s.push_str(&format!(",predictor={}", self.predictor.name()));
         }
         s
     }
@@ -620,8 +637,36 @@ mod tests {
             "custom:speed=fast",
             "custom:speed=-1.0",
             "custom:engine=v8",
+            "custom:predictor=psychic",
+            "custom:predictor=noisy",
+            "custom:predictor=noisy:fast",
+            "custom:predictor=bucket:1.5",
+            "custom:predictor=ltr:-0.1",
         ] {
             assert!(PolicySpec::resolve(bad).is_err(), "`{bad}` should be rejected");
         }
+    }
+
+    #[test]
+    fn predictor_axis_parses_and_round_trips() {
+        let spec = PolicySpec::resolve("custom:layout=planned,predictor=noisy:0.5").unwrap();
+        assert_eq!(spec.predictor, PredictorSpec::Noisy { cv: 0.5 });
+        assert!(spec.name.contains("predictor=noisy:0.5"), "{}", spec.name);
+        assert_eq!(PolicySpec::resolve(&spec.name).unwrap(), spec);
+        // The `:` parameter separator survives the comma split.
+        let spec = PolicySpec::resolve("custom:predictor=ltr:0.8,dispatch=sjf").unwrap();
+        assert_eq!(spec.predictor, PredictorSpec::Ltr { pacc: 0.8 });
+        assert_eq!(PolicySpec::resolve(&spec.name).unwrap(), spec);
+    }
+
+    #[test]
+    fn every_registry_scheduler_defaults_to_the_oracle_predictor() {
+        for &name in PolicySpec::names() {
+            let spec = PolicySpec::resolve(name).unwrap();
+            assert!(spec.predictor.is_oracle(), "{name} must default to oracle");
+        }
+        // The oracle default serializes away: no predictor axis in the
+        // canonical custom name.
+        assert!(!PolicySpec::cascade().custom_name().contains("predictor"));
     }
 }

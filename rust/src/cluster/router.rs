@@ -19,6 +19,7 @@
 
 use crate::cluster::policy::{BalancePolicy, DispatchPolicy, PolicySpec};
 use crate::coordinator::MigrationManager;
+use crate::predict::LengthPredictor;
 use crate::workload::Request;
 use crate::{InstanceId, Time, Tokens};
 
@@ -33,6 +34,44 @@ use super::Cluster;
 /// bit for bit.
 fn effective_wait(ins: &InstanceState, migration: &MigrationManager) -> f64 {
     (ins.engine.token_load() + migration.inbound_tokens(ins.id)) as f64 / ins.capacity
+}
+
+/// Outstanding work as the *predictor* sees it: each resident sequence
+/// is priced at its predicted final length (never below what it has
+/// already grown to), each queued request at its predicted final, plus
+/// in-flight migration arrivals — capacity-normalized like
+/// [`effective_wait`].  O(resident sequences) rather than O(1), so it
+/// is consulted only for predictors that claim absolute lengths
+/// ([`LengthPredictor::predicts_absolute`]); `oracle` and `ltr`
+/// dispatch keep the legacy observable load, bit for bit.
+fn predicted_wait(
+    ins: &InstanceState,
+    migration: &MigrationManager,
+    predictor: &LengthPredictor,
+) -> f64 {
+    let running: Tokens = ins
+        .engine
+        .running()
+        .iter()
+        .map(|s| predictor.predicted_final(&s.req).max(s.current_len()))
+        .sum();
+    let queued: Tokens = ins.engine.queued().map(|s| predictor.predicted_final(&s.req)).sum();
+    (running + queued + migration.inbound_tokens(ins.id)) as f64 / ins.capacity
+}
+
+/// Dispatch-time wait estimate: predicted outstanding work when the
+/// predictor produces absolute lengths, the legacy observable load
+/// otherwise.
+fn wait_estimate(
+    ins: &InstanceState,
+    migration: &MigrationManager,
+    predictor: &LengthPredictor,
+) -> f64 {
+    if predictor.predicts_absolute() {
+        predicted_wait(ins, migration, predictor)
+    } else {
+        effective_wait(ins, migration)
+    }
 }
 
 /// Index of the stage whose `[lo, hi)` range covers `len` (clamps to
@@ -68,6 +107,7 @@ impl Router {
 
     /// Pick the target instance for an arrival, per the spec's
     /// dispatch axis.
+    #[allow(clippy::too_many_arguments)]
     pub fn route(
         &mut self,
         spec: &PolicySpec,
@@ -76,6 +116,7 @@ impl Router {
         ranges: &[(Tokens, Tokens)],
         instances: &[InstanceState],
         migration: &MigrationManager,
+        predictor: &LengthPredictor,
     ) -> InstanceId {
         match spec.dispatch {
             DispatchPolicy::RoundRobin => self.next_rr() % instances.len(),
@@ -103,17 +144,25 @@ impl Router {
                 // exists.
                 (0..instances.len())
                     .min_by(|&a, &b| {
-                        effective_wait(&instances[a], migration)
-                            .total_cmp(&effective_wait(&instances[b], migration))
+                        wait_estimate(&instances[a], migration, predictor)
+                            .total_cmp(&wait_estimate(&instances[b], migration, predictor))
                     })
                     .expect("cluster has instances")
             }
             DispatchPolicy::StageRouted => {
-                // CascadeInfer: earliest stage covering the prompt
-                // length (§3.2); within the stage, least-loaded member
-                // — except under the Fig. 16 round-robin ablation,
-                // which dispatches regardless of instance load.
-                let s = stage_for_len(ranges, req.input_len);
+                // CascadeInfer: earliest stage covering the routing
+                // length (§3.2) — the prompt length under `oracle`
+                // (legacy behavior, bit-identical), the predicted
+                // *final* length under absolute predictors, or a rank
+                // quantile under `ltr` (which never sees absolute
+                // lengths: rank r maps to stage ⌊r·n⌋).  Within the
+                // stage, least-loaded member — except under the
+                // Fig. 16 round-robin ablation, which dispatches
+                // regardless of instance load.
+                let s = match predictor.stage_rank(req) {
+                    Some(rank) => ((rank * ranges.len() as f64) as usize).min(ranges.len() - 1),
+                    None => stage_for_len(ranges, predictor.route_len(req)),
+                };
                 if spec.balance == BalancePolicy::RoundRobinIntra {
                     stages[s][self.next_rr() % stages[s].len()]
                 } else {
@@ -125,8 +174,8 @@ impl Router {
                     *stages[s]
                         .iter()
                         .min_by(|&&a, &&b| {
-                            effective_wait(&instances[a], migration)
-                                .total_cmp(&effective_wait(&instances[b], migration))
+                            wait_estimate(&instances[a], migration, predictor)
+                                .total_cmp(&wait_estimate(&instances[b], migration, predictor))
                         })
                         .expect("stage has members")
                 }
@@ -145,6 +194,15 @@ impl Cluster {
     /// (reachable through small TP slices, e.g. 70B at TP2 on an H100
     /// pools only ~28K tokens).  Such requests are rejected here with
     /// a diagnostic instead of submitted.
+    ///
+    /// The check reads the length through the policy's predictor
+    /// ([`LengthPredictor::admit_len`]): the true final under `oracle`
+    /// (legacy, bit-identical), the predicted final under absolute
+    /// predictors.  An *under-prediction* that slips past the predicted
+    /// check but whose true final can never fit the pool escalates
+    /// through the same reject path — counted in
+    /// `RunStats::predict_escalations` — instead of wedging the
+    /// instance mid-decode.
     pub(super) fn on_arrival(&mut self, now: Time, req: Request) {
         let target = self.router.route(
             &self.cfg.policy,
@@ -153,21 +211,38 @@ impl Cluster {
             &self.ranges,
             &self.instances,
             &self.migration,
+            &self.predictor,
         );
+        let admit_len = self.predictor.admit_len(&req);
+        if !self.instances[target].engine.can_ever_hold(admit_len) {
+            self.reject(target, req.id, admit_len);
+            return;
+        }
+        // Escalation: the predicted length fit, but the true final
+        // never can.  Under `oracle` `admit_len == final_len`, so this
+        // branch is unreachable and admission is exactly the legacy
+        // single check.
         let final_len = req.final_len();
-        if !self.instances[target].engine.can_ever_hold(final_len) {
-            self.stats.rejected += 1;
-            if self.stats.rejections.len() < super::MAX_REJECTION_DETAILS {
-                self.stats.rejections.push(super::RejectedRequest {
-                    request: req.id,
-                    instance: target,
-                    final_len,
-                    pool_tokens: self.instances[target].engine.kv().capacity_tokens(),
-                });
-            }
+        if admit_len < final_len && !self.instances[target].engine.can_ever_hold(final_len) {
+            self.stats.predict_escalations += 1;
+            self.reject(target, req.id, final_len);
             return;
         }
         self.instances[target].engine.submit(req);
         self.kick(now, target);
+    }
+
+    /// Record an admission rejection (shared by the predicted-length
+    /// check and the under-prediction escalation path).
+    fn reject(&mut self, target: InstanceId, request: crate::RequestId, final_len: Tokens) {
+        self.stats.rejected += 1;
+        if self.stats.rejections.len() < super::MAX_REJECTION_DETAILS {
+            self.stats.rejections.push(super::RejectedRequest {
+                request,
+                instance: target,
+                final_len,
+                pool_tokens: self.instances[target].engine.kv().capacity_tokens(),
+            });
+        }
     }
 }

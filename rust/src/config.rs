@@ -243,6 +243,11 @@ pub struct ExperimentConfig {
     /// (see [`crate::fleet::FleetSpec::parse`], e.g. `"h20:6,h100:2"`).
     /// When set it overrides `instances`/`gpu`.
     pub fleet: Option<String>,
+    /// Optional length predictor (see
+    /// [`crate::predict::PredictorSpec::parse`], e.g. `"noisy:0.5"`).
+    /// When set it overrides the predictor carried by the scheduler
+    /// spec.
+    pub predictor: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -257,6 +262,7 @@ impl Default for ExperimentConfig {
             scheduler: "cascade".into(),
             workload: "sharegpt".into(),
             fleet: None,
+            predictor: None,
         }
     }
 }
@@ -275,6 +281,10 @@ impl ExperimentConfig {
             workload: cfg.get_str("experiment", "workload", &d.workload),
             fleet: cfg
                 .get("experiment", "fleet")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string()),
+            predictor: cfg
+                .get("experiment", "predictor")
                 .and_then(|v| v.as_str())
                 .map(|s| s.to_string()),
         }

@@ -81,6 +81,13 @@ pub fn live_migration_schedule(
 #[derive(Debug, Clone)]
 pub struct MigrationManager {
     pub kv_bytes_per_token: f64,
+    /// Per-instance KV footprint (bytes/token) of the *sender's
+    /// resolved model slice* — on a tensor-parallel instance each rank
+    /// holds `1/tp` of the heads, so the wire transfer per source rank
+    /// is the sliced footprint, not the full-model one.  Empty (the
+    /// default) falls back to `kv_bytes_per_token` for every instance,
+    /// which keeps homogeneous fleets bit-identical to before.
+    per_instance_kv_bytes: Vec<f64>,
     /// Active transfers keyed by request.  `BTreeMap` (not `HashMap`)
     /// so the bandwidth-sharing scans below visit transfers in a
     /// deterministic order — detlint rule D1.
@@ -103,6 +110,7 @@ impl MigrationManager {
     pub fn new(kv_bytes_per_token: f64) -> Self {
         Self {
             kv_bytes_per_token,
+            per_instance_kv_bytes: Vec::new(),
             active: BTreeMap::new(),
             busy: BTreeMap::new(),
             inbound: BTreeMap::new(),
@@ -116,6 +124,21 @@ impl MigrationManager {
 
     pub fn n_active(&self) -> usize {
         self.active.len()
+    }
+
+    /// Install per-instance KV footprints (bytes/token of each
+    /// instance's resolved TP slice), indexed by [`InstanceId`].
+    /// Transfers started afterwards are priced from the *sender's*
+    /// entry.
+    pub fn set_instance_footprints(&mut self, per_instance_kv_bytes: Vec<f64>) {
+        self.per_instance_kv_bytes = per_instance_kv_bytes;
+    }
+
+    /// Bytes/token a transfer out of `from` actually moves: the
+    /// sender's sliced footprint when installed, the base model
+    /// footprint otherwise.
+    fn kv_bytes_for(&self, from: InstanceId) -> f64 {
+        self.per_instance_kv_bytes.get(from).copied().unwrap_or(self.kv_bytes_per_token)
     }
 
     pub fn is_migrating(&self, request: RequestId) -> bool {
@@ -171,7 +194,7 @@ impl MigrationManager {
             .count();
         let bw = link.bytes_per_s() / concurrent as f64;
         let (dur, tokens_moved, stall) =
-            live_migration_schedule(seq_len, self.kv_bytes_per_token, bw, decode_tokens_per_s);
+            live_migration_schedule(seq_len, self.kv_bytes_for(from), bw, decode_tokens_per_s);
         let t = Transfer {
             request,
             from,
@@ -331,6 +354,25 @@ mod tests {
         assert!(!m.sender_busy(1), "receiving != transmitting");
         m.finish(1);
         assert!(!m.sender_busy(0));
+    }
+
+    #[test]
+    fn sender_slice_footprint_prices_the_transfer() {
+        let mut base = MigrationManager::new(KVB);
+        let t_base = base.try_start(0.0, 1, 0, 1, 50_000, LinkKind::NvLink, 0.0, true).unwrap();
+        let mut sliced = MigrationManager::new(KVB);
+        sliced.set_instance_footprints(vec![KVB / 4.0, KVB]);
+        let t_slice = sliced.try_start(0.0, 1, 0, 1, 50_000, LinkKind::NvLink, 0.0, true).unwrap();
+        // A TP4 sender moves a quarter of the bytes -> ~4x faster.
+        let d_base = t_base.finish_at - t_base.started_at;
+        let d_slice = t_slice.finish_at - t_slice.started_at;
+        assert!(d_slice < d_base / 3.0, "base {d_base} slice {d_slice}");
+        // Senders beyond the installed table fall back to the base
+        // footprint, so partial tables stay safe.
+        let mut fallback = MigrationManager::new(KVB);
+        fallback.set_instance_footprints(vec![KVB / 4.0]);
+        let t_fb = fallback.try_start(0.0, 2, 1, 0, 50_000, LinkKind::NvLink, 0.0, true).unwrap();
+        assert!((t_fb.finish_at - t_base.finish_at).abs() < 1e-9);
     }
 
     #[test]

@@ -46,6 +46,7 @@ use crate::fleet::FleetSpec;
 use crate::gpu::{GpuProfile, Topology};
 use crate::metrics::Report;
 use crate::models::{self, ModelProfile};
+use crate::predict::PredictorSpec;
 use crate::workload::{Request, WorkloadSpec};
 use crate::{Time, Tokens};
 
@@ -130,6 +131,9 @@ impl Experiment {
         if let Some(f) = &cfg.fleet {
             b = b.fleet(f);
         }
+        if let Some(p) = &cfg.predictor {
+            b = b.predictor(p);
+        }
         b
     }
 
@@ -151,6 +155,7 @@ pub struct ExperimentBuilder {
     instances: usize,
     scheduler_name: String,
     policy: Option<PolicySpec>,
+    predictor_name: Option<String>,
     rate: f64,
     requests: usize,
     seed: u64,
@@ -179,6 +184,7 @@ impl Default for ExperimentBuilder {
             instances: 16,
             scheduler_name: "cascade".into(),
             policy: None,
+            predictor_name: None,
             rate: 8.0,
             requests: 2000,
             seed: 42,
@@ -242,6 +248,14 @@ impl ExperimentBuilder {
     /// Scheduler by explicit spec.
     pub fn policy(mut self, spec: PolicySpec) -> Self {
         self.policy = Some(spec);
+        self
+    }
+
+    /// Length predictor (`oracle`, `noisy:CV`, `bucket:ACC`,
+    /// `ltr:PACC` — see [`crate::predict`]); overrides whatever the
+    /// scheduler spec carries.  Resolved at `build`.
+    pub fn predictor(mut self, name: &str) -> Self {
+        self.predictor_name = Some(name.to_string());
         self
     }
 
@@ -379,11 +393,14 @@ impl ExperimentBuilder {
             Some(g) => g,
             None => resolve_gpu(&self.gpu_name)?,
         };
-        let policy = match self.policy {
+        let mut policy = match self.policy {
             Some(p) => p,
             None => PolicySpec::resolve(&self.scheduler_name)
                 .map_err(|e| ExperimentError::Policy(e.to_string()))?,
         };
+        if let Some(p) = &self.predictor_name {
+            policy.predictor = PredictorSpec::parse(p).map_err(ExperimentError::Policy)?;
+        }
         let requests = match self.trace {
             Some(t) => t,
             None => {
@@ -620,6 +637,45 @@ mod tests {
             .instances
             .iter()
             .all(|s| s.engine.kv_capacity_tokens == Some(500_000)));
+    }
+
+    #[test]
+    fn predictor_flag_reaches_the_policy_and_overrides_the_spec() {
+        use crate::predict::PredictorSpec;
+        let exp = Experiment::builder()
+            .predictor("noisy:0.3")
+            .requests(5)
+            .build()
+            .unwrap();
+        assert_eq!(exp.cfg.policy.predictor, PredictorSpec::Noisy { cv: 0.3 });
+        // The flag wins over the predictor carried by a custom: spec.
+        let exp = Experiment::builder()
+            .scheduler("custom:layout=flat,predictor=bucket:0.7")
+            .predictor("ltr:0.9")
+            .requests(5)
+            .build()
+            .unwrap();
+        assert_eq!(exp.cfg.policy.predictor, PredictorSpec::Ltr { pacc: 0.9 });
+        // Unknown predictors are hard errors listing the grammar.
+        let e = Experiment::builder().predictor("psychic").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Policy(_)));
+        assert!(e.to_string().contains("noisy"), "{e}");
+    }
+
+    #[test]
+    fn config_file_predictor_feeds_builder() {
+        let cfg = crate::config::Config::parse(
+            "[experiment]\ninstances = 2\nrequests = 10\nrate = 5.0\n\
+             predictor = \"noisy:0.5\"\n",
+        )
+        .unwrap();
+        let ec = ExperimentConfig::from_config(&cfg);
+        assert_eq!(ec.predictor.as_deref(), Some("noisy:0.5"));
+        let exp = Experiment::from_config(&ec).build().unwrap();
+        assert_eq!(
+            exp.cfg.policy.predictor,
+            crate::predict::PredictorSpec::Noisy { cv: 0.5 }
+        );
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod kernelmodel;
 pub mod lint;
 pub mod metrics;
 pub mod models;
+pub mod predict;
 pub mod qoe;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -20,13 +20,15 @@
 //!   the pjrt-gated `server/` — wall-clock and ambient entropy must
 //!   never leak into simulated time.
 //! * **D4** — every scheduler name in the `PolicySpec` registry
-//!   (`cluster/policy.rs`, `fn names`) must appear in the coverage
-//!   lists of both `tests/golden_seed.rs` and
-//!   `tests/macro_equivalence.rs`, so a new policy cannot ship with
-//!   its seeded behavior unpinned.
+//!   (`cluster/policy.rs`, `fn names`) *and* every predictor name in
+//!   the `predict::names()` registry (`predict.rs`) must appear in the
+//!   coverage lists of both `tests/golden_seed.rs` and
+//!   `tests/macro_equivalence.rs`, so a new policy or predictor cannot
+//!   ship with its seeded behavior unpinned.
 //!
 //! Simulator scope is `cluster/`, `coordinator/`, `sim/`, `engine/`,
-//! plus `fleet.rs`, `kernelmodel.rs`, `workload.rs`, `metrics.rs`.
+//! plus `fleet.rs`, `kernelmodel.rs`, `workload.rs`, `metrics.rs`,
+//! `predict.rs`.
 //!
 //! ## Suppression grammar
 //!
@@ -39,9 +41,10 @@
 //!
 //! The reason after `--` is mandatory; a malformed or reason-less
 //! annotation is itself a finding (`allow`).  `detlint --list-allows`
-//! prints the full audit trail; annotations that no longer suppress
-//! anything are marked `STALE` (warning, not failure, so a detector
-//! refinement cannot brick CI).
+//! prints the full audit trail and **exits nonzero when any annotation
+//! is `STALE`** (no longer suppresses anything), so dead allows cannot
+//! linger unaudited.  The regular run reports stale allows as warnings
+//! only, so a detector refinement cannot brick CI.
 //!
 //! ## Honest limits
 //!
@@ -156,7 +159,10 @@ fn scope_rel(rel: &str) -> &str {
 pub fn sim_scoped(rel: &str) -> bool {
     let rel = scope_rel(rel);
     ["cluster/", "coordinator/", "sim/", "engine/"].iter().any(|p| rel.starts_with(p))
-        || matches!(rel, "fleet.rs" | "kernelmodel.rs" | "workload.rs" | "metrics.rs")
+        || matches!(
+            rel,
+            "fleet.rs" | "kernelmodel.rs" | "workload.rs" | "metrics.rs" | "predict.rs"
+        )
 }
 
 /// May `rel` touch the wall clock / ambient entropy (D3 exempt)?
@@ -345,6 +351,21 @@ pub fn check_crate(rust_root: &Path) -> io::Result<LintReport> {
             report.findings.push(f);
         }
     }
+    // D4 again for the length-predictor registry (`predict::names()`),
+    // against the same coverage files.
+    const PREDICT: &str = "src/predict.rs";
+    let predict_src = fs::read_to_string(rust_root.join(PREDICT))?;
+    for f in check_registry_coverage(PREDICT, &predict_src, &coverage) {
+        let allow = report
+            .allows
+            .iter_mut()
+            .find(|a| a.file == PREDICT && a.line == f.line && a.rule == Rule::D4);
+        if let Some(a) = allow {
+            a.used = true;
+        } else {
+            report.findings.push(f);
+        }
+    }
     report.findings.sort_by(|a, b| {
         a.file.cmp(&b.file).then(a.line.cmp(&b.line)).then_with(|| a.rule.id().cmp(b.rule.id()))
     });
@@ -360,6 +381,7 @@ mod tests {
         assert!(sim_scoped("cluster/mod.rs"));
         assert!(sim_scoped("src/coordinator/migrate.rs"));
         assert!(sim_scoped("metrics.rs"));
+        assert!(sim_scoped("predict.rs"));
         assert!(!sim_scoped("cli.rs"));
         assert!(!sim_scoped("lint/mod.rs"));
         assert!(wallclock_allowed("main.rs"));

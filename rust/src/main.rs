@@ -95,6 +95,9 @@ fn builder_from_args(args: &Args) -> ExperimentBuilder {
     if let Some(f) = args.get("fleet") {
         b = b.fleet(f);
     }
+    if let Some(p) = args.get("predictor") {
+        b = b.predictor(p);
+    }
     if args.has_flag("micro-step") {
         b = b.micro_step(true);
     }
@@ -120,6 +123,7 @@ fn cmd_sim(args: &Args) {
         cfg.policy.name
     );
     let has_fleet = cfg.fleet.is_some();
+    let predictor = cfg.policy.predictor;
     let t0 = std::time::Instant::now();
     let (report, stats) = exp.run();
     println!("wall time        {:.2}s", t0.elapsed().as_secs_f64());
@@ -134,6 +138,13 @@ fn cmd_sim(args: &Args) {
         "migrations       {} ({} skipped), preemptions {}",
         stats.migrations, stats.migrations_skipped, stats.preemptions
     );
+    if !predictor.is_oracle() {
+        println!("predictor        {}", predictor.name());
+        println!(
+            "mispredictions   {} (re-routes {}, escalations {})",
+            stats.mispredictions, stats.predict_reroutes, stats.predict_escalations
+        );
+    }
     if stats.rejected > 0 {
         println!(
             "rejected         {} (final length exceeds the routed instance's KV pool)",
@@ -185,6 +196,10 @@ fn cmd_sweep(args: &Args) {
         die("pass either --fleet (one fleet for every cell) or --fleets F1;F2;.. \
              (grid axis), not both");
     }
+    if args.get("predictor").is_some() && args.get("predictors").is_some() {
+        die("pass either --predictor (one predictor for every cell) or \
+             --predictors P1;P2;.. (grid axis), not both");
+    }
     let rates: Vec<f64> = args
         .get_or("rates", "8,16,32")
         .split(',')
@@ -226,6 +241,19 @@ fn cmd_sweep(args: &Args) {
         None => vec![None],
     };
 
+    // The predictor grid axis — the QoE-vs-accuracy robustness sweep,
+    // e.g. `--predictors "oracle;noisy:0.2;noisy:0.5;bucket:0.7;ltr:0.8"`.
+    // Absent -> a single legacy cell (whatever --predictor/config set).
+    let predictors: Vec<Option<String>> = match args.get("predictors") {
+        Some(s) => s
+            .split(';')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(|p| Some(p.to_string()))
+            .collect(),
+        None => vec![None],
+    };
+
     // One resolved builder (config file read, workload parsed) shared
     // by every cell; each cell only overrides rate + scheduler (+
     // fleet when sweeping fleets).  Cells are independent experiments,
@@ -236,6 +264,7 @@ fn cmd_sweep(args: &Args) {
         rates,
         schedulers,
         fleets,
+        predictors,
         jobs: args.get_usize("jobs", sweep::default_jobs()),
     };
     match sweep::run_sweep(&base, &spec) {

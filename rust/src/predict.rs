@@ -1,0 +1,471 @@
+//! Length prediction — scheduling on *predicted* request lengths.
+//!
+//! Every scheduling decision in the cluster historically consumed the
+//! workload generator's ground-truth output length (the "oracle"):
+//! stage routing and the admission guard read `Request::final_len()`,
+//! and the §4.2 planner built its histograms from true final lengths.
+//! Real systems only have predictions — vllm-ltr (arxiv 2408.15792)
+//! shows relative ranking is the practical substitute, and UELLM
+//! (arxiv 2409.14961) schedules on predicted response lengths.  This
+//! module makes the predictor a first-class policy axis so the
+//! robustness question (how fast does length-aware scheduling decay
+//! with predictor accuracy?) is a sweepable experiment.
+//!
+//! Four deterministic, seed-derived predictor families:
+//!
+//! * `oracle` — the legacy default.  Every consumer receives exactly
+//!   the value it read before this subsystem existed (prompt length
+//!   for stage routing, true final length for admission), so runs are
+//!   bit-identical to the pre-predictor cluster.
+//! * `noisy:<cv>` — lognormal multiplicative error on the true output
+//!   length with coefficient of variation `cv` (mean-one error:
+//!   `E[factor] = 1`), the standard "imperfect regressor" model.
+//! * `bucket:<acc>` — histogram-bucket classifier over the planner's
+//!   exponential length buckets: with probability `acc` the true
+//!   bucket, otherwise an adjacent bucket (symmetric confusion);
+//!   predicts the bucket's geometric-mid representative length.
+//! * `ltr:<pacc>` — relative-rank-only predictor (the vllm-ltr
+//!   regime): produces a rank in [0,1] whose fidelity is tuned by
+//!   `pacc` (1.0 preserves the true ordering exactly; lower values
+//!   add rank noise, so pairwise agreement with the true order decays
+//!   monotonically — `pacc` is a monotone knob, not an exactly
+//!   calibrated pairwise-accuracy).  Stage routing consumes the rank
+//!   as a stage quantile and never an absolute length; the admission
+//!   guard falls back to the known prompt length (a rank cannot be
+//!   compared against a KV pool), so under-sized admissions escalate
+//!   through the cluster's reject path.
+//!
+//! **Which layers see what.**  Routing, admission, the planner
+//! histogram, and periodic replans consume *predicted* lengths; engine
+//! execution, completion records, KV growth, and the refinement
+//! observations keep running on *true* lengths.  Mispredictions are
+//! therefore observable events: a decode outgrowing its predicted
+//! stage boundary re-routes through the bid-ask migration machinery,
+//! and an under-predicted admission that could never fit the KV pool
+//! escalates through the admission-reject path (`RunStats` counts all
+//! three: `mispredictions`, `predict_reroutes`, `predict_escalations`).
+//!
+//! **Determinism.**  Predictions are pure functions of
+//! `(request, cluster seed, predictor parameters)` via the same
+//! splitmix-style integer hash the bid-ask jitter uses — no RNG
+//! streams, no state, no iteration order.  The same request always
+//! gets the same prediction, from any call site, in any run.
+
+use crate::workload::{LengthHistogram, Request};
+use crate::{RequestId, Tokens};
+
+/// Canonical predictor family names — the D4 registry anchor: every
+/// name listed here must appear in the golden-seed and
+/// macro-equivalence coverage lists (`detlint` cross-references them).
+pub fn names() -> [&'static str; 4] {
+    ["oracle", "noisy", "bucket", "ltr"]
+}
+
+/// The predictor grammar, shared by every error message and USAGE.
+pub const GRAMMAR: &str = "oracle|noisy:CV|bucket:ACC|ltr:PACC";
+
+/// Declarative predictor selection — parsed from CLI/config strings,
+/// carried on [`crate::cluster::PolicySpec`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PredictorSpec {
+    /// Ground-truth lengths (bit-identical legacy behaviour).
+    Oracle,
+    /// Lognormal multiplicative error on the output length.
+    Noisy { cv: f64 },
+    /// Exponential-bucket classifier with symmetric adjacent confusion.
+    Bucket { acc: f64 },
+    /// Relative-rank-only predictor (rank fidelity knob `pacc`).
+    Ltr { pacc: f64 },
+}
+
+impl Default for PredictorSpec {
+    fn default() -> Self {
+        PredictorSpec::Oracle
+    }
+}
+
+impl PredictorSpec {
+    /// Parse `oracle`, `noisy:CV`, `bucket:ACC`, or `ltr:PACC`
+    /// (case-insensitive; parameters validated, never silently
+    /// clamped).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let t = s.trim().to_ascii_lowercase();
+        let (head, param) = match t.split_once(':') {
+            Some((h, p)) => (h, Some(p.trim())),
+            None => (t.as_str(), None),
+        };
+        let number = |p: Option<&str>, example: &str| -> Result<f64, String> {
+            let raw = p.ok_or_else(|| {
+                format!("predictor `{head}` needs a parameter, e.g. `{head}:{example}`")
+            })?;
+            let v: f64 = raw
+                .parse()
+                .map_err(|_| format!("bad `{head}` parameter `{raw}` (want a number)"))?;
+            if !v.is_finite() {
+                return Err(format!("bad `{head}` parameter `{raw}` (must be finite)"));
+            }
+            Ok(v)
+        };
+        match head {
+            "oracle" => match param {
+                None => Ok(PredictorSpec::Oracle),
+                Some(p) => Err(format!("`oracle` takes no parameter (got `:{p}`)")),
+            },
+            "noisy" => {
+                let cv = number(param, "0.5")?;
+                if cv < 0.0 {
+                    return Err(format!("noisy CV must be >= 0 (got {cv})"));
+                }
+                Ok(PredictorSpec::Noisy { cv })
+            }
+            "bucket" => {
+                let acc = number(param, "0.7")?;
+                if !(0.0..=1.0).contains(&acc) {
+                    return Err(format!("bucket accuracy must be in [0, 1] (got {acc})"));
+                }
+                Ok(PredictorSpec::Bucket { acc })
+            }
+            "ltr" => {
+                let pacc = number(param, "0.8")?;
+                if !(0.0..=1.0).contains(&pacc) {
+                    return Err(format!("ltr pairwise accuracy must be in [0, 1] (got {pacc})"));
+                }
+                Ok(PredictorSpec::Ltr { pacc })
+            }
+            _ => Err(format!("unknown predictor `{s}`; valid: {GRAMMAR}")),
+        }
+    }
+
+    /// Canonical name (round-trips through [`Self::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            PredictorSpec::Oracle => "oracle".into(),
+            PredictorSpec::Noisy { cv } => format!("noisy:{cv}"),
+            PredictorSpec::Bucket { acc } => format!("bucket:{acc}"),
+            PredictorSpec::Ltr { pacc } => format!("ltr:{pacc}"),
+        }
+    }
+
+    pub fn is_oracle(&self) -> bool {
+        matches!(self, PredictorSpec::Oracle)
+    }
+}
+
+/// A materialised predictor: spec + cluster seed + context cap.
+/// Stateless and pure — every method is a deterministic function of
+/// the request alone.
+#[derive(Debug, Clone)]
+pub struct LengthPredictor {
+    spec: PredictorSpec,
+    seed: u64,
+    max_len: Tokens,
+    /// Exponential bucket bounds (the §4.2 planner's log-buckets),
+    /// precomputed for the `bucket` classifier.
+    bounds: Vec<Tokens>,
+}
+
+impl LengthPredictor {
+    pub fn new(spec: PredictorSpec, seed: u64, max_len: Tokens) -> Self {
+        let max_len = max_len.max(2);
+        Self { spec, seed, max_len, bounds: LengthHistogram::exponential_bounds(max_len) }
+    }
+
+    pub fn spec(&self) -> &PredictorSpec {
+        &self.spec
+    }
+
+    pub fn is_oracle(&self) -> bool {
+        self.spec.is_oracle()
+    }
+
+    /// True for families producing absolute length estimates usable in
+    /// load arithmetic (`noisy`, `bucket`).  The oracle is excluded on
+    /// purpose: its consumers must execute the exact legacy
+    /// expressions, and `ltr` exposes only ranks.
+    pub fn predicts_absolute(&self) -> bool {
+        matches!(self.spec, PredictorSpec::Noisy { .. } | PredictorSpec::Bucket { .. })
+    }
+
+    /// Splitmix-style per-request hash (the bid-ask jitter idiom) —
+    /// the sole entropy source, derived from `(seed, request id,
+    /// salt)`.
+    fn mix(&self, id: RequestId, salt: u64) -> u64 {
+        let mut h = (self.seed ^ salt)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(id.wrapping_mul(0xFF51_AFD7_ED55_8CCD));
+        h ^= h >> 33;
+        h = h.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+        h ^= h >> 29;
+        h
+    }
+
+    /// Uniform draw in (0, 1), strictly inside the open interval.
+    fn unit(&self, id: RequestId, salt: u64) -> f64 {
+        ((self.mix(id, salt) >> 11) as f64 + 0.5) / (1u64 << 53) as f64
+    }
+
+    /// Standard normal draw (Box–Muller over two hash uniforms).
+    fn gauss(&self, id: RequestId, salt: u64) -> f64 {
+        let u1 = self.unit(id, salt);
+        let u2 = self.unit(id, salt ^ 0xA5A5_A5A5_A5A5_A5A5);
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    fn bucket_of(&self, len: Tokens) -> usize {
+        let n = self.bounds.len();
+        match self.bounds.binary_search(&len) {
+            Ok(i) => (i + 1).min(n - 1),
+            Err(i) => i.min(n - 1),
+        }
+    }
+
+    /// Predicted *final* sequence length (prompt + predicted output).
+    /// The oracle returns the true final length; every other family
+    /// derives its estimate from the seeded hash.  Clamped to
+    /// `[input_len + 1, max_len]`.
+    pub fn predicted_final(&self, req: &Request) -> Tokens {
+        match self.spec {
+            PredictorSpec::Oracle => req.final_len(),
+            PredictorSpec::Noisy { cv } => {
+                // Lognormal with E[factor] = 1: sigma^2 = ln(1 + cv^2),
+                // factor = exp(sigma z - sigma^2 / 2).
+                let sigma2 = (1.0 + cv * cv).ln();
+                let sigma = sigma2.sqrt();
+                let z = self.gauss(req.id, 0x6E6F_6973_79);
+                let factor = (sigma * z - 0.5 * sigma2).exp();
+                let out = ((req.output_len as f64) * factor).round().max(1.0) as Tokens;
+                self.clamp_final(req, req.input_len + out)
+            }
+            PredictorSpec::Bucket { acc } => {
+                let k = self.bucket_of(req.final_len());
+                let u = self.unit(req.id, 0x6275_636B_6574);
+                let n = self.bounds.len();
+                let k = if u < acc {
+                    k
+                } else if u < acc + (1.0 - acc) * 0.5 {
+                    k.saturating_sub(1)
+                } else {
+                    (k + 1).min(n - 1)
+                };
+                let lo = if k == 0 { 1 } else { self.bounds[k - 1] };
+                let hi = self.bounds[k];
+                let rep = ((lo as f64) * (hi as f64)).sqrt().round() as Tokens;
+                self.clamp_final(req, req.input_len.max(rep).max(req.input_len + 1))
+            }
+            PredictorSpec::Ltr { pacc } => {
+                // The rank maps back through the log-length scale only
+                // for observability consumers (planner histogram,
+                // misprediction counters) — routing consumes the rank
+                // itself via `stage_rank`, admission the prompt length.
+                let p = self.rank_value(req, pacc);
+                let f = (p * (self.max_len as f64).ln()).exp().round() as Tokens;
+                self.clamp_final(req, f.max(req.input_len + 1))
+            }
+        }
+    }
+
+    fn clamp_final(&self, req: &Request, f: Tokens) -> Tokens {
+        f.clamp((req.input_len + 1).min(self.max_len), self.max_len)
+    }
+
+    /// Noisy log-percentile of the true final length in [0, 1].
+    fn rank_value(&self, req: &Request, pacc: f64) -> f64 {
+        let p_true = (req.final_len().max(1) as f64).ln() / (self.max_len as f64).ln();
+        let sigma = 2.0 * (1.0 - pacc).clamp(0.0, 1.0);
+        let z = self.gauss(req.id, 0x6C74_72);
+        (p_true + sigma * z).clamp(0.0, 1.0)
+    }
+
+    /// Rank-only stage quantile: `Some(rank)` for `ltr`, `None` for
+    /// families the stage router keys by length.
+    pub fn stage_rank(&self, req: &Request) -> Option<f64> {
+        match self.spec {
+            PredictorSpec::Ltr { pacc } => Some(self.rank_value(req, pacc)),
+            _ => None,
+        }
+    }
+
+    /// Length the stage router keys on.  The oracle preserves the
+    /// legacy prompt-length key exactly (bit-identity); predictive
+    /// families route on the predicted final length so a stage covers
+    /// the request's full expected extent.
+    pub fn route_len(&self, req: &Request) -> Tokens {
+        match self.spec {
+            PredictorSpec::Oracle => req.input_len,
+            _ => self.predicted_final(req),
+        }
+    }
+
+    /// Length the admission guard checks against the KV pool.  The
+    /// oracle keeps the legacy true final length; `ltr` knows only
+    /// ranks, so admission falls back to the known prompt length (the
+    /// cluster's escalation path catches what that lets through).
+    pub fn admit_len(&self, req: &Request) -> Tokens {
+        match self.spec {
+            PredictorSpec::Oracle => req.final_len(),
+            PredictorSpec::Ltr { .. } => req.input_len,
+            _ => self.predicted_final(req),
+        }
+    }
+
+    /// The live-sequence length a periodic replan feeds its histogram:
+    /// legacy observable progress under the oracle, the predicted
+    /// final (never less than observed progress) otherwise.
+    pub fn replan_live_len(&self, req: &Request, current: Tokens) -> Tokens {
+        if self.is_oracle() {
+            current
+        } else {
+            self.predicted_final(req).max(current)
+        }
+    }
+
+    /// Planner histogram over a trace sample: the oracle path is the
+    /// exact legacy constructor; predictive families bin by predicted
+    /// final length (prompt features stay true — they are known at
+    /// arrival).
+    pub fn histogram(&self, reqs: &[Request], max_len: Tokens) -> LengthHistogram {
+        if self.is_oracle() {
+            return LengthHistogram::from_requests(reqs, max_len);
+        }
+        let mut h = LengthHistogram::new(LengthHistogram::exponential_bounds(max_len));
+        for r in reqs {
+            h.push(r.input_len, self.predicted_final(r));
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: RequestId, input: Tokens, output: Tokens) -> Request {
+        Request { id, arrival: 0.0, input_len: input, output_len: output }
+    }
+
+    #[test]
+    fn parse_accepts_every_family_and_round_trips() {
+        for (s, want) in [
+            ("oracle", PredictorSpec::Oracle),
+            ("NOISY:0.5", PredictorSpec::Noisy { cv: 0.5 }),
+            ("bucket:0.7", PredictorSpec::Bucket { acc: 0.7 }),
+            ("ltr:0.8", PredictorSpec::Ltr { pacc: 0.8 }),
+            ("noisy:0", PredictorSpec::Noisy { cv: 0.0 }),
+        ] {
+            let spec = PredictorSpec::parse(s).unwrap();
+            assert_eq!(spec, want, "{s}");
+            assert_eq!(PredictorSpec::parse(&spec.name()).unwrap(), spec, "{s} round-trip");
+        }
+        assert_eq!(names().len(), 4);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "psychic",
+            "noisy",
+            "noisy:",
+            "noisy:fast",
+            "noisy:-0.5",
+            "noisy:inf",
+            "bucket:1.5",
+            "bucket:-0.1",
+            "ltr:2.0",
+            "oracle:0.5",
+            "",
+        ] {
+            assert!(PredictorSpec::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn oracle_reproduces_legacy_values_exactly() {
+        let p = LengthPredictor::new(PredictorSpec::Oracle, 42, 131_072);
+        let r = req(7, 120, 900);
+        assert_eq!(p.predicted_final(&r), r.final_len());
+        assert_eq!(p.route_len(&r), r.input_len);
+        assert_eq!(p.admit_len(&r), r.final_len());
+        assert_eq!(p.replan_live_len(&r, 300), 300);
+        assert_eq!(p.stage_rank(&r), None);
+        assert!(p.is_oracle() && !p.predicts_absolute());
+    }
+
+    #[test]
+    fn predictions_are_pure_functions_of_request_and_seed() {
+        let a = LengthPredictor::new(PredictorSpec::Noisy { cv: 0.5 }, 42, 131_072);
+        let b = LengthPredictor::new(PredictorSpec::Noisy { cv: 0.5 }, 42, 131_072);
+        let c = LengthPredictor::new(PredictorSpec::Noisy { cv: 0.5 }, 43, 131_072);
+        let mut diverged = false;
+        for id in 0..64 {
+            let r = req(id, 64 + id, 200 + 3 * id);
+            assert_eq!(a.predicted_final(&r), b.predicted_final(&r), "same seed, same value");
+            diverged |= a.predicted_final(&r) != c.predicted_final(&r);
+        }
+        assert!(diverged, "a different seed must perturb at least one prediction");
+    }
+
+    #[test]
+    fn noisy_zero_cv_predicts_the_true_final_length() {
+        let p = LengthPredictor::new(PredictorSpec::Noisy { cv: 0.0 }, 42, 131_072);
+        for id in 0..32 {
+            let r = req(id, 50 + id, 100 + 7 * id);
+            assert_eq!(p.predicted_final(&r), r.final_len());
+        }
+    }
+
+    #[test]
+    fn noisy_errors_are_bounded_and_two_sided() {
+        let p = LengthPredictor::new(PredictorSpec::Noisy { cv: 0.5 }, 42, 131_072);
+        let (mut under, mut over) = (0, 0);
+        for id in 0..256 {
+            let r = req(id, 100, 1000);
+            let f = p.predicted_final(&r);
+            assert!(f > r.input_len && f <= 131_072);
+            if f < r.final_len() {
+                under += 1;
+            }
+            if f > r.final_len() {
+                over += 1;
+            }
+        }
+        assert!(under > 20 && over > 20, "multiplicative noise must cut both ways ({under}/{over})");
+    }
+
+    #[test]
+    fn bucket_at_full_accuracy_lands_in_the_true_bucket() {
+        let p = LengthPredictor::new(PredictorSpec::Bucket { acc: 1.0 }, 42, 131_072);
+        for id in 0..64 {
+            let r = req(id, 10, 40 + 97 * id);
+            let f = p.predicted_final(&r);
+            assert_eq!(
+                p.bucket_of(f),
+                p.bucket_of(r.final_len()),
+                "acc=1 must classify request {id} into its true bucket"
+            );
+        }
+    }
+
+    #[test]
+    fn ltr_at_full_pairwise_accuracy_preserves_order() {
+        let p = LengthPredictor::new(PredictorSpec::Ltr { pacc: 1.0 }, 42, 131_072);
+        let short = req(1, 50, 100);
+        let long = req(2, 50, 20_000);
+        let (rs, rl) = (p.stage_rank(&short).unwrap(), p.stage_rank(&long).unwrap());
+        assert!(rs < rl, "true order must survive at pacc=1 ({rs} vs {rl})");
+        assert!((0.0..=1.0).contains(&rs) && (0.0..=1.0).contains(&rl));
+        // Rank-only family: admission sees the prompt, not a guess.
+        assert_eq!(p.admit_len(&long), long.input_len);
+    }
+
+    #[test]
+    fn predicted_histogram_matches_legacy_under_oracle() {
+        let reqs: Vec<Request> = (0..100).map(|i| req(i, 64 + i, 100 + 13 * i)).collect();
+        let p = LengthPredictor::new(PredictorSpec::Oracle, 42, 131_072);
+        let a = p.histogram(&reqs, 131_072);
+        let b = LengthHistogram::from_requests(&reqs, 131_072);
+        assert_eq!(a.count, b.count);
+        assert_eq!(a.sum_final, b.sum_final);
+        let noisy = LengthPredictor::new(PredictorSpec::Noisy { cv: 1.0 }, 42, 131_072);
+        assert_eq!(noisy.histogram(&reqs, 131_072).total(), 100);
+    }
+}

@@ -14,6 +14,8 @@
 use crate::cluster::{run_experiment, ClusterConfig, PolicySpec};
 use crate::experiment::ExperimentBuilder;
 use crate::fleet::FleetSpec;
+use crate::metrics::Slo;
+use crate::predict::PredictorSpec;
 use crate::workload::Request;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -28,6 +30,13 @@ pub struct SweepSpec {
     /// Fleet grid axis; `[None]` is the single legacy (homogeneous
     /// `--gpu`/`--instances`) cell.
     pub fleets: Vec<Option<String>>,
+    /// Length-predictor grid axis (`oracle`, `noisy:CV`, `bucket:ACC`,
+    /// `ltr:PACC`); `[None]` is the single legacy cell running
+    /// whatever predictor the scheduler spec carries.  When any entry
+    /// is set, the table gains predictor, SLO-attainment, re-route,
+    /// and misprediction columns — the QoE-vs-accuracy robustness
+    /// result.
+    pub predictors: Vec<Option<String>>,
     /// Worker threads; clamped to the cell count, minimum 1.
     pub jobs: usize,
 }
@@ -46,6 +55,7 @@ struct Cell {
     rate_idx: usize,
     fleet: Option<String>,
     scheduler: String,
+    predictor: Option<String>,
     cfg: ClusterConfig,
 }
 
@@ -61,15 +71,25 @@ pub fn run_sweep(base: &ExperimentBuilder, spec: &SweepSpec) -> Result<String, S
             "--fleets needs at least one fleet, e.g. --fleets \"h20:4;h20:2,h100:2\"".into(),
         );
     }
-    // Fail fast on any unresolvable scheduler or fleet *before*
-    // running grid cells.
+    if spec.predictors.is_empty() {
+        return Err(
+            "--predictors needs at least one predictor, e.g. --predictors \"oracle;noisy:0.5\""
+                .into(),
+        );
+    }
+    // Fail fast on any unresolvable scheduler, fleet, or predictor
+    // *before* running grid cells.
     for name in &spec.schedulers {
         PolicySpec::resolve(name).map_err(|e| e.to_string())?;
     }
     for f in spec.fleets.iter().flatten() {
         FleetSpec::parse(f)?;
     }
+    for p in spec.predictors.iter().flatten() {
+        PredictorSpec::parse(p)?;
+    }
     let fleet_col = spec.fleets.iter().any(Option::is_some);
+    let pred_col = spec.predictors.iter().any(Option::is_some);
 
     // Materialise every cell serially: one shared workload per rate
     // (identical trace across that rate's schedulers and fleets —
@@ -86,18 +106,27 @@ pub fn run_sweep(base: &ExperimentBuilder, spec: &SweepSpec) -> Result<String, S
         let probe = vec![shared[0]];
         for fleet in &spec.fleets {
             for name in &spec.schedulers {
-                let mut b = base.clone().rate(rate).scheduler(name).trace(probe.clone());
-                if let Some(f) = fleet {
-                    b = b.fleet(f);
+                // Predictor varies fastest, so rows group by scheduler
+                // — the QoE-vs-accuracy robustness table reads per
+                // scheduler top to bottom.
+                for predictor in &spec.predictors {
+                    let mut b = base.clone().rate(rate).scheduler(name).trace(probe.clone());
+                    if let Some(f) = fleet {
+                        b = b.fleet(f);
+                    }
+                    if let Some(p) = predictor {
+                        b = b.predictor(p);
+                    }
+                    let exp = b.build().map_err(|e| e.to_string())?;
+                    cells.push(Cell {
+                        rate,
+                        rate_idx: traces.len(),
+                        fleet: fleet.clone(),
+                        scheduler: name.clone(),
+                        predictor: predictor.clone(),
+                        cfg: exp.cfg,
+                    });
                 }
-                let exp = b.build().map_err(|e| e.to_string())?;
-                cells.push(Cell {
-                    rate,
-                    rate_idx: traces.len(),
-                    fleet: fleet.clone(),
-                    scheduler: name.clone(),
-                    cfg: exp.cfg,
-                });
             }
         }
         traces.push(shared);
@@ -112,17 +141,32 @@ pub fn run_sweep(base: &ExperimentBuilder, spec: &SweepSpec) -> Result<String, S
             String::new()
         }
     };
+    // Likewise the predictor column, plus the robustness suffix
+    // columns (SLO attainment + recovery counters), only when the
+    // predictor axis is actually in play — legacy sweeps render
+    // byte-identical tables.
+    let pred_cell = |label: &str| -> String {
+        if pred_col {
+            format!("{label:<12} ")
+        } else {
+            String::new()
+        }
+    };
     let mut table = format!(
-        "{:<6} {}{:<42} {:>10} {:>10} {:>10} {:>11} {:>8}",
+        "{:<6} {}{:<42} {}{:>10} {:>10} {:>10} {:>11} {:>8}",
         "rate",
         fleet_cell("fleet"),
         "scheduler",
+        pred_cell("predictor"),
         "TTFT",
         "TPOT",
         "p95TPOT",
         "tok/s",
         "migr"
     );
+    if pred_col {
+        table.push_str(&format!(" {:>7} {:>8} {:>7}", "SLO%", "reroute", "mispred"));
+    }
 
     // Run the cells across scoped workers; each slot is claimed once
     // through the cursor and filled in place, so assembly order (and
@@ -139,17 +183,25 @@ pub fn run_sweep(base: &ExperimentBuilder, spec: &SweepSpec) -> Result<String, S
                 }
                 let cell = &cells[i];
                 let (r, stats) = run_experiment(cell.cfg.clone(), &traces[cell.rate_idx]);
-                let row = format!(
-                    "{:<6.1} {}{:<42} {:>9.4}s {:>9.5}s {:>9.5}s {:>11.1} {:>8}",
+                let mut row = format!(
+                    "{:<6.1} {}{:<42} {}{:>9.4}s {:>9.5}s {:>9.5}s {:>11.1} {:>8}",
                     cell.rate,
                     fleet_cell(cell.fleet.as_deref().unwrap_or("-")),
                     cell.scheduler,
+                    pred_cell(cell.predictor.as_deref().unwrap_or("-")),
                     r.mean_ttft(),
                     r.mean_tpot(),
                     r.p95_tpot(),
                     r.throughput_tokens_per_s(),
                     stats.migrations
                 );
+                if pred_col {
+                    let slo = 100.0 * r.slo_attainment(Slo { ttft: 1.0, tpot: 0.1 });
+                    row.push_str(&format!(
+                        " {:>6.1}% {:>8} {:>7}",
+                        slo, stats.predict_reroutes, stats.mispredictions
+                    ));
+                }
                 rows.lock().expect("no poisoned sweep rows")[i] = Some(row);
             });
         }
@@ -176,6 +228,7 @@ mod tests {
             rates: vec![8.0, 16.0],
             schedulers: vec!["cascade".into(), "vllm".into()],
             fleets: vec![None],
+            predictors: vec![None],
             jobs,
         }
     }
@@ -210,6 +263,7 @@ mod tests {
             rates: vec![8.0],
             schedulers: vec!["cascade".into()],
             fleets: vec![None, Some("h20:2,h100:2".into())],
+            predictors: vec![None],
             jobs: 2,
         };
         let table = run_sweep(&base, &spec).unwrap();
@@ -230,5 +284,34 @@ mod tests {
         let mut spec = tiny_spec(1);
         spec.rates.clear();
         assert!(run_sweep(&base, &spec).is_err());
+        let mut spec = tiny_spec(1);
+        spec.predictors = vec![Some("psychic".into())];
+        assert!(run_sweep(&base, &spec).is_err());
+        let mut spec = tiny_spec(1);
+        spec.predictors.clear();
+        assert!(run_sweep(&base, &spec).is_err());
+    }
+
+    #[test]
+    fn predictor_axis_renders_robustness_columns() {
+        // The tentpole deliverable shape: a QoE-vs-accuracy table with
+        // predictor, SLO-attainment, and recovery-counter columns.
+        let base = tiny_base();
+        let mut spec = tiny_spec(2);
+        spec.rates = vec![10.0];
+        spec.schedulers = vec!["cascade".into()];
+        spec.predictors = vec![Some("oracle".into()), Some("noisy:0.5".into())];
+        let table = run_sweep(&base, &spec).unwrap();
+        let header = table.lines().next().unwrap();
+        assert!(header.contains("predictor"));
+        assert!(header.contains("SLO%"));
+        assert!(header.contains("reroute"));
+        assert!(header.contains("mispred"));
+        assert_eq!(table.lines().count(), 1 + 2);
+        assert!(table.contains("oracle"));
+        assert!(table.contains("noisy:0.5"));
+        // Legacy spec (predictor axis unset) must not grow the table.
+        let legacy = run_sweep(&base, &tiny_spec(1)).unwrap();
+        assert!(!legacy.lines().next().unwrap().contains("predictor"));
     }
 }

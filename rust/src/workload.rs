@@ -308,10 +308,46 @@ pub fn save_csv(path: &str, reqs: &[Request]) -> std::io::Result<()> {
     Ok(())
 }
 
-/// Load a trace saved by [`save_csv`].
+/// Save a trace with a side-band predicted final length per request
+/// (`id,arrival,input_len,output_len,predicted_len`).  The prediction
+/// rides as an extra column rather than a [`Request`] field so the
+/// scheduler-visible request type stays ground truth only; [`load_csv`]
+/// reads these files too (ignoring the column), so prediction traces
+/// stay drop-in everywhere a plain trace is accepted.
+pub fn save_csv_predicted(
+    path: &str,
+    reqs: &[Request],
+    predicted: &[Tokens],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    if reqs.len() != predicted.len() {
+        return Err(invalid_spec(&format!(
+            "predicted_len column has {} entries for {} requests",
+            predicted.len(),
+            reqs.len()
+        )));
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "id,arrival,input_len,output_len,predicted_len")?;
+    for (r, p) in reqs.iter().zip(predicted) {
+        writeln!(f, "{},{:.6},{},{},{}", r.id, r.arrival, r.input_len, r.output_len, p)?;
+    }
+    Ok(())
+}
+
+/// Load a trace saved by [`save_csv`] or [`save_csv_predicted`],
+/// discarding any predicted-length column.
 pub fn load_csv(path: &str) -> std::io::Result<Vec<Request>> {
+    Ok(load_csv_predicted(path)?.0)
+}
+
+/// Load a trace plus its optional predicted-length column: rows from a
+/// [`save_csv_predicted`] file yield `Some(predicted_len)`, legacy
+/// 4-column rows yield `None`.
+pub fn load_csv_predicted(path: &str) -> std::io::Result<(Vec<Request>, Vec<Option<Tokens>>)> {
     let text = std::fs::read_to_string(path)?;
     let mut out = Vec::new();
+    let mut predicted = Vec::new();
     for (i, line) in text.lines().enumerate() {
         if i == 0 && line.starts_with("id,") {
             continue;
@@ -325,9 +361,14 @@ pub fn load_csv(path: &str) -> std::io::Result<Vec<Request>> {
         let arrival = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
         let input_len = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
         let output_len = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
+        // Optional 5th column; present -> it must parse.
+        predicted.push(match parts.next().map(str::trim).filter(|s| !s.is_empty()) {
+            Some(s) => Some(s.parse().map_err(|_| parse_err())?),
+            None => None,
+        });
         out.push(Request { id, arrival, input_len, output_len });
     }
-    Ok(out)
+    Ok((out, predicted))
 }
 
 /// Distribution summary used by planning: histogram of request counts
@@ -481,6 +522,60 @@ mod tests {
             assert_eq!(a.output_len, b.output_len);
             assert!((a.arrival - b.arrival).abs() < 1e-5);
         }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn predicted_csv_round_trips() {
+        let reqs = generate(&ShareGptLike::default(), 5.0, 48, 23);
+        let preds: Vec<Tokens> = reqs.iter().map(|r| r.final_len() + 10).collect();
+        let path = std::env::temp_dir().join("cascade_predicted_trace.csv");
+        let path = path.to_str().unwrap();
+        save_csv_predicted(path, &reqs, &preds).unwrap();
+        let (back, back_preds) = load_csv_predicted(path).unwrap();
+        assert_eq!(back, {
+            // Arrivals round through `{:.6}` formatting; compare the
+            // integer fields exactly and arrivals approximately.
+            let mut expect = reqs.clone();
+            for (e, b) in expect.iter_mut().zip(back.iter()) {
+                assert!((e.arrival - b.arrival).abs() < 1e-5);
+                e.arrival = b.arrival;
+            }
+            expect
+        });
+        assert_eq!(back_preds, preds.iter().map(|&p| Some(p)).collect::<Vec<_>>());
+        // The legacy loader accepts the 5-column file, dropping the
+        // prediction column.
+        let plain = load_csv(path).unwrap();
+        assert_eq!(plain.len(), reqs.len());
+        assert_eq!(plain[0].output_len, reqs[0].output_len);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn legacy_four_column_traces_load_with_no_predictions() {
+        let reqs = generate(&ShareGptLike::default(), 5.0, 16, 29);
+        let path = std::env::temp_dir().join("cascade_legacy_trace.csv");
+        let path = path.to_str().unwrap();
+        save_csv(path, &reqs).unwrap();
+        let (back, preds) = load_csv_predicted(path).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        assert!(preds.iter().all(Option::is_none));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn predicted_csv_rejects_bad_inputs() {
+        let reqs = generate(&ShareGptLike::default(), 5.0, 4, 31);
+        let path = std::env::temp_dir().join("cascade_predicted_bad.csv");
+        let path = path.to_str().unwrap();
+        // Mismatched column length never writes a file.
+        assert!(save_csv_predicted(path, &reqs, &[1, 2]).is_err());
+        // A malformed predicted_len cell is a hard parse error, not a
+        // silent None.
+        std::fs::write(path, "id,arrival,input_len,output_len,predicted_len\n0,0.5,10,20,oops\n")
+            .unwrap();
+        assert!(load_csv_predicted(path).is_err());
         std::fs::remove_file(path).ok();
     }
 

@@ -20,6 +20,7 @@ use cascade_infer::experiment::Experiment;
 use cascade_infer::gpu::GpuProfile;
 use cascade_infer::metrics::Report;
 use cascade_infer::models::LLAMA_3B;
+use cascade_infer::predict;
 use cascade_infer::workload::{generate, Request, ShareGptLike};
 use std::path::Path;
 
@@ -42,6 +43,24 @@ const REGISTRY_COVERAGE: [&str; 11] = [
     "rrintra",
     "sjf",
 ];
+
+/// Predictor-family coverage, cross-referenced against the
+/// `predict::names()` registry by detlint rule D4: a newly registered
+/// predictor must be added here — and to the bit-identity gate below —
+/// before it can ship.
+const PREDICTOR_COVERAGE: [&str; 4] = ["oracle", "noisy", "bucket", "ltr"];
+
+/// A concrete parametrisation for each predictor family, so the
+/// coverage gate exercises real (non-degenerate) prediction noise.
+fn predictor_instance(family: &str) -> &'static str {
+    match family {
+        "oracle" => "oracle",
+        "noisy" => "noisy:0.5",
+        "bucket" => "bucket:0.7",
+        "ltr" => "ltr:0.8",
+        other => panic!("unknown predictor family {other}"),
+    }
+}
 
 /// Stable FNV-style fingerprint over every record's exact bit patterns
 /// (shared with the builder-compat regression in `experiment_api.rs`).
@@ -168,6 +187,47 @@ fn every_registry_scheduler_is_run_to_run_bit_identical() {
         assert_eq!(r1.records.len(), reqs.len(), "{name} dropped requests");
         assert_eq!(checksum(&r1), checksum(&r2), "{name} report not bit-identical");
         assert_eq!(stats_fingerprint(&s1), stats_fingerprint(&s2), "{name} stats diverged");
+    }
+}
+
+#[test]
+fn predictor_coverage_list_matches_registry() {
+    assert_eq!(
+        PREDICTOR_COVERAGE,
+        predict::names(),
+        "PREDICTOR_COVERAGE must mirror the predict::names() registry \
+         exactly (detlint rule D4 cross-references the literals)"
+    );
+}
+
+#[test]
+fn every_registry_predictor_is_run_to_run_bit_identical() {
+    // Prediction noise is seed-derived, so a fixed (seed, config,
+    // trace, predictor) quadruple must reproduce bit-for-bit — reports
+    // *and* the misprediction/recovery counters.
+    let reqs = generate(&ShareGptLike::default(), 20.0, 150, 7);
+    for family in PREDICTOR_COVERAGE {
+        let p = predictor_instance(family);
+        let run = || {
+            Experiment::builder()
+                .instances(4)
+                .scheduler("cascade")
+                .predictor(p)
+                .trace(reqs.clone())
+                .plan_sample(300)
+                .build()
+                .expect("predictor experiment builds")
+                .run()
+        };
+        let (r1, s1) = run();
+        let (r2, s2) = run();
+        assert_eq!(checksum(&r1), checksum(&r2), "{p} report not bit-identical");
+        assert_eq!(stats_fingerprint(&s1), stats_fingerprint(&s2), "{p} stats diverged");
+        assert_eq!(
+            (s1.mispredictions, s1.predict_reroutes, s1.predict_escalations),
+            (s2.mispredictions, s2.predict_reroutes, s2.predict_escalations),
+            "{p} recovery counters diverged"
+        );
     }
 }
 

@@ -12,6 +12,7 @@
 use cascade_infer::cluster::{PolicySpec, RunStats};
 use cascade_infer::experiment::Experiment;
 use cascade_infer::metrics::Report;
+use cascade_infer::predict;
 use cascade_infer::sim::Rng;
 use cascade_infer::testutil::for_all;
 use cascade_infer::workload::{Request, WorkloadSpec};
@@ -45,6 +46,60 @@ fn registry_coverage_list_matches_registry() {
         "REGISTRY_COVERAGE must mirror the PolicySpec registry exactly \
          (detlint rule D4 cross-references the literals)"
     );
+}
+
+/// Predictor-family coverage, cross-referenced against the
+/// `predict::names()` registry by detlint rule D4; exercised by
+/// `every_registry_predictor_is_macro_micro_identical`.
+const PREDICTOR_COVERAGE: [&str; 4] = ["oracle", "noisy", "bucket", "ltr"];
+
+#[test]
+fn predictor_coverage_list_matches_registry() {
+    assert_eq!(
+        PREDICTOR_COVERAGE,
+        predict::names(),
+        "PREDICTOR_COVERAGE must mirror the predict::names() registry \
+         exactly (detlint rule D4 cross-references the literals)"
+    );
+}
+
+#[test]
+fn every_registry_predictor_is_macro_micro_identical() {
+    // Prediction reshapes routing, admission, and replanning, but it
+    // must stay a *decision* change: the macro-stepped driver and the
+    // one-event-per-iteration debug path still see identical decisions,
+    // so reports and stats stay bit-identical under every predictor —
+    // including the misprediction re-route/escalation recovery paths.
+    let wl = WorkloadSpec::parse("heavytail").unwrap();
+    for p in ["oracle", "noisy:0.5", "bucket:0.7", "ltr:0.8"] {
+        let build = |micro: bool| {
+            Experiment::builder()
+                .instances(4)
+                .scheduler("cascade")
+                .predictor(p)
+                .workload(wl.clone())
+                .rate(12.0)
+                .requests(140)
+                .seed(11)
+                .plan_sample(400)
+                .micro_step(micro)
+                .build()
+                .expect("predictor equivalence experiment builds")
+                .run()
+        };
+        let (r_macro, s_macro) = build(false);
+        let (r_micro, s_micro) = build(true);
+        assert_eq!(
+            observables(&r_macro, &s_macro),
+            observables(&r_micro, &s_micro),
+            "predictor {p}: macro and micro drivers diverged"
+        );
+        assert_eq!(
+            (s_macro.mispredictions, s_macro.predict_reroutes, s_macro.predict_escalations),
+            (s_micro.mispredictions, s_micro.predict_reroutes, s_micro.predict_escalations),
+            "predictor {p}: recovery counters diverged"
+        );
+    }
 }
 
 /// Everything a run exposes, flattened to a comparable value.
