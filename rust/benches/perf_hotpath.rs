@@ -188,6 +188,51 @@ fn main() {
     report.push("cluster_sim_8x_heavytail_micro_iters_per_s", micro_ips);
     report.push("cluster_sim_8x_heavytail_macro_speedup", macro_ips / micro_ips);
 
+    // Planet-scale fleet cell: 1000 instances through the full planned
+    // stack (offline DP, staged routing, gossip/refine timers).  The
+    // calendar event queue and arena storage are what keep this cell's
+    // per-event cost flat as the fleet grows.
+    println!("\n=== planet-scale cells ===");
+    let (n_fleet, rate_fleet) = if quick { (3_000, 400.0) } else { (20_000, 600.0) };
+    let (dt, iters, _) =
+        cluster_run("cascade", WorkloadSpec::HeavyTail, 1000, rate_fleet, n_fleet, 7, false);
+    println!(
+        "1000x heavytail cascade: {n_fleet} requests, {iters} engine iterations \
+         in {dt:.2}s = {:.0} iters/s",
+        iters as f64 / dt
+    );
+    report.push("cluster_sim_1000x_heavytail_iters_per_s", iters as f64 / dt);
+    report.push("cluster_sim_1000x_heavytail_wall_s", dt);
+
+    // Streaming-workload cell: arrivals pulled lazily, trace never
+    // materialized (full size: 1M requests).  Short contexts keep the
+    // simulated token volume bounded so the cell measures driver
+    // overhead per request, not decode pricing.
+    let n_stream = if quick { 50_000 } else { 1_000_000 };
+    let exp = Experiment::builder()
+        .gpu("H20")
+        .instances(16)
+        .scheduler("cascade")
+        .workload_name("uniformshort")
+        .rate(600.0)
+        .requests(n_stream)
+        .seed(7)
+        .build_streaming()
+        .expect("streaming bench builds");
+    let t0 = Instant::now();
+    let (rep, stats) = exp.run().expect("streaming bench runs");
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(rep.records.len(), n_stream, "streaming bench dropped requests");
+    println!(
+        "16x uniformshort streaming: {n_stream} requests in {dt:.2}s = {:.0} reqs/s \
+         (peak in-flight {} of {} total)",
+        n_stream as f64 / dt,
+        stats.arena_high_water,
+        n_stream
+    );
+    report.push("cluster_sim_stream_reqs_per_s", n_stream as f64 / dt);
+    report.push("cluster_sim_stream_peak_in_flight", stats.arena_high_water as f64);
+
     std::fs::write(&json_path, report.to_json()).expect("write bench json");
     println!("\nwrote {json_path}");
 
@@ -221,6 +266,22 @@ fn main() {
                  skipping the regression gate; re-bless with a same-size run."
             );
             return;
+        }
+        // Per-metric drift report: one `::notice::` annotation per key
+        // shared with the baseline, so trends (not just the gated
+        // headline) are visible on every CI run without downloading
+        // artifacts.  The `quick` field is a run-size tag, not a
+        // metric, and keys new in this run have no baseline to diff.
+        for (k, v) in &report.entries {
+            if k == "quick" {
+                continue;
+            }
+            if let Some(b) = BenchReport::parse_value(&baseline, k) {
+                let delta = if b.abs() > f64::EPSILON { (v - b) / b * 100.0 } else { 0.0 };
+                println!("::notice title=perf delta::{k}: {v:.2} vs baseline {b:.2} ({delta:+.1}%)");
+            } else {
+                println!("::notice title=perf delta::{k}: {v:.2} (no baseline entry yet)");
+            }
         }
         let key = "cluster_sim_8x_heavytail_iters_per_s";
         let base = BenchReport::parse_value(&baseline, key)

@@ -96,7 +96,7 @@ USAGE:
   cascade-infer sim   [--config FILE] [--model NAME] [--gpu H20|L40|H100]
                       [--instances N] [--fleet SPEC] [--rate R] [--requests N]
                       [--seed S] [--scheduler NAME] [--workload NAME]
-                      [--predictor P] [--micro-step]
+                      [--predictor P] [--micro-step] [--stream]
   cascade-infer sweep [--rates R1,R2,..] [--schedulers N1,N2,..]
                       [--fleets F1;F2;..] [--predictors P1;P2;..]
                       [--model NAME] [--gpu H20|L40|H100]
@@ -178,6 +178,20 @@ RUNNING EXPERIMENTS
   Parallel:   `sweep` cells are independent experiments and run across
               --jobs N worker threads (default: all cores).  The grid
               table is byte-identical for any job count.
+  Streaming:  `sim --stream` never materializes the request trace:
+              arrivals are pulled lazily from the workload generator
+              (or read row-by-row from a trace:FILE replay), so
+              resident memory is O(instances + in-flight requests)
+              instead of O(requests) — this is how multi-million-
+              request, 1000-instance fleets fit in RAM.  Reports are
+              bit-identical to the default materialized run over the
+              same spec (CI pins this across every registry
+              scheduler); the offline planner sees the same head
+              prefix either way.  `sim --stream` additionally prints
+              the arena high-water mark — the measured peak of
+              simultaneously-live requests.  Trace replays must be
+              sorted by arrival time (gen-trace output always is);
+              unsorted traces need the materialized path.
   Debugging:  `sim --micro-step` drives every engine iteration through
               its own queue event (the pre-macro-step hot loop).
               Reports are bit-identical to the default macro-stepped
@@ -200,15 +214,25 @@ STATIC ANALYSIS
 PERF BASELINE
   `cargo bench --bench perf_hotpath` prints the hot-path table and
   writes machine-readable `BENCH_hotpath.json` (ops/s per hot path,
-  cluster-sim simulated-iterations per wall-second).  Flags after `--`:
-  `--quick` (CI-sized runs), `--json PATH`, and `--check BASELINE.json`
-  which exits non-zero if cluster-sim throughput regressed >30% (use
-  `--tolerance F` to adjust).  The gate only compares runs whose size
-  matches the baseline's recorded `quick` field — quick and full runs
-  are not comparable.  CI runs the check against the committed baseline
-  at rust/benches/baseline/BENCH_hotpath.json and uploads the fresh
-  JSON as an artifact; to re-bless after an intentional change, copy
-  the (--quick) artifact over the committed baseline.
+  cluster-sim simulated-iterations per wall-second, a 1000-instance
+  fleet cell, and a streaming-replay requests-per-second cell).  Flags
+  after `--`: `--quick` (CI-sized runs), `--json PATH`, and
+  `--check BASELINE.json` which exits non-zero if cluster-sim
+  throughput regressed >30% (use `--tolerance F` to adjust) and prints
+  a per-metric delta line for every key shared with the baseline.  The
+  gate only compares runs whose size matches the baseline's recorded
+  `quick` field — quick and full runs are not comparable.
+  Blessing procedure (after an intentional perf change):
+    1. push the change and let CI's bench step upload its fresh
+       `BENCH_hotpath.json` artifact (a --quick run on the CI runner —
+       local full-size numbers are NOT comparable to it), or run
+       `cargo bench --bench perf_hotpath -- --quick --json out.json`
+       on a comparable machine;
+    2. review the per-metric deltas the `--check` step printed, and
+       say in the PR why the regression is intended;
+    3. copy the quick JSON over the committed baseline at
+       rust/benches/baseline/BENCH_hotpath.json and commit it with
+       the change — never hand-edit individual numbers.
 
   Examples:
     cascade-infer sim --rate 16 --scheduler cascade --workload heavytail

@@ -49,11 +49,108 @@ pub(super) enum Event {
 
 impl Cluster {
     /// Run the full workload; returns the report and run stats.
+    ///
+    /// Arrivals ride the event queue's reserved *front-class* seq lane
+    /// ([`crate::sim::EventQueue::schedule_front_class`]): scheduled
+    /// here, before any timer or runtime event, they carried the
+    /// globally smallest insertion seqs under the single-lane queue
+    /// too, so the lane changes nothing — but it lets
+    /// [`Cluster::run_stream`] schedule arrivals lazily with the exact
+    /// same tie-break rank.
     pub fn run(mut self, requests: &[Request]) -> (Report, RunStats) {
         self.n_requests_total = requests.len();
         for r in requests {
-            self.events.schedule(r.arrival, Event::Arrival(*r));
+            self.events.schedule_front_class(r.arrival, Event::Arrival(*r));
         }
+        self.schedule_timers();
+
+        let mut guard: u64 = 0;
+        while let Some((now, ev)) = self.events.pop() {
+            guard += 1;
+            assert!(guard < 500_000_000, "cluster event loop runaway");
+            self.dispatch(now, ev);
+            // Stop once all requests completed (or were rejected at
+            // admission) and only periodic timers remain in the queue.
+            if self.all_done(self.n_requests_total) {
+                break;
+            }
+        }
+        self.finish()
+    }
+
+    /// Run a lazily generated workload: exactly one pending `Arrival`
+    /// event exists at any time, so resident memory is O(instances +
+    /// in-flight requests) instead of O(trace length).
+    ///
+    /// Bit-identity with [`Cluster::run`] on the same request sequence
+    /// holds because (a) the next arrival is scheduled *before* the
+    /// popped one dispatches, so every macro-stretch horizon
+    /// ([`crate::sim::EventQueue::peek_time`]) and same-instant
+    /// tie-break sees the earliest unpopped arrival exactly as the
+    /// fully scheduled queue does (later arrivals can never be the
+    /// minimum while an earlier one is pending), and (b) lazily
+    /// scheduled arrivals draw the same front-class seqs 0,1,2,... they
+    /// would have drawn up front.  This requires non-decreasing arrival
+    /// times (asserted) — replay unsorted traces through the
+    /// materialized path instead.
+    ///
+    /// `n_requests_total` is the full stream length (it anchors the
+    /// Fig. 1 snapshot-mark progress fractions); pass the generator's
+    /// request count or [`crate::workload::count_csv_rows`].
+    pub fn run_stream<I>(mut self, mut arrivals: I, n_requests_total: usize) -> (Report, RunStats)
+    where
+        I: Iterator<Item = Request>,
+    {
+        self.n_requests_total = n_requests_total;
+        let mut delivered: usize = 0;
+        let mut last_arrival: Time = 0.0;
+        if let Some(r) = arrivals.next() {
+            last_arrival = r.arrival;
+            self.events.schedule_front_class(r.arrival, Event::Arrival(r));
+            delivered = 1;
+        }
+        let mut stream_done = delivered == 0;
+        self.schedule_timers();
+
+        let mut guard: u64 = 0;
+        while let Some((now, ev)) = self.events.pop() {
+            guard += 1;
+            assert!(guard < 500_000_000, "cluster event loop runaway");
+            // Pull the next arrival in *before* dispatching this one,
+            // so the queue state the handler observes matches the
+            // pre-scheduled path.
+            if matches!(ev, Event::Arrival(_)) && !stream_done {
+                match arrivals.next() {
+                    Some(r) => {
+                        assert!(
+                            r.arrival >= last_arrival,
+                            "run_stream requires non-decreasing arrival times \
+                             (got {} after {last_arrival}); replay unsorted \
+                             traces through Cluster::run",
+                            r.arrival
+                        );
+                        last_arrival = r.arrival;
+                        self.events.schedule_front_class(r.arrival, Event::Arrival(r));
+                        delivered += 1;
+                    }
+                    None => stream_done = true,
+                }
+            }
+            self.dispatch(now, ev);
+            // Same break instant as the materialized loop: with the
+            // stream exhausted, `delivered` is the full request count.
+            if stream_done && self.all_done(delivered) {
+                break;
+            }
+        }
+        self.finish()
+    }
+
+    /// Schedule the periodic timers (gossip / refine / replan /
+    /// baseline rebalance) — after the initial arrival scheduling, so
+    /// their normal-lane seqs follow both driver entry points
+    /// identically.
+    fn schedule_timers(&mut self) {
         if self.cfg.gossip_interval > 0.0 && self.cfg.policy.gossip {
             self.events.schedule(self.cfg.gossip_interval, Event::Gossip);
         }
@@ -69,43 +166,44 @@ impl Cluster {
         {
             self.events.schedule(self.cfg.replan_interval, Event::Replan);
         }
+    }
 
-        let mut guard: u64 = 0;
-        while let Some((now, ev)) = self.events.pop() {
-            guard += 1;
-            assert!(guard < 500_000_000, "cluster event loop runaway");
-            match ev {
-                Event::Arrival(req) => self.on_arrival(now, req),
-                Event::StepDone(i) => self.on_step_done(now, i),
-                Event::Gossip => self.on_gossip(now),
-                Event::Refine => self.on_refine(now),
-                Event::BaselineRebalance => self.on_baseline_rebalance(now),
-                Event::Replan => self.on_replan(now),
-                Event::MigrationDone { request, from, to } => {
-                    self.on_migration_done(now, request, from, to)
-                }
-                Event::AskDelivered { receiver, ask } => self.on_ask(now, receiver, ask),
-                Event::BidDelivered { sender, bid } => self.on_bid(now, sender, bid),
-                Event::ConfirmDelivered { receiver, pull } => {
-                    self.on_confirm(now, receiver, pull)
-                }
-                Event::PullAttempt { receiver } => self.on_pull(now, receiver),
-                Event::StarveNotice { sender, pull, receiver } => {
-                    self.on_starve(now, sender, pull, receiver)
-                }
+    /// Route one popped event to its handler.
+    fn dispatch(&mut self, now: Time, ev: Event) {
+        match ev {
+            Event::Arrival(req) => self.on_arrival(now, req),
+            Event::StepDone(i) => self.on_step_done(now, i),
+            Event::Gossip => self.on_gossip(now),
+            Event::Refine => self.on_refine(now),
+            Event::BaselineRebalance => self.on_baseline_rebalance(now),
+            Event::Replan => self.on_replan(now),
+            Event::MigrationDone { request, from, to } => {
+                self.on_migration_done(now, request, from, to)
             }
-            // Stop once all requests completed (or were rejected at
-            // admission) and only periodic timers remain in the queue.
-            if self.records.len() + self.stats.rejected as usize >= self.n_requests_total
-                && !self.instances.iter().any(|ins| ins.engine.has_work())
-                && self.in_flight.is_empty()
-            {
-                break;
+            Event::AskDelivered { receiver, ask } => self.on_ask(now, receiver, ask),
+            Event::BidDelivered { sender, bid } => self.on_bid(now, sender, bid),
+            Event::ConfirmDelivered { receiver, pull } => self.on_confirm(now, receiver, pull),
+            Event::PullAttempt { receiver } => self.on_pull(now, receiver),
+            Event::StarveNotice { sender, pull, receiver } => {
+                self.on_starve(now, sender, pull, receiver)
             }
         }
+    }
+
+    /// All `target` requests accounted for (completed or rejected),
+    /// every engine drained, no KV transfer in flight.
+    fn all_done(&self, target: usize) -> bool {
+        self.records.len() + self.stats.rejected as usize >= target
+            && !self.instances.iter().any(|ins| ins.engine.has_work())
+            && self.in_flight.is_empty()
+    }
+
+    /// Final stats assembly shared by both driver entry points.
+    fn finish(mut self) -> (Report, RunStats) {
         self.stats.final_boundaries = self.refiners.iter().map(|r| r.boundary).collect();
         self.stats.engine_iterations =
             self.instances.iter().map(|ins| ins.engine.total_iterations).sum();
+        self.stats.arena_high_water = self.arena.high_water() as u64;
         if self.load_samples > 0 {
             let n = self.load_samples as f64;
             self.stats.mean_token_load =
@@ -235,6 +333,13 @@ impl Cluster {
     /// share this helper so their accounting can never drift apart.
     fn record_completion(&mut self, rec: RequestRecord) {
         self.observed.push((rec.input_len, rec.input_len + rec.output_len));
+        // Completion ends the request's arena lifetime; take the cached
+        // prediction on the way out.  The cache is bit-identical to
+        // recomputing (the predictor is a pure seeded hash), so the
+        // recompute fallback only covers requests that never passed
+        // admission (e.g. directly injected in tests).
+        let cached = self.arena.predicted(rec.id);
+        self.arena.release(rec.id);
         if !self.predictor.is_oracle() {
             let req = Request {
                 id: rec.id,
@@ -242,7 +347,8 @@ impl Cluster {
                 input_len: rec.input_len,
                 output_len: rec.output_len,
             };
-            if req.final_len() > self.predictor.predicted_final(&req) {
+            let predicted = cached.unwrap_or_else(|| self.predictor.predicted_final(&req));
+            if req.final_len() > predicted {
                 self.stats.mispredictions += 1;
             }
         }
@@ -437,10 +543,14 @@ impl Cluster {
     /// handover path, so replanning never disrupts ongoing decoding.
     fn on_replan(&mut self, now: Time) {
         // Need a meaningful sample (low-traffic freeze, like §4.3).
-        if self.observed.len() >= 64 {
+        // `total()` counts every completion ever, exactly what the old
+        // unbounded log's `len()` was; the ring retains the newest
+        // `REPLAN_WINDOW` samples, newest first — the only ones the old
+        // `.iter().rev().take(REPLAN_WINDOW)` read.
+        if self.observed.total() >= 64 {
             let mut hist =
                 LengthHistogram::new(LengthHistogram::exponential_bounds(self.cfg.max_len));
-            for &(i, f) in self.observed.iter().rev().take(4000) {
+            for &(i, f) in self.observed.iter_rev() {
                 hist.push(i, f);
             }
             // Include live sequences so long-runners are represented —

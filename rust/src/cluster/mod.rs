@@ -72,6 +72,43 @@
 //! every registry scheduler on sharegpt, heavytail, and bursty
 //! workloads.
 //!
+//! # Simulation core: planet-scale storage tiers
+//!
+//! Three representation choices keep the core O(live state), not
+//! O(trace length), at 1000+ instances — all pure representation
+//! changes with pinned bit-identity:
+//!
+//! * **Calendar event queue** ([`crate::sim::EventQueue`]): under the
+//!   front register sit a 512-slot x 2 ms **calendar wheel** for
+//!   near-future events (decode completions, gossip ticks, the next
+//!   arrival — O(1) insert/pop instead of O(log n) heap sifts) and a
+//!   far-tier `BinaryHeap` for everything beyond the ~1 s horizon
+//!   (refine/replan timers).  All three tiers share one total order —
+//!   `(timestamp, insertion seq)` with two seq lanes: arrivals take the
+//!   reserved *front-class* lane (`schedule_front_class`) so they win
+//!   every same-instant tie against runtime events exactly as the
+//!   pre-scheduled path did.  `tests/calendar_queue.rs` pins pop order
+//!   bit-identical to a reference min-scan model.
+//! * **Streaming workloads** ([`Cluster::run_stream`]): arrivals are
+//!   pulled lazily from a [`crate::workload::WorkloadStream`] — exactly
+//!   one pending `Arrival` event at a time, scheduled *before* the
+//!   popped arrival dispatches so macro horizons and tie-breaks see the
+//!   identical queue state as [`Cluster::run`] (which is the same loop
+//!   over a pre-materialized slice).  Requires non-decreasing arrival
+//!   times (asserted); unsorted traces must use the materialized path.
+//! * **Arena request storage** ([`crate::sim::RequestArena`]): live
+//!   request metadata — arrival, lengths, and the cached predictor
+//!   output — lives in parallel SoA columns behind dense recycled
+//!   slots.  **Lifetime rule**: intern at admission (`on_arrival`,
+//!   before routing), release at completion recording or admission
+//!   rejection; the arena therefore tracks *in-flight* requests
+//!   (`RunStats::arena_high_water` reports the peak), never the trace.
+//!   Caching `predicted_final` is bit-identical because every
+//!   [`crate::predict::LengthPredictor`] is a pure seeded hash of the
+//!   request.  The companion [`crate::sim::RecentWindow`] bounds the
+//!   re-plan's completion log to the newest `REPLAN_WINDOW` samples —
+//!   the only ones `on_replan` ever read.
+//!
 //! # Heterogeneous fleets
 //!
 //! The fleet need not be uniform: [`ClusterConfig::fleet`] takes a
@@ -232,9 +269,14 @@ use crate::metrics::{InstanceCounters, Report, RequestRecord};
 use crate::models::ModelProfile;
 use crate::predict::LengthPredictor;
 use crate::qoe::{self, QoeModel};
-use crate::sim::EventQueue;
+use crate::sim::{EventQueue, RecentWindow, RequestArena};
 use crate::workload::{LengthHistogram, Request};
 use crate::{InstanceId, RequestId, Time, Tokens};
+
+/// How many of the most recent completion samples the periodic re-plan
+/// consumes (`driver.rs` `on_replan`) — and therefore the capacity of
+/// the [`RecentWindow`] that retains them.
+pub(crate) const REPLAN_WINDOW: usize = 4000;
 
 use driver::Event;
 use router::Router;
@@ -425,6 +467,9 @@ pub struct RunStats {
     /// numerator of the perf harness's iterations-per-wall-second
     /// cluster throughput metric (`BENCH_hotpath.json`).
     pub engine_iterations: u64,
+    /// Peak simultaneous live requests in the [`RequestArena`] — the
+    /// measurable O(in-flight) memory bound of the streaming path.
+    pub arena_high_water: u64,
     pub final_boundaries: Vec<Tokens>,
     /// Per-instance output tokens (Fig. 16).
     pub counters: InstanceCounters,
@@ -488,9 +533,14 @@ pub struct Cluster {
     /// Starvation promises per sender: (pull, receiver) to send
     /// immediately after the current transmission completes.
     promises: std::collections::BTreeMap<InstanceId, Vec<(PendingPull, InstanceId)>>,
-    /// (input_len, final_len) of recently completed requests — the
-    /// workload statistics the periodic re-plan consumes.
-    observed: Vec<(Tokens, Tokens)>,
+    /// (input_len, final_len) of the [`REPLAN_WINDOW`] most recently
+    /// completed requests — the workload statistics the periodic
+    /// re-plan consumes (it never read past the newest window, so the
+    /// ring is bit-identical to the old unbounded log).
+    observed: RecentWindow<(Tokens, Tokens)>,
+    /// SoA columns for live request metadata + cached predictions:
+    /// interned at admission, released at completion/rejection.
+    arena: RequestArena,
     /// Per-instance relative capacities (normalized; all 1.0 on
     /// homogeneous fleets).  The periodic re-plan partitions over
     /// these.
@@ -690,7 +740,8 @@ impl Cluster {
             retry_after: Default::default(),
             offers: Default::default(),
             promises: Default::default(),
-            observed: Vec::new(),
+            observed: RecentWindow::new(REPLAN_WINDOW),
+            arena: RequestArena::new(),
             caps,
             plan_insts,
             load_sample_sum: vec![0.0; e],

@@ -20,6 +20,7 @@
 use crate::cluster::policy::{BalancePolicy, DispatchPolicy, PolicySpec};
 use crate::coordinator::MigrationManager;
 use crate::predict::LengthPredictor;
+use crate::sim::RequestArena;
 use crate::workload::Request;
 use crate::{InstanceId, Time, Tokens};
 
@@ -43,19 +44,22 @@ fn effective_wait(ins: &InstanceState, migration: &MigrationManager) -> f64 {
 /// [`effective_wait`].  O(resident sequences) rather than O(1), so it
 /// is consulted only for predictors that claim absolute lengths
 /// ([`LengthPredictor::predicts_absolute`]); `oracle` and `ltr`
-/// dispatch keep the legacy observable load, bit for bit.
+/// dispatch keep the legacy observable load, bit for bit.  Predictions
+/// come from the arena's cached column (every live sequence was
+/// interned at admission); the recompute fallback is bit-identical
+/// because the predictor is a pure seeded hash.
 fn predicted_wait(
     ins: &InstanceState,
     migration: &MigrationManager,
     predictor: &LengthPredictor,
+    arena: &RequestArena,
 ) -> f64 {
-    let running: Tokens = ins
-        .engine
-        .running()
-        .iter()
-        .map(|s| predictor.predicted_final(&s.req).max(s.current_len()))
-        .sum();
-    let queued: Tokens = ins.engine.queued().map(|s| predictor.predicted_final(&s.req)).sum();
+    let predicted = |req: &Request| {
+        arena.predicted(req.id).unwrap_or_else(|| predictor.predicted_final(req))
+    };
+    let running: Tokens =
+        ins.engine.running().iter().map(|s| predicted(&s.req).max(s.current_len())).sum();
+    let queued: Tokens = ins.engine.queued().map(|s| predicted(&s.req)).sum();
     (running + queued + migration.inbound_tokens(ins.id)) as f64 / ins.capacity
 }
 
@@ -66,9 +70,10 @@ fn wait_estimate(
     ins: &InstanceState,
     migration: &MigrationManager,
     predictor: &LengthPredictor,
+    arena: &RequestArena,
 ) -> f64 {
     if predictor.predicts_absolute() {
-        predicted_wait(ins, migration, predictor)
+        predicted_wait(ins, migration, predictor, arena)
     } else {
         effective_wait(ins, migration)
     }
@@ -117,6 +122,7 @@ impl Router {
         instances: &[InstanceState],
         migration: &MigrationManager,
         predictor: &LengthPredictor,
+        arena: &RequestArena,
     ) -> InstanceId {
         match spec.dispatch {
             DispatchPolicy::RoundRobin => self.next_rr() % instances.len(),
@@ -144,8 +150,8 @@ impl Router {
                 // exists.
                 (0..instances.len())
                     .min_by(|&a, &b| {
-                        wait_estimate(&instances[a], migration, predictor)
-                            .total_cmp(&wait_estimate(&instances[b], migration, predictor))
+                        wait_estimate(&instances[a], migration, predictor, arena)
+                            .total_cmp(&wait_estimate(&instances[b], migration, predictor, arena))
                     })
                     .expect("cluster has instances")
             }
@@ -174,8 +180,13 @@ impl Router {
                     *stages[s]
                         .iter()
                         .min_by(|&&a, &&b| {
-                            wait_estimate(&instances[a], migration, predictor)
-                                .total_cmp(&wait_estimate(&instances[b], migration, predictor))
+                            wait_estimate(&instances[a], migration, predictor, arena)
+                                .total_cmp(&wait_estimate(
+                                    &instances[b],
+                                    migration,
+                                    predictor,
+                                    arena,
+                                ))
                         })
                         .expect("stage has members")
                 }
@@ -204,6 +215,12 @@ impl Cluster {
     /// `RunStats::predict_escalations` — instead of wedging the
     /// instance mid-decode.
     pub(super) fn on_arrival(&mut self, now: Time, req: Request) {
+        // Arena lifetime starts here: intern the request with its
+        // cached prediction before routing, so every downstream
+        // consumer (predicted-wait dispatch, misprediction accounting)
+        // reads the SoA columns instead of re-hashing.
+        let predicted = self.predictor.predicted_final(&req);
+        self.arena.intern(&req, predicted);
         let target = self.router.route(
             &self.cfg.policy,
             &req,
@@ -212,6 +229,7 @@ impl Cluster {
             &self.instances,
             &self.migration,
             &self.predictor,
+            &self.arena,
         );
         let admit_len = self.predictor.admit_len(&req);
         if !self.instances[target].engine.can_ever_hold(admit_len) {
@@ -235,6 +253,8 @@ impl Cluster {
     /// Record an admission rejection (shared by the predicted-length
     /// check and the under-prediction escalation path).
     fn reject(&mut self, target: InstanceId, request: crate::RequestId, final_len: Tokens) {
+        // Rejection ends the request's arena lifetime (never submitted).
+        self.arena.release(request);
         self.stats.rejected += 1;
         if self.stats.rejections.len() < super::MAX_REJECTION_DETAILS {
             self.stats.rejections.push(super::RejectedRequest {

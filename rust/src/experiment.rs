@@ -39,7 +39,7 @@
 //! [`Experiment::from_config`]; CLI flags then override individual
 //! fields before `build()`.
 
-use crate::cluster::{run_experiment, ClusterConfig, PolicySpec};
+use crate::cluster::{run_experiment, Cluster, ClusterConfig, PolicySpec};
 use crate::config::ExperimentConfig;
 use crate::coordinator::plan::Pipeline;
 use crate::fleet::FleetSpec;
@@ -47,7 +47,7 @@ use crate::gpu::{GpuProfile, Topology};
 use crate::metrics::Report;
 use crate::models::{self, ModelProfile};
 use crate::predict::PredictorSpec;
-use crate::workload::{Request, WorkloadSpec};
+use crate::workload::{count_csv_rows, Request, WorkloadSpec};
 use crate::{Time, Tokens};
 
 use std::fmt;
@@ -371,6 +371,80 @@ impl ExperimentBuilder {
     /// Resolve every name, materialise the trace, and assemble the
     /// cluster configuration.
     pub fn build(self) -> Result<Experiment, ExperimentError> {
+        let r = self.resolve()?;
+        let requests = match r.workload {
+            ResolvedWorkload::Trace(t) => t,
+            ResolvedWorkload::Spec(spec) => {
+                spec.generate(r.rate, r.n_requests, r.seed).map_err(|e| {
+                    ExperimentError::Workload(format!("workload generation failed: {e}"))
+                })?
+            }
+        };
+        if requests.is_empty() {
+            return Err(ExperimentError::Invalid("experiment has zero requests".into()));
+        }
+        Ok(Experiment { cfg: r.cfg, requests })
+    }
+
+    /// Resolve every name but keep the trace *lazy*: the run pulls
+    /// arrivals from a fresh [`crate::workload::WorkloadStream`], so
+    /// resident memory is O(instances + in-flight) instead of
+    /// O(requests).  The offline planner still sees the same head
+    /// prefix the materialized path would slice, so reports are
+    /// bit-identical to [`Experiment::run`] over the same spec.
+    ///
+    /// Explicit `.trace(..)` builders are already materialized and are
+    /// rejected here; CSV replays stream straight off disk (their
+    /// request total comes from a counting pre-pass).
+    pub fn build_streaming(self) -> Result<StreamingExperiment, ExperimentError> {
+        let r = self.resolve()?;
+        let spec = match r.workload {
+            ResolvedWorkload::Spec(s) => s,
+            ResolvedWorkload::Trace(_) => {
+                return Err(ExperimentError::Invalid(
+                    "an explicit .trace(..) is already materialized; use build()".into(),
+                ))
+            }
+        };
+        let total = match &spec {
+            WorkloadSpec::CsvTrace(path) => count_csv_rows(path).map_err(|e| {
+                ExperimentError::Workload(format!("cannot count rows of trace `{path}`: {e}"))
+            })?,
+            _ => r.n_requests,
+        };
+        if total == 0 {
+            return Err(ExperimentError::Invalid("experiment has zero requests".into()));
+        }
+        // Plan prefix: exactly the slice the materialized path hands
+        // the planner (`&requests[..min(plan_sample, len)]`), pulled
+        // from a fresh stream — streams and materialized traces are
+        // identical by construction, so planning is bit-identical too.
+        let k = total.min(r.cfg.plan_sample);
+        let mut plan_prefix = Vec::with_capacity(k);
+        let head = spec.stream(r.rate, r.n_requests, r.seed).map_err(|e| {
+            ExperimentError::Workload(format!("cannot open workload stream: {e}"))
+        })?;
+        for item in head.take(k) {
+            plan_prefix.push(item.map_err(|e| {
+                ExperimentError::Workload(format!("workload generation failed: {e}"))
+            })?);
+        }
+        Ok(StreamingExperiment {
+            cfg: r.cfg,
+            spec,
+            rate: r.rate,
+            n_requests: r.n_requests,
+            seed: r.seed,
+            total,
+            plan_prefix,
+        })
+    }
+
+    /// Shared resolution behind [`build`](Self::build) and
+    /// [`build_streaming`](Self::build_streaming): every name becomes a
+    /// profile/spec and the cluster config is assembled; only the
+    /// trace's materialisation strategy differs between the callers.
+    fn resolve(self) -> Result<ResolvedExperiment, ExperimentError> {
         // The fleet axis, when present, defines the instance count and
         // per-instance GPUs; otherwise `instances` copies of `gpu`.
         let fleet_from_name = self.fleet_spec.is_none() && self.fleet_name.is_some();
@@ -401,8 +475,8 @@ impl ExperimentBuilder {
         if let Some(p) = &self.predictor_name {
             policy.predictor = PredictorSpec::parse(p).map_err(ExperimentError::Policy)?;
         }
-        let requests = match self.trace {
-            Some(t) => t,
+        let workload = match self.trace {
+            Some(t) => ResolvedWorkload::Trace(t),
             None => {
                 let spec = match (&self.workload, &self.workload_name) {
                     (Some(w), _) => w.clone(),
@@ -423,14 +497,9 @@ impl ExperimentBuilder {
                         self.rate
                     )));
                 }
-                spec.generate(self.rate, self.requests, self.seed).map_err(|e| {
-                    ExperimentError::Workload(format!("workload generation failed: {e}"))
-                })?
+                ResolvedWorkload::Spec(spec)
             }
         };
-        if requests.is_empty() {
-            return Err(ExperimentError::Invalid("experiment has zero requests".into()));
-        }
 
         let mut cfg = ClusterConfig::new(gpu, model, n_instances, policy);
         cfg.seed = self.seed;
@@ -476,7 +545,86 @@ impl ExperimentBuilder {
         if let Some(t) = self.topology {
             cfg.topology = Some(t);
         }
-        Ok(Experiment { cfg, requests })
+        Ok(ResolvedExperiment {
+            cfg,
+            workload,
+            rate: self.rate,
+            n_requests: self.requests,
+            seed: self.seed,
+        })
+    }
+}
+
+/// Output of [`ExperimentBuilder::resolve`]: assembled config plus the
+/// workload in whichever form the builder was given it.
+struct ResolvedExperiment {
+    cfg: ClusterConfig,
+    workload: ResolvedWorkload,
+    rate: f64,
+    n_requests: usize,
+    seed: u64,
+}
+
+/// The workload half of a resolved builder: an explicit, already
+/// materialized trace, or a spec a streaming run can re-open lazily.
+enum ResolvedWorkload {
+    Trace(Vec<Request>),
+    Spec(WorkloadSpec),
+}
+
+/// A fully-resolved experiment whose trace is never materialized.
+///
+/// Built by [`ExperimentBuilder::build_streaming`].  Holds the
+/// cluster configuration, the workload spec (re-opened as a fresh
+/// [`crate::workload::WorkloadStream`] at [`run`](Self::run) time), and
+/// the bounded plan prefix — never the full request vector, so a
+/// billion-request replay is O(instances + in-flight) resident.
+#[derive(Debug, Clone)]
+pub struct StreamingExperiment {
+    pub cfg: ClusterConfig,
+    spec: WorkloadSpec,
+    rate: f64,
+    n_requests: usize,
+    seed: u64,
+    /// Arrivals the stream will deliver (generator `n`, or the CSV
+    /// trace's counted row total).
+    total: usize,
+    /// Head of the stream fed to the offline planner — identical to
+    /// the slice the materialized path hands [`Cluster::new`].
+    plan_prefix: Vec<Request>,
+}
+
+impl StreamingExperiment {
+    /// Total number of requests the run will deliver.
+    pub fn total_requests(&self) -> usize {
+        self.total
+    }
+
+    /// Run end to end, pulling arrivals lazily.  Bit-identical to the
+    /// materialized [`Experiment::run`] over the same spec — see the
+    /// equivalence argument on [`Cluster::run_stream`].
+    pub fn run(self) -> Result<(Report, crate::cluster::RunStats), ExperimentError> {
+        let stream = self.spec.stream(self.rate, self.n_requests, self.seed).map_err(|e| {
+            ExperimentError::Workload(format!("cannot open workload stream: {e}"))
+        })?;
+        let cluster = Cluster::new(self.cfg, &self.plan_prefix);
+        // A CSV replay can fail mid-stream (truncated file, bad row).
+        // Latch the error and end the stream: the driver winds down
+        // in-flight work normally and the error surfaces afterwards,
+        // instead of panicking inside the event loop.
+        let io_err = std::cell::RefCell::new(None);
+        let arrivals = stream.map_while(|item| match item {
+            Ok(r) => Some(r),
+            Err(e) => {
+                *io_err.borrow_mut() = Some(e);
+                None
+            }
+        });
+        let out = cluster.run_stream(arrivals, self.total);
+        if let Some(e) = io_err.into_inner() {
+            return Err(ExperimentError::Workload(format!("trace replay failed: {e}")));
+        }
+        Ok(out)
     }
 }
 
@@ -689,6 +837,36 @@ mod tests {
         let exp = Experiment::from_config(&ec).build().unwrap();
         assert_eq!(exp.cfg.n_instances, 2);
         assert!(exp.cfg.fleet.is_some());
+    }
+
+    #[test]
+    fn streaming_build_matches_materialized_fingerprint() {
+        let builder = || {
+            Experiment::builder()
+                .instances(4)
+                .scheduler("cascade")
+                .workload_name("heavytail")
+                .rate(12.0)
+                .requests(80)
+                .plan_sample(40)
+                .seed(7)
+        };
+        let (rep_m, stats_m) = builder().build().unwrap().run();
+        let streaming = builder().build_streaming().unwrap();
+        assert_eq!(streaming.total_requests(), 80);
+        let (rep_s, stats_s) = streaming.run().unwrap();
+        assert_eq!(rep_m.fingerprint(), rep_s.fingerprint());
+        assert_eq!(rep_m.records.len(), rep_s.records.len());
+        assert_eq!(stats_m.migrations, stats_s.migrations);
+        assert_eq!(stats_m.engine_iterations, stats_s.engine_iterations);
+    }
+
+    #[test]
+    fn explicit_trace_refuses_streaming_build() {
+        let reqs = crate::workload::generate(&crate::workload::ShareGptLike::default(), 8.0, 5, 1);
+        let e = Experiment::builder().trace(reqs).build_streaming().unwrap_err();
+        assert!(matches!(e, ExperimentError::Invalid(_)));
+        assert!(e.to_string().contains("materialized"), "{e}");
     }
 
     #[test]

@@ -105,28 +105,59 @@ fn builder_from_args(args: &Args) -> ExperimentBuilder {
 }
 
 fn cmd_sim(args: &Args) {
-    let exp = match builder_from_args(args).build() {
-        Ok(e) => e,
-        Err(e) => die(&e.to_string()),
+    // `--stream` pulls arrivals lazily from the workload stream
+    // (O(instances + in-flight) resident memory; bit-identical report);
+    // the default materializes the full trace up front.
+    let streaming = args.has_flag("stream");
+    let (report, stats, has_fleet, predictor) = if streaming {
+        let exp = match builder_from_args(args).build_streaming() {
+            Ok(e) => e,
+            Err(e) => die(&e.to_string()),
+        };
+        print_sim_header(&exp.cfg, exp.total_requests(), " (streaming)");
+        let has_fleet = exp.cfg.fleet.is_some();
+        let predictor = exp.cfg.policy.predictor;
+        let t0 = std::time::Instant::now();
+        let (report, stats) = match exp.run() {
+            Ok(r) => r,
+            Err(e) => die(&e.to_string()),
+        };
+        println!("wall time        {:.2}s", t0.elapsed().as_secs_f64());
+        (report, stats, has_fleet, predictor)
+    } else {
+        let exp = match builder_from_args(args).build() {
+            Ok(e) => e,
+            Err(e) => die(&e.to_string()),
+        };
+        print_sim_header(&exp.cfg, exp.requests.len(), "");
+        let has_fleet = exp.cfg.fleet.is_some();
+        let predictor = exp.cfg.policy.predictor;
+        let t0 = std::time::Instant::now();
+        let (report, stats) = exp.run();
+        println!("wall time        {:.2}s", t0.elapsed().as_secs_f64());
+        (report, stats, has_fleet, predictor)
     };
-    let cfg = &exp.cfg;
+    print_sim_metrics(&report, &stats, has_fleet, predictor, streaming);
+}
+
+fn print_sim_header(cfg: &cascade_infer::cluster::ClusterConfig, n_requests: usize, tag: &str) {
     let hardware = match &cfg.fleet {
         Some(f) => format!("fleet {f}"),
         None => cfg.gpu.name.to_string(),
     };
     println!(
-        "sim: {} x{} on {}, {} requests, scheduler {}",
-        cfg.model.name,
-        cfg.n_instances,
-        hardware,
-        exp.requests.len(),
-        cfg.policy.name
+        "sim: {} x{} on {}, {} requests, scheduler {}{}",
+        cfg.model.name, cfg.n_instances, hardware, n_requests, cfg.policy.name, tag
     );
-    let has_fleet = cfg.fleet.is_some();
-    let predictor = cfg.policy.predictor;
-    let t0 = std::time::Instant::now();
-    let (report, stats) = exp.run();
-    println!("wall time        {:.2}s", t0.elapsed().as_secs_f64());
+}
+
+fn print_sim_metrics(
+    report: &cascade_infer::metrics::Report,
+    stats: &cascade_infer::cluster::RunStats,
+    has_fleet: bool,
+    predictor: cascade_infer::predict::PredictorSpec,
+    streaming: bool,
+) {
     println!("completed        {}", report.records.len());
     println!("mean TTFT        {:.4}s   p95 {:.4}s", report.mean_ttft(), report.p95_ttft());
     println!("mean TPOT        {:.5}s   p95 {:.5}s", report.mean_tpot(), report.p95_tpot());
@@ -138,6 +169,11 @@ fn cmd_sim(args: &Args) {
         "migrations       {} ({} skipped), preemptions {}",
         stats.migrations, stats.migrations_skipped, stats.preemptions
     );
+    if streaming {
+        // The O(in-flight) residency claim, measured: peak live
+        // requests in the arena, not the trace length.
+        println!("peak in-flight   {} (arena high water)", stats.arena_high_water);
+    }
     if !predictor.is_oracle() {
         println!("predictor        {}", predictor.name());
         println!(

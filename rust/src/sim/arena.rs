@@ -1,0 +1,269 @@
+//! Arena/SoA storage for in-flight request metadata.
+//!
+//! At planet scale the driver cannot afford one heap object per
+//! request: a 1000-instance fleet replaying millions of arrivals would
+//! scatter request fields across the heap and drag the macro-step hot
+//! loop through cache misses.  [`RequestArena`] keeps the metadata of
+//! *live* requests (arrived but not yet completed or rejected) in
+//! parallel columns indexed by a dense slot id, with released slots
+//! recycled through a free list — resident size tracks the number of
+//! in-flight requests, not the length of the trace.
+//!
+//! Lifetime rule (enforced by the cluster driver): a request is
+//! interned at admission (`on_arrival`, before routing) together with
+//! its cached predictor output, and released at completion recording or
+//! admission rejection.  The cached `predicted` column is bit-identical
+//! to recomputing the predictor on demand because every
+//! [`crate::predict::LengthPredictor`] is a pure seeded hash of the
+//! request — caching is a pure representation change.
+//!
+//! [`RecentWindow`] is the companion fixed-capacity ring replacing the
+//! driver's unbounded completion log: replanning only ever reads the
+//! newest `cap` observations (newest first), so the ring reproduces the
+//! `Vec` path's `.iter().rev().take(cap)` order exactly while holding
+//! O(cap) memory.
+
+use std::collections::BTreeMap;
+
+use crate::workload::Request;
+use crate::{RequestId, Time, Tokens};
+
+/// Dense columnar storage for live request metadata, keyed by request
+/// id through an ordered index (keyed lookups only — never iterated, so
+/// determinism is structural, not incidental).
+#[derive(Debug, Clone, Default)]
+pub struct RequestArena {
+    // Parallel columns, indexed by slot.
+    id: Vec<RequestId>,
+    arrival: Vec<Time>,
+    input_len: Vec<Tokens>,
+    output_len: Vec<Tokens>,
+    /// Cached predictor output (`predicted_final`) for the request.
+    predicted: Vec<Tokens>,
+    /// Released slots available for reuse, LIFO.
+    free: Vec<u32>,
+    /// Live id -> slot.
+    index: BTreeMap<RequestId, u32>,
+    /// Maximum simultaneous live count ever observed.
+    high_water: usize,
+}
+
+impl RequestArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern a request with its cached prediction; returns its slot.
+    /// Re-interning a live id refreshes that slot in place.
+    pub fn intern(&mut self, req: &Request, predicted: Tokens) -> u32 {
+        let slot = match self.index.get(&req.id) {
+            Some(&s) => s,
+            None => {
+                let s = match self.free.pop() {
+                    Some(s) => s,
+                    None => {
+                        self.id.push(0);
+                        self.arrival.push(0.0);
+                        self.input_len.push(0);
+                        self.output_len.push(0);
+                        self.predicted.push(0);
+                        (self.id.len() - 1) as u32
+                    }
+                };
+                self.index.insert(req.id, s);
+                s
+            }
+        };
+        let s = slot as usize;
+        self.id[s] = req.id;
+        self.arrival[s] = req.arrival;
+        self.input_len[s] = req.input_len;
+        self.output_len[s] = req.output_len;
+        self.predicted[s] = predicted;
+        self.high_water = self.high_water.max(self.index.len());
+        slot
+    }
+
+    /// Release a live request's slot back to the free list.  Returns
+    /// `false` if the id was not live (already released or never
+    /// interned) — callers treat that as "nothing cached".
+    pub fn release(&mut self, id: RequestId) -> bool {
+        match self.index.remove(&id) {
+            Some(slot) => {
+                self.free.push(slot);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Slot of a live request.
+    pub fn slot_of(&self, id: RequestId) -> Option<u32> {
+        self.index.get(&id).copied()
+    }
+
+    /// Cached predicted final length of a live request.
+    pub fn predicted(&self, id: RequestId) -> Option<Tokens> {
+        self.slot_of(id).map(|s| self.predicted[s as usize])
+    }
+
+    /// Reconstruct the full [`Request`] of a live id from the columns.
+    pub fn request(&self, id: RequestId) -> Option<Request> {
+        self.slot_of(id).map(|slot| {
+            let s = slot as usize;
+            Request {
+                id: self.id[s],
+                arrival: self.arrival[s],
+                input_len: self.input_len[s],
+                output_len: self.output_len[s],
+            }
+        })
+    }
+
+    /// Number of live (interned, not yet released) requests.
+    pub fn live(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Allocated slot count (live + free-listed).
+    pub fn capacity(&self) -> usize {
+        self.id.len()
+    }
+
+    /// Maximum simultaneous live count over the arena's lifetime — the
+    /// O(in-flight) memory claim, measurable.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+}
+
+/// Fixed-capacity ring over the most recent observations.
+///
+/// `iter_rev` yields newest-to-oldest — exactly the order an unbounded
+/// `Vec` produced via `.iter().rev().take(cap)`, so float accumulations
+/// over the window are bit-identical to the unbounded path whenever the
+/// consumer never looked past the newest `cap` entries.
+#[derive(Debug, Clone)]
+pub struct RecentWindow<T> {
+    buf: Vec<T>,
+    cap: usize,
+    /// Next write position (wraps once the buffer is full).
+    head: usize,
+    /// Count of all pushes ever, monotone (the unbounded `len()`).
+    total: u64,
+}
+
+impl<T: Copy> RecentWindow<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "RecentWindow needs a positive capacity");
+        Self { buf: Vec::new(), cap, head: 0, total: 0 }
+    }
+
+    pub fn push(&mut self, v: T) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.head] = v;
+        }
+        self.head = (self.head + 1) % self.cap;
+        self.total += 1;
+    }
+
+    /// Retained entries (saturates at the capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Count of all pushes ever — what the unbounded log's `len()` was.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Newest-to-oldest iteration over the retained window.
+    pub fn iter_rev(&self) -> impl Iterator<Item = &T> + '_ {
+        let n = self.buf.len();
+        (0..n).map(move |k| &self.buf[(self.head + self.cap - 1 - k) % self.cap])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: RequestId) -> Request {
+        Request { id, arrival: id as f64 * 0.5, input_len: 100 + id, output_len: 10 + id }
+    }
+
+    #[test]
+    fn intern_lookup_release_roundtrip() {
+        let mut a = RequestArena::new();
+        let s0 = a.intern(&req(7), 200);
+        let s1 = a.intern(&req(9), 300);
+        assert_ne!(s0, s1);
+        assert_eq!(a.live(), 2);
+        assert_eq!(a.predicted(7), Some(200));
+        assert_eq!(a.request(9), Some(req(9)));
+        assert!(a.release(7));
+        assert!(!a.release(7), "double release must be a no-op");
+        assert_eq!(a.predicted(7), None);
+        assert_eq!(a.live(), 1);
+    }
+
+    #[test]
+    fn released_slots_are_recycled_keeping_capacity_at_high_water() {
+        let mut a = RequestArena::new();
+        // Interleave intern/release with at most 3 live at a time.
+        for wave in 0..50u64 {
+            for k in 0..3 {
+                a.intern(&req(wave * 3 + k), 100);
+            }
+            for k in 0..3 {
+                a.release(wave * 3 + k);
+            }
+        }
+        assert_eq!(a.live(), 0);
+        assert_eq!(a.high_water(), 3);
+        assert!(a.capacity() <= 3, "capacity {} must not grow past high water", a.capacity());
+    }
+
+    #[test]
+    fn reinterning_a_live_id_refreshes_in_place() {
+        let mut a = RequestArena::new();
+        let s = a.intern(&req(4), 111);
+        let s2 = a.intern(&req(4), 222);
+        assert_eq!(s, s2);
+        assert_eq!(a.live(), 1);
+        assert_eq!(a.predicted(4), Some(222));
+    }
+
+    #[test]
+    fn recent_window_matches_unbounded_vec_reference() {
+        let cap = 7;
+        let mut win = RecentWindow::new(cap);
+        let mut log: Vec<u32> = Vec::new();
+        for v in 0..40u32 {
+            win.push(v);
+            log.push(v);
+            let expect: Vec<u32> = log.iter().rev().take(cap).copied().collect();
+            let got: Vec<u32> = win.iter_rev().copied().collect();
+            assert_eq!(expect, got, "after {} pushes", v + 1);
+            assert_eq!(win.total(), log.len() as u64);
+            assert_eq!(win.len(), log.len().min(cap));
+        }
+    }
+
+    #[test]
+    fn recent_window_total_counts_past_the_cap() {
+        let mut win = RecentWindow::new(2);
+        assert!(win.is_empty());
+        for v in 0..10u8 {
+            win.push(v);
+        }
+        assert_eq!(win.total(), 10);
+        assert_eq!(win.len(), 2);
+    }
+}

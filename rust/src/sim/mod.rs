@@ -6,9 +6,11 @@
 //! bit-identically from its seed.  No wall-clock time is ever consulted
 //! on the simulation path.
 
+pub mod arena;
 pub mod dist;
 pub mod rng;
 
+pub use arena::{RecentWindow, RequestArena};
 pub use dist::{Exponential, LogNormal, ParetoTail, Poisson};
 pub use rng::Rng;
 
@@ -51,18 +53,62 @@ impl<E> Ord for Scheduled<E> {
     }
 }
 
+/// Number of calendar-wheel slots; with [`WHEEL_WIDTH`] this gives a
+/// near-future horizon of ~1 simulated second — wide enough that decode
+/// completions, gossip ticks, and the next Poisson arrival all land in
+/// the wheel, while refine/replan timers (multi-second periods) stay in
+/// the far-tier heap.
+const WHEEL_SLOTS: usize = 512;
+
+/// Width of one calendar-wheel slot in simulated seconds.  Engine
+/// iterations are O(ms), so a 2 ms slot keeps per-slot occupancy small.
+const WHEEL_WIDTH: f64 = 0.002;
+
+/// Insertion sequences at or above this base belong to the *normal*
+/// class; sequences below it are reserved for
+/// [`EventQueue::schedule_front_class`], whose events therefore win
+/// every same-timestamp tie against normally scheduled events.
+const NORMAL_SEQ_BASE: u64 = 1 << 63;
+
+/// Absolute calendar slot of a timestamp (monotone in `at`).
+fn slot_of(at: Time) -> u64 {
+    (at / WHEEL_WIDTH) as u64
+}
+
+/// The total event order: earliest timestamp first, then insertion seq.
+fn orders_before(a_at: Time, a_seq: u64, b_at: Time, b_seq: u64) -> bool {
+    matches!(a_at.total_cmp(&b_at).then_with(|| a_seq.cmp(&b_seq)), Ordering::Less)
+}
+
 /// Earliest-first event queue with a monotonically advancing clock.
 ///
-/// Internally the minimum element is held in a one-slot *front
-/// register* outside the binary heap.  This is the macro-step fast
-/// path: the driver's dominant pattern is "schedule the next completion
-/// and immediately pop it" — when the scheduled event precedes
-/// everything in the heap it lands in the register (no sift-up) and the
-/// following `pop` takes it back out (no sift-down), so the hot loop
-/// does zero O(log n) heap operations.  Ordering semantics are exactly
-/// the heap's: earliest timestamp first, FIFO on ties (a register
-/// occupant always has a smaller insertion seq than any new event, so a
-/// new event displaces it only with a strictly earlier timestamp).
+/// Storage is three tiers, all sharing one total order (timestamp,
+/// then insertion seq — FIFO on ties):
+///
+/// 1. **Front register** (PR 4): a one-slot holder for the minimum
+///    element.  The driver's dominant pattern is "schedule the next
+///    completion and immediately pop it" — when the scheduled event
+///    precedes everything queued it lands in the register (no
+///    sift-up) and the following `pop` takes it back out, so the hot
+///    loop does zero O(log n) operations.
+/// 2. **Calendar wheel**: events within ~[`WHEEL_SLOTS`]·
+///    [`WHEEL_WIDTH`] seconds of `now` are bucketed by quantized
+///    timestamp into a ring of [`WHEEL_SLOTS`] cells.  Because the
+///    clock never passes an unpopped event, all resident events fit in
+///    one wheel revolution, so each cell holds at most one absolute
+///    slot's events at a time and the earliest resident is always in
+///    the tracked minimum cell — pop scans that one cell (O(cell
+///    occupancy), no global sift).
+/// 3. **Far heap**: everything beyond the wheel horizon (and any
+///    non-finite timestamp) falls back to the `BinaryHeap`.  Far
+///    events are *not* migrated as the wheel rotates; pop simply
+///    compares the wheel minimum against the heap top under the total
+///    order, which keeps pop order bit-identical to a pure heap.
+///
+/// Two insertion-sequence lanes exist: [`EventQueue::schedule`] draws
+/// from the normal lane, [`EventQueue::schedule_front_class`] from a
+/// reserved lower lane whose events win every same-timestamp tie
+/// against the normal lane (see that method for why).
 ///
 /// ```
 /// use cascade_infer::sim::EventQueue;
@@ -75,13 +121,24 @@ impl<E> Ord for Scheduled<E> {
 /// ```
 #[derive(Debug)]
 pub struct EventQueue<E> {
+    /// Far tier: events beyond the wheel horizon at insertion time.
     heap: BinaryHeap<Scheduled<E>>,
+    /// Near tier: cell `slot % WHEEL_SLOTS` holds the events of
+    /// absolute calendar slot `slot` (unique per cell; see invariant
+    /// discussion on the type docs).
+    wheel: Vec<Vec<Scheduled<E>>>,
+    /// Total events resident in the wheel.
+    wheel_len: usize,
+    /// Absolute slot of the earliest wheel resident; meaningful only
+    /// while `wheel_len > 0`.
+    min_slot: u64,
     /// Invariant: when `Some`, the front event orders before every
-    /// heap element.  It may be `None` while the heap is non-empty
-    /// (after a pop); the next schedule/pop consults the heap then.
+    /// wheel and heap element.  It may be `None` while the tiers are
+    /// non-empty (after a pop); the next schedule/pop consults them.
     front: Option<Scheduled<E>>,
     now: Time,
     seq: u64,
+    front_seq: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -92,7 +149,16 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        Self { heap: BinaryHeap::new(), front: None, now: 0.0, seq: 0 }
+        Self {
+            heap: BinaryHeap::new(),
+            wheel: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            wheel_len: 0,
+            min_slot: 0,
+            front: None,
+            now: 0.0,
+            seq: NORMAL_SEQ_BASE,
+            front_seq: 0,
+        }
     }
 
     /// Current simulated time: the timestamp of the last popped event.
@@ -105,26 +171,128 @@ impl<E> EventQueue<E> {
     /// Events scheduled in the past are clamped to `now` (they fire
     /// immediately but never move the clock backwards).
     pub fn schedule(&mut self, at: Time, payload: E) {
-        let at = if at < self.now { self.now } else { at };
-        let s = Scheduled { at, seq: self.seq, payload };
+        let seq = self.seq;
         self.seq += 1;
-        match self.front.as_ref().map(|f| f.at) {
-            // Strictly earlier than the register: displace it.  On a
-            // timestamp tie the register wins (older seq — FIFO).
-            Some(front_at) if s.at < front_at => {
+        self.insert(at, seq, payload);
+    }
+
+    /// Schedule `payload` at absolute time `at` in the reserved *front
+    /// class*: these events win every same-timestamp tie against
+    /// normally scheduled events, and keep FIFO order among
+    /// themselves.
+    ///
+    /// This exists for lazily scheduled workload arrivals.  The
+    /// materializing driver schedules every arrival before any timer,
+    /// so arrivals always carry the smallest insertion seqs and win
+    /// all ties; a streaming driver that schedules each arrival as it
+    /// is pulled would otherwise assign them *later* seqs and lose
+    /// those ties, diverging from the materialized pop order.
+    pub fn schedule_front_class(&mut self, at: Time, payload: E) {
+        let seq = self.front_seq;
+        self.front_seq += 1;
+        debug_assert!(self.front_seq < NORMAL_SEQ_BASE, "front-class seq lane exhausted");
+        self.insert(at, seq, payload);
+    }
+
+    fn insert(&mut self, at: Time, seq: u64, payload: E) {
+        let at = if at < self.now { self.now } else { at };
+        let s = Scheduled { at, seq, payload };
+        match &self.front {
+            // Orders before the register occupant: displace it.  (For
+            // normal-lane inserts this is exactly "strictly earlier
+            // timestamp" — the occupant always has an older seq; a
+            // front-class insert can also win a timestamp tie.)
+            Some(f) if orders_before(s.at, s.seq, f.at, f.seq) => {
                 let old = self.front.take().expect("front checked Some");
-                self.heap.push(old);
+                self.push_tier(old);
                 self.front = Some(s);
             }
-            Some(_) => self.heap.push(s),
-            None => match self.heap.peek().map(|top| top.at) {
-                // Ties go to the heap occupant (older seq — FIFO).
-                Some(top_at) if s.at >= top_at => self.heap.push(s),
+            Some(_) => self.push_tier(s),
+            None => match self.tier_peek() {
+                // Ties and later events go behind the stored minimum.
+                Some((t, q)) if !orders_before(s.at, s.seq, t, q) => self.push_tier(s),
                 // Earlier than everything queued: the fast path — the
-                // event never touches the heap.
+                // event touches neither wheel nor heap.
                 _ => self.front = Some(s),
             },
         }
+    }
+
+    /// Route an event to the wheel (near) or heap (far) tier.
+    fn push_tier(&mut self, s: Scheduled<E>) {
+        if s.at.is_finite() {
+            let slot = slot_of(s.at);
+            if slot < slot_of(self.now) + WHEEL_SLOTS as u64 {
+                if self.wheel_len == 0 || slot < self.min_slot {
+                    self.min_slot = slot;
+                }
+                self.wheel[(slot % WHEEL_SLOTS as u64) as usize].push(s);
+                self.wheel_len += 1;
+                return;
+            }
+        }
+        self.heap.push(s);
+    }
+
+    /// (timestamp, seq) of the earliest wheel resident.
+    fn wheel_peek(&self) -> Option<(Time, u64)> {
+        if self.wheel_len == 0 {
+            return None;
+        }
+        let cell = &self.wheel[(self.min_slot % WHEEL_SLOTS as u64) as usize];
+        debug_assert!(!cell.is_empty(), "min_slot points at an empty cell");
+        let mut best = (cell[0].at, cell[0].seq);
+        for s in &cell[1..] {
+            if orders_before(s.at, s.seq, best.0, best.1) {
+                best = (s.at, s.seq);
+            }
+        }
+        Some(best)
+    }
+
+    /// (timestamp, seq) of the earliest stored (non-register) event.
+    fn tier_peek(&self) -> Option<(Time, u64)> {
+        let w = self.wheel_peek();
+        let h = self.heap.peek().map(|s| (s.at, s.seq));
+        match (w, h) {
+            (Some(w), Some(h)) => Some(if orders_before(w.0, w.1, h.0, h.1) { w } else { h }),
+            (w, h) => w.or(h),
+        }
+    }
+
+    /// Remove and return the earliest stored (non-register) event.
+    fn pop_tier(&mut self) -> Option<Scheduled<E>> {
+        let from_wheel = match (self.wheel_peek(), self.heap.peek()) {
+            (None, None) => return None,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(w), Some(h)) => orders_before(w.0, w.1, h.at, h.seq),
+        };
+        if !from_wheel {
+            return self.heap.pop();
+        }
+        let cell_idx = (self.min_slot % WHEEL_SLOTS as u64) as usize;
+        let cell = &mut self.wheel[cell_idx];
+        let mut best = 0;
+        for i in 1..cell.len() {
+            if orders_before(cell[i].at, cell[i].seq, cell[best].at, cell[best].seq) {
+                best = i;
+            }
+        }
+        let s = cell.swap_remove(best);
+        self.wheel_len -= 1;
+        if self.wheel_len > 0 && self.wheel[cell_idx].is_empty() {
+            // All residents fit in one revolution, so the next
+            // occupied cell (in slot order) holds the new minimum.
+            for d in 1..WHEEL_SLOTS as u64 {
+                let slot = self.min_slot + d;
+                if !self.wheel[(slot % WHEEL_SLOTS as u64) as usize].is_empty() {
+                    self.min_slot = slot;
+                    break;
+                }
+            }
+        }
+        Some(s)
     }
 
     /// Schedule `payload` after a relative delay.
@@ -137,7 +305,7 @@ impl<E> EventQueue<E> {
     pub fn pop(&mut self) -> Option<(Time, E)> {
         let s = match self.front.take() {
             Some(s) => s,
-            None => self.heap.pop()?,
+            None => self.pop_tier()?,
         };
         debug_assert!(s.at >= self.now, "time went backwards");
         self.now = s.at;
@@ -148,16 +316,16 @@ impl<E> EventQueue<E> {
     pub fn peek_time(&self) -> Option<Time> {
         match &self.front {
             Some(f) => Some(f.at),
-            None => self.heap.peek().map(|s| s.at),
+            None => self.tier_peek().map(|(t, _)| t),
         }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len() + usize::from(self.front.is_some())
+        self.heap.len() + self.wheel_len + usize::from(self.front.is_some())
     }
 
     pub fn is_empty(&self) -> bool {
-        self.front.is_none() && self.heap.is_empty()
+        self.front.is_none() && self.wheel_len == 0 && self.heap.is_empty()
     }
 }
 
@@ -354,6 +522,91 @@ mod tests {
                 "order violated: {w:?}"
             );
         }
+    }
+
+    #[test]
+    fn far_future_events_survive_wheel_rotation() {
+        // Events beyond the wheel horizon live in the far heap and
+        // must interleave correctly with near events as the clock
+        // sweeps past many wheel revolutions.
+        let mut q = EventQueue::new();
+        let horizon = WHEEL_SLOTS as f64 * WHEEL_WIDTH;
+        q.schedule(horizon * 5.0, "far");
+        q.schedule(horizon * 2.5, "mid");
+        let mut t = 0.0;
+        for _ in 0..40 {
+            t += horizon / 8.0;
+            q.schedule(t, "near");
+        }
+        let mut last = -1.0;
+        let mut seen = Vec::new();
+        while let Some((at, e)) = q.pop() {
+            assert!(at >= last, "pop order regressed: {at} after {last}");
+            last = at;
+            seen.push(e);
+        }
+        assert_eq!(seen.iter().filter(|e| **e == "near").count(), 40);
+        assert_eq!(seen.last(), Some(&"far"));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn zero_delta_events_fire_now_in_fifo_order() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "tick");
+        assert_eq!(q.pop(), Some((1.0, "tick")));
+        q.schedule_in(0.0, "a");
+        q.schedule_in(0.0, "b");
+        q.schedule(1.0, "c"); // same instant via absolute schedule
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((1.0, "b")));
+        assert_eq!(q.pop(), Some((1.0, "c")));
+    }
+
+    #[test]
+    fn front_class_wins_timestamp_ties() {
+        // Front-class events beat normal events scheduled *earlier* at
+        // the same instant, while keeping FIFO among themselves — the
+        // property that lets a streaming driver reproduce the
+        // materialized driver's arrivals-first seq assignment.
+        let mut q = EventQueue::new();
+        q.schedule(2.0, "timer");
+        q.schedule_front_class(2.0, "arrival-0");
+        q.schedule(2.0, "timer2");
+        q.schedule_front_class(2.0, "arrival-1");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["arrival-0", "arrival-1", "timer", "timer2"]);
+    }
+
+    #[test]
+    fn front_class_displaces_register_on_tie() {
+        // A normal event sits in the front register; a front-class
+        // event at the same timestamp must still pop first.
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "step-done"); // lands in the register
+        q.schedule_front_class(3.0, "arrival");
+        assert_eq!(q.pop(), Some((3.0, "arrival")));
+        assert_eq!(q.pop(), Some((3.0, "step-done")));
+    }
+
+    #[test]
+    fn wheel_cells_reused_across_revolutions() {
+        // Drain/refill cycles that wrap the ring: each pass lands in
+        // cells used by a previous revolution.
+        let mut q = EventQueue::new();
+        let step = WHEEL_WIDTH * 3.0;
+        let mut expect = 0u64;
+        for round in 0..5u64 {
+            for i in 0..200u64 {
+                q.schedule(q.now() + step * (i % 7 + 1) as f64, round * 1000 + i);
+            }
+            for _ in 0..200 {
+                assert!(q.pop().is_some());
+                expect += 1;
+            }
+            assert!(q.is_empty());
+        }
+        assert_eq!(expect, 1000);
     }
 
     #[test]

@@ -109,36 +109,223 @@ impl ShareGptLike {
 }
 
 /// Generate `n` requests with Poisson arrivals at `rate` req/s.
+///
+/// Implemented by collecting [`WorkloadStream::poisson`], so the
+/// materialized and streaming paths are request-identical by
+/// construction.
 pub fn generate(dist: &ShareGptLike, rate: f64, n: usize, seed: u64) -> Vec<Request> {
-    let mut rng = Rng::new(seed);
-    let gap = Exponential::new(rate);
-    let mut t = 0.0;
-    (0..n)
-        .map(|i| {
-            t += gap.sample(&mut rng);
-            let input_len = dist.sample_input(&mut rng);
-            let output_len = dist.sample_output(&mut rng, input_len);
-            Request { id: i as RequestId, arrival: t, input_len, output_len }
-        })
+    WorkloadStream::poisson(*dist, rate, n, seed)
+        .map(|r| r.expect("generator streams never fail"))
         .collect()
 }
 
 /// Generate requests covering a fixed duration instead of a count.
 pub fn generate_for_duration(dist: &ShareGptLike, rate: f64, duration: Time, seed: u64) -> Vec<Request> {
-    let mut rng = Rng::new(seed);
-    let gap = Exponential::new(rate);
-    let mut t = 0.0;
-    let mut out = Vec::new();
-    let mut id = 0;
-    loop {
-        t += gap.sample(&mut rng);
-        if t > duration {
-            return out;
+    WorkloadStream::poisson_for_duration(*dist, rate, duration, seed)
+        .map(|r| r.expect("generator streams never fail"))
+        .collect()
+}
+
+/// Lazily generated request stream — the O(1)-memory counterpart of
+/// [`WorkloadSpec::generate`] for planet-scale traces that must never
+/// be materialized.  Yields requests in arrival order with exactly the
+/// RNG draw sequence of the materializing path (which is implemented by
+/// collecting this stream, so fingerprint identity holds by
+/// construction).  Generator-backed streams never yield `Err`; CSV
+/// replay surfaces IO/parse errors in-band as `Err` items.
+pub struct WorkloadStream {
+    kind: StreamKind,
+}
+
+enum StreamKind {
+    /// Steady Poisson arrivals from one distribution, count-bounded.
+    Poisson {
+        dist: ShareGptLike,
+        rng: Rng,
+        gap: Exponential,
+        t: Time,
+        next_id: RequestId,
+        remaining: usize,
+    },
+    /// Steady Poisson arrivals covering a fixed duration.
+    PoissonDuration {
+        dist: ShareGptLike,
+        rng: Rng,
+        gap: Exponential,
+        t: Time,
+        next_id: RequestId,
+        duration: Time,
+        done: bool,
+    },
+    /// Weighted mixture: each request draws its component by weight.
+    Mixture {
+        parts: Vec<(f64, ShareGptLike)>,
+        total: f64,
+        rng: Rng,
+        gap: Exponential,
+        t: Time,
+        next_id: RequestId,
+        remaining: usize,
+    },
+    /// Piecewise-Poisson on/off arrivals.
+    Bursty {
+        dist: ShareGptLike,
+        rate: f64,
+        on_s: f64,
+        off_s: f64,
+        off_rate: f64,
+        rng: Rng,
+        t: Time,
+        next_id: RequestId,
+        remaining: usize,
+    },
+    /// CSV trace replay, one buffered line at a time.
+    Csv {
+        lines: std::iter::Enumerate<std::io::Lines<std::io::BufReader<std::fs::File>>>,
+    },
+}
+
+impl WorkloadStream {
+    /// Steady Poisson arrivals from `dist`: exactly `n` requests.
+    pub fn poisson(dist: ShareGptLike, rate: f64, n: usize, seed: u64) -> Self {
+        WorkloadStream {
+            kind: StreamKind::Poisson {
+                dist,
+                rng: Rng::new(seed),
+                gap: Exponential::new(rate),
+                t: 0.0,
+                next_id: 0,
+                remaining: n,
+            },
         }
-        let input_len = dist.sample_input(&mut rng);
-        let output_len = dist.sample_output(&mut rng, input_len);
-        out.push(Request { id, arrival: t, input_len, output_len });
-        id += 1;
+    }
+
+    /// Steady Poisson arrivals from `dist` covering `duration` seconds.
+    pub fn poisson_for_duration(
+        dist: ShareGptLike,
+        rate: f64,
+        duration: Time,
+        seed: u64,
+    ) -> Self {
+        WorkloadStream {
+            kind: StreamKind::PoissonDuration {
+                dist,
+                rng: Rng::new(seed),
+                gap: Exponential::new(rate),
+                t: 0.0,
+                next_id: 0,
+                duration,
+                done: false,
+            },
+        }
+    }
+
+    /// Replay a trace CSV one buffered line at a time (O(1) memory).
+    pub fn csv(path: &str) -> std::io::Result<Self> {
+        use std::io::BufRead;
+        let f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Ok(WorkloadStream { kind: StreamKind::Csv { lines: f.lines().enumerate() } })
+    }
+}
+
+impl Iterator for WorkloadStream {
+    type Item = std::io::Result<Request>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match &mut self.kind {
+            StreamKind::Poisson { dist, rng, gap, t, next_id, remaining } => {
+                if *remaining == 0 {
+                    return None;
+                }
+                *remaining -= 1;
+                *t += gap.sample(rng);
+                let input_len = dist.sample_input(rng);
+                let output_len = dist.sample_output(rng, input_len);
+                let id = *next_id;
+                *next_id += 1;
+                Some(Ok(Request { id, arrival: *t, input_len, output_len }))
+            }
+            StreamKind::PoissonDuration { dist, rng, gap, t, next_id, duration, done } => {
+                if *done {
+                    return None;
+                }
+                *t += gap.sample(rng);
+                if *t > *duration {
+                    *done = true;
+                    return None;
+                }
+                let input_len = dist.sample_input(rng);
+                let output_len = dist.sample_output(rng, input_len);
+                let id = *next_id;
+                *next_id += 1;
+                Some(Ok(Request { id, arrival: *t, input_len, output_len }))
+            }
+            StreamKind::Mixture { parts, total, rng, gap, t, next_id, remaining } => {
+                if *remaining == 0 {
+                    return None;
+                }
+                *remaining -= 1;
+                *t += gap.sample(rng);
+                // Weighted component draw, then that component's length
+                // distributions — the exact draw order of the
+                // materializing path.
+                let mut u = rng.next_f64() * *total;
+                let mut dist = parts[parts.len() - 1].1;
+                for (w, d) in parts.iter() {
+                    u -= w.max(0.0);
+                    if u <= 0.0 {
+                        dist = *d;
+                        break;
+                    }
+                }
+                let input_len = dist.sample_input(rng);
+                let output_len = dist.sample_output(rng, input_len);
+                let id = *next_id;
+                *next_id += 1;
+                Some(Ok(Request { id, arrival: *t, input_len, output_len }))
+            }
+            StreamKind::Bursty { dist, rate, on_s, off_s, off_rate, rng, t, next_id, remaining } => {
+                if *remaining == 0 {
+                    return None;
+                }
+                *remaining -= 1;
+                let period = *on_s + *off_s;
+                // Piecewise-Poisson: sample a gap at the current phase's
+                // rate; when it crosses the phase boundary, advance to
+                // the boundary and resample there.
+                loop {
+                    let phase_t = *t % period;
+                    let (r, boundary) = if phase_t < *on_s {
+                        (*rate, *on_s - phase_t)
+                    } else {
+                        (*off_rate, period - phase_t)
+                    };
+                    let g = Exponential::new(r).sample(rng);
+                    if g < boundary {
+                        *t += g;
+                        break;
+                    }
+                    *t += boundary;
+                }
+                let input_len = dist.sample_input(rng);
+                let output_len = dist.sample_output(rng, input_len);
+                let id = *next_id;
+                *next_id += 1;
+                Some(Ok(Request { id, arrival: *t, input_len, output_len }))
+            }
+            StreamKind::Csv { lines } => loop {
+                let (i, line) = lines.next()?;
+                let line = match line {
+                    Ok(l) => l,
+                    Err(e) => return Some(Err(e)),
+                };
+                match parse_trace_line(i, &line) {
+                    Ok(Some((req, _predicted))) => return Some(Ok(req)),
+                    Ok(None) => continue,
+                    Err(e) => return Some(Err(e)),
+                }
+            },
+        }
     }
 }
 
@@ -220,80 +407,60 @@ impl WorkloadSpec {
         }
     }
 
-    /// Materialise the request stream.  Fails on `CsvTrace` IO errors
-    /// and on degenerate spec parameters (zero-mass mixtures,
+    /// Open the spec as a lazy [`WorkloadStream`].  Fails on `CsvTrace`
+    /// IO errors and on degenerate spec parameters (zero-mass mixtures,
     /// non-positive burst phases) — never panics on caller input.
-    pub fn generate(&self, rate: f64, n: usize, seed: u64) -> std::io::Result<Vec<Request>> {
-        match self {
-            WorkloadSpec::ShareGpt(d) => Ok(generate(d, rate, n, seed)),
-            WorkloadSpec::HeavyTail => Ok(generate(&ShareGptLike::heavy_tail(), rate, n, seed)),
-            WorkloadSpec::UniformShort => {
-                Ok(generate(&ShareGptLike::uniform_short(), rate, n, seed))
+    pub fn stream(&self, rate: f64, n: usize, seed: u64) -> std::io::Result<WorkloadStream> {
+        let kind = match self {
+            WorkloadSpec::ShareGpt(d) => return Ok(WorkloadStream::poisson(*d, rate, n, seed)),
+            WorkloadSpec::HeavyTail => {
+                return Ok(WorkloadStream::poisson(ShareGptLike::heavy_tail(), rate, n, seed))
             }
-            WorkloadSpec::CsvTrace(path) => load_csv(path),
+            WorkloadSpec::UniformShort => {
+                return Ok(WorkloadStream::poisson(ShareGptLike::uniform_short(), rate, n, seed))
+            }
+            WorkloadSpec::CsvTrace(path) => return WorkloadStream::csv(path),
             WorkloadSpec::Mixture(parts) => {
                 let total: f64 = parts.iter().map(|(w, _)| w.max(0.0)).sum();
                 if total.is_nan() || total <= 0.0 {
                     return Err(invalid_spec("mixture weights must have positive mass"));
                 }
-                let mut rng = Rng::new(seed);
-                let gap = Exponential::new(rate);
-                let mut t = 0.0;
-                let mut out = Vec::with_capacity(n);
-                for i in 0..n {
-                    t += gap.sample(&mut rng);
-                    // Weighted component draw, then that component's
-                    // length distributions.
-                    let mut u = rng.next_f64() * total;
-                    let mut dist = &parts[parts.len() - 1].1;
-                    for (w, d) in parts {
-                        u -= w.max(0.0);
-                        if u <= 0.0 {
-                            dist = d;
-                            break;
-                        }
-                    }
-                    let input_len = dist.sample_input(&mut rng);
-                    let output_len = dist.sample_output(&mut rng, input_len);
-                    out.push(Request { id: i as RequestId, arrival: t, input_len, output_len });
+                StreamKind::Mixture {
+                    parts: parts.clone(),
+                    total,
+                    rng: Rng::new(seed),
+                    gap: Exponential::new(rate),
+                    t: 0.0,
+                    next_id: 0,
+                    remaining: n,
                 }
-                Ok(out)
             }
             WorkloadSpec::Bursty { dist, on_s, off_s, off_rate_frac } => {
                 let phase_ok = |p: f64| p.is_finite() && p > 0.0;
                 if !phase_ok(*on_s) || !phase_ok(*off_s) {
                     return Err(invalid_spec("burst phases must be positive"));
                 }
-                let mut rng = Rng::new(seed);
-                let period = on_s + off_s;
-                let off_rate = (rate * off_rate_frac).max(1e-9);
-                let mut t = 0.0;
-                let mut out = Vec::with_capacity(n);
-                for i in 0..n {
-                    // Piecewise-Poisson: sample a gap at the current
-                    // phase's rate; when it crosses the phase boundary,
-                    // advance to the boundary and resample there.
-                    loop {
-                        let phase_t = t % period;
-                        let (r, boundary) = if phase_t < *on_s {
-                            (rate, *on_s - phase_t)
-                        } else {
-                            (off_rate, period - phase_t)
-                        };
-                        let g = Exponential::new(r).sample(&mut rng);
-                        if g < boundary {
-                            t += g;
-                            break;
-                        }
-                        t += boundary;
-                    }
-                    let input_len = dist.sample_input(&mut rng);
-                    let output_len = dist.sample_output(&mut rng, input_len);
-                    out.push(Request { id: i as RequestId, arrival: t, input_len, output_len });
+                StreamKind::Bursty {
+                    dist: *dist,
+                    rate,
+                    on_s: *on_s,
+                    off_s: *off_s,
+                    off_rate: (rate * off_rate_frac).max(1e-9),
+                    rng: Rng::new(seed),
+                    t: 0.0,
+                    next_id: 0,
+                    remaining: n,
                 }
-                Ok(out)
             }
-        }
+        };
+        Ok(WorkloadStream { kind })
+    }
+
+    /// Materialise the request stream — `self.stream(..)` collected, so
+    /// the two paths yield bit-identical request sequences by
+    /// construction.
+    pub fn generate(&self, rate: f64, n: usize, seed: u64) -> std::io::Result<Vec<Request>> {
+        self.stream(rate, n, seed)?.collect()
     }
 }
 
@@ -343,32 +510,66 @@ pub fn load_csv(path: &str) -> std::io::Result<Vec<Request>> {
 
 /// Load a trace plus its optional predicted-length column: rows from a
 /// [`save_csv_predicted`] file yield `Some(predicted_len)`, legacy
-/// 4-column rows yield `None`.
+/// 4-column rows yield `None`.  Reads through a [`std::io::BufReader`]
+/// one line at a time, so only the parsed rows (never the raw text) are
+/// resident — multi-million-row traces load without a second copy of
+/// the file in memory.
 pub fn load_csv_predicted(path: &str) -> std::io::Result<(Vec<Request>, Vec<Option<Tokens>>)> {
-    let text = std::fs::read_to_string(path)?;
+    use std::io::BufRead;
+    let f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut out = Vec::new();
     let mut predicted = Vec::new();
-    for (i, line) in text.lines().enumerate() {
-        if i == 0 && line.starts_with("id,") {
-            continue;
+    for (i, line) in f.lines().enumerate() {
+        if let Some((req, pred)) = parse_trace_line(i, &line?)? {
+            out.push(req);
+            predicted.push(pred);
         }
-        if line.trim().is_empty() {
-            continue;
-        }
-        let mut parts = line.split(',');
-        let parse_err = || std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad trace line {i}: {line}"));
-        let id = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
-        let arrival = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
-        let input_len = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
-        let output_len = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
-        // Optional 5th column; present -> it must parse.
-        predicted.push(match parts.next().map(str::trim).filter(|s| !s.is_empty()) {
-            Some(s) => Some(s.parse().map_err(|_| parse_err())?),
-            None => None,
-        });
-        out.push(Request { id, arrival, input_len, output_len });
     }
     Ok((out, predicted))
+}
+
+/// Parse one trace-CSV line — shared by the materializing loaders and
+/// the streaming replay so both accept exactly the same files.  Returns
+/// `Ok(None)` for the header row and blank lines.
+fn parse_trace_line(
+    i: usize,
+    line: &str,
+) -> std::io::Result<Option<(Request, Option<Tokens>)>> {
+    if i == 0 && line.starts_with("id,") {
+        return Ok(None);
+    }
+    if line.trim().is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split(',');
+    let parse_err = || std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad trace line {i}: {line}"));
+    let id = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
+    let arrival = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
+    let input_len = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
+    let output_len = parts.next().and_then(|s| s.trim().parse().ok()).ok_or_else(parse_err)?;
+    // Optional 5th column; present -> it must parse.
+    let predicted = match parts.next().map(str::trim).filter(|s| !s.is_empty()) {
+        Some(s) => Some(s.parse().map_err(|_| parse_err())?),
+        None => None,
+    };
+    Ok(Some((Request { id, arrival, input_len, output_len }, predicted)))
+}
+
+/// Count the data rows of a trace CSV in O(1) memory (header and blank
+/// lines excluded) — the request total a streaming replay will deliver,
+/// assuming every row parses.
+pub fn count_csv_rows(path: &str) -> std::io::Result<usize> {
+    use std::io::BufRead;
+    let f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut n = 0usize;
+    for (i, line) in f.lines().enumerate() {
+        let line = line?;
+        if (i == 0 && line.starts_with("id,")) || line.trim().is_empty() {
+            continue;
+        }
+        n += 1;
+    }
+    Ok(n)
 }
 
 /// Distribution summary used by planning: histogram of request counts
@@ -687,5 +888,68 @@ mod tests {
         let b = LengthHistogram::exponential_bounds(131_072);
         assert_eq!(*b.last().unwrap(), 131_072);
         assert!(b.len() < 20, "O(log L) buckets, got {}", b.len());
+    }
+
+    #[test]
+    fn stream_matches_materialized_for_every_spec() {
+        for name in ["sharegpt", "heavytail", "uniformshort", "mix", "bursty"] {
+            let spec = WorkloadSpec::parse(name).unwrap();
+            let materialized = spec.generate(12.0, 300, 9).unwrap();
+            let streamed: Vec<Request> = spec
+                .stream(12.0, 300, 9)
+                .unwrap()
+                .map(|r| r.unwrap())
+                .collect();
+            assert_eq!(materialized, streamed, "{name} stream diverged");
+        }
+    }
+
+    #[test]
+    fn duration_stream_matches_materialized() {
+        let d = ShareGptLike::default();
+        let materialized = generate_for_duration(&d, 50.0, 10.0, 5);
+        let streamed: Vec<Request> = WorkloadStream::poisson_for_duration(d, 50.0, 10.0, 5)
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(materialized, streamed);
+    }
+
+    #[test]
+    fn csv_stream_matches_loader_and_row_count() {
+        let reqs = generate(&ShareGptLike::default(), 5.0, 64, 19);
+        let path = std::env::temp_dir().join("cascade_stream_trace.csv");
+        let path = path.to_str().unwrap();
+        save_csv(path, &reqs).unwrap();
+        let loaded = load_csv(path).unwrap();
+        let streamed: Vec<Request> =
+            WorkloadStream::csv(path).unwrap().map(|r| r.unwrap()).collect();
+        assert_eq!(loaded, streamed);
+        assert_eq!(count_csv_rows(path).unwrap(), reqs.len());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_stream_surfaces_parse_errors_in_band() {
+        let path = std::env::temp_dir().join("cascade_stream_bad.csv");
+        let path = path.to_str().unwrap();
+        std::fs::write(path, "id,arrival,input_len,output_len\n0,0.5,10,20\noops\n").unwrap();
+        let items: Vec<std::io::Result<Request>> = WorkloadStream::csv(path).unwrap().collect();
+        assert_eq!(items.len(), 2);
+        assert!(items[0].is_ok());
+        assert!(items[1].is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn degenerate_specs_fail_to_stream() {
+        let zero_mass = WorkloadSpec::Mixture(vec![(0.0, ShareGptLike::default())]);
+        assert!(zero_mass.stream(10.0, 5, 1).is_err());
+        let bad_burst = WorkloadSpec::Bursty {
+            dist: ShareGptLike::default(),
+            on_s: -1.0,
+            off_s: 10.0,
+            off_rate_frac: 0.1,
+        };
+        assert!(bad_burst.stream(10.0, 5, 1).is_err());
     }
 }

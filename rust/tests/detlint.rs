@@ -3,7 +3,7 @@
 //! (and reject malformed annotations), and the live tree must be
 //! lint-clean with every allow annotation earning its keep.
 
-use cascade_infer::lint::{check_crate, check_registry_coverage, check_source, Rule};
+use cascade_infer::lint::{check_crate, check_registry_coverage, check_source, sim_scoped, Rule};
 use std::path::Path;
 
 fn fixture(name: &str) -> String {
@@ -58,6 +58,28 @@ fn d4_fixture_flags_uncovered_registry_name() {
     assert_eq!(findings[0].rule, Rule::D4);
     assert!(findings[0].message.contains("newpolicy"));
     assert!(findings[0].message.contains("d4_missing.rs"));
+}
+
+#[test]
+fn simulation_core_modules_are_sim_scoped_for_d1_d3() {
+    // The planet-scale core (event queue, arena storage, streaming
+    // workloads) is load-bearing for bit-identity, so its modules must
+    // be inside sim scope: a hash iteration, a partial_cmp, or a clock
+    // read slipped into any of them has to fail detlint by path.
+    for rel in ["sim/mod.rs", "sim/arena.rs", "cluster/driver.rs", "workload.rs"] {
+        assert!(sim_scoped(rel), "{rel} must be sim-scoped");
+    }
+    let src = fixture("sim_scope_arena_stream.rs");
+    for rel in ["sim/arena.rs", "sim/mod.rs", "workload.rs"] {
+        let rep = check_source(rel, &src);
+        let mut rules: Vec<&str> = rep.findings.iter().map(|f| f.rule.id()).collect();
+        rules.sort_unstable();
+        assert_eq!(rules, ["D1", "D2", "D3"], "{rel}: {:#?}", rep.findings);
+    }
+    // Outside sim scope only the crate-wide wall-clock rule applies.
+    let rep = check_source("cli.rs", &src);
+    assert_eq!(rep.findings.len(), 1, "{:#?}", rep.findings);
+    assert_eq!(rep.findings[0].rule, Rule::D3);
 }
 
 #[test]

@@ -232,6 +232,77 @@ fn every_registry_predictor_is_run_to_run_bit_identical() {
 }
 
 #[test]
+fn streaming_runs_match_materialized_for_every_registry_scheduler() {
+    // The streaming driver (`Cluster::run_stream` via
+    // `build_streaming`) must be a pure representation change: the
+    // same (spec, seed) produces a byte-identical report whether the
+    // trace is materialized up front or pulled lazily one arrival at
+    // a time.  Covers every registry entry so a scheduler whose event
+    // pattern breaks the lazy-arrival equivalence argument (e.g. by
+    // racing a timer against an unscheduled arrival) fails by name.
+    for name in REGISTRY_COVERAGE {
+        let build = || {
+            Experiment::builder()
+                .instances(4)
+                .scheduler(name)
+                .workload_name("sharegpt")
+                .rate(20.0)
+                .requests(150)
+                .seed(7)
+                .plan_sample(300)
+        };
+        let (rm, sm) = build().build().expect("materialized experiment builds").run();
+        let (rs, ss) = build()
+            .build_streaming()
+            .expect("streaming experiment builds")
+            .run()
+            .expect("streaming run succeeds");
+        assert_eq!(rm.records.len(), rs.records.len(), "{name} record counts diverged");
+        assert_eq!(checksum(&rm), checksum(&rs), "{name} streaming report diverged");
+        assert_eq!(
+            stats_fingerprint(&sm),
+            stats_fingerprint(&ss),
+            "{name} streaming stats diverged"
+        );
+        assert_eq!(
+            sm.engine_iterations, ss.engine_iterations,
+            "{name} streaming iteration counts diverged"
+        );
+    }
+}
+
+#[test]
+fn streaming_matches_materialized_under_prediction_noise() {
+    // The arena caches predictor outputs at admission; the streaming
+    // and materialized paths must agree for every predictor family
+    // (the cached column, the recompute fallback, and the
+    // misprediction recovery machinery all run under noise).
+    for family in PREDICTOR_COVERAGE {
+        let p = predictor_instance(family);
+        let build = || {
+            Experiment::builder()
+                .instances(4)
+                .scheduler("cascade")
+                .predictor(p)
+                .workload_name("heavytail")
+                .rate(20.0)
+                .requests(150)
+                .seed(7)
+                .plan_sample(300)
+        };
+        let (rm, sm) = build().build().expect("materialized builds").run();
+        let (rs, ss) =
+            build().build_streaming().expect("streaming builds").run().expect("stream runs");
+        assert_eq!(checksum(&rm), checksum(&rs), "{p} streaming report diverged");
+        assert_eq!(
+            (sm.mispredictions, sm.predict_reroutes, sm.predict_escalations, sm.rejected),
+            (ss.mispredictions, ss.predict_reroutes, ss.predict_escalations, ss.rejected),
+            "{p} streaming recovery counters diverged"
+        );
+    }
+}
+
+#[test]
 fn different_workload_seeds_diverge() {
     let a = generate(&ShareGptLike::default(), 24.0, 200, 1);
     let b = generate(&ShareGptLike::default(), 24.0, 200, 2);

@@ -1,0 +1,32 @@
+// detlint fixture: the planet-scale simulation-core modules (arena
+// storage, streaming workloads) must sit inside sim scope, so D1-D3
+// all fire when lexed under `sim/arena.rs`-style virtual paths.
+// Not compiled; lexed by tests/detlint.rs.
+
+use std::collections::HashMap;
+
+pub struct Arena {
+    by_id: HashMap<u64, usize>,
+}
+
+impl Arena {
+    // Keyed lookup is deterministic — must not fire.
+    pub fn slot(&self, id: u64) -> Option<usize> {
+        self.by_id.get(&id).copied()
+    }
+
+    // VIOLATION (D1): hash-order iteration over live slots.
+    pub fn live_ids(&self) -> Vec<u64> {
+        self.by_id.keys().copied().collect()
+    }
+
+    // VIOLATION (D2): NaN-unsafe comparison on arrival timestamps.
+    pub fn earlier(a: f64, b: f64) -> bool {
+        a.partial_cmp(&b) == Some(std::cmp::Ordering::Less)
+    }
+
+    // VIOLATION (D3): wall-clock read while draining a stream.
+    pub fn drain_deadline() -> std::time::Instant {
+        std::time::Instant::now()
+    }
+}

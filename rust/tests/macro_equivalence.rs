@@ -9,9 +9,11 @@
 //! additionally interleaves arrivals and periodic timers so macro
 //! horizons land on, just before, and just after completion instants.
 
-use cascade_infer::cluster::{PolicySpec, RunStats};
+use cascade_infer::cluster::{Cluster, ClusterConfig, PolicySpec, RunStats, SchedulerKind};
 use cascade_infer::experiment::Experiment;
+use cascade_infer::gpu::GpuProfile;
 use cascade_infer::metrics::Report;
+use cascade_infer::models::LLAMA_3B;
 use cascade_infer::predict;
 use cascade_infer::sim::Rng;
 use cascade_infer::testutil::for_all;
@@ -251,6 +253,104 @@ fn randomized_horizon_interleavings_stay_identical() {
             "{scheduler} rate {rate} seed {seed} refine {refine} diverged"
         );
     });
+}
+
+#[test]
+fn streaming_driver_is_macro_micro_identical_across_workload_families() {
+    // Three drivers over the same spec — materialized macro, streaming
+    // macro, streaming micro-step — must all agree, transitively
+    // pinning the streaming path to the one-event-per-iteration
+    // reference.  Workload families cover every generator stream
+    // variant (plain Poisson, bursty phase loop, mixture draws).
+    let workloads = [("sharegpt", 18.0), ("heavytail", 12.0), ("bursty", 18.0), ("mix", 14.0)];
+    for scheduler in ["cascade", "vllm", "sjf"] {
+        for (wl, rate) in workloads {
+            let build = |stream: bool, micro: bool| -> (Report, RunStats) {
+                let b = Experiment::builder()
+                    .instances(4)
+                    .scheduler(scheduler)
+                    .workload_name(wl)
+                    .rate(rate)
+                    .requests(120)
+                    .seed(11)
+                    .plan_sample(400)
+                    .micro_step(micro);
+                if stream {
+                    b.build_streaming()
+                        .expect("streaming experiment builds")
+                        .run()
+                        .expect("streaming run succeeds")
+                } else {
+                    b.build().expect("experiment builds").run()
+                }
+            };
+            let (r_base, s_base) = build(false, false);
+            for (stream, micro) in [(true, false), (true, true)] {
+                let (r, s) = build(stream, micro);
+                assert_eq!(
+                    observables(&r_base, &s_base),
+                    observables(&r, &s),
+                    "{scheduler} on {wl}: streaming (micro={micro}) diverged"
+                );
+                assert_eq!(
+                    s_base.batch_snapshots, s.batch_snapshots,
+                    "{scheduler} on {wl}: streaming snapshot marks diverged"
+                );
+                assert_eq!(
+                    s_base.mean_token_load, s.mean_token_load,
+                    "{scheduler} on {wl}: streaming gossip-sampled load diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_replay_of_tie_arrivals_matches_materialized() {
+    // The `run_stream` counterpart of the adversarial tie test below:
+    // inject arrivals at exact completion instants (± 1 ns), stable-
+    // sort by arrival (preserving same-instant trace order, which is
+    // what the front-class seq lane reproduces), and replay the sorted
+    // trace both materialized and as a lazy iterator straight into the
+    // cluster driver.
+    let base = Experiment::builder()
+        .instances(4)
+        .scheduler("cascade")
+        .rate(20.0)
+        .requests(80)
+        .seed(5)
+        .plan_sample(200)
+        .build()
+        .unwrap();
+    let (first, _) = base.clone().run();
+    let mut reqs = base.requests.clone();
+    let mut id = 20_000u64;
+    for rec in first.records.iter().take(24) {
+        for arrival in [rec.completion, rec.completion - 1e-9, rec.completion + 1e-9] {
+            reqs.push(Request {
+                id,
+                arrival: arrival.max(0.0),
+                input_len: 64 + id % 512,
+                output_len: 16 + id % 64,
+            });
+            id += 1;
+        }
+    }
+    reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+
+    let cfg = || {
+        let mut c = ClusterConfig::new(GpuProfile::H20, LLAMA_3B, 4, SchedulerKind::Cascade);
+        c.plan_sample = 200;
+        c
+    };
+    let (r_mat, s_mat) = Cluster::new(cfg(), &reqs).run(&reqs);
+    let (r_str, s_str) = Cluster::new(cfg(), &reqs).run_stream(reqs.iter().copied(), reqs.len());
+    assert_eq!(r_mat.records.len(), reqs.len());
+    assert_eq!(
+        observables(&r_mat, &s_mat),
+        observables(&r_str, &s_str),
+        "tie-arrival streaming replay diverged from the materialized driver"
+    );
 }
 
 #[test]
