@@ -10,7 +10,10 @@
 //! exits non-zero on a regression beyond the tolerance (default 30%) —
 //! the CI perf-smoke gate.  A baseline containing `"placeholder": 1`
 //! (the state before the first toolchain-bearing run) skips the gate
-//! and prints blessing instructions instead.
+//! and prints blessing instructions instead.  `--bless` runs at quick
+//! size and writes the fresh report straight over the committed
+//! baseline (`benches/baseline/BENCH_hotpath.json`) — the one-command
+//! blessing path; commit the result, never hand-edit it.
 
 mod common;
 
@@ -90,7 +93,10 @@ fn main() {
             .and_then(|i| args.get(i + 1))
             .cloned()
     };
-    let quick = flag("--quick");
+    let bless = flag("--bless");
+    // The committed baseline is always a --quick measurement (the CI
+    // gate compares like against like), so --bless forces quick size.
+    let quick = flag("--quick") || bless;
     let json_path = opt("--json").unwrap_or_else(|| "BENCH_hotpath.json".into());
     let tolerance: f64 =
         opt("--tolerance").and_then(|s| s.parse().ok()).unwrap_or(0.30);
@@ -235,6 +241,16 @@ fn main() {
 
     std::fs::write(&json_path, report.to_json()).expect("write bench json");
     println!("\nwrote {json_path}");
+
+    if bless {
+        // Anchored on the manifest dir so blessing works from any cwd
+        // (`cargo bench` runs benches from the package root, but a
+        // direct target/ invocation may not).
+        let baseline =
+            concat!(env!("CARGO_MANIFEST_DIR"), "/benches/baseline/BENCH_hotpath.json");
+        std::fs::write(baseline, report.to_json()).expect("write blessed baseline");
+        println!("blessed baseline {baseline} — review the diff and commit it");
+    }
 
     // --check: the CI regression gate.
     if let Some(baseline_path) = opt("--check") {

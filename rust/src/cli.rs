@@ -96,12 +96,12 @@ USAGE:
   cascade-infer sim   [--config FILE] [--model NAME] [--gpu H20|L40|H100]
                       [--instances N] [--fleet SPEC] [--rate R] [--requests N]
                       [--seed S] [--scheduler NAME] [--workload NAME]
-                      [--predictor P] [--micro-step] [--stream]
+                      [--predictor P] [--churn SPEC] [--micro-step] [--stream]
   cascade-infer sweep [--rates R1,R2,..] [--schedulers N1,N2,..]
                       [--fleets F1;F2;..] [--predictors P1;P2;..]
                       [--model NAME] [--gpu H20|L40|H100]
                       [--instances N] [--requests N] [--seed S]
-                      [--workload NAME] [--jobs N]
+                      [--workload NAME] [--churn SPEC] [--jobs N]
   cascade-infer plan  [--model NAME] [--instances N] [--requests N] [--seed S]
   cascade-infer fit   [--model NAME] [--gpu H20|L40|H100]
   cascade-infer gen-trace --out FILE [--rate R] [--requests N] [--seed S]
@@ -173,8 +173,8 @@ RUNNING EXPERIMENTS
               QoE-vs-accuracy robustness table.
   Config:     --config FILE loads an [experiment] section (model, gpu,
               instances, fleet, rate, requests, seed, scheduler,
-              workload, predictor); explicit CLI flags override file
-              values.
+              workload, predictor, churn); explicit CLI flags override
+              file values.
   Parallel:   `sweep` cells are independent experiments and run across
               --jobs N worker threads (default: all cores).  The grid
               table is byte-identical for any job count.
@@ -198,14 +198,52 @@ RUNNING EXPERIMENTS
               driver — it exists to verify exactly that, at a large
               wall-time cost.
 
+FAULT INJECTION
+  --churn SPEC injects deterministic instance churn — the elastic,
+  fault-tolerant fleet axis.  SPEC is a comma-separated list of:
+    spot:T@I          spot preemption: instance I dies at time T
+                      mid-decode.  Its resident requests re-enter
+                      admission as re-prefills (prompt + generated
+                      prefix), retried with exponential backoff and
+                      capped attempts before a counted rejection —
+                      every request is accounted, never wedged.
+    drain:T@I[:D]     graceful scale-in: I stops admitting at T,
+                      requeues its queued work onto live instances and
+                      evacuates decoding KV through the bid-ask
+                      migration path, leaving when empty.  If still
+                      non-empty at T+D (default 10s) it is forcibly
+                      killed and recovers like a spot preemption.
+    join:T[@GPU]      scale-out: a pre-allocated slot starts booting
+                      at T and goes live only after its weight load
+                      (model footprint over the inter-node link).
+                      @GPU overrides the fleet's reference profile.
+    auto:P:MIN..MAX   SLO-feedback autoscaler: every P seconds a
+                      controller reads windowed SLO attainment and
+                      queue depth; low attainment or deep queues boot
+                      a new slot, comfortable attainment with empty
+                      queues drains the highest live id — always
+                      within MIN..MAX live instances.
+  The literal `none` (the default) disables churn and is guaranteed
+  bit-identical to the pre-churn simulator for every scheduler and
+  predictor (CI pins this).  All churn is deterministic: same spec +
+  seed => same report fingerprint.  `sim` prints churn/recovery
+  counters when events fired; `sweep --churn SPEC` applies one fault
+  schedule to every cell and adds preempt/recov/rej columns.
+  Membership propagates everywhere: dispatch and the rebalancers only
+  see admitting instances, gossip from departed instances expires,
+  re-planning runs over live membership, and in-flight migrations
+  touching a dead endpoint are cancelled with the request recovered.
+
 STATIC ANALYSIS
   `cargo run --release --bin detlint` lints src/ for determinism
   hazards (D1 hash-order iteration, D2 NaN-unsafe partial_cmp, D3
   wall-clock/entropy in sim paths, D4 registry schedulers *and
   predictors* missing from the golden-seed/macro-equivalence coverage
   lists) and exits non-zero on any unsuppressed finding; CI gates on
-  it.  Suppress a finding only with a justified annotation on the
-  offending line: `// detlint: allow(<rule>) -- <reason>`.
+  it.  D4 also covers churn event kinds: every `ChurnSpec::names()`
+  entry must appear in the elastic-suite coverage lists.  Suppress a
+  finding only with a justified annotation on the offending line:
+  `// detlint: allow(<rule>) -- <reason>`.
   `detlint --list-allows` prints the annotation audit trail and fails
   when any annotation is stale (suppresses nothing) — dead allows
   must be deleted.  See the `cascade_infer::lint` module docs for the
@@ -226,13 +264,15 @@ PERF BASELINE
     1. push the change and let CI's bench step upload its fresh
        `BENCH_hotpath.json` artifact (a --quick run on the CI runner —
        local full-size numbers are NOT comparable to it), or run
-       `cargo bench --bench perf_hotpath -- --quick --json out.json`
-       on a comparable machine;
+       `cargo bench --bench perf_hotpath -- --quick --bless`
+       on a comparable machine — `--bless` runs quick-sized and
+       writes the result straight over the committed baseline at
+       rust/benches/baseline/BENCH_hotpath.json;
     2. review the per-metric deltas the `--check` step printed, and
        say in the PR why the regression is intended;
-    3. copy the quick JSON over the committed baseline at
-       rust/benches/baseline/BENCH_hotpath.json and commit it with
-       the change — never hand-edit individual numbers.
+    3. commit the refreshed baseline with the change — never
+       hand-edit individual numbers.  (Without --bless: copy the CI
+       artifact's JSON over the committed baseline.)
 
   Examples:
     cascade-infer sim --rate 16 --scheduler cascade --workload heavytail
@@ -244,6 +284,8 @@ PERF BASELINE
     cascade-infer sweep --rates 8,16 --schedulers cascade,vllm --fleets \"h20:8;h20:6,h100:2\"
     cascade-infer sweep --rates 16 --schedulers cascade,vllm \\
                         --predictors \"oracle;noisy:0.2;noisy:0.5;bucket:0.7;ltr:0.8\"
+    cascade-infer sim --churn \"spot:2.0@1,drain:4.0@2:3.0,join:6.0\" --workload heavytail
+    cascade-infer sweep --rates 12 --schedulers cascade,vllm --churn \"auto:1.0:2..6\"
 
 `serve` drives the real PJRT-served model end to end.";
 

@@ -10,12 +10,18 @@
 
 use crate::coordinator::balance::{Ask, Bid, PendingPull};
 use crate::coordinator::loadtracker::LoadReport;
+use crate::coordinator::plan::PlanInstance;
 use crate::coordinator::refine::{naive, RangeRefiner, RefineConfig};
-use crate::engine::{MacroStop, Phase};
-use crate::metrics::{Report, RequestRecord};
+use crate::engine::{MacroStop, Phase, Sequence};
+use crate::metrics::{Report, RequestRecord, Slo};
 use crate::workload::{LengthHistogram, Request};
 use crate::{InstanceId, RequestId, Time, Tokens};
 
+use super::elastic::{
+    Membership, AUTOSCALE_ATTAIN_HIGH, AUTOSCALE_ATTAIN_LOW, AUTOSCALE_QUEUE_FACTOR,
+    AUTOSCALE_SLO_TPOT, AUTOSCALE_SLO_TTFT, DEFAULT_DRAIN_DEADLINE, DRAIN_PUMP_INTERVAL,
+    MAX_SPOT_RETRIES, READMIT_BACKOFF_BASE,
+};
 use super::policy::{BalancePolicy, Layout, RefinePolicy};
 use super::{Cluster, RunStats};
 
@@ -45,6 +51,20 @@ pub(super) enum Event {
     PullAttempt { receiver: InstanceId },
     /// Starvation escalation reaches the sender (§4.4).
     StarveNotice { sender: InstanceId, pull: PendingPull, receiver: InstanceId },
+    /// Elastic fleets: an `Absent` slot finished its weight load and
+    /// goes live.
+    InstanceJoin(InstanceId),
+    /// Elastic fleets: graceful scale-in.  The first firing flips the
+    /// instance to `Draining`; subsequent firings are the recurring
+    /// drain pump (requeue/offer residue, check empty + deadline).
+    DrainStart(InstanceId),
+    /// Elastic fleets: spot preemption — the instance dies here.
+    InstanceGone(InstanceId),
+    /// Elastic fleets: periodic SLO-feedback autoscaler observation.
+    AutoscaleTick,
+    /// Elastic fleets: a preempted request re-enters admission after
+    /// its backoff (capped attempts, then a counted rejection).
+    Readmit(Request),
 }
 
 impl Cluster {
@@ -166,6 +186,16 @@ impl Cluster {
         {
             self.events.schedule(self.cfg.replan_interval, Event::Replan);
         }
+        // Churn events ride the same calendar lane, scheduled last so
+        // the legacy timers keep their normal-lane insertion seqs.  A
+        // `ChurnSpec::none()` run schedules nothing here — the queue
+        // state is bit-identical to before this block existed.
+        for (at, ev) in std::mem::take(&mut self.churn_schedule) {
+            self.events.schedule(at, ev);
+        }
+        if let Some(auto) = self.cfg.churn.autoscale {
+            self.events.schedule(auto.period, Event::AutoscaleTick);
+        }
     }
 
     /// Route one popped event to its handler.
@@ -187,6 +217,11 @@ impl Cluster {
             Event::StarveNotice { sender, pull, receiver } => {
                 self.on_starve(now, sender, pull, receiver)
             }
+            Event::InstanceJoin(i) => self.on_instance_join(now, i),
+            Event::DrainStart(i) => self.on_drain_start(now, i),
+            Event::InstanceGone(i) => self.on_instance_gone(now, i),
+            Event::AutoscaleTick => self.on_autoscale_tick(now),
+            Event::Readmit(req) => self.on_readmit(now, req),
         }
     }
 
@@ -376,6 +411,12 @@ impl Cluster {
 
     fn on_step_done(&mut self, now: Time, i: InstanceId) {
         self.instances[i].busy = false;
+        // A `StepDone` parked before the instance was spot-killed can
+        // pop after it; the engine was evacuated, so there is nothing
+        // to snapshot, offer, or kick.  Unreachable churn-free.
+        if !self.cfg.churn.is_none() && !self.instances[i].serves() {
+            return;
+        }
         // Fig. 1 batch snapshots. The old loop materialised the batch
         // composition on *every* step just in case; the snapshot check
         // is O(1) now and rows are only built when a mark actually hits.
@@ -447,6 +488,12 @@ impl Cluster {
         }
         self.load_samples += 1;
         for i in 0..self.instances.len() {
+            // Departed and not-yet-joined slots neither send nor
+            // receive gossip; stage lists already exclude them, so
+            // this skip only saves their (empty) inbound recording.
+            if !self.cfg.churn.is_none() && !self.instances[i].serves() {
+                continue;
+            }
             let s = self.stage_of[i];
             for &peer in &self.stages[s] {
                 if peer != i {
@@ -542,6 +589,14 @@ impl Cluster {
     /// they are; anything now out of range migrates through the normal
     /// handover path, so replanning never disrupts ongoing decoding.
     fn on_replan(&mut self, now: Time) {
+        // Elastic fleets re-plan over live membership only — the churn
+        // remap owns stage assignment there (the legacy contiguous
+        // `0..n` rebuild below would resurrect departed instances).
+        if !self.cfg.churn.is_none() {
+            self.replan_membership(now);
+            self.events.schedule(now + self.cfg.replan_interval, Event::Replan);
+            return;
+        }
         // Need a meaningful sample (low-traffic freeze, like §4.3).
         // `total()` counts every completion ever, exactly what the old
         // unbounded log's `len()` was; the ring retains the newest
@@ -617,7 +672,11 @@ impl Cluster {
     fn on_baseline_rebalance(&mut self, now: Time) {
         let (mut hi_i, mut hi_v) = (0, f64::MIN);
         let (mut lo_i, mut lo_v) = (0, f64::MAX);
-        for i in 0..self.instances.len() {
+        // `admitting` is exactly `0..n` on a churn-free run, so this
+        // iteration is the legacy whole-fleet scan bit for bit; under
+        // churn it keeps the rebalancer off departed/absent slots
+        // (whose empty engines would always win the `lo` side).
+        for &i in &self.admitting {
             let d = self.instances[i].engine.memory_demand();
             if d > hi_v {
                 hi_v = d;
@@ -629,6 +688,7 @@ impl Cluster {
             }
         }
         if hi_v - lo_v > 0.2 && hi_i != lo_i {
+            debug_assert!(self.instances[lo_i].admits());
             if let Some((rid, len)) = self.instances[hi_i]
                 .engine
                 .running()
@@ -654,5 +714,424 @@ impl Cluster {
             }
         }
         self.events.schedule(now + 0.25, Event::BaselineRebalance);
+    }
+}
+
+/// Elastic-fleet handlers: joins, drains, spot kills, readmission, and
+/// the SLO-feedback autoscaler.  Every method here is reachable only
+/// when `cfg.churn` is non-empty (the events that invoke them are
+/// never scheduled otherwise), so a churn-free run executes none of
+/// this code.
+impl Cluster {
+    /// Recompute the cached admitting-id list after a membership
+    /// transition.
+    fn rebuild_admitting(&mut self) {
+        self.admitting =
+            (0..self.instances.len()).filter(|&i| self.instances[i].admits()).collect();
+    }
+
+    /// An `Absent` slot finished its weight load: go live and fold it
+    /// into the stage layout.
+    fn on_instance_join(&mut self, now: Time, i: InstanceId) {
+        if self.instances[i].membership != Membership::Absent {
+            return;
+        }
+        self.instances[i].membership = Membership::Live;
+        self.booting.remove(&i);
+        self.pending_joins = self.pending_joins.saturating_sub(1);
+        self.stats.joins += 1;
+        self.rebuild_admitting();
+        self.replan_membership(now);
+    }
+
+    /// Spot preemption: the instance dies right now.
+    fn on_instance_gone(&mut self, now: Time, i: InstanceId) {
+        if !self.instances[i].serves() {
+            return; // already gone (double spot / spot after drain-out)
+        }
+        self.stats.spot_kills += 1;
+        self.kill_instance(now, i);
+    }
+
+    /// Hard-kill `i`: cancel its transfers, drop its protocol state,
+    /// evacuate every resident sequence into the capped re-admission
+    /// path, and expunge its gossip.  Shared by spot preemption and
+    /// the drain-deadline forced fallback.
+    fn kill_instance(&mut self, now: Time, i: InstanceId) {
+        self.instances[i].membership = Membership::Dead;
+        self.instances[i].drain_deadline = f64::INFINITY;
+        self.instances[i].busy = false;
+        self.rebuild_admitting();
+        // Cancel in-flight transfers touching the dead instance
+        // (deterministic ascending-request order).  Source-dead: the
+        // sequence — still decoding on the source under live migration
+        // — rides the evacuation below.  Dest-dead: it simply keeps
+        // decoding on its source.
+        for t in self.migration.transfers_touching(i) {
+            self.migration.abort(t.request);
+            self.in_flight.remove(&t.request);
+            self.offers.remove(&t.request);
+            self.retry_after.remove(&t.request);
+        }
+        // Negotiations the dead instance was driving or promised into.
+        // A dropped promise whose receiver died would leave the (live)
+        // sender's offer open forever — re-offers early-return on an
+        // open book — so resolve those offers for renegotiation.
+        self.offers.retain(|_, v| v.0 != i);
+        self.promises.remove(&i);
+        let mut orphaned: Vec<RequestId> = Vec::new();
+        for list in self.promises.values_mut() {
+            list.retain(|(p, recv)| {
+                if *recv == i {
+                    orphaned.push(p.request);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        for r in orphaned {
+            self.offers.remove(&r);
+            self.retry_after.insert(r, now + 0.25);
+        }
+        // Evacuate every resident sequence and re-admit it as a
+        // re-prefill (prompt + generated prefix; decode picks up where
+        // it left off, only the KV is recomputed).
+        for seq in self.instances[i].engine.evacuate() {
+            self.stats.preempted_requests += 1;
+            self.stats.lost_tokens += seq.kv_len;
+            self.arena.release(seq.req.id);
+            self.retry_after.remove(&seq.req.id);
+            let req = Request {
+                id: seq.req.id,
+                arrival: seq.req.arrival,
+                input_len: seq.logical_len(),
+                output_len: seq.remaining().max(1),
+            };
+            self.schedule_readmit(now, req);
+        }
+        // Its last gossip must not linger as a stale bid anywhere.
+        for j in 0..self.instances.len() {
+            if j != i {
+                self.instances[j].tracker.forget_instance(i);
+            }
+        }
+        self.replan_membership(now);
+    }
+
+    /// First firing: flip to `Draining` and leave the admitting set.
+    /// Every firing (the recurring pump): requeue/offer residue and
+    /// check the empty / deadline exit conditions.
+    fn on_drain_start(&mut self, now: Time, i: InstanceId) {
+        match self.instances[i].membership {
+            Membership::Live => {
+                let dur =
+                    self.drain_spec.get(&i).copied().unwrap_or(DEFAULT_DRAIN_DEADLINE);
+                self.instances[i].membership = Membership::Draining;
+                self.instances[i].drain_deadline = now + dur;
+                self.stats.drains_started += 1;
+                self.rebuild_admitting();
+                self.replan_membership(now);
+            }
+            Membership::Draining => {}
+            Membership::Absent | Membership::Dead => return,
+        }
+        self.pump_drain(now, i);
+    }
+
+    fn pump_drain(&mut self, now: Time, i: InstanceId) {
+        if !self.instances[i].engine.has_work()
+            && self.migration.transfers_touching(i).is_empty()
+        {
+            // Fully evacuated: leave gracefully.
+            self.instances[i].membership = Membership::Dead;
+            self.instances[i].drain_deadline = f64::INFINITY;
+            self.stats.drains_completed += 1;
+            for j in 0..self.instances.len() {
+                if j != i {
+                    self.instances[j].tracker.forget_instance(i);
+                }
+            }
+            return;
+        }
+        if now >= self.instances[i].drain_deadline {
+            // Deadline passed with work still resident: forced kill,
+            // recovery through the spot path.
+            self.stats.drains_forced += 1;
+            self.kill_instance(now, i);
+            return;
+        }
+        if !self.admitting.is_empty() {
+            // Queued requests hold no KV here — reroute them through
+            // normal dispatch on the live fleet.
+            let queued: Vec<RequestId> =
+                self.instances[i].engine.queued().map(|s| s.req.id).collect();
+            for rid in queued {
+                if let Some(seq) = self.instances[i].engine.extract(rid) {
+                    self.redispatch(now, seq);
+                }
+            }
+            // Decoding sequences leave via the §4.4 bid-ask handover,
+            // offered to the admitting members of their length's stage
+            // (falling back to the whole live fleet when that stage is
+            // momentarily empty).
+            let running: Vec<(RequestId, Tokens)> = self.instances[i]
+                .engine
+                .running()
+                .iter()
+                .filter(|s| !self.migration.is_migrating(s.req.id))
+                .map(|s| (s.req.id, s.current_len()))
+                .collect();
+            for (rid, len) in running {
+                let s = super::router::stage_for_len(&self.ranges, len);
+                let mut candidates: Vec<InstanceId> = self.stages[s]
+                    .iter()
+                    .copied()
+                    .filter(|&c| c != i && self.instances[c].admits())
+                    .collect();
+                if candidates.is_empty() {
+                    candidates = self.admitting.clone();
+                }
+                self.bid_ask_migrate(now, i, rid, len, &candidates);
+            }
+        }
+        self.events.schedule(now + DRAIN_PUMP_INTERVAL, Event::DrainStart(i));
+    }
+
+    /// Re-inject a still-queued sequence (drain requeue) through
+    /// normal dispatch; its arena entry survives the move.
+    fn redispatch(&mut self, now: Time, seq: Sequence) {
+        let req = seq.req;
+        let target = self.router.route(
+            &self.cfg.policy,
+            &req,
+            &self.stages,
+            &self.ranges,
+            &self.instances,
+            &self.admitting,
+            &self.migration,
+            &self.predictor,
+            &self.arena,
+        );
+        if self.instances[target].engine.can_ever_hold(self.predictor.admit_len(&req)) {
+            let ok = self.instances[target].engine.inject(seq);
+            debug_assert!(ok, "queued sequences always inject");
+            self.kick(now, target);
+        } else {
+            // The routed instance can never hold it: back through the
+            // capped re-admission path (converges to a counted
+            // rejection instead of wedging the drain).
+            self.arena.release(req.id);
+            let req = Request {
+                id: req.id,
+                arrival: req.arrival,
+                input_len: seq.logical_len(),
+                output_len: seq.remaining().max(1),
+            };
+            self.schedule_readmit(now, req);
+        }
+    }
+
+    /// Queue `req` for re-admission after an exponential backoff, or
+    /// — past [`MAX_SPOT_RETRIES`] attempts — count it rejected.  The
+    /// request holds no arena entry between preemption and
+    /// re-admission.
+    pub(super) fn schedule_readmit(&mut self, now: Time, req: Request) {
+        let attempts = {
+            let e = self.spot_attempts.entry(req.id).or_insert(0);
+            *e += 1;
+            *e
+        };
+        if attempts > MAX_SPOT_RETRIES {
+            self.spot_attempts.remove(&req.id);
+            self.stats.rejected += 1;
+            return;
+        }
+        let delay = READMIT_BACKOFF_BASE * (1u64 << (attempts - 1)) as f64;
+        self.events.schedule(now + delay, Event::Readmit(req));
+    }
+
+    /// A preempted request's backoff expired: try admission again.
+    fn on_readmit(&mut self, now: Time, req: Request) {
+        if self.admitting.is_empty() {
+            // Still no admitting instance; burn an attempt and back
+            // off again (converges to a counted rejection).
+            self.schedule_readmit(now, req);
+            return;
+        }
+        let before = self.stats.rejected;
+        self.on_arrival(now, req);
+        self.spot_attempts.remove(&req.id);
+        if self.stats.rejected == before {
+            self.stats.recovered += 1;
+        }
+    }
+
+    /// Periodic SLO-feedback controller: scale out when windowed SLO
+    /// attainment sags (or queues pile up), scale in when attainment
+    /// is comfortable and queues are empty — within `min..=max`.
+    fn on_autoscale_tick(&mut self, now: Time) {
+        let Some(spec) = self.cfg.churn.autoscale else { return };
+        self.stats.autoscale_ticks += 1;
+        let slo = Slo { ttft: AUTOSCALE_SLO_TTFT, tpot: AUTOSCALE_SLO_TPOT };
+        let window = &self.records[self.autoscale_watermark..];
+        let attainment = if window.is_empty() {
+            1.0
+        } else {
+            window.iter().filter(|r| r.ttft() <= slo.ttft && r.tpot() <= slo.tpot).count()
+                as f64
+                / window.len() as f64
+        };
+        let queued: usize = self
+            .admitting
+            .iter()
+            .map(|&i| self.instances[i].engine.queued().count())
+            .sum();
+        let n_live = self.admitting.len() + self.pending_joins;
+        let pressed = attainment < AUTOSCALE_ATTAIN_LOW
+            || queued > AUTOSCALE_QUEUE_FACTOR * self.admitting.len().max(1);
+        if pressed && n_live < spec.max {
+            // Lowest-id absent slot boots (weight-load latency priced
+            // from its model slice over the inter-node link).
+            if let Some(slot) = (0..self.instances.len()).find(|&j| {
+                self.instances[j].membership == Membership::Absent
+                    && !self.booting.contains(&j)
+            }) {
+                self.booting.insert(slot);
+                self.pending_joins += 1;
+                self.stats.scale_outs += 1;
+                self.events.schedule(now + self.boot_latency[slot], Event::InstanceJoin(slot));
+            }
+        } else if attainment >= AUTOSCALE_ATTAIN_HIGH
+            && queued == 0
+            && self.pending_joins == 0
+            && n_live > spec.min
+            && self.admitting.len() > 1
+        {
+            // Highest-id live instance drains away gracefully.
+            if let Some(&victim) = self.admitting.last() {
+                self.stats.scale_ins += 1;
+                self.drain_spec.insert(victim, DEFAULT_DRAIN_DEADLINE);
+                self.events.schedule(now, Event::DrainStart(victim));
+            }
+        }
+        self.autoscale_watermark = self.records.len();
+        self.events.schedule(now + spec.period, Event::AutoscaleTick);
+    }
+
+    /// Rebuild stage membership over the live fleet after a
+    /// join/leave.  Planned layouts re-run the §4.2 DP over the
+    /// admitting instances' capacities (once enough completions
+    /// exist); forced/Flat/Chain layouts — and the early-run planned
+    /// case — prune departed members in place and hand joiners to the
+    /// thinnest stage.
+    fn replan_membership(&mut self, _now: Time) {
+        if self.admitting.is_empty() {
+            // Admission-less interregnum: keep the old shape; arrivals
+            // park on the backoff path until a join lands.
+            return;
+        }
+        let planned = self.cfg.forced_pipeline.is_none()
+            && self.cfg.policy.layout == Layout::Planned;
+        if planned && self.observed.total() >= 64 {
+            self.replan_planned_membership();
+            return;
+        }
+        // Structural fallback: keep the stage count, prune departures,
+        // append joiners to the thinnest stage (lowest index on ties).
+        {
+            let instances = &self.instances;
+            for members in self.stages.iter_mut() {
+                members.retain(|&m| instances[m].admits());
+            }
+        }
+        let joiners: Vec<InstanceId> = self
+            .admitting
+            .iter()
+            .copied()
+            .filter(|&i| !self.stages[self.stage_of[i]].contains(&i))
+            .collect();
+        for i in joiners {
+            let s = (0..self.stages.len())
+                .min_by_key(|&s| (self.stages[s].len(), s))
+                .expect("pipeline has stages");
+            self.stages[s].push(i);
+            self.stages[s].sort_unstable();
+            self.stage_of[i] = s;
+        }
+        // No stage may sit empty while spare members exist elsewhere
+        // (routing indexes stage members): steal the highest id from
+        // the largest stage, deterministically.
+        loop {
+            let Some(empty) = (0..self.stages.len()).find(|&s| self.stages[s].is_empty())
+            else {
+                break;
+            };
+            let Some(donor) = (0..self.stages.len())
+                .filter(|&s| self.stages[s].len() > 1)
+                .max_by_key(|&s| (self.stages[s].len(), s))
+            else {
+                break;
+            };
+            let m = self.stages[donor].pop().expect("donor has members");
+            self.stages[empty].push(m);
+            self.stage_of[m] = empty;
+        }
+        self.stats.stages = self.stages.clone();
+    }
+
+    /// The §4.2 DP over live membership: histogram from recent
+    /// completions + live sequences, capacities subset to admitting
+    /// ids, contiguous assignment in ascending live order.
+    fn replan_planned_membership(&mut self) {
+        let mut hist =
+            LengthHistogram::new(LengthHistogram::exponential_bounds(self.cfg.max_len));
+        for &(i, f) in self.observed.iter_rev() {
+            hist.push(i, f);
+        }
+        for ins in &self.instances {
+            if !ins.serves() {
+                continue;
+            }
+            for sq in ins.engine.running() {
+                hist.push(
+                    sq.req.input_len,
+                    self.predictor.replan_live_len(&sq.req, sq.current_len()),
+                );
+            }
+        }
+        let live = self.admitting.clone();
+        let pipe = match &self.plan_insts {
+            Some(insts) => {
+                let sub: Vec<PlanInstance> = live.iter().map(|&i| insts[i]).collect();
+                self.planner.plan_dp_instances(&hist, &sub)
+            }
+            None => {
+                let sub: Vec<f64> = live.iter().map(|&i| self.caps[i]).collect();
+                self.planner.plan_dp_weighted(&hist, &sub)
+            }
+        };
+        let mut stages: Vec<Vec<InstanceId>> = Vec::new();
+        let mut k = 0usize;
+        for spec in pipe.stages.iter() {
+            stages.push(live[k..k + spec.n_instances].to_vec());
+            k += spec.n_instances;
+        }
+        debug_assert_eq!(k, live.len(), "plan must place every live instance");
+        for (s, members) in stages.iter().enumerate() {
+            for &m in members {
+                self.stage_of[m] = s;
+            }
+        }
+        self.refiners = pipe
+            .boundaries()
+            .iter()
+            .map(|&b| RangeRefiner::new(self.qoe, b, RefineConfig::default()))
+            .collect();
+        self.stats.stages = stages.clone();
+        self.stages = stages;
+        self.pipeline = pipe;
+        self.rebuild_ranges();
+        self.replans += 1;
     }
 }

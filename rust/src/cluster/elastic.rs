@@ -1,0 +1,348 @@
+//! Fault injection and elasticity — seeded instance churn (§6-style
+//! robustness runs the source paper does not have).
+//!
+//! A [`ChurnSpec`] is a deterministic schedule of membership events
+//! plus an optional SLO-feedback autoscaler, parsed from the `--churn`
+//! grammar and threaded through `Experiment` into `ClusterConfig`:
+//!
+//! * `spot:T@I` — **spot preemption**: instance `I` dies at time `T`
+//!   mid-decode.  Its in-flight requests re-enter admission as
+//!   re-prefills (prompt + generated prefix), retried with capped
+//!   attempts ([`MAX_SPOT_RETRIES`]) under exponential backoff
+//!   ([`READMIT_BACKOFF_BASE`]) before escalating to a counted
+//!   rejection — graceful degradation, never a wedge.
+//! * `drain:T@I[:DEADLINE]` — **graceful scale-in**: instance `I`
+//!   stops admitting at `T`, evacuates KV through the bid-ask
+//!   migration path, and leaves once empty.  A drain that is still
+//!   holding work at `T + DEADLINE` (default
+//!   [`DEFAULT_DRAIN_DEADLINE`]) is forcibly killed and recovers like
+//!   a spot preemption.
+//! * `join:T[@GPU]` — **scale-out**: a new instance starts booting at
+//!   `T` and accepts work only after its weight load completes
+//!   (model footprint over the topology's inter-node link).
+//! * `auto:PERIOD:MIN..MAX` — **SLO-feedback autoscaler**: every
+//!   `PERIOD` seconds a controller inspects windowed SLO attainment
+//!   and queue depth and scales the live fleet within `MIN..MAX`.
+//!
+//! Determinism: all churn state lives in the calendar event queue and
+//! in plain ordered containers — no entropy, no wall clock, no hash
+//! iteration — so churn runs are bit-reproducible, and
+//! [`ChurnSpec::none`] (the default) leaves every legacy code path
+//! untouched bit-for-bit.
+
+use crate::gpu::GpuProfile;
+use crate::Time;
+
+/// Re-admission attempts a preempted request gets before its retries
+/// escalate to a counted rejection.
+pub const MAX_SPOT_RETRIES: u32 = 3;
+
+/// First re-admission delay after a preemption; attempt `k` waits
+/// `READMIT_BACKOFF_BASE * 2^(k-1)`.
+pub const READMIT_BACKOFF_BASE: Time = 0.25;
+
+/// Drain deadline when the `drain:T@I` form omits one.
+pub const DEFAULT_DRAIN_DEADLINE: Time = 10.0;
+
+/// Cadence at which a draining instance re-offers its remaining work
+/// and re-checks the empty/deadline exit conditions.
+pub const DRAIN_PUMP_INTERVAL: Time = 0.1;
+
+/// TTFT bound (seconds) of the SLO the autoscaler's windowed
+/// attainment is measured against.
+pub const AUTOSCALE_SLO_TTFT: f64 = 1.0;
+
+/// TPOT bound (seconds/token) of the autoscaler's SLO.
+pub const AUTOSCALE_SLO_TPOT: f64 = 0.1;
+
+/// Autoscaler scale-out trigger: windowed SLO attainment below this.
+pub const AUTOSCALE_ATTAIN_LOW: f64 = 0.9;
+
+/// Autoscaler scale-in trigger: windowed SLO attainment at/above this
+/// (with an empty queue).
+pub const AUTOSCALE_ATTAIN_HIGH: f64 = 0.99;
+
+/// Autoscaler scale-out trigger: total queued sequences exceeding
+/// this multiple of the admitting-instance count.
+pub const AUTOSCALE_QUEUE_FACTOR: usize = 4;
+
+/// Lifecycle of one instance slot.  Slots for scheduled joins and
+/// autoscaler headroom are pre-allocated `Absent` at construction so
+/// churn never reallocates the instance table mid-run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Membership {
+    /// Pre-allocated slot that has not joined yet.
+    Absent,
+    /// Serving and admitting new work.
+    Live,
+    /// Serving its residue but admitting nothing (graceful scale-in).
+    Draining,
+    /// Departed; never returns.
+    Dead,
+}
+
+/// One scheduled membership event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnEvent {
+    /// Instance `instance` dies at `at` mid-decode.
+    Spot { at: Time, instance: usize },
+    /// Instance `instance` starts draining at `at`; forced kill at
+    /// `at + deadline` if still non-empty.
+    Drain { at: Time, instance: usize, deadline: Time },
+    /// A new instance starts booting at `at`; `gpu` overrides the
+    /// fleet's reference GPU for the joining slot.
+    Join { at: Time, gpu: Option<&'static str> },
+}
+
+impl ChurnEvent {
+    pub fn at(&self) -> Time {
+        match self {
+            ChurnEvent::Spot { at, .. }
+            | ChurnEvent::Drain { at, .. }
+            | ChurnEvent::Join { at, .. } => *at,
+        }
+    }
+}
+
+/// SLO-feedback autoscaler configuration (`auto:PERIOD:MIN..MAX`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleSpec {
+    /// Controller cadence in seconds.
+    pub period: Time,
+    /// The live-instance count is held within `min..=max`.
+    pub min: usize,
+    pub max: usize,
+}
+
+/// The full churn schedule for one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnSpec {
+    /// Scheduled events, sorted by time (stable: spec order breaks
+    /// ties deterministically).
+    pub events: Vec<ChurnEvent>,
+    pub autoscale: Option<AutoscaleSpec>,
+}
+
+impl Default for ChurnSpec {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl ChurnSpec {
+    /// The fault-free schedule — the hard bit-identity gate: a run
+    /// under `ChurnSpec::none()` must fingerprint-match a run built
+    /// before this module existed, for every registry scheduler.
+    pub fn none() -> Self {
+        Self { events: Vec::new(), autoscale: None }
+    }
+
+    /// True when no event and no autoscaler is configured — every
+    /// churn code path is skipped.
+    pub fn is_none(&self) -> bool {
+        self.events.is_empty() && self.autoscale.is_none()
+    }
+
+    /// Number of scheduled `join:` events (slots to pre-allocate).
+    pub fn scheduled_joins(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, ChurnEvent::Join { .. })).count()
+    }
+
+    /// Registry of churn event kinds — the D4 coverage anchor: every
+    /// name here must appear in the `tests/elastic.rs` coverage list,
+    /// so a new fault kind cannot ship without a determinism pin.
+    pub fn names() -> &'static [&'static str] {
+        &["spot", "drain", "join", "auto"]
+    }
+
+    /// Parse the `--churn` grammar: a comma-separated list of
+    /// `spot:T@I`, `drain:T@I[:DEADLINE]`, `join:T[@GPU]`, and at most
+    /// one `auto:PERIOD:MIN..MAX`; the literal `none` is the empty
+    /// schedule.  Malformed entries are hard errors naming the valid
+    /// forms (same policy as `--fleet`: never a silent fallback).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let trimmed = s.trim();
+        if trimmed.is_empty() {
+            return Err("churn spec is empty; expected e.g. spot:2.0@1 or none".into());
+        }
+        if trimmed == "none" {
+            return Ok(Self::none());
+        }
+        let mut spec = Self::none();
+        for seg in trimmed.split(',') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                return Err(format!("empty churn segment in `{s}`"));
+            }
+            let (kind, rest) = seg
+                .split_once(':')
+                .ok_or_else(|| format!("churn segment `{seg}` has no `:`; valid kinds: spot, drain, join, auto"))?;
+            match kind.trim() {
+                "spot" => {
+                    let (at, instance) = parse_time_at_instance(rest, seg)?;
+                    spec.events.push(ChurnEvent::Spot { at, instance });
+                }
+                "drain" => {
+                    let (head, deadline) = match rest.rsplit_once(':') {
+                        Some((head, d)) if head.contains('@') => {
+                            (head, parse_time(d, seg, "drain deadline")?)
+                        }
+                        _ => (rest, DEFAULT_DRAIN_DEADLINE),
+                    };
+                    if deadline <= 0.0 {
+                        return Err(format!("drain deadline in `{seg}` must be positive"));
+                    }
+                    let (at, instance) = parse_time_at_instance(head, seg)?;
+                    spec.events.push(ChurnEvent::Drain { at, instance, deadline });
+                }
+                "join" => {
+                    let (t, gpu) = match rest.split_once('@') {
+                        Some((t, g)) => {
+                            let g = g.trim();
+                            let gpu = GpuProfile::by_name(g).ok_or_else(|| {
+                                format!(
+                                    "unknown join gpu `{g}` in `{seg}`; valid: {}",
+                                    GpuProfile::NAMES.join("|")
+                                )
+                            })?;
+                            (t, Some(gpu.name))
+                        }
+                        None => (rest, None),
+                    };
+                    let at = parse_time(t, seg, "join time")?;
+                    spec.events.push(ChurnEvent::Join { at, gpu });
+                }
+                "auto" => {
+                    if spec.autoscale.is_some() {
+                        return Err(format!("duplicate auto: segment in `{s}`"));
+                    }
+                    let (period, bounds) = rest.split_once(':').ok_or_else(|| {
+                        format!("auto segment `{seg}` must be auto:PERIOD:MIN..MAX")
+                    })?;
+                    let period = parse_time(period, seg, "autoscale period")?;
+                    if period <= 0.0 {
+                        return Err(format!("autoscale period in `{seg}` must be positive"));
+                    }
+                    let (min, max) = bounds.split_once("..").ok_or_else(|| {
+                        format!("auto bounds in `{seg}` must be MIN..MAX, e.g. 2..8")
+                    })?;
+                    let min = min.trim().parse::<usize>().ok().filter(|&v| v >= 1).ok_or_else(
+                        || format!("autoscale min in `{seg}` is not a positive integer"),
+                    )?;
+                    let max = max.trim().parse::<usize>().ok().filter(|&v| v >= min).ok_or_else(
+                        || format!("autoscale max in `{seg}` must be an integer >= min"),
+                    )?;
+                    spec.autoscale = Some(AutoscaleSpec { period, min, max });
+                }
+                other => {
+                    return Err(format!(
+                        "unknown churn kind `{other}` in `{seg}`; valid: spot, drain, join, auto"
+                    ))
+                }
+            }
+        }
+        // Stable by-time sort: same-instant events fire in spec order.
+        spec.events.sort_by(|a, b| a.at().total_cmp(&b.at()));
+        Ok(spec)
+    }
+}
+
+fn parse_time(s: &str, seg: &str, what: &str) -> Result<Time, String> {
+    s.trim()
+        .parse::<f64>()
+        .ok()
+        .filter(|v| v.is_finite() && *v >= 0.0)
+        .ok_or_else(|| format!("{what} `{}` in `{seg}` is not a non-negative number", s.trim()))
+}
+
+fn parse_time_at_instance(s: &str, seg: &str) -> Result<(Time, usize), String> {
+    let (t, i) = s
+        .split_once('@')
+        .ok_or_else(|| format!("churn segment `{seg}` must be KIND:TIME@INSTANCE"))?;
+    let at = parse_time(t, seg, "churn time")?;
+    let instance = i
+        .trim()
+        .parse::<usize>()
+        .map_err(|_| format!("instance id `{}` in `{seg}` is not an integer", i.trim()))?;
+    Ok((at, instance))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_default_and_empty() {
+        assert!(ChurnSpec::none().is_none());
+        assert_eq!(ChurnSpec::default(), ChurnSpec::none());
+        assert_eq!(ChurnSpec::parse("none").unwrap(), ChurnSpec::none());
+        assert_eq!(ChurnSpec::none().scheduled_joins(), 0);
+    }
+
+    #[test]
+    fn parse_spot_drain_join_auto() {
+        let spec = ChurnSpec::parse("spot:2.0@1,drain:4.5@2:3.0,join:6.0,auto:1.0:2..8").unwrap();
+        assert_eq!(spec.events.len(), 3);
+        assert_eq!(spec.events[0], ChurnEvent::Spot { at: 2.0, instance: 1 });
+        assert_eq!(spec.events[1], ChurnEvent::Drain { at: 4.5, instance: 2, deadline: 3.0 });
+        assert_eq!(spec.events[2], ChurnEvent::Join { at: 6.0, gpu: None });
+        assert_eq!(spec.autoscale, Some(AutoscaleSpec { period: 1.0, min: 2, max: 8 }));
+        assert_eq!(spec.scheduled_joins(), 1);
+        assert!(!spec.is_none());
+    }
+
+    #[test]
+    fn parse_defaults_and_gpu_joins() {
+        let spec = ChurnSpec::parse("drain:1.0@0").unwrap();
+        assert_eq!(
+            spec.events[0],
+            ChurnEvent::Drain { at: 1.0, instance: 0, deadline: DEFAULT_DRAIN_DEADLINE }
+        );
+        let spec = ChurnSpec::parse("join:3.0@h100").unwrap();
+        assert_eq!(spec.events[0], ChurnEvent::Join { at: 3.0, gpu: Some("H100") });
+    }
+
+    #[test]
+    fn events_sort_by_time_stably() {
+        let spec = ChurnSpec::parse("join:5.0,spot:1.0@0,drain:5.0@1").unwrap();
+        assert_eq!(spec.events[0].at(), 1.0);
+        // Same-instant tie keeps spec order: join before drain.
+        assert!(matches!(spec.events[1], ChurnEvent::Join { .. }));
+        assert!(matches!(spec.events[2], ChurnEvent::Drain { .. }));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            "spot",
+            "spot:2.0",
+            "spot:x@1",
+            "spot:-1.0@1",
+            "spot:2.0@one",
+            "drain:2.0@1:0.0",
+            "drain:2.0@1:-1",
+            "join:nan",
+            "join:2.0@a100",
+            "auto:1.0",
+            "auto:0.0:2..8",
+            "auto:1.0:0..8",
+            "auto:1.0:8..2",
+            "auto:1.0:2-8",
+            "auto:1.0:2..8,auto:2.0:2..8",
+            "reboot:1.0@2",
+            "spot:1.0@0,,join:2.0",
+        ] {
+            assert!(ChurnSpec::parse(bad).is_err(), "`{bad}` should be rejected");
+        }
+        let msg = ChurnSpec::parse("reboot:1.0@2").unwrap_err();
+        assert!(msg.contains("spot") && msg.contains("auto"), "{msg}");
+        let msg = ChurnSpec::parse("join:2.0@a100").unwrap_err();
+        assert!(msg.contains("H20|L40|H100"), "{msg}");
+    }
+
+    #[test]
+    fn names_registry_is_stable() {
+        assert_eq!(ChurnSpec::names(), &["spot", "drain", "join", "auto"]);
+    }
+}

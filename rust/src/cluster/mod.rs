@@ -210,6 +210,67 @@
 //! — `tests/predict.rs` pins fingerprint identity for every registry
 //! scheduler.
 //!
+//! # Elastic fleets
+//!
+//! The fleet is not static: a [`ChurnSpec`] (CLI `--churn`, parsed by
+//! [`crate::cluster::elastic`]) schedules deterministic membership
+//! events, and every slot the schedule can ever need — one per
+//! `join:` event plus the autoscaler's `max` headroom — is
+//! pre-allocated `Absent` at construction, so churn never reallocates
+//! the instance table mid-run.  The membership lifecycle is
+//! `Absent -> Live -> (Draining ->) Dead`
+//! ([`elastic::Membership`] on [`state::InstanceState`]):
+//!
+//! * **Scale-out** (`join:T[@GPU]`, `InstanceJoin` event): the slot
+//!   boots at `T` and goes `Live` only after its weight load — the
+//!   resolved model slice's weight bytes streamed over the topology's
+//!   inter-node link — so a join never serves before it could have
+//!   loaded the model.
+//! * **Graceful scale-in** (`drain:T@I[:DEADLINE]`, `DrainStart`
+//!   event): the instance goes `Draining` — it stops *admitting*
+//!   (router dispatch and migration destinations skip it) but keeps
+//!   *serving* its residue.  A periodic drain pump re-queues its
+//!   waiting sequences onto live instances directly and offers its
+//!   running sequences through the ordinary §4.4 bid-ask path; the
+//!   instance leaves (`Dead`) once empty, or is forcibly killed at
+//!   the deadline and recovers like a spot preemption.
+//! * **Spot preemption** (`spot:T@I`, `InstanceGone` event): the
+//!   instance dies mid-decode.  Its KV is gone; every resident
+//!   sequence re-enters admission as a *re-prefill* (prompt plus the
+//!   generated prefix, logical progress preserved — the same
+//!   recompute semantics as engine preemption), scheduled through
+//!   `Readmit` events with exponential backoff and at most
+//!   [`elastic::MAX_SPOT_RETRIES`] attempts before escalating to a
+//!   counted rejection — graceful degradation, never a wedge.
+//!   In-flight migrations touching the dead endpoint are aborted; a
+//!   dead *destination* leaves the sequence serving on its source, a
+//!   dead *source* recovers the sequence through the re-prefill path.
+//! * **SLO-feedback autoscaler** (`auto:PERIOD:MIN..MAX`,
+//!   `AutoscaleTick` event): a periodic controller reads windowed SLO
+//!   attainment and total queue depth, scaling out (lowest absent
+//!   slot joins, boot latency priced) under SLO misses / queue
+//!   pressure and draining the highest live slot when comfortably
+//!   over-provisioned, always within `MIN..MAX`.
+//!
+//! Every layer that assumed a fixed fleet observes membership: the
+//! router dispatches over *admitting* instances only, gossip skips
+//! non-serving instances and [`LoadTracker`] forgets departed peers
+//! (plus the age-expiry below), the §4.2 re-plan runs over live
+//! membership on every join/leave, and the §4.4/§5 protocol handlers
+//! drop negotiations whose endpoint left.  The hard invariant is
+//! that [`ChurnSpec::none`] (the default) takes *zero* churn code
+//! paths: construction pre-allocates nothing, no churn event is ever
+//! scheduled, and every guard degenerates to the all-`Live` case —
+//! `tests/elastic.rs` pins `Report::fingerprint()` identity against
+//! the churn-free path for every registry scheduler and predictor
+//! family.
+//!
+//! Related fix that benefits static fleets too: gossip overload
+//! comparisons ignore [`crate::coordinator::loadtracker::LoadReport`]s
+//! older than three gossip periods, so an instance that goes silent
+//! (dead, draining, or wedged) cannot keep winning outlier
+//! comparisons with a stale load figure.
+//!
 //! # Determinism invariants
 //!
 //! Every regression this repo leans on — golden-seed checksums,
@@ -233,11 +294,13 @@
 //!   `from_entropy` outside `main.rs`, `bin/`, and the pjrt-gated
 //!   `server/`: simulated time flows from the event queue and
 //!   randomness from the seeded [`crate::sim::Rng`].
-//! * **D4** — every scheduler name in the [`PolicySpec`] registry and
-//!   every predictor family in the [`crate::predict`] registry must
-//!   appear in the coverage lists of `tests/golden_seed.rs` *and*
-//!   `tests/macro_equivalence.rs`, so a new policy or predictor cannot
-//!   ship with its seeded behavior unpinned.
+//! * **D4** — every scheduler name in the [`PolicySpec`] registry,
+//!   every predictor family in the [`crate::predict`] registry, and
+//!   every churn event kind in the [`ChurnSpec`] registry
+//!   ([`ChurnSpec::names`]) must appear in the coverage lists of
+//!   `tests/golden_seed.rs` *and* `tests/macro_equivalence.rs`, so a
+//!   new policy, predictor, or churn axis cannot ship with its seeded
+//!   behavior unpinned.
 //!
 //! A finding is suppressed only by a justified annotation on the
 //! offending line — `// detlint: allow(<rule>) -- <reason>` — and
@@ -245,12 +308,14 @@
 //! [`crate::lint`] for the rule implementations and their (lexical)
 //! approximations.
 
+pub mod elastic;
 pub mod policy;
 
 mod driver;
 mod router;
 mod state;
 
+pub use elastic::{AutoscaleSpec, ChurnEvent, ChurnSpec, Membership};
 pub use policy::{
     BalancePolicy, DispatchPolicy, Layout, PolicyError, PolicySpec, RefinePolicy, SchedulerKind,
 };
@@ -343,6 +408,11 @@ pub struct ClusterConfig {
     /// purely to *prove* that equivalence and to bisect any future
     /// divergence.  CLI: `sim --micro-step`.
     pub micro_step: bool,
+    /// Deterministic fault-injection / elasticity schedule (CLI
+    /// `--churn`; see [`crate::cluster::elastic`]).  The default
+    /// [`ChurnSpec::none`] takes zero churn code paths and is
+    /// fingerprint-bit-identical to the pre-elastic behavior.
+    pub churn: ChurnSpec,
 }
 
 impl ClusterConfig {
@@ -372,6 +442,7 @@ impl ClusterConfig {
             max_len: 131_072,
             forced_pipeline: None,
             micro_step: false,
+            churn: ChurnSpec::none(),
         }
     }
 
@@ -463,6 +534,30 @@ pub struct RunStats {
     /// fit the routed instance's KV pool but the true final never
     /// could (0 under `oracle`, whose admission check *is* the truth).
     pub predict_escalations: u64,
+    /// Scheduled spot preemptions that actually killed a serving
+    /// instance (drains that hit their deadline take the same
+    /// kill/evacuate path but count [`RunStats::drains_forced`]).
+    pub spot_kills: u64,
+    /// Requests evicted by an instance death (each re-enters admission
+    /// as a re-prefill).
+    pub preempted_requests: u64,
+    /// Preempted requests successfully re-admitted on a live instance.
+    pub recovered: u64,
+    /// Generated tokens thrown away by instance deaths (the re-prefill
+    /// recomputes them).
+    pub lost_tokens: Tokens,
+    /// Graceful scale-ins started / finished empty / forcibly killed
+    /// at the drain deadline.
+    pub drains_started: u64,
+    pub drains_completed: u64,
+    pub drains_forced: u64,
+    /// Instances that finished booting and went live.
+    pub joins: u64,
+    /// Autoscaler controller invocations / scale-out joins it
+    /// initiated / scale-in drains it initiated.
+    pub autoscale_ticks: u64,
+    pub scale_outs: u64,
+    pub scale_ins: u64,
     /// Total engine iterations simulated across all instances — the
     /// numerator of the perf harness's iterations-per-wall-second
     /// cluster throughput metric (`BENCH_hotpath.json`).
@@ -554,6 +649,37 @@ pub struct Cluster {
     load_sample_sum: Vec<f64>,
     load_samples: u64,
     pub replans: u64,
+    /// Scheduled churn events with join boot latency already resolved:
+    /// `(fire time, event)` pairs the driver enqueues at run start.
+    /// Empty under [`ChurnSpec::none`].
+    churn_schedule: Vec<(Time, Event)>,
+    /// Drain deadline *duration* per scheduled drain target (the
+    /// absolute deadline is stamped when `DrainStart` fires).
+    drain_spec: std::collections::BTreeMap<InstanceId, Time>,
+    /// Per-slot weight-load boot latency: the slot's resolved model
+    /// slice streamed over the inter-node link.  Charged before an
+    /// `Absent` slot goes live (scheduled joins and autoscaler
+    /// scale-outs).
+    boot_latency: Vec<Time>,
+    /// Re-admission attempts per spot-preempted request (removed on
+    /// completion or final rejection).
+    spot_attempts: std::collections::BTreeMap<RequestId, u32>,
+    /// Slots currently booting — counted by the autoscaler so it does
+    /// not scale out again while a join is in flight.
+    pending_joins: usize,
+    /// The booting slots themselves (scheduled joins at construction,
+    /// autoscaler scale-outs later), so a slot is never double-booked
+    /// while its `InstanceJoin` is in flight.
+    booting: std::collections::BTreeSet<InstanceId>,
+    /// Index into `records` where the autoscaler's current SLO
+    /// observation window starts.
+    autoscale_watermark: usize,
+    /// Cached ascending list of admitting (`Live`) instance ids — the
+    /// set the router dispatches over.  Rebuilt on every membership
+    /// transition; exactly `0..n_instances` for the whole of a
+    /// churn-free run, so legacy dispatch orderings are preserved bit
+    /// for bit.
+    admitting: Vec<InstanceId>,
 }
 
 impl Cluster {
@@ -561,12 +687,49 @@ impl Cluster {
     /// `plan_trace` (pass the workload itself or a historical slice).
     pub fn new(cfg: ClusterConfig, plan_trace: &[Request]) -> Self {
         let e = cfg.n_instances;
-        let fleet = cfg.resolved_fleet();
-        let topology = cfg
-            .topology
-            .clone()
-            .unwrap_or_else(|| Topology::sequential(e, 8, crate::gpu::LinkKind::NvLink));
-        assert_eq!(topology.node_of.len(), e, "topology must cover every instance");
+        let mut fleet = cfg.resolved_fleet();
+        // Elastic fleets: pre-allocate every slot the churn schedule
+        // can ever need — one per `join:` event plus the autoscaler's
+        // headroom above the initial size — so membership changes
+        // never reallocate the instance table mid-run.  Zero extras
+        // under `ChurnSpec::none()`: the table is exactly the legacy
+        // fixed fleet, bit for bit.
+        let churn_extras = if cfg.churn.is_none() {
+            0
+        } else {
+            cfg.churn.scheduled_joins()
+                + cfg.churn.autoscale.map(|a| a.max.saturating_sub(e)).unwrap_or(0)
+        };
+        if churn_extras > 0 {
+            let reference = *fleet.reference();
+            for ev in &cfg.churn.events {
+                if let ChurnEvent::Join { gpu, .. } = ev {
+                    let mut spec = reference;
+                    if let Some(name) = gpu {
+                        spec.gpu =
+                            GpuProfile::by_name(name).expect("join gpu validated at parse");
+                    }
+                    fleet.instances.push(spec);
+                }
+            }
+            for _ in 0..churn_extras.saturating_sub(cfg.churn.scheduled_joins()) {
+                fleet.instances.push(reference);
+            }
+        }
+        let total = e + churn_extras;
+        let mut topology = match cfg.topology.clone() {
+            Some(t) => {
+                assert_eq!(t.node_of.len(), e, "topology must cover every instance");
+                t
+            }
+            None => Topology::sequential(total, 8, crate::gpu::LinkKind::NvLink),
+        };
+        // Churn slots continue the sequential node fill of an explicit
+        // topology that only covered the initial fleet.
+        while topology.node_of.len() < total {
+            let i = topology.node_of.len();
+            topology.node_of.push(i / topology.gpus_per_node);
+        }
         // Shared calibration (QoE profile) runs on the fleet's
         // reference instance — the majority GPU, serving its *resolved*
         // model slice (TP collectives priced over the intra-node link);
@@ -636,8 +799,12 @@ impl Cluster {
                 p.clone()
             }
             (None, Layout::Planned) => match &plan_insts {
-                Some(insts) => planner.plan_dp_instances(&hist, insts),
-                None => planner.plan_dp_weighted(&hist, &caps),
+                // Plan over the *initial* fleet only — churn slots
+                // beyond `e` are Absent until their join fires (the
+                // membership re-plan folds them in then).  Identical
+                // slices when there are no churn extras.
+                Some(insts) => planner.plan_dp_instances(&hist, &insts[..e]),
+                None => planner.plan_dp_weighted(&hist, &caps[..e]),
             },
             (None, Layout::Chain) => baselines::chain_layout(&planner, &hist, e),
             (None, Layout::Flat) => Pipeline::no_pipeline(e, cfg.max_len),
@@ -647,7 +814,7 @@ impl Cluster {
         // stages on nodes — the §5 placement optimization; for a mixed
         // fleet the weighted DP already planned against this exact
         // instance order).
-        let mut stage_of = Vec::with_capacity(e);
+        let mut stage_of = Vec::with_capacity(total);
         let mut stages: Vec<Vec<InstanceId>> = Vec::new();
         for spec in pipeline.stages.iter() {
             let mut members = Vec::new();
@@ -657,13 +824,16 @@ impl Cluster {
             }
             stages.push(members);
         }
+        // Absent churn slots carry a placeholder stage until their
+        // join's membership re-plan assigns a real one.
+        stage_of.resize(total, 0);
 
         // One engine + cost backend + KV pool *per instance*: each is
         // priced by its own GPU's attention model over its own
         // resolved model slice (TP collectives ride the intra-node
         // link) and runs at its own engine speed (the config-level
         // `engine_speed` composes as a fleet-wide multiplier).
-        let instances: Vec<InstanceState> = fleet
+        let mut instances: Vec<InstanceState> = fleet
             .instances
             .iter()
             .enumerate()
@@ -686,6 +856,44 @@ impl Cluster {
                 )
             })
             .collect();
+        for ins in instances.iter_mut().skip(e) {
+            ins.membership = Membership::Absent;
+        }
+
+        // Resolve the churn schedule once: join boot latency is the
+        // slot's resolved model slice streamed over the inter-node
+        // link, so a join never serves before it could have loaded
+        // weights.
+        let boot_latency: Vec<Time> = fleet
+            .instances
+            .iter()
+            .map(|spec| {
+                spec.model_for(&cfg.model).weight_bytes() as f64
+                    / topology.inter_node.bytes_per_s()
+            })
+            .collect();
+        let mut churn_schedule: Vec<(Time, Event)> = Vec::new();
+        let mut drain_spec = std::collections::BTreeMap::new();
+        let mut next_join_slot = e;
+        for ev in &cfg.churn.events {
+            match ev {
+                ChurnEvent::Spot { at, instance } => {
+                    assert!(*instance < total, "spot target {instance} out of range");
+                    churn_schedule.push((*at, Event::InstanceGone(*instance)));
+                }
+                ChurnEvent::Drain { at, instance, deadline } => {
+                    assert!(*instance < total, "drain target {instance} out of range");
+                    drain_spec.insert(*instance, *deadline);
+                    churn_schedule.push((*at, Event::DrainStart(*instance)));
+                }
+                ChurnEvent::Join { at, .. } => {
+                    churn_schedule
+                        .push((*at + boot_latency[next_join_slot], Event::InstanceJoin(next_join_slot)));
+                    next_join_slot += 1;
+                }
+            }
+        }
+        let pending_joins = cfg.churn.scheduled_joins();
 
         // One refiner per stage boundary, initialised from the plan.
         let refiners: Vec<RangeRefiner> = pipeline
@@ -744,9 +952,17 @@ impl Cluster {
             arena: RequestArena::new(),
             caps,
             plan_insts,
-            load_sample_sum: vec![0.0; e],
+            load_sample_sum: vec![0.0; total],
             load_samples: 0,
             replans: 0,
+            churn_schedule,
+            drain_spec,
+            boot_latency,
+            spot_attempts: Default::default(),
+            pending_joins,
+            booting: (e..e + pending_joins).collect(),
+            autoscale_watermark: 0,
+            admitting: (0..e).collect(),
         };
         cluster.rebuild_ranges();
         cluster
@@ -838,11 +1054,18 @@ impl Cluster {
             && now - self.instances[i].last_offer >= OFFER_COOLDOWN
         {
             let my_load = self.instances[i].norm_load();
+            // Peer reports older than three gossip periods are stale —
+            // an instance that went silent (dead, draining, or wedged)
+            // must not keep winning outlier comparisons with its last
+            // load figure.  Static fleets refresh every report each
+            // gossip tick, so at the default interval this filter
+            // admits exactly the reports the old fixed 1.0 s window
+            // did (bit-identical); only silent peers age out earlier.
             if self.instances[i].tracker.is_overloaded(
                 now,
                 my_load,
                 self.cfg.overload_threshold,
-                1.0,
+                3.0 * self.cfg.gossip_interval,
             ) {
                 self.instances[i].last_offer = now;
                 // Offer the most demanding decoding sequence to peers.
@@ -901,8 +1124,14 @@ impl Cluster {
         // Loads ride the protocol capacity-normalized so heterogeneous
         // receivers are compared on equal footing.
         let sender_load = self.instances[from].norm_load();
-        let targets: Vec<InstanceId> =
-            candidates.iter().copied().filter(|&c| c != from).collect();
+        // Only admitting instances are valid migration destinations;
+        // under a churn-free fleet every candidate admits, so the
+        // filter is a no-op.
+        let targets: Vec<InstanceId> = candidates
+            .iter()
+            .copied()
+            .filter(|&c| c != from && self.instances[c].admits())
+            .collect();
         if targets.is_empty() {
             return;
         }
@@ -919,6 +1148,24 @@ impl Cluster {
     /// Bidding phase: the receiver replies with its load and earliest
     /// transmission start (buffered length / measured throughput).
     fn on_ask(&mut self, now: Time, receiver: InstanceId, ask: Ask) {
+        if !self.instances[receiver].admits() {
+            // The receiver stopped admitting between ask send and
+            // delivery.  Still reply — with an unbeatable-bad bid — so
+            // the sender's book reaches its expected reply count and
+            // the offer resolves instead of wedging open.
+            let latency = self.topology.link_between(ask.sender, receiver).latency_s();
+            let reply_at = now + latency;
+            let bid = Bid {
+                receiver,
+                request: ask.request,
+                load: f64::INFINITY,
+                earliest_start: f64::INFINITY,
+                reply_at,
+            };
+            self.events
+                .schedule(reply_at, Event::BidDelivered { sender: ask.sender, bid });
+            return;
+        }
         let buffered = self.instances[receiver].scheduler.receiver.buffered_len()
             + self.inbound_tokens(receiver);
         // Receivers reply between engine iterations; model that
@@ -978,6 +1225,13 @@ impl Cluster {
     /// Confirm: the receiver queues the pull by sender-load priority
     /// and drives its transfer queue.
     fn on_confirm(&mut self, now: Time, receiver: InstanceId, pull: PendingPull) {
+        if !self.instances[receiver].admits() {
+            // Chosen receiver left between confirm send and delivery:
+            // resolve the offer so the sender can renegotiate later.
+            self.offers.remove(&pull.request);
+            self.retry_after.insert(pull.request, now + 0.25);
+            return;
+        }
         self.instances[receiver].scheduler.receiver.push(pull);
         self.events.schedule(now, Event::PullAttempt { receiver });
     }
@@ -1019,6 +1273,12 @@ impl Cluster {
     /// Start the actual KV transfer for a granted pull.
     fn try_pull(&mut self, now: Time, receiver: InstanceId, p: PendingPull) {
         let request = p.request;
+        if !self.instances[receiver].admits() {
+            // Receiver drained/died while the pull sat queued.
+            self.offers.remove(&request);
+            self.retry_after.insert(request, now + 0.25);
+            return;
+        }
         // The sequence may have finished or moved since the offer.
         let live_len = self.instances[p.sender]
             .engine
@@ -1058,6 +1318,14 @@ impl Cluster {
         to: InstanceId,
         seq_len: Tokens,
     ) {
+        if !self.instances[to].admits() || !self.instances[from].serves() {
+            // Endpoint membership changed under the negotiation; count
+            // it like any other failed start so the offer resolves.
+            self.stats.migrations_skipped += 1;
+            self.offers.remove(&request);
+            self.retry_after.insert(request, now + 0.25);
+            return;
+        }
         let link = self.topology.link_between(from, to);
         let decode_rate = self.instances[from].tracker.throughput()
             / self.instances[from].engine.n_running().max(1) as f64;
@@ -1094,12 +1362,18 @@ impl Cluster {
         from: InstanceId,
         to: InstanceId,
     ) {
+        if !self.cfg.churn.is_none() && !self.migration.matches(request, from, to, now) {
+            // Stale completion: this transfer was aborted by a churn
+            // event (and the request possibly re-admitted and migrating
+            // again) — completing it now would corrupt the new state.
+            return;
+        }
         self.in_flight.remove(&request);
         let Some(t) = self.migration.finish(request) else { return };
         // The sequence kept decoding on the source during the transfer
         // (live migration). Move it now if it still exists.
         if let Some(seq) = self.instances[from].engine.extract(request) {
-            if self.instances[to].engine.inject(seq) {
+            if self.instances[to].admits() && self.instances[to].engine.inject(seq) {
                 self.stats.migrations += 1;
                 self.stats.migration_tokens += t.tokens_moved;
                 // Single-step kicks: more driver work follows at this

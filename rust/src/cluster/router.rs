@@ -112,6 +112,12 @@ impl Router {
 
     /// Pick the target instance for an arrival, per the spec's
     /// dispatch axis.
+    ///
+    /// `live` is the ascending list of *admitting* instance ids (the
+    /// whole fleet on a churn-free run, where it is exactly `0..n` and
+    /// every choice below reduces bit-identically to the legacy
+    /// whole-fleet scan).  Under churn, draining/dead/absent instances
+    /// are simply not in the list, so dispatch can never land on them.
     #[allow(clippy::too_many_arguments)]
     pub fn route(
         &mut self,
@@ -120,23 +126,25 @@ impl Router {
         stages: &[Vec<InstanceId>],
         ranges: &[(Tokens, Tokens)],
         instances: &[InstanceState],
+        live: &[InstanceId],
         migration: &MigrationManager,
         predictor: &LengthPredictor,
         arena: &RequestArena,
     ) -> InstanceId {
         match spec.dispatch {
-            DispatchPolicy::RoundRobin => self.next_rr() % instances.len(),
+            DispatchPolicy::RoundRobin => live[self.next_rr() % live.len()],
             DispatchPolicy::LeastLoaded => {
                 // Load-aware, length-agnostic dispatch: least memory
                 // demand (Llumnix's virtual-usage heuristic, simplified).
-                (0..instances.len())
+                live.iter()
+                    .copied()
                     .min_by(|&a, &b| {
                         instances[a]
                             .engine
                             .memory_demand()
                             .total_cmp(&instances[b].engine.memory_demand())
                     })
-                    .expect("cluster has instances")
+                    .expect("cluster has admitting instances")
             }
             DispatchPolicy::ShortestFirst => {
                 // SJF-flavoured shortest-expected-wait: least total
@@ -148,12 +156,13 @@ impl Router {
                 // deterministic.  Short requests never queue behind a
                 // long backlog when an effectively-emptier instance
                 // exists.
-                (0..instances.len())
+                live.iter()
+                    .copied()
                     .min_by(|&a, &b| {
                         wait_estimate(&instances[a], migration, predictor, arena)
                             .total_cmp(&wait_estimate(&instances[b], migration, predictor, arena))
                     })
-                    .expect("cluster has instances")
+                    .expect("cluster has admitting instances")
             }
             DispatchPolicy::StageRouted => {
                 // CascadeInfer: earliest stage covering the routing
@@ -169,15 +178,21 @@ impl Router {
                     Some(rank) => ((rank * ranges.len() as f64) as usize).min(ranges.len() - 1),
                     None => stage_for_len(ranges, predictor.route_len(req)),
                 };
+                // Under churn a stage can be momentarily memberless
+                // (fewer live instances than stages); fall back to the
+                // whole admitting fleet.  Churn-free, stages are never
+                // empty and this binds `&stages[s]` unchanged.
+                let members: &[InstanceId] =
+                    if stages[s].is_empty() { live } else { &stages[s] };
                 if spec.balance == BalancePolicy::RoundRobinIntra {
-                    stages[s][self.next_rr() % stages[s].len()]
+                    members[self.next_rr() % members.len()]
                 } else {
                     // Counting in-flight migration arrivals prevents the
                     // herd effect on a momentarily-least-loaded member;
                     // capacity normalization keeps a fast member
                     // preferred until it carries its fair (larger)
                     // share.
-                    *stages[s]
+                    *members
                         .iter()
                         .min_by(|&&a, &&b| {
                             wait_estimate(&instances[a], migration, predictor, arena)
@@ -215,6 +230,14 @@ impl Cluster {
     /// `RunStats::predict_escalations` — instead of wedging the
     /// instance mid-decode.
     pub(super) fn on_arrival(&mut self, now: Time, req: Request) {
+        // A fleet can be momentarily admission-less under churn (every
+        // instance draining while a join still boots).  Park the
+        // arrival on the capped readmission/backoff path instead of
+        // indexing into an empty live list; unreachable churn-free.
+        if !self.cfg.churn.is_none() && self.admitting.is_empty() {
+            self.schedule_readmit(now, req);
+            return;
+        }
         // Arena lifetime starts here: intern the request with its
         // cached prediction before routing, so every downstream
         // consumer (predicted-wait dispatch, misprediction accounting)
@@ -227,6 +250,7 @@ impl Cluster {
             &self.stages,
             &self.ranges,
             &self.instances,
+            &self.admitting,
             &self.migration,
             &self.predictor,
             &self.arena,

@@ -12,6 +12,7 @@
 //! touching an instance on the hot path is O(1) instead of an
 //! O(batch) rescan of its sequences.
 
+use crate::cluster::elastic::Membership;
 use crate::coordinator::balance::BidAskScheduler;
 use crate::coordinator::loadtracker::LoadReport;
 use crate::coordinator::LoadTracker;
@@ -44,6 +45,13 @@ pub struct InstanceState {
     pub busy: bool,
     /// Last intra-stage offer time (rebalance hysteresis).
     pub last_offer: Time,
+    /// Elastic-fleet lifecycle.  `Live` for every instance of a
+    /// churn-free run (the legacy fixed fleet); pre-allocated join /
+    /// autoscale slots start `Absent`.
+    pub membership: Membership,
+    /// Absolute forced-kill instant of an in-progress drain
+    /// (`INFINITY` when not draining).
+    pub drain_deadline: Time,
 }
 
 impl InstanceState {
@@ -64,7 +72,22 @@ impl InstanceState {
             capacity,
             busy: false,
             last_offer: f64::NEG_INFINITY,
+            membership: Membership::Live,
+            drain_deadline: f64::INFINITY,
         }
+    }
+
+    /// True when this instance accepts *new* admissions (router
+    /// dispatch, migration destinations).
+    pub fn admits(&self) -> bool {
+        self.membership == Membership::Live
+    }
+
+    /// True when this instance still executes work it already holds
+    /// (live or draining) — the set gossip and bid-ask protocols run
+    /// over.
+    pub fn serves(&self) -> bool {
+        matches!(self.membership, Membership::Live | Membership::Draining)
     }
 
     /// This instance's capacity-normalized token load — the value all

@@ -248,6 +248,10 @@ pub struct ExperimentConfig {
     /// When set it overrides the predictor carried by the scheduler
     /// spec.
     pub predictor: Option<String>,
+    /// Optional fault-injection / elasticity spec (see
+    /// [`crate::cluster::ChurnSpec::parse`], e.g.
+    /// `"spot:2.0@1,join:6.0"` or `"auto:1.0:2..8"`).
+    pub churn: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -263,6 +267,7 @@ impl Default for ExperimentConfig {
             workload: "sharegpt".into(),
             fleet: None,
             predictor: None,
+            churn: None,
         }
     }
 }
@@ -285,6 +290,10 @@ impl ExperimentConfig {
                 .map(|s| s.to_string()),
             predictor: cfg
                 .get("experiment", "predictor")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string()),
+            churn: cfg
+                .get("experiment", "churn")
                 .and_then(|v| v.as_str())
                 .map(|s| s.to_string()),
         }

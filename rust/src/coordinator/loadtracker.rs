@@ -148,6 +148,14 @@ impl LoadTracker {
         upsert_report(&mut self.successor_reports, report);
     }
 
+    /// Drop every stored report from `instance` — called when it
+    /// leaves the fleet (drain completion, spot kill) so its last
+    /// gossiped load cannot linger as a stale comparison input.
+    pub fn forget_instance(&mut self, instance: InstanceId) {
+        self.peer_reports.retain(|r| r.instance != instance);
+        self.successor_reports.retain(|r| r.instance != instance);
+    }
+
     /// Fresh peer reports (age <= max_age at `now`), in instance order.
     pub fn peers(&self, now: Time, max_age: Time) -> Vec<LoadReport> {
         self.peer_reports
@@ -282,6 +290,42 @@ mod tests {
         }
         let est = t.throughput();
         assert!(est > 250.0 && est < 1000.0, "estimate {est}");
+    }
+
+    #[test]
+    fn silent_instance_ages_out_of_overload_comparison() {
+        // Regression: an instance that stops gossiping (dead, wedged)
+        // must not keep winning overload-outlier comparisons with its
+        // last report.  Peer 1 reported a tiny load once at t=0 and
+        // went silent; by t=10 with a 3-gossip-period age bound its
+        // report must no longer drag the stage average down.
+        let mut t = LoadTracker::new(0, 10.0);
+        t.record_peer(report(1, 0.0, 10));
+        // While fresh, a load of 100 is a >25% outlier vs avg(10,100).
+        assert!(t.is_overloaded(0.5, 100.0, 0.25, 3.0));
+        // Silent for 10s: the report is out of the 3-period window, no
+        // live peers remain, and the probe must decline to flag.
+        assert!(!t.is_overloaded(10.0, 100.0, 0.25, 3.0));
+        // A fresh report from a live peer re-enables the comparison.
+        t.record_peer(report(2, 9.8, 10));
+        assert!(t.is_overloaded(10.0, 100.0, 0.25, 3.0));
+    }
+
+    #[test]
+    fn forget_instance_drops_its_reports() {
+        let mut t = LoadTracker::new(0, 10.0);
+        t.record_peer(report(1, 0.0, 100));
+        t.record_peer(report(2, 0.0, 100));
+        t.record_successor(report(3, 0.0, 100));
+        t.forget_instance(1);
+        t.forget_instance(3);
+        let peers = t.peers(0.0, 10.0);
+        assert_eq!(peers.len(), 1);
+        assert_eq!(peers[0].instance, 2);
+        assert!(t.successors(0.0, 10.0).is_empty());
+        // Forgetting an unknown instance is a no-op.
+        t.forget_instance(99);
+        assert_eq!(t.peers(0.0, 10.0).len(), 1);
     }
 
     #[test]

@@ -257,6 +257,33 @@ impl MigrationManager {
         self.release(&t);
         Some(t)
     }
+
+    /// Does the active transfer for `request` match these endpoints
+    /// and finish instant?  Guards stale `MigrationDone` events: a
+    /// transfer aborted by churn (and possibly restarted with new
+    /// endpoints or a new finish time after re-admission) must not be
+    /// completed by the event scheduled for its aborted predecessor.
+    /// Bit-exact time match: the event fires at exactly the
+    /// `finish_at` it was scheduled with.
+    pub fn matches(
+        &self,
+        request: RequestId,
+        from: InstanceId,
+        to: InstanceId,
+        finish_at: Time,
+    ) -> bool {
+        self.active
+            .get(&request)
+            .is_some_and(|t| t.from == from && t.to == to && t.finish_at.to_bits() == finish_at.to_bits())
+    }
+
+    /// Active transfers touching instance `i` as either endpoint, in
+    /// ascending-request order (`active` is a `BTreeMap` — detlint D1)
+    /// — the churn kill sweep enumerates these to abort them
+    /// deterministically.
+    pub fn transfers_touching(&self, i: InstanceId) -> Vec<Transfer> {
+        self.active.values().filter(|t| t.from == i || t.to == i).copied().collect()
+    }
 }
 
 #[cfg(test)]

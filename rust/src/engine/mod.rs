@@ -357,6 +357,27 @@ impl<B: ExecBackend> Engine<B> {
         None
     }
 
+    /// Remove every sequence at once — running (batch order) then
+    /// queued (FCFS order) — freeing all KV: the spot-preemption /
+    /// forced-kill evacuation path of the elastic-fleet subsystem.
+    /// Equivalent to calling [`Engine::extract`] for every id, but
+    /// O(n) total and it leaves the aggregates in the exact
+    /// empty-engine state.
+    pub fn evacuate(&mut self) -> Vec<Sequence> {
+        let mut out = Vec::with_capacity(self.running.len() + self.queue.len());
+        for seq in self.running.drain(..) {
+            self.kv.free(seq.req.id);
+            out.push(seq);
+        }
+        out.extend(self.queue.drain(..));
+        self.running_tokens = 0;
+        self.queued_tokens = 0;
+        self.n_prefilling = 0;
+        self.max_len_hint = 0;
+        self.lens_cached = false;
+        out
+    }
+
     /// Sequences currently decoding/prefilling (for load trackers).
     pub fn running(&self) -> &[Sequence] {
         &self.running
@@ -925,6 +946,32 @@ mod tests {
             phase: Phase::Decoding,
         };
         assert!(!e.inject(mid));
+    }
+
+    #[test]
+    fn evacuate_drains_everything_and_resets_aggregates() {
+        let mut e = engine();
+        e.submit(req(1, 0.0, 100, 20));
+        e.submit(req(2, 0.0, 50, 5));
+        let mut now = 0.0;
+        for _ in 0..3 {
+            let out = e.step(now);
+            now += out.duration;
+        }
+        e.submit(req(3, now, 40, 5));
+        let seqs = e.evacuate();
+        // Running sequences in batch order, then the queued one.
+        assert_eq!(seqs.len(), 3);
+        assert_eq!(seqs[2].req.id, 3);
+        assert!(seqs.iter().any(|s| s.generated > 0), "progress rides along");
+        assert!(!e.has_work());
+        assert_eq!(e.token_load(), 0);
+        assert_eq!(e.token_load_naive(), 0);
+        assert_eq!(e.kv().n_seqs(), 0, "all KV freed");
+        // The engine is reusable after evacuation.
+        e.submit(req(4, now, 10, 2));
+        let recs = run_to_completion(&mut e);
+        assert_eq!(recs.len(), 1);
     }
 
     #[test]

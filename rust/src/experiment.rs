@@ -134,6 +134,9 @@ impl Experiment {
         if let Some(p) = &cfg.predictor {
             b = b.predictor(p);
         }
+        if let Some(c) = &cfg.churn {
+            b = b.churn(c);
+        }
         b
     }
 
@@ -172,6 +175,7 @@ pub struct ExperimentBuilder {
     replan_interval: Option<Time>,
     forced_pipeline: Option<Pipeline>,
     micro_step: bool,
+    churn_name: Option<String>,
 }
 
 impl Default for ExperimentBuilder {
@@ -201,6 +205,7 @@ impl Default for ExperimentBuilder {
             replan_interval: None,
             forced_pipeline: None,
             micro_step: false,
+            churn_name: None,
         }
     }
 }
@@ -368,6 +373,15 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Fault-injection / elasticity spec by CLI string
+    /// (`spot:T@I`, `drain:T@I[:DEADLINE]`, `join:T[@GPU]`,
+    /// `auto:PERIOD:MIN..MAX`, comma-separated; `none` disables —
+    /// see [`crate::cluster::ChurnSpec::parse`]).  Resolved at `build`.
+    pub fn churn(mut self, spec: &str) -> Self {
+        self.churn_name = Some(spec.to_string());
+        self
+    }
+
     /// Resolve every name, materialise the trace, and assemble the
     /// cluster configuration.
     pub fn build(self) -> Result<Experiment, ExperimentError> {
@@ -522,6 +536,10 @@ impl ExperimentBuilder {
             cfg.forced_pipeline = Some(p);
         }
         cfg.micro_step = self.micro_step;
+        if let Some(c) = &self.churn_name {
+            cfg.churn = crate::cluster::ChurnSpec::parse(c)
+                .map_err(|e| ExperimentError::Invalid(format!("bad --churn spec: {e}")))?;
+        }
         if let Some(mut f) = fleet {
             if fleet_from_name {
                 // A parsed fleet string cannot express engine knobs:
@@ -837,6 +855,39 @@ mod tests {
         let exp = Experiment::from_config(&ec).build().unwrap();
         assert_eq!(exp.cfg.n_instances, 2);
         assert!(exp.cfg.fleet.is_some());
+    }
+
+    #[test]
+    fn churn_spec_reaches_cluster_config() {
+        let exp = Experiment::builder()
+            .instances(4)
+            .churn("spot:2.0@1,join:6.0")
+            .requests(10)
+            .build()
+            .unwrap();
+        assert_eq!(exp.cfg.churn.events.len(), 2);
+        assert_eq!(exp.cfg.churn.scheduled_joins(), 1);
+        // `none` is the explicit no-op spelling.
+        let exp = Experiment::builder().churn("none").requests(5).build().unwrap();
+        assert!(exp.cfg.churn.is_none());
+        // Malformed specs are hard errors naming the flag.
+        let e = Experiment::builder().churn("spot:oops").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Invalid(_)));
+        assert!(e.to_string().contains("churn"), "{e}");
+    }
+
+    #[test]
+    fn config_file_churn_feeds_builder() {
+        let cfg = crate::config::Config::parse(
+            "[experiment]\ninstances = 2\nrequests = 10\nrate = 5.0\n\
+             churn = \"auto:1.0:2..4\"\n",
+        )
+        .unwrap();
+        let ec = ExperimentConfig::from_config(&cfg);
+        assert_eq!(ec.churn.as_deref(), Some("auto:1.0:2..4"));
+        let exp = Experiment::from_config(&ec).build().unwrap();
+        let auto = exp.cfg.churn.autoscale.expect("autoscale parsed");
+        assert_eq!((auto.min, auto.max), (2, 4));
     }
 
     #[test]

@@ -24,7 +24,10 @@
 //!   the `predict::names()` registry (`predict.rs`) must appear in the
 //!   coverage lists of both `tests/golden_seed.rs` and
 //!   `tests/macro_equivalence.rs`, so a new policy or predictor cannot
-//!   ship with its seeded behavior unpinned.
+//!   ship with its seeded behavior unpinned.  The churn-event registry
+//!   (`ChurnSpec::names()`, `cluster/elastic.rs`) is cross-referenced
+//!   the same way against `tests/elastic.rs`, so a new fault kind
+//!   cannot ship without an elastic-suite determinism pin.
 //!
 //! Simulator scope is `cluster/`, `coordinator/`, `sim/`, `engine/`,
 //! plus `fleet.rs`, `kernelmodel.rs`, `workload.rs`, `metrics.rs`,
@@ -364,6 +367,40 @@ pub fn check_crate(rust_root: &Path) -> io::Result<LintReport> {
             a.used = true;
         } else {
             report.findings.push(f);
+        }
+    }
+    // D4 once more for the churn-event registry (`ChurnSpec::names()`)
+    // against the elastic fault-injection suite: a new fault kind must
+    // carry a determinism pin before it can ship.
+    const ELASTIC: &str = "src/cluster/elastic.rs";
+    const ELASTIC_COVERAGE: &str = "tests/elastic.rs";
+    let elastic_src = fs::read_to_string(rust_root.join(ELASTIC))?;
+    match fs::read_to_string(rust_root.join(ELASTIC_COVERAGE)) {
+        Err(_) => report.findings.push(Finding {
+            file: ELASTIC_COVERAGE.to_string(),
+            line: 1,
+            rule: Rule::D4,
+            message: format!(
+                "coverage test file {ELASTIC_COVERAGE} is missing; the churn-event \
+                 cross-reference cannot hold without it"
+            ),
+        }),
+        Ok(elastic_cov) => {
+            for f in check_registry_coverage(
+                ELASTIC,
+                &elastic_src,
+                &[(ELASTIC_COVERAGE, &elastic_cov)],
+            ) {
+                let allow = report
+                    .allows
+                    .iter_mut()
+                    .find(|a| a.file == ELASTIC && a.line == f.line && a.rule == Rule::D4);
+                if let Some(a) = allow {
+                    a.used = true;
+                } else {
+                    report.findings.push(f);
+                }
+            }
         }
     }
     report.findings.sort_by(|a, b| {

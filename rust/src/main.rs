@@ -98,6 +98,9 @@ fn builder_from_args(args: &Args) -> ExperimentBuilder {
     if let Some(p) = args.get("predictor") {
         b = b.predictor(p);
     }
+    if let Some(c) = args.get("churn") {
+        b = b.churn(c);
+    }
     if args.has_flag("micro-step") {
         b = b.micro_step(true);
     }
@@ -180,6 +183,27 @@ fn print_sim_metrics(
             "mispredictions   {} (re-routes {}, escalations {})",
             stats.mispredictions, stats.predict_reroutes, stats.predict_escalations
         );
+    }
+    // Elastic-fleet accounting, shown only when churn actually fired.
+    if stats.spot_kills + stats.drains_started + stats.joins + stats.autoscale_ticks > 0 {
+        println!(
+            "churn            {} spot kills, {} drains ({} completed, {} forced), {} joins",
+            stats.spot_kills,
+            stats.drains_started,
+            stats.drains_completed,
+            stats.drains_forced,
+            stats.joins
+        );
+        println!(
+            "preempted reqs   {} ({} recovered, {} KV tokens lost)",
+            stats.preempted_requests, stats.recovered, stats.lost_tokens
+        );
+        if stats.autoscale_ticks > 0 {
+            println!(
+                "autoscaler       {} ticks, {} scale-outs, {} scale-ins",
+                stats.autoscale_ticks, stats.scale_outs, stats.scale_ins
+            );
+        }
     }
     if stats.rejected > 0 {
         println!(
@@ -301,6 +325,9 @@ fn cmd_sweep(args: &Args) {
         schedulers,
         fleets,
         predictors,
+        // One fault schedule for every cell: churn compares schedulers
+        // under identical failures, so it is a spec, not a grid axis.
+        churn: args.get("churn").map(|s| s.to_string()),
         jobs: args.get_usize("jobs", sweep::default_jobs()),
     };
     match sweep::run_sweep(&base, &spec) {

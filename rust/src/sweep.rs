@@ -37,6 +37,11 @@ pub struct SweepSpec {
     /// and misprediction columns — the QoE-vs-accuracy robustness
     /// result.
     pub predictors: Vec<Option<String>>,
+    /// Fault-injection spec applied to *every* cell (not a grid axis:
+    /// churn compares schedulers under one fault schedule — see
+    /// [`crate::cluster::ChurnSpec::parse`]).  When set, the table
+    /// gains churn-recovery columns (preempted / recovered requests).
+    pub churn: Option<String>,
     /// Worker threads; clamped to the cell count, minimum 1.
     pub jobs: usize,
 }
@@ -88,8 +93,12 @@ pub fn run_sweep(base: &ExperimentBuilder, spec: &SweepSpec) -> Result<String, S
     for p in spec.predictors.iter().flatten() {
         PredictorSpec::parse(p)?;
     }
+    if let Some(c) = &spec.churn {
+        crate::cluster::ChurnSpec::parse(c)?;
+    }
     let fleet_col = spec.fleets.iter().any(Option::is_some);
     let pred_col = spec.predictors.iter().any(Option::is_some);
+    let churn_col = spec.churn.is_some();
 
     // Materialise every cell serially: one shared workload per rate
     // (identical trace across that rate's schedulers and fleets —
@@ -116,6 +125,9 @@ pub fn run_sweep(base: &ExperimentBuilder, spec: &SweepSpec) -> Result<String, S
                     }
                     if let Some(p) = predictor {
                         b = b.predictor(p);
+                    }
+                    if let Some(c) = &spec.churn {
+                        b = b.churn(c);
                     }
                     let exp = b.build().map_err(|e| e.to_string())?;
                     cells.push(Cell {
@@ -167,6 +179,9 @@ pub fn run_sweep(base: &ExperimentBuilder, spec: &SweepSpec) -> Result<String, S
     if pred_col {
         table.push_str(&format!(" {:>7} {:>8} {:>7}", "SLO%", "reroute", "mispred"));
     }
+    if churn_col {
+        table.push_str(&format!(" {:>8} {:>7} {:>6}", "preempt", "recov", "rej"));
+    }
 
     // Run the cells across scoped workers; each slot is claimed once
     // through the cursor and filled in place, so assembly order (and
@@ -202,6 +217,12 @@ pub fn run_sweep(base: &ExperimentBuilder, spec: &SweepSpec) -> Result<String, S
                         slo, stats.predict_reroutes, stats.mispredictions
                     ));
                 }
+                if churn_col {
+                    row.push_str(&format!(
+                        " {:>8} {:>7} {:>6}",
+                        stats.preempted_requests, stats.recovered, stats.rejected
+                    ));
+                }
                 rows.lock().expect("no poisoned sweep rows")[i] = Some(row);
             });
         }
@@ -229,6 +250,7 @@ mod tests {
             schedulers: vec!["cascade".into(), "vllm".into()],
             fleets: vec![None],
             predictors: vec![None],
+            churn: None,
             jobs,
         }
     }
@@ -264,6 +286,7 @@ mod tests {
             schedulers: vec!["cascade".into()],
             fleets: vec![None, Some("h20:2,h100:2".into())],
             predictors: vec![None],
+            churn: None,
             jobs: 2,
         };
         let table = run_sweep(&base, &spec).unwrap();
@@ -289,6 +312,27 @@ mod tests {
         assert!(run_sweep(&base, &spec).is_err());
         let mut spec = tiny_spec(1);
         spec.predictors.clear();
+        assert!(run_sweep(&base, &spec).is_err());
+    }
+
+    #[test]
+    fn churn_spec_renders_recovery_columns_and_fails_fast() {
+        let base = tiny_base();
+        let mut spec = tiny_spec(2);
+        spec.rates = vec![10.0];
+        spec.schedulers = vec!["cascade".into()];
+        spec.churn = Some("spot:1.0@1".into());
+        let table = run_sweep(&base, &spec).unwrap();
+        let header = table.lines().next().unwrap();
+        assert!(header.contains("preempt"));
+        assert!(header.contains("recov"));
+        assert_eq!(table.lines().count(), 1 + 1);
+        // Churn-free sweeps keep the legacy table shape byte for byte.
+        let legacy = run_sweep(&base, &tiny_spec(1)).unwrap();
+        assert!(!legacy.lines().next().unwrap().contains("preempt"));
+        // A malformed churn spec fails before any cell runs.
+        let mut spec = tiny_spec(1);
+        spec.churn = Some("reboot:1.0@2".into());
         assert!(run_sweep(&base, &spec).is_err());
     }
 

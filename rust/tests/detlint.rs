@@ -66,11 +66,13 @@ fn simulation_core_modules_are_sim_scoped_for_d1_d3() {
     // workloads) is load-bearing for bit-identity, so its modules must
     // be inside sim scope: a hash iteration, a partial_cmp, or a clock
     // read slipped into any of them has to fail detlint by path.
-    for rel in ["sim/mod.rs", "sim/arena.rs", "cluster/driver.rs", "workload.rs"] {
+    for rel in
+        ["sim/mod.rs", "sim/arena.rs", "cluster/driver.rs", "cluster/elastic.rs", "workload.rs"]
+    {
         assert!(sim_scoped(rel), "{rel} must be sim-scoped");
     }
     let src = fixture("sim_scope_arena_stream.rs");
-    for rel in ["sim/arena.rs", "sim/mod.rs", "workload.rs"] {
+    for rel in ["sim/arena.rs", "sim/mod.rs", "cluster/elastic.rs", "workload.rs"] {
         let rep = check_source(rel, &src);
         let mut rules: Vec<&str> = rep.findings.iter().map(|f| f.rule.id()).collect();
         rules.sort_unstable();

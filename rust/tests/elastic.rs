@@ -1,0 +1,304 @@
+//! Elastic-fleet fault-injection regression suite.
+//!
+//! Three layers of protection:
+//!
+//! 1. **Churn-free bit-identity** (THE gate): an experiment with an
+//!    explicit `--churn none` must produce a byte-identical `Report`
+//!    to the same experiment with no churn configured at all, for
+//!    every scheduler in the `PolicySpec` registry.  The elastic
+//!    machinery must be invisible when no faults are scheduled — the
+//!    blessed golden checksums in `golden_seed.rs` then extend that
+//!    guarantee across commits.
+//! 2. **Accounting**: a seeded spot-preemption run must terminate with
+//!    every request accounted — completed in the report or counted in
+//!    `RunStats::rejected` — never wedged on an evicted sequence.
+//! 3. **Run-to-run determinism per fault kind**: each churn event kind
+//!    (`CHURN_COVERAGE`, cross-referenced against `ChurnSpec::names()`
+//!    by detlint rule D4) must reproduce bit-for-bit under a fixed
+//!    (seed, config, trace, churn-spec) tuple.
+
+use cascade_infer::cluster::{ChurnSpec, RunStats};
+use cascade_infer::experiment::Experiment;
+use cascade_infer::metrics::Report;
+use cascade_infer::workload::{generate, Request, ShareGptLike};
+
+/// Churn-kind coverage list, cross-referenced against the
+/// `ChurnSpec::names()` registry by detlint rule D4 (and by the
+/// assertion test below): a newly registered fault kind must be added
+/// here — and thereby to the determinism gate — before it can ship.
+const CHURN_COVERAGE: [&str; 4] = ["spot", "drain", "join", "auto"];
+
+/// A concrete spec per fault kind so the coverage gate exercises real
+/// (non-degenerate) fault schedules: a mid-run kill, a bounded drain,
+/// a scale-out join, and a tight autoscaler loop.
+fn churn_instance(kind: &str) -> &'static str {
+    match kind {
+        "spot" => "spot:2.0@1",
+        "drain" => "drain:1.5@2:0.5",
+        "join" => "join:2.5",
+        "auto" => "auto:0.5:2..6",
+        other => panic!("unknown churn kind {other}"),
+    }
+}
+
+/// Scheduler registry, mirrored from `golden_seed.rs` (which pins it
+/// against `PolicySpec::names()`); every entry runs the churn-free
+/// identity gate below.
+const SCHEDULERS: [&str; 11] = [
+    "cascade",
+    "vllm",
+    "sglang",
+    "llumnix",
+    "chain",
+    "nopipeline",
+    "quantity",
+    "memory",
+    "interstage",
+    "rrintra",
+    "sjf",
+];
+
+fn checksum(r: &Report) -> u64 {
+    r.fingerprint()
+}
+
+fn stats_fingerprint(s: &RunStats) -> (u64, u64, u64, u64, u64, u64, u64, u64, u64) {
+    (
+        s.spot_kills,
+        s.preempted_requests,
+        s.recovered,
+        s.lost_tokens,
+        s.drains_started + s.drains_completed + s.drains_forced,
+        s.joins,
+        s.autoscale_ticks,
+        s.scale_outs + s.scale_ins,
+        s.rejected,
+    )
+}
+
+fn trace() -> Vec<Request> {
+    generate(&ShareGptLike::default(), 20.0, 150, 7)
+}
+
+#[test]
+fn churn_coverage_list_matches_registry() {
+    assert_eq!(
+        CHURN_COVERAGE.as_slice(),
+        ChurnSpec::names(),
+        "CHURN_COVERAGE must mirror the ChurnSpec registry exactly \
+         (detlint rule D4 cross-references the literals)"
+    );
+}
+
+#[test]
+fn churn_none_is_bit_identical_for_every_registry_scheduler() {
+    // The elastic subsystem must cost nothing when unused: an explicit
+    // `none` spec and an absent spec must take exactly the same
+    // statement path through every scheduler.  Any gate that leaks —
+    // an extra event, a reordered tie, a perturbed float sum — fails
+    // here by scheduler name.
+    let reqs = trace();
+    for name in SCHEDULERS {
+        let base = Experiment::builder()
+            .instances(4)
+            .scheduler(name)
+            .trace(reqs.clone())
+            .plan_sample(300)
+            .build()
+            .expect("base experiment builds")
+            .run();
+        let none = Experiment::builder()
+            .instances(4)
+            .scheduler(name)
+            .churn("none")
+            .trace(reqs.clone())
+            .plan_sample(300)
+            .build()
+            .expect("churn-none experiment builds")
+            .run();
+        assert_eq!(
+            checksum(&base.0),
+            checksum(&none.0),
+            "{name}: `--churn none` perturbed the report"
+        );
+        assert_eq!(
+            stats_fingerprint(&base.1),
+            stats_fingerprint(&none.1),
+            "{name}: `--churn none` perturbed the stats"
+        );
+    }
+}
+
+#[test]
+fn churn_none_is_bit_identical_for_every_predictor_family() {
+    // Same gate along the predictor axis: seed-derived prediction
+    // noise must be consumed in exactly the same order with and
+    // without an explicit `none` spec.
+    let reqs = trace();
+    for p in ["oracle", "noisy:0.5", "bucket:0.7", "ltr:0.8"] {
+        let build = || {
+            Experiment::builder()
+                .instances(4)
+                .scheduler("cascade")
+                .predictor(p)
+                .trace(reqs.clone())
+                .plan_sample(300)
+        };
+        let (rb, sb) = build().build().expect("base builds").run();
+        let (rn, sn) = build().churn("none").build().expect("churn-none builds").run();
+        assert_eq!(checksum(&rb), checksum(&rn), "{p}: `--churn none` perturbed the report");
+        assert_eq!(
+            stats_fingerprint(&sb),
+            stats_fingerprint(&sn),
+            "{p}: `--churn none` perturbed the stats"
+        );
+    }
+}
+
+#[test]
+fn spot_preemption_accounts_for_every_request() {
+    // Kill instance 1 mid-decode.  The run must terminate (no wedged
+    // evicted sequence) and every request must end up either completed
+    // in the report or counted as rejected after the capped readmit
+    // retries — nothing silently dropped.
+    let reqs = trace();
+    let (r, s) = Experiment::builder()
+        .instances(4)
+        .scheduler("cascade")
+        .churn("spot:2.0@1")
+        .trace(reqs.clone())
+        .plan_sample(300)
+        .build()
+        .expect("spot experiment builds")
+        .run();
+    assert_eq!(s.spot_kills, 1, "the scheduled kill must fire");
+    assert_eq!(
+        r.records.len() as u64 + s.rejected,
+        reqs.len() as u64,
+        "every request must be completed or rejected ({} records, {} rejected)",
+        r.records.len(),
+        s.rejected
+    );
+    assert!(
+        s.recovered + s.rejected >= s.preempted_requests,
+        "preempted requests must resolve to recovery or rejection \
+         ({} preempted, {} recovered, {} rejected)",
+        s.preempted_requests,
+        s.recovered,
+        s.rejected
+    );
+}
+
+#[test]
+fn drain_resolves_gracefully_or_at_the_deadline() {
+    // A tight 0.5s drain deadline under load: the instance either
+    // empties in time or is forcibly killed — exactly one of the two,
+    // and the evacuated work is still fully accounted.
+    let reqs = trace();
+    let (r, s) = Experiment::builder()
+        .instances(4)
+        .scheduler("cascade")
+        .churn("drain:1.5@2:0.5")
+        .trace(reqs.clone())
+        .plan_sample(300)
+        .build()
+        .expect("drain experiment builds")
+        .run();
+    assert_eq!(s.drains_started, 1);
+    assert_eq!(
+        s.drains_completed + s.drains_forced,
+        1,
+        "a started drain must finish empty or be forced at the deadline"
+    );
+    assert_eq!(r.records.len() as u64 + s.rejected, reqs.len() as u64);
+}
+
+#[test]
+fn every_churn_kind_is_run_to_run_bit_identical() {
+    // A fixed (seed, config, trace, churn-spec) tuple must reproduce
+    // bit-for-bit for every fault kind: boot latencies, drain pumps,
+    // readmit backoff, and the autoscaler controller are all simulated
+    // time, never wall-clock.
+    let reqs = trace();
+    for kind in CHURN_COVERAGE {
+        let spec = churn_instance(kind);
+        let run = || {
+            Experiment::builder()
+                .instances(4)
+                .scheduler("cascade")
+                .churn(spec)
+                .trace(reqs.clone())
+                .plan_sample(300)
+                .build()
+                .expect("churn experiment builds")
+                .run()
+        };
+        let (r1, s1) = run();
+        let (r2, s2) = run();
+        assert_eq!(checksum(&r1), checksum(&r2), "{spec}: report not bit-identical");
+        assert_eq!(stats_fingerprint(&s1), stats_fingerprint(&s2), "{spec}: stats diverged");
+        assert_eq!(
+            r1.records.len() as u64 + s1.rejected,
+            reqs.len() as u64,
+            "{spec}: requests leaked"
+        );
+    }
+}
+
+#[test]
+fn autoscaler_reacts_and_stays_deterministic_under_bursty_load() {
+    // Bursty arrivals against a 2..6 fleet with a fast control period:
+    // the controller must actually tick, and two identical runs must
+    // agree on every scaling decision (watermarked SLO windows and
+    // queue depths are pure functions of simulated state).
+    let run = || {
+        Experiment::builder()
+            .instances(4)
+            .scheduler("cascade")
+            .churn("auto:0.5:2..6")
+            .workload_name("bursty")
+            .rate(24.0)
+            .requests(200)
+            .seed(11)
+            .plan_sample(300)
+            .build()
+            .expect("autoscaler experiment builds")
+            .run()
+    };
+    let (r1, s1) = run();
+    let (r2, s2) = run();
+    assert!(s1.autoscale_ticks > 0, "the controller must tick");
+    assert_eq!(checksum(&r1), checksum(&r2), "autoscaled report not bit-identical");
+    assert_eq!(
+        (s1.autoscale_ticks, s1.scale_outs, s1.scale_ins, s1.joins, s1.drains_started),
+        (s2.autoscale_ticks, s2.scale_outs, s2.scale_ins, s2.joins, s2.drains_started),
+        "autoscaler decisions diverged between identical runs"
+    );
+    assert_eq!(r1.records.len() as u64 + s1.rejected, 200);
+}
+
+#[test]
+fn join_expands_the_fleet_deterministically() {
+    // A scale-out join mid-run: the joiner must go live (after its
+    // priced boot latency) and absorb work without perturbing
+    // determinism.
+    let reqs = trace();
+    let run = || {
+        Experiment::builder()
+            .instances(4)
+            .scheduler("cascade")
+            .churn("join:2.5")
+            .trace(reqs.clone())
+            .plan_sample(300)
+            .build()
+            .expect("join experiment builds")
+            .run()
+    };
+    let (r1, s1) = run();
+    let (r2, s2) = run();
+    assert_eq!(s1.joins, 1, "the scheduled join must complete boot");
+    assert_eq!(checksum(&r1), checksum(&r2), "join report not bit-identical");
+    assert_eq!(s1.instance_gpus.len(), 5, "the joiner's slot must exist in the fleet");
+    assert_eq!(stats_fingerprint(&s1), stats_fingerprint(&s2));
+    assert_eq!(r1.records.len(), reqs.len(), "a pure scale-out must not reject work");
+}
