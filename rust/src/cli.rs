@@ -96,7 +96,8 @@ USAGE:
   cascade-infer sim   [--config FILE] [--model NAME] [--gpu H20|L40|H100]
                       [--instances N] [--fleet SPEC] [--rate R] [--requests N]
                       [--seed S] [--scheduler NAME] [--workload NAME]
-                      [--predictor P] [--churn SPEC] [--micro-step] [--stream]
+                      [--predictor P] [--layout L] [--churn SPEC]
+                      [--micro-step] [--stream]
   cascade-infer sweep [--rates R1,R2,..] [--schedulers N1,N2,..]
                       [--fleets F1;F2;..] [--predictors P1;P2;..]
                       [--model NAME] [--gpu H20|L40|H100]
@@ -122,6 +123,11 @@ RUNNING EXPERIMENTS
   Workloads:  sharegpt|heavytail|uniformshort|mix|bursty|trace:FILE
   Predictors: oracle|noisy:CV|bucket:ACC|ltr:PACC (see Length
               prediction below)
+  Layouts:    planned|chain|flat|pd[:P/D[:BOUNDARY[:WINDOW_US]]] —
+              --layout L (also `custom:..,layout=L` and the config
+              `layout` key) overrides the layout carried by the
+              scheduler spec.  See Prefill/decode disaggregation
+              below for the pd grammar.
   Fleets:     --fleet describes a heterogeneous fleet as comma-separated
               GPU:COUNT groups, each optionally followed by speed=F
               and/or tp=N options for that group, e.g.
@@ -171,10 +177,30 @@ RUNNING EXPERIMENTS
               `sweep --predictors P1;P2;..` grids predictors as an
               axis and adds SLO%/reroute/mispred columns — the
               QoE-vs-accuracy robustness table.
+  Prefill/decode disaggregation:
+              --layout pd[:P/D[:BOUNDARY[:WINDOW_US]]] splits the
+              fleet into a prefill pool (P instances, prompt phases
+              only) and a decode pool (D instances); bare `pd`
+              auto-splits ~1/4 of the fleet into the prefill pool,
+              explicit pools must sum to the instance count.  Each
+              completed prefill's KV hands off to the least-loaded
+              feasible decode instance as a frozen-KV transfer priced
+              by the existing migration cost model over the topology
+              link.  Prompts at or below BOUNDARY tokens (default 512)
+              enter a short queue that drains before the long queue,
+              and arrivals accumulate for WINDOW_US microseconds
+              (default 20000; 0 = dispatch immediately) so each
+              prefill batch holds similar-length prompts.  A periodic
+              controller moves an idle instance between the pools on
+              sustained 2x backlog imbalance (disable with
+              balance=off).  pd does not compose with --churn or a
+              forced pipeline.  `sim` prints handoff/re-allocation
+              counters under pd; colocated layouts are guaranteed
+              bit-identical to the pre-pd simulator (CI pins this).
   Config:     --config FILE loads an [experiment] section (model, gpu,
               instances, fleet, rate, requests, seed, scheduler,
-              workload, predictor, churn); explicit CLI flags override
-              file values.
+              workload, predictor, layout, churn); explicit CLI flags
+              override file values.
   Parallel:   `sweep` cells are independent experiments and run across
               --jobs N worker threads (default: all cores).  The grid
               table is byte-identical for any job count.
@@ -280,6 +306,7 @@ PERF BASELINE
     cascade-infer sim --fleet h20:4,tp=2,h20:2,tp=4 --model llama70b --workload heavytail
     cascade-infer sim --scheduler custom:layout=planned,refine=memory,balance=rrintra
     cascade-infer sim --scheduler cascade --predictor noisy:0.5 --workload heavytail
+    cascade-infer sim --layout pd:2/2 --instances 4 --workload heavytail
     cascade-infer sweep --rates 8,16,32 --schedulers cascade,vllm,llumnix
     cascade-infer sweep --rates 8,16 --schedulers cascade,vllm --fleets \"h20:8;h20:6,h100:2\"
     cascade-infer sweep --rates 16 --schedulers cascade,vllm \\

@@ -65,6 +65,14 @@ pub(super) enum Event {
     /// Elastic fleets: a preempted request re-enters admission after
     /// its backoff (capped attempts, then a counted rejection).
     Readmit(Request),
+    /// PD layouts: the waiting window expired — drain the short/long
+    /// prefill queues into similar-length batches.
+    PdFlush,
+    /// PD layouts: retry the handoff pump after a failed start (clears
+    /// the retry gate; the post-dispatch pump does the work).
+    PdPump,
+    /// PD layouts: periodic dynamic P/D re-allocation check.
+    PdRebalance,
 }
 
 impl Cluster {
@@ -196,6 +204,11 @@ impl Cluster {
         if let Some(auto) = self.cfg.churn.autoscale {
             self.events.schedule(auto.period, Event::AutoscaleTick);
         }
+        // PD dynamic re-allocation rides its own periodic timer;
+        // `balance=off` pins the pools for the whole run.
+        if self.pd.is_some() && self.cfg.policy.balance != BalancePolicy::Off {
+            self.events.schedule(super::pd::PD_REBALANCE_INTERVAL, Event::PdRebalance);
+        }
     }
 
     /// Route one popped event to its handler.
@@ -222,6 +235,16 @@ impl Cluster {
             Event::InstanceGone(i) => self.on_instance_gone(now, i),
             Event::AutoscaleTick => self.on_autoscale_tick(now),
             Event::Readmit(req) => self.on_readmit(now, req),
+            Event::PdFlush => self.on_pd_flush(now),
+            Event::PdPump => self.on_pd_pump_timer(),
+            Event::PdRebalance => self.on_pd_rebalance(now),
+        }
+        // PD handoff pump: engine progress only happens inside event
+        // handlers, so running after every dispatch guarantees no
+        // parked completed prefill is ever stranded.  Colocated
+        // layouts (`pd.is_none()`) skip this entirely.
+        if self.pd.is_some() {
+            self.pd_pump(now);
         }
     }
 
@@ -293,6 +316,11 @@ impl Cluster {
                 }
                 self.stats.preemptions += mo.preempted;
                 self.stats.counters.add(i, mo.tokens_emitted);
+                if self.instances[i].engine.prefill_only() {
+                    // Single-token outputs completing *on* the prefill
+                    // pool (no handoff needed); always 0 colocated.
+                    self.stats.pd_local_completions += mo.completed.len() as u64;
+                }
                 for rec in mo.completed {
                     self.record_completion(rec);
                 }
@@ -352,6 +380,9 @@ impl Cluster {
         }
         self.stats.preemptions += outcome.preempted;
         let end = now + outcome.duration;
+        if self.instances[i].engine.prefill_only() {
+            self.stats.pd_local_completions += outcome.completed.len() as u64;
+        }
         for rec in outcome.completed {
             self.record_completion(rec);
         }

@@ -271,6 +271,27 @@
 //! (dead, draining, or wedged) cannot keep winning outlier
 //! comparisons with a stale load figure.
 //!
+//! # Prefill/decode disaggregation
+//!
+//! [`Layout::Disaggregated`] (`--layout pd[:P/D[:BOUNDARY[:WINDOW_US]]]`)
+//! splits the fleet into a prefill pool and a decode pool: prefill
+//! instances run prompt phases only and park each completed prefill
+//! with its KV resident
+//! ([`crate::engine::Engine::set_prefill_only`]); a post-dispatch pump
+//! hands the frozen KV off to the least-loaded feasible decode
+//! instance as a zero-decode-rate migration priced by the *existing*
+//! [`MigrationManager`] cost model over the configured [`Topology`]
+//! link.  The prefill side applies the LAPS levers — dual short/long
+//! prefill queues (short drains first), a waiting window batching
+//! similar-length prompts, and periodic dynamic P/D re-allocation on
+//! sustained backlog imbalance (disabled by `balance=off`).  See
+//! [`pd`] for the mechanics and [`pd::PdSpec`] for the grammar.  PD
+//! does not compose with `--churn` or a forced pipeline (construction
+//! rejects the combination).  Invariant: every PD hook is gated on
+//! `Cluster::pd.is_some()`, so colocated layouts stay
+//! fingerprint-bit-identical for every registry scheduler and
+//! predictor — `tests/pd_layout.rs` pins it.
+//!
 //! # Determinism invariants
 //!
 //! Every regression this repo leans on — golden-seed checksums,
@@ -309,6 +330,7 @@
 //! approximations.
 
 pub mod elastic;
+pub mod pd;
 pub mod policy;
 
 mod driver;
@@ -316,8 +338,10 @@ mod router;
 mod state;
 
 pub use elastic::{AutoscaleSpec, ChurnEvent, ChurnSpec, Membership};
+pub use pd::PdSpec;
 pub use policy::{
-    BalancePolicy, DispatchPolicy, Layout, PolicyError, PolicySpec, RefinePolicy, SchedulerKind,
+    parse_layout, BalancePolicy, DispatchPolicy, Layout, PolicyError, PolicySpec, RefinePolicy,
+    SchedulerKind,
 };
 
 use crate::baselines;
@@ -558,6 +582,21 @@ pub struct RunStats {
     pub autoscale_ticks: u64,
     pub scale_outs: u64,
     pub scale_ins: u64,
+    /// Arrivals the new-request router re-routed to a non-preferred
+    /// instance because the preferred target's KV pool could never
+    /// hold them (reject-or-reroute admission; 0 whenever every pool
+    /// fits every request).
+    pub admit_reroutes: u64,
+    /// Completed-prefill KV handoffs (prefill pool -> decode pool)
+    /// and the tokens they moved.  0 under colocated layouts.
+    pub pd_handoffs: u64,
+    pub pd_handoff_tokens: Tokens,
+    /// Requests that completed *on* a prefill instance (single-token
+    /// outputs reaped at prefill — no handoff needed).
+    pub pd_local_completions: u64,
+    /// Dynamic P/D re-allocations: instances moved between the pools
+    /// on sustained backlog imbalance.
+    pub pd_reallocations: u64,
     /// Total engine iterations simulated across all instances — the
     /// numerator of the perf harness's iterations-per-wall-second
     /// cluster throughput metric (`BENCH_hotpath.json`).
@@ -680,6 +719,10 @@ pub struct Cluster {
     /// churn-free run, so legacy dispatch orderings are preserved bit
     /// for bit.
     admitting: Vec<InstanceId>,
+    /// Prefill/decode disaggregation state — `Some` iff the layout is
+    /// [`Layout::Disaggregated`].  Every PD code path is gated on it,
+    /// so colocated layouts stay bit-identical.
+    pd: Option<pd::PdState>,
 }
 
 impl Cluster {
@@ -807,7 +850,12 @@ impl Cluster {
                 None => planner.plan_dp_weighted(&hist, &caps[..e]),
             },
             (None, Layout::Chain) => baselines::chain_layout(&planner, &hist, e),
-            (None, Layout::Flat) => Pipeline::no_pipeline(e, cfg.max_len),
+            // Disaggregated layouts carry no length-ranged stages: the
+            // PD pools are resolved below and the decode pool becomes
+            // the single routing stage.
+            (None, Layout::Flat) | (None, Layout::Disaggregated(_)) => {
+                Pipeline::no_pipeline(e, cfg.max_len)
+            }
         };
 
         // Assign instances to stages contiguously (co-locates adjacent
@@ -859,6 +907,32 @@ impl Cluster {
         for ins in instances.iter_mut().skip(e) {
             ins.membership = Membership::Absent;
         }
+
+        // Prefill/decode disaggregation: resolve the pools, flip the
+        // prefill engines into prompt-only mode, and expose the decode
+        // pool as the single routing stage (decode residency must
+        // never land on a prefill instance).  Colocated layouts build
+        // no `PdState` and skip every line here.
+        let pd_state = match cfg.policy.layout {
+            Layout::Disaggregated(spec) => {
+                assert!(
+                    cfg.forced_pipeline.is_none(),
+                    "pd layout does not compose with a forced pipeline"
+                );
+                assert!(cfg.churn.is_none(), "pd layout does not compose with --churn");
+                assert!(e >= 2, "pd layout needs at least 2 instances");
+                let (p, d) = spec.pools(e);
+                assert_eq!(p + d, e, "pd pools {p}/{d} must sum to the fleet size ({e})");
+                let prefill_pool: Vec<InstanceId> = (0..p).collect();
+                let decode_pool: Vec<InstanceId> = (p..e).collect();
+                for &i in &prefill_pool {
+                    instances[i].engine.set_prefill_only(true);
+                }
+                stages = vec![decode_pool.clone()];
+                Some(pd::PdState::new(spec, prefill_pool, decode_pool))
+            }
+            _ => None,
+        };
 
         // Resolve the churn schedule once: join boot latency is the
         // slot's resolved model slice streamed over the inter-node
@@ -916,13 +990,18 @@ impl Cluster {
                     .collect(),
             );
         }
-        let stats = RunStats {
+        let mut stats = RunStats {
             stages: stages.clone(),
             instance_gpus: fleet.gpu_names(),
             instance_tp: fleet.tp_degrees(),
             instance_capacity: caps.clone(),
             ..Default::default()
         };
+        if let Some(pd) = &pd_state {
+            // The reporting copy shows both pools; the routing copy
+            // (`Self::stages`) holds the decode pool only.
+            stats.stages = vec![pd.prefill_pool.clone(), pd.decode_pool.clone()];
+        }
 
         let mut cluster = Self {
             cfg,
@@ -963,6 +1042,7 @@ impl Cluster {
             booting: (e..e + pending_joins).collect(),
             autoscale_watermark: 0,
             admitting: (0..e).collect(),
+            pd: pd_state,
         };
         cluster.rebuild_ranges();
         cluster
@@ -1000,6 +1080,12 @@ impl Cluster {
     /// CascadeInfer per-iteration coordination: hand over outgrown
     /// sequences to the next stage, rebalance within the stage.
     fn cascade_post_step(&mut self, now: Time, i: InstanceId) {
+        // Disaggregated layouts have no inter-stage handover or
+        // intra-stage bid-ask: every transfer is a prefill->decode
+        // handoff driven by the PD pump.
+        if self.pd.is_some() {
+            return;
+        }
         let stage = self.stage_of[i];
         let (_, hi) = self.ranges[stage];
         let last_stage = stage + 1 >= self.stages.len();
@@ -1374,8 +1460,15 @@ impl Cluster {
         // (live migration). Move it now if it still exists.
         if let Some(seq) = self.instances[from].engine.extract(request) {
             if self.instances[to].admits() && self.instances[to].engine.inject(seq) {
-                self.stats.migrations += 1;
-                self.stats.migration_tokens += t.tokens_moved;
+                if self.pd.is_some() {
+                    // PD: the transfer was a completed-prefill KV
+                    // handoff, not a load-balance migration.
+                    self.stats.pd_handoffs += 1;
+                    self.stats.pd_handoff_tokens += t.tokens_moved;
+                } else {
+                    self.stats.migrations += 1;
+                    self.stats.migration_tokens += t.tokens_moved;
+                }
                 // Single-step kicks: more driver work follows at this
                 // same instant (the second kick, starvation promises),
                 // and under micro-stepping it runs before any later

@@ -1,0 +1,660 @@
+//! Prefill/decode disaggregation — [`Layout::Disaggregated`].
+//!
+//! Splits the fleet into a **prefill pool** and a **decode pool**
+//! (LAPS-style, "Length-Aware Prefill Scheduling"): prefill instances
+//! run prompt phases only ([`crate::engine::Engine::set_prefill_only`]
+//! parks each completed prefill with its KV resident), and the
+//! completed prefill's KV hands off to a decode instance through the
+//! *existing* [`crate::coordinator::migrate::MigrationManager`] cost
+//! model over the configured [`crate::gpu::Topology`] link — PD
+//! introduces no new transfer machinery, a handoff is a frozen-KV
+//! migration (decode rate 0, single-round copy).
+//!
+//! Three LAPS levers shape the prefill side:
+//!
+//! * **Dual prefill queues**: arrivals with `input_len <=`
+//!   [`PdSpec::short_boundary`] enter the short queue, the rest the
+//!   long queue; flushes drain the short queue *first*, so short
+//!   prompts never wait behind a long prefill that arrived earlier
+//!   (the §2 head-of-line criticism, solved structurally).
+//! * **Waiting window**: the first enqueue schedules one flush
+//!   [`PdSpec::window_us`] later; everything accumulated by then is
+//!   grouped into batches of *similar-length* prompts (within 2x of
+//!   each other, capped at the engine's `max_batched_tokens`) and each
+//!   batch lands on the least-loaded prefill instance as one unit —
+//!   chunked-prefill batches stay homogeneous instead of mixing a 16K
+//!   prompt into a batch of 100-token prompts.  `window_us = 0`
+//!   degenerates to flush-on-arrival.
+//! * **Dynamic re-allocation**: a periodic controller compares
+//!   per-instance prefill backlog (queued prompt tokens + prefill-pool
+//!   load) against decode backlog and, on a *sustained* (3-tick) 2x
+//!   imbalance, moves one idle instance between the pools — toggling
+//!   its prefill-only flag and resyncing the stage membership lists,
+//!   the same structural path the elastic-membership re-plan uses.
+//!   Gated off with `balance=off`.
+//!
+//! Admission mirrors the colocated reject-or-reroute contract per
+//! pool: an arrival is rejected only when *no* prefill instance can
+//! ever hold its prompt or *no* decode instance can ever hold its
+//! (predicted) final length, with the under-prediction escalation
+//! counted in [`super::RunStats::predict_escalations`] exactly like
+//! the colocated path.
+//!
+//! **Bit-identity invariant**: every PD hook is gated on
+//! `Cluster::pd.is_some()`.  Colocated layouts construct no `PdState`,
+//! schedule no PD event, and leave every engine's prefill-only flag
+//! false, so all registry schedulers and predictor families remain
+//! fingerprint-bit-identical to the pre-PD tree —
+//! `tests/pd_layout.rs` pins it.
+
+use std::collections::VecDeque;
+
+use crate::workload::Request;
+use crate::{InstanceId, RequestId, Time, Tokens};
+
+use super::driver::Event;
+use super::router::effective_wait;
+use super::Cluster;
+
+/// Periodic pool re-allocation check interval (seconds).
+pub(super) const PD_REBALANCE_INTERVAL: Time = 1.0;
+/// Consecutive imbalanced rebalance ticks before an instance moves.
+const PD_REBALANCE_STREAK: i32 = 3;
+/// Per-instance backlog ratio that counts as imbalanced.
+const PD_REBALANCE_RATIO: f64 = 2.0;
+/// Retry delay after a handoff could not start (no dest slot / at the
+/// migration concurrency cap).
+const PD_PUMP_RETRY: Time = 0.05;
+
+/// Parameters of a prefill/decode-disaggregated layout — the payload
+/// of [`super::Layout::Disaggregated`].
+///
+/// Grammar (the `--layout` flag and the `custom:layout=` axis):
+/// `pd[:P/D[:BOUNDARY[:WINDOW_US]]]` — bare `pd` auto-splits the
+/// fleet; explicit pools must sum to the instance count.  All-integer
+/// fields keep `Layout` `Copy + Eq`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PdSpec {
+    /// Prefill-pool size; 0 (with `decode` 0) = auto-split.
+    pub prefill: usize,
+    /// Decode-pool size; 0 (with `prefill` 0) = auto-split.
+    pub decode: usize,
+    /// Prompts at or below this length enter the short prefill queue.
+    pub short_boundary: Tokens,
+    /// Waiting-window length in microseconds (0 = flush on arrival).
+    pub window_us: u64,
+}
+
+impl PdSpec {
+    /// Default short/long queue boundary (prompt tokens).
+    pub const DEFAULT_SHORT_BOUNDARY: Tokens = 512;
+    /// Default waiting window (20 ms).
+    pub const DEFAULT_WINDOW_US: u64 = 20_000;
+    /// The layout-axis grammar, quoted in parse errors and `USAGE`.
+    pub const GRAMMAR: &'static str = "pd[:P/D[:BOUNDARY[:WINDOW_US]]]";
+
+    /// Auto-split spec: pools resolved from the fleet size at
+    /// construction, default boundary and window.
+    pub fn auto() -> Self {
+        Self {
+            prefill: 0,
+            decode: 0,
+            short_boundary: Self::DEFAULT_SHORT_BOUNDARY,
+            window_us: Self::DEFAULT_WINDOW_US,
+        }
+    }
+
+    /// Parse a `pd[:P/D[:BOUNDARY[:WINDOW_US]]]` layout value.
+    pub fn parse(value: &str) -> Result<Self, String> {
+        if value == "pd" {
+            return Ok(Self::auto());
+        }
+        let Some(body) = value.strip_prefix("pd:") else {
+            return Err(format!("PD layout `{value}` (grammar: {})", Self::GRAMMAR));
+        };
+        let mut spec = Self::auto();
+        let mut parts = body.split(':');
+        let pools = parts.next().unwrap_or_default();
+        let Some((p, d)) = pools.split_once('/') else {
+            return Err(format!(
+                "PD pools `{pools}` must be P/D, e.g. pd:2/2 (grammar: {})",
+                Self::GRAMMAR
+            ));
+        };
+        spec.prefill = p
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| format!("PD prefill pool `{p}` must be a positive integer"))?;
+        spec.decode = d
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| format!("PD decode pool `{d}` must be a positive integer"))?;
+        if let Some(b) = parts.next() {
+            spec.short_boundary = b
+                .parse::<Tokens>()
+                .ok()
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| format!("PD short boundary `{b}` must be a positive integer"))?;
+        }
+        if let Some(w) = parts.next() {
+            spec.window_us = w
+                .parse::<u64>()
+                .ok()
+                .ok_or_else(|| format!("PD window `{w}` must be an integer (microseconds)"))?;
+        }
+        if parts.next().is_some() {
+            return Err(format!("trailing segments in `{value}` (grammar: {})", Self::GRAMMAR));
+        }
+        Ok(spec)
+    }
+
+    /// Canonical serialization — parses back to the identical spec, so
+    /// `custom:layout=<name()>` round-trips.  Defaulted trailing
+    /// segments are omitted.
+    pub fn name(&self) -> String {
+        let mut s = String::from("pd");
+        if self.prefill != 0 || self.decode != 0 {
+            s.push_str(&format!(":{}/{}", self.prefill, self.decode));
+            if self.short_boundary != Self::DEFAULT_SHORT_BOUNDARY
+                || self.window_us != Self::DEFAULT_WINDOW_US
+            {
+                s.push_str(&format!(":{}", self.short_boundary));
+                if self.window_us != Self::DEFAULT_WINDOW_US {
+                    s.push_str(&format!(":{}", self.window_us));
+                }
+            }
+        }
+        s
+    }
+
+    /// Waiting window in seconds.
+    pub fn window(&self) -> Time {
+        self.window_us as f64 * 1e-6
+    }
+
+    /// Resolve `(prefill, decode)` pool sizes over an `e`-instance
+    /// fleet.  Auto splits ~1/4 of the fleet (at least one instance)
+    /// into the prefill pool: prefills are compute-bound and fast, the
+    /// KV-bound decode residency dominates.
+    pub fn pools(&self, e: usize) -> (usize, usize) {
+        if self.prefill == 0 && self.decode == 0 {
+            let p = (e / 4).max(1);
+            (p, e - p)
+        } else {
+            (self.prefill, self.decode)
+        }
+    }
+}
+
+/// Runtime state of a disaggregated cluster — present iff the policy
+/// layout is [`super::Layout::Disaggregated`].
+#[derive(Debug, Clone)]
+pub(super) struct PdState {
+    pub(super) spec: PdSpec,
+    /// Ascending instance ids running prompt phases only.
+    pub(super) prefill_pool: Vec<InstanceId>,
+    /// Ascending instance ids serving decode residency.
+    pub(super) decode_pool: Vec<InstanceId>,
+    /// Short-prompt prefill queue (drained first on flush).
+    short_q: VecDeque<Request>,
+    /// Long-prompt prefill queue.
+    long_q: VecDeque<Request>,
+    /// One `PdFlush` outstanding at a time.
+    flush_scheduled: bool,
+    /// One `PdPump` retry outstanding at a time.
+    pump_scheduled: bool,
+    /// Signed imbalance streak: positive ticks = prefill-starved,
+    /// negative = decode-starved; an instance moves at +/-
+    /// [`PD_REBALANCE_STREAK`].
+    streak: i32,
+}
+
+impl PdState {
+    pub(super) fn new(
+        spec: PdSpec,
+        prefill_pool: Vec<InstanceId>,
+        decode_pool: Vec<InstanceId>,
+    ) -> Self {
+        debug_assert!(!prefill_pool.is_empty() && !decode_pool.is_empty());
+        Self {
+            spec,
+            prefill_pool,
+            decode_pool,
+            short_q: VecDeque::new(),
+            long_q: VecDeque::new(),
+            flush_scheduled: false,
+            pump_scheduled: false,
+            streak: 0,
+        }
+    }
+}
+
+impl Cluster {
+    /// PD admission: feasibility-check both pools, then park the
+    /// arrival in the short or long prefill queue under the waiting
+    /// window.  Called from `on_arrival` (the arena entry already
+    /// exists) — the dispatch router is bypassed entirely.
+    pub(super) fn pd_on_arrival(&mut self, now: Time, req: Request) {
+        let pd = self.pd.as_ref().expect("pd_on_arrival requires a PD layout");
+        let holds = |i: InstanceId, len: Tokens| self.instances[i].engine.can_ever_hold(len);
+        // Prompt-side feasibility: prefill holds the prompt KV plus the
+        // first emitted token.
+        let prompt_len = req.input_len + 1;
+        let prefill_target = pd.prefill_pool[0];
+        let prefill_ok = pd.prefill_pool.iter().any(|&i| holds(i, prompt_len));
+        // Decode-side feasibility mirrors the colocated admission
+        // contract: the predicted final must fit some decode pool, and
+        // an under-prediction whose true final never can escalates to
+        // a counted rejection instead of wedging a decode instance.
+        // Floored at the prompt length the handoff actually carries,
+        // so a rank-only predictor can never admit a request the pump
+        // could not place.
+        let admit_len = self.predictor.admit_len(&req).max(prompt_len);
+        let decode_target = pd.decode_pool[0];
+        let admit_ok = pd.decode_pool.iter().any(|&i| holds(i, admit_len));
+        let final_len = req.final_len();
+        let escalated = admit_len < final_len;
+        let final_ok = !escalated || pd.decode_pool.iter().any(|&i| holds(i, final_len));
+        let short = req.input_len <= pd.spec.short_boundary;
+        if !prefill_ok {
+            self.reject(prefill_target, req.id, prompt_len);
+            return;
+        }
+        if !admit_ok {
+            self.reject(decode_target, req.id, admit_len);
+            return;
+        }
+        if !final_ok {
+            self.stats.predict_escalations += 1;
+            self.reject(decode_target, req.id, final_len);
+            return;
+        }
+        // Dual queues: short prompts drain first at the next flush.
+        let flush_at = {
+            let pd = self.pd.as_mut().expect("checked above");
+            if short {
+                pd.short_q.push_back(req);
+            } else {
+                pd.long_q.push_back(req);
+            }
+            if pd.spec.window_us == 0 {
+                None // degenerate window: flush inline below
+            } else if !pd.flush_scheduled {
+                pd.flush_scheduled = true;
+                Some(now + pd.spec.window())
+            } else {
+                return; // a flush is already pending; ride it
+            }
+        };
+        match flush_at {
+            None => self.on_pd_flush(now),
+            Some(at) => self.events.schedule(at, Event::PdFlush),
+        }
+    }
+
+    /// Waiting-window expiry: drain the short queue first, then the
+    /// long queue, grouping runs of similar-length prompts (within 2x
+    /// of each other, capped at the engine's batched-token budget)
+    /// onto the least-loaded feasible prefill instance as one batch.
+    pub(super) fn on_pd_flush(&mut self, now: Time) {
+        let batch: Vec<Request> = {
+            let pd = self.pd.as_mut().expect("PdFlush fires only under PD layouts");
+            pd.flush_scheduled = false;
+            let mut v = Vec::with_capacity(pd.short_q.len() + pd.long_q.len());
+            v.extend(pd.short_q.drain(..));
+            v.extend(pd.long_q.drain(..));
+            v
+        };
+        if batch.is_empty() {
+            return;
+        }
+        let cap = self.cfg.engine.max_batched_tokens;
+        let fallback = self.pd.as_ref().expect("PD layout").prefill_pool[0];
+        let mut touched: Vec<InstanceId> = Vec::new();
+        let mut k = 0;
+        while k < batch.len() {
+            // Extend the group while lengths stay within 2x of each
+            // other and the total prompt tokens fit one batch budget.
+            let (mut gmin, mut gmax) = (batch[k].input_len, batch[k].input_len);
+            let mut tokens = batch[k].input_len;
+            let mut j = k + 1;
+            while j < batch.len() {
+                let l = batch[j].input_len;
+                let (nmin, nmax) = (gmin.min(l), gmax.max(l));
+                if nmax > nmin.saturating_mul(2) || tokens + l > cap {
+                    break;
+                }
+                (gmin, gmax) = (nmin, nmax);
+                tokens += l;
+                j += 1;
+            }
+            match self.pd_prefill_target(gmax + 1) {
+                Some(t) => {
+                    for r in &batch[k..j] {
+                        self.instances[t].engine.submit(*r);
+                    }
+                    if !touched.contains(&t) {
+                        touched.push(t);
+                    }
+                }
+                None => {
+                    // Heterogeneous prefill pools: the group's largest
+                    // member fits nowhere common — place each request
+                    // on its own feasible instance (admission verified
+                    // one existed; a re-allocation since then may have
+                    // removed it, in which case reject, counted).
+                    for r in &batch[k..j] {
+                        match self.pd_prefill_target(r.input_len + 1) {
+                            Some(t) => {
+                                self.instances[t].engine.submit(*r);
+                                if !touched.contains(&t) {
+                                    touched.push(t);
+                                }
+                            }
+                            None => self.reject(fallback, r.id, r.input_len + 1),
+                        }
+                    }
+                }
+            }
+            k = j;
+        }
+        for t in touched {
+            self.kick(now, t);
+        }
+    }
+
+    /// Least-loaded admitting prefill instance whose KV pool can ever
+    /// hold `len`; first index wins ties.
+    fn pd_prefill_target(&self, len: Tokens) -> Option<InstanceId> {
+        let pd = self.pd.as_ref().expect("PD layout");
+        let mut best: Option<(f64, InstanceId)> = None;
+        for &i in &pd.prefill_pool {
+            let ins = &self.instances[i];
+            if !ins.admits() || !ins.engine.can_ever_hold(len) {
+                continue;
+            }
+            let w = effective_wait(ins, &self.migration);
+            if best.is_none_or(|(bw, _)| w < bw) {
+                best = Some((w, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Least-loaded admitting decode instance whose KV pool can ever
+    /// hold `len` (inbound handoffs counted, herd-effect guard); first
+    /// index wins ties.
+    fn pd_decode_target(&self, len: Tokens) -> Option<InstanceId> {
+        let pd = self.pd.as_ref().expect("PD layout");
+        let mut best: Option<(f64, InstanceId)> = None;
+        for &i in &pd.decode_pool {
+            let ins = &self.instances[i];
+            if !ins.admits() || !ins.engine.can_ever_hold(len) {
+                continue;
+            }
+            let w = effective_wait(ins, &self.migration);
+            if best.is_none_or(|(bw, _)| w < bw) {
+                best = Some((w, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Handoff pump: start a KV transfer for every parked completed
+    /// prefill not already in flight.  Runs after every dispatched
+    /// event under PD (engine progress only happens inside event
+    /// handlers, so no parked sequence can be stranded); a start that
+    /// fails (no dest slot, migration concurrency cap) schedules one
+    /// `PdPump` retry so the pump re-fires even if the queue would
+    /// otherwise go quiet.
+    pub(super) fn pd_pump(&mut self, now: Time) {
+        let jobs: Vec<(InstanceId, RequestId, Tokens, Tokens)> = {
+            let pd = self.pd.as_ref().expect("pd_pump requires a PD layout");
+            let mut v = Vec::new();
+            for &i in &pd.prefill_pool {
+                for seq in self.instances[i].engine.handoff_ready() {
+                    let rid = seq.req.id;
+                    if self.in_flight.contains(&rid) || self.migration.is_migrating(rid) {
+                        continue;
+                    }
+                    // The decode target must eventually hold the
+                    // sequence's admission length, not just today's KV
+                    // — the same floor admission checked, so a
+                    // feasible target always exists once the pool
+                    // drains.
+                    let needed = self.predictor.admit_len(&seq.req).max(seq.current_len());
+                    v.push((i, rid, seq.current_len(), needed));
+                }
+            }
+            v
+        };
+        if jobs.is_empty() {
+            return;
+        }
+        let mut stalled = false;
+        for (from, rid, len, needed) in jobs {
+            let Some(to) = self.pd_decode_target(needed) else {
+                stalled = true;
+                continue;
+            };
+            let link = self.topology.link_between(from, to);
+            let dest_free = self.instances[to].engine.kv().can_allocate(len + 64);
+            // Frozen KV: the parked sequence no longer decodes on the
+            // prefill instance, so the transfer is a single-round copy
+            // (decode rate 0) priced by the existing migration model.
+            let started = self.migration.try_start(now, rid, from, to, len, link, 0.0, dest_free);
+            if let Some(t) = started {
+                let finish_at = t.finish_at;
+                self.in_flight.insert(rid);
+                let done = Event::MigrationDone { request: rid, from, to };
+                self.events.schedule(finish_at, done);
+            } else {
+                stalled = true;
+            }
+        }
+        if stalled {
+            let pd = self.pd.as_mut().expect("PD layout");
+            if !pd.pump_scheduled {
+                pd.pump_scheduled = true;
+                self.events.schedule(now + PD_PUMP_RETRY, Event::PdPump);
+            }
+        }
+    }
+
+    /// `PdPump` retry fired: clear the outstanding-retry gate (the
+    /// post-dispatch pump does the actual work).
+    pub(super) fn on_pd_pump_timer(&mut self) {
+        if let Some(pd) = self.pd.as_mut() {
+            pd.pump_scheduled = false;
+        }
+    }
+
+    /// Periodic dynamic re-allocation: on a sustained per-instance
+    /// backlog imbalance between the pools, move one *idle* instance
+    /// across — toggling its prefill-only flag and resyncing the stage
+    /// membership lists (the structural membership path).
+    pub(super) fn on_pd_rebalance(&mut self, now: Time) {
+        self.events.schedule(now + PD_REBALANCE_INTERVAL, Event::PdRebalance);
+        let (p_avg, d_avg) = {
+            let pd = self.pd.as_ref().expect("PdRebalance fires only under PD layouts");
+            let queued: Tokens = pd.short_q.iter().chain(&pd.long_q).map(|r| r.input_len).sum();
+            let p_load: Tokens =
+                pd.prefill_pool.iter().map(|&i| self.instances[i].engine.token_load()).sum();
+            let d_load: Tokens = pd
+                .decode_pool
+                .iter()
+                .map(|&i| {
+                    self.instances[i].engine.token_load() + self.migration.inbound_tokens(i)
+                })
+                .sum();
+            (
+                (queued + p_load) as f64 / pd.prefill_pool.len().max(1) as f64,
+                d_load as f64 / pd.decode_pool.len().max(1) as f64,
+            )
+        };
+        {
+            let pd = self.pd.as_mut().expect("PD layout");
+            // A floor of one token's worth of backlog keeps near-idle
+            // noise from accumulating a streak.
+            if p_avg > PD_REBALANCE_RATIO * d_avg && p_avg >= 1.0 {
+                pd.streak = pd.streak.max(0) + 1;
+            } else if d_avg > PD_REBALANCE_RATIO * p_avg && d_avg >= 1.0 {
+                pd.streak = pd.streak.min(0) - 1;
+            } else {
+                pd.streak = 0;
+            }
+        }
+        let streak = self.pd.as_ref().expect("PD layout").streak;
+        if streak >= PD_REBALANCE_STREAK {
+            if let Some(donor) = self.pd_idle_decode_donor() {
+                self.pd_move_instance(donor, true);
+            }
+        } else if streak <= -PD_REBALANCE_STREAK {
+            if let Some(donor) = self.pd_idle_prefill_donor() {
+                self.pd_move_instance(donor, false);
+            }
+        }
+    }
+
+    /// Highest-id idle decode instance safe to donate to the prefill
+    /// pool: the remaining decode pool must keep an instance with at
+    /// least the donor's KV capacity, so no admitted sequence loses
+    /// its only feasible decode home (trivially true on homogeneous
+    /// pools).
+    fn pd_idle_decode_donor(&self) -> Option<InstanceId> {
+        let pd = self.pd.as_ref().expect("PD layout");
+        if pd.decode_pool.len() <= 1 {
+            return None;
+        }
+        pd.decode_pool.iter().rev().copied().find(|&i| {
+            if self.instances[i].engine.has_work()
+                || !self.migration.transfers_touching(i).is_empty()
+            {
+                return false;
+            }
+            let cap = self.instances[i].engine.kv().capacity_tokens();
+            pd.decode_pool
+                .iter()
+                .filter(|&&x| x != i)
+                .any(|&x| self.instances[x].engine.kv().capacity_tokens() >= cap)
+        })
+    }
+
+    /// Highest-id idle prefill instance to donate to the decode pool
+    /// (same remaining-capacity guard for the prompt side).
+    fn pd_idle_prefill_donor(&self) -> Option<InstanceId> {
+        let pd = self.pd.as_ref().expect("PD layout");
+        if pd.prefill_pool.len() <= 1 {
+            return None;
+        }
+        pd.prefill_pool.iter().rev().copied().find(|&i| {
+            if self.instances[i].engine.has_work()
+                || !self.migration.transfers_touching(i).is_empty()
+            {
+                return false;
+            }
+            let cap = self.instances[i].engine.kv().capacity_tokens();
+            pd.prefill_pool
+                .iter()
+                .filter(|&&x| x != i)
+                .any(|&x| self.instances[x].engine.kv().capacity_tokens() >= cap)
+        })
+    }
+
+    /// Move instance `i` between the pools (`to_prefill` names the
+    /// destination), toggle its engine mode, and resync the stage
+    /// membership lists the rest of the cluster observes.
+    fn pd_move_instance(&mut self, i: InstanceId, to_prefill: bool) {
+        {
+            let pd = self.pd.as_mut().expect("PD layout");
+            if to_prefill {
+                pd.decode_pool.retain(|&x| x != i);
+                pd.prefill_pool.push(i);
+                pd.prefill_pool.sort_unstable();
+            } else {
+                pd.prefill_pool.retain(|&x| x != i);
+                pd.decode_pool.push(i);
+                pd.decode_pool.sort_unstable();
+            }
+            pd.streak = 0;
+        }
+        self.instances[i].engine.set_prefill_only(to_prefill);
+        self.stats.pd_reallocations += 1;
+        self.pd_sync_stages();
+    }
+
+    /// Mirror the PD pools into the stage structures: the routing /
+    /// churn-facing `stages` holds the decode pool only (decode work
+    /// must never land on a prefill instance), while the reporting
+    /// copy shows both pools.
+    pub(super) fn pd_sync_stages(&mut self) {
+        let pd = self.pd.as_ref().expect("PD layout");
+        self.stages = vec![pd.decode_pool.clone()];
+        self.stats.stages = vec![pd.prefill_pool.clone(), pd.decode_pool.clone()];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_defaults_and_full_grammar() {
+        assert_eq!(PdSpec::parse("pd").unwrap(), PdSpec::auto());
+        let s = PdSpec::parse("pd:2/2").unwrap();
+        assert_eq!((s.prefill, s.decode), (2, 2));
+        assert_eq!(s.short_boundary, PdSpec::DEFAULT_SHORT_BOUNDARY);
+        assert_eq!(s.window_us, PdSpec::DEFAULT_WINDOW_US);
+        let s = PdSpec::parse("pd:3/1:256:5000").unwrap();
+        assert_eq!((s.prefill, s.decode, s.short_boundary, s.window_us), (3, 1, 256, 5000));
+        // Window may be zero (flush-on-arrival); boundary may not.
+        assert_eq!(PdSpec::parse("pd:2/2:64:0").unwrap().window_us, 0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        let bad = [
+            "pd:",
+            "pd:2",
+            "pd:x",
+            "pd:0/4",
+            "pd:4/0",
+            "pd:2/2:0",
+            "pd:2/2:256:5000:extra",
+            "pancake",
+        ];
+        for case in bad {
+            assert!(PdSpec::parse(case).is_err(), "`{case}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn name_round_trips() {
+        for s in ["pd", "pd:2/2", "pd:3/1:256", "pd:3/1:256:5000", "pd:2/2:64:0"] {
+            let spec = PdSpec::parse(s).unwrap();
+            assert_eq!(spec.name(), s, "canonical form");
+            assert_eq!(PdSpec::parse(&spec.name()).unwrap(), spec);
+        }
+        // Defaulted trailing segments serialize away.
+        let mut spec = PdSpec::parse("pd:2/2").unwrap();
+        assert_eq!(spec.name(), "pd:2/2");
+        spec.short_boundary = 256;
+        assert_eq!(spec.name(), "pd:2/2:256");
+    }
+
+    #[test]
+    fn pools_auto_split() {
+        assert_eq!(PdSpec::auto().pools(2), (1, 1));
+        assert_eq!(PdSpec::auto().pools(4), (1, 3));
+        assert_eq!(PdSpec::auto().pools(8), (2, 6));
+        assert_eq!(PdSpec::parse("pd:3/1").unwrap().pools(4), (3, 1));
+    }
+
+    #[test]
+    fn window_converts_to_seconds() {
+        assert!((PdSpec::auto().window() - 0.02).abs() < 1e-12);
+        assert_eq!(PdSpec::parse("pd:2/2:64:0").unwrap().window(), 0.0);
+    }
+}

@@ -28,6 +28,7 @@
 //!    survives for existing call sites and converts losslessly via
 //!    `From<SchedulerKind> for PolicySpec`.
 
+use super::pd::PdSpec;
 use crate::predict::PredictorSpec;
 
 use std::fmt;
@@ -41,6 +42,26 @@ pub enum Layout {
     Chain,
     /// All instances in a single stage ("no-pipeline").
     Flat,
+    /// Prefill/decode disaggregation: the fleet splits into a prefill
+    /// pool and a decode pool, completed prefills hand their KV off to
+    /// a decode instance through the migration cost model (see
+    /// [`super::pd`]).
+    Disaggregated(PdSpec),
+}
+
+/// Parse a layout axis value — the `--layout` flag and the
+/// `custom:layout=` axis share this grammar.
+pub fn parse_layout(value: &str) -> Result<Layout, String> {
+    match value {
+        "planned" => Ok(Layout::Planned),
+        "chain" => Ok(Layout::Chain),
+        "flat" => Ok(Layout::Flat),
+        v if v == "pd" || v.starts_with("pd:") => Ok(Layout::Disaggregated(PdSpec::parse(v)?)),
+        _ => Err(format!(
+            "unknown layout `{value}`; valid: planned|chain|flat|{}",
+            PdSpec::GRAMMAR
+        )),
+    }
 }
 
 /// Boundary refinement policy (Fig. 15).
@@ -277,12 +298,9 @@ impl PolicySpec {
             };
             match key {
                 "layout" => {
-                    spec.layout = match value {
-                        "planned" => Layout::Planned,
-                        "chain" => Layout::Chain,
-                        "flat" => Layout::Flat,
-                        _ => return Err(bad("planned|chain|flat")),
-                    }
+                    // `pd:2/2`-style values survive the comma split
+                    // intact — PD parameters separate with `:` and `/`.
+                    spec.layout = parse_layout(value).map_err(PolicyError)?;
                 }
                 "refine" => {
                     spec.refine = match value {
@@ -344,9 +362,10 @@ impl PolicySpec {
     /// Canonical `custom:` serialization of this spec's axes.
     pub fn custom_name(&self) -> String {
         let layout = match self.layout {
-            Layout::Planned => "planned",
-            Layout::Chain => "chain",
-            Layout::Flat => "flat",
+            Layout::Planned => "planned".to_string(),
+            Layout::Chain => "chain".to_string(),
+            Layout::Flat => "flat".to_string(),
+            Layout::Disaggregated(pd) => pd.name(),
         };
         let refine = match self.refine {
             RefinePolicy::Adaptive => "adaptive",
@@ -625,11 +644,53 @@ mod tests {
     }
 
     #[test]
+    fn pd_layout_axis_parses_and_round_trips() {
+        // Bare `pd` = auto split, default boundary/window.
+        let spec = PolicySpec::resolve("custom:layout=pd").unwrap();
+        assert_eq!(spec.layout, Layout::Disaggregated(PdSpec::auto()));
+        assert_eq!(PolicySpec::resolve(&spec.name).unwrap(), spec);
+        // Explicit pools: the `:`/`/` separators survive the comma
+        // split exactly like `predictor=noisy:0.5`.
+        let spec = PolicySpec::resolve("custom:layout=pd:2/2,balance=off").unwrap();
+        match spec.layout {
+            Layout::Disaggregated(pd) => {
+                assert_eq!((pd.prefill, pd.decode), (2, 2));
+                assert_eq!(pd.short_boundary, PdSpec::DEFAULT_SHORT_BOUNDARY);
+                assert_eq!(pd.window_us, PdSpec::DEFAULT_WINDOW_US);
+            }
+            other => panic!("expected Disaggregated, got {other:?}"),
+        }
+        assert!(spec.name.contains("layout=pd:2/2"), "{}", spec.name);
+        assert_eq!(PolicySpec::resolve(&spec.name).unwrap(), spec);
+        // Full grammar: pools, short/long boundary, waiting window.
+        let spec = PolicySpec::resolve("custom:layout=pd:3/1:256:5000").unwrap();
+        match spec.layout {
+            Layout::Disaggregated(pd) => {
+                assert_eq!((pd.prefill, pd.decode), (3, 1));
+                assert_eq!(pd.short_boundary, 256);
+                assert_eq!(pd.window_us, 5000);
+            }
+            other => panic!("expected Disaggregated, got {other:?}"),
+        }
+        assert_eq!(PolicySpec::resolve(&spec.name).unwrap(), spec);
+        // The `--layout` flag shares the same parser.
+        assert_eq!(parse_layout("flat").unwrap(), Layout::Flat);
+        assert_eq!(parse_layout("pd").unwrap(), Layout::Disaggregated(PdSpec::auto()));
+        assert!(parse_layout("pancake").is_err());
+    }
+
+    #[test]
     fn malformed_custom_specs_are_rejected() {
         for bad in [
             "custom:",
             "custom:layout",
             "custom:layout=weird",
+            "custom:layout=pd:0/4",
+            "custom:layout=pd:4/0",
+            "custom:layout=pd:x",
+            "custom:layout=pd:2",
+            "custom:layout=pd:2/2:0",
+            "custom:layout=pd:2/2:256:5000:extra",
             "custom:refine=speedy",
             "custom:balance=maybe",
             "custom:dispatch=psychic",

@@ -22,7 +22,7 @@ use crate::coordinator::MigrationManager;
 use crate::predict::LengthPredictor;
 use crate::sim::RequestArena;
 use crate::workload::Request;
-use crate::{InstanceId, Time, Tokens};
+use crate::{InstanceId, RequestId, Time, Tokens};
 
 use super::state::InstanceState;
 use super::Cluster;
@@ -33,7 +33,7 @@ use super::Cluster;
 /// (homogeneous fleets) this equals the raw integer load as f64, so
 /// orderings — including ties — match the legacy u64 comparison
 /// bit for bit.
-fn effective_wait(ins: &InstanceState, migration: &MigrationManager) -> f64 {
+pub(super) fn effective_wait(ins: &InstanceState, migration: &MigrationManager) -> f64 {
     (ins.engine.token_load() + migration.inbound_tokens(ins.id)) as f64 / ins.capacity
 }
 
@@ -89,13 +89,24 @@ pub fn stage_for_len(ranges: &[(Tokens, Tokens)], len: Tokens) -> usize {
         ranges.windows(2).all(|w| w[0].1 <= w[1].1),
         "stage ranges must have ascending upper bounds: {ranges:?}"
     );
+    // An empty range list (momentary under re-planning/churn) maps to
+    // stage 0 instead of underflowing `len() - 1` on usize.
+    if ranges.is_empty() {
+        return 0;
+    }
     ranges.partition_point(|&(_, hi)| hi <= len).min(ranges.len() - 1)
 }
 
-/// Stateful router: dispatch policy + the shared round-robin counter.
+/// Stateful router: dispatch policy + the shared round-robin counter,
+/// plus a scratch buffer of per-candidate wait estimates so each
+/// candidate's wait is computed exactly once per arrival (a `min_by`
+/// over [`wait_estimate`] re-evaluates `predicted_wait` — O(resident
+/// sequences) — roughly twice per comparison under absolute
+/// predictors).
 #[derive(Debug, Clone, Default)]
 pub struct Router {
     rr_counter: usize,
+    wait_scratch: Vec<f64>,
 }
 
 impl Router {
@@ -108,6 +119,34 @@ impl Router {
         let v = self.rr_counter;
         self.rr_counter += 1;
         v
+    }
+
+    /// Member with the least [`wait_estimate`], each candidate priced
+    /// exactly once into the scratch buffer.  First index wins ties —
+    /// the same order `Iterator::min_by` returns ("if several elements
+    /// are equally minimum, the first element is returned"), so the
+    /// precompute is bit-identical to the former per-comparison scan.
+    #[allow(clippy::too_many_arguments)]
+    fn least_wait(
+        &mut self,
+        members: &[InstanceId],
+        instances: &[InstanceState],
+        migration: &MigrationManager,
+        predictor: &LengthPredictor,
+        arena: &RequestArena,
+    ) -> InstanceId {
+        debug_assert!(!members.is_empty(), "least_wait needs candidates");
+        self.wait_scratch.clear();
+        self.wait_scratch.extend(
+            members.iter().map(|&i| wait_estimate(&instances[i], migration, predictor, arena)),
+        );
+        let mut best = 0;
+        for (k, w) in self.wait_scratch.iter().enumerate().skip(1) {
+            if *w < self.wait_scratch[best] {
+                best = k;
+            }
+        }
+        members[best]
     }
 
     /// Pick the target instance for an arrival, per the spec's
@@ -156,13 +195,7 @@ impl Router {
                 // deterministic.  Short requests never queue behind a
                 // long backlog when an effectively-emptier instance
                 // exists.
-                live.iter()
-                    .copied()
-                    .min_by(|&a, &b| {
-                        wait_estimate(&instances[a], migration, predictor, arena)
-                            .total_cmp(&wait_estimate(&instances[b], migration, predictor, arena))
-                    })
-                    .expect("cluster has admitting instances")
+                self.least_wait(live, instances, migration, predictor, arena)
             }
             DispatchPolicy::StageRouted => {
                 // CascadeInfer: earliest stage covering the routing
@@ -192,18 +225,7 @@ impl Router {
                     // capacity normalization keeps a fast member
                     // preferred until it carries its fair (larger)
                     // share.
-                    *members
-                        .iter()
-                        .min_by(|&&a, &&b| {
-                            wait_estimate(&instances[a], migration, predictor, arena)
-                                .total_cmp(&wait_estimate(
-                                    &instances[b],
-                                    migration,
-                                    predictor,
-                                    arena,
-                                ))
-                        })
-                        .expect("stage has members")
+                    self.least_wait(members, instances, migration, predictor, arena)
                 }
             }
         }
@@ -244,7 +266,13 @@ impl Cluster {
         // reads the SoA columns instead of re-hashing.
         let predicted = self.predictor.predicted_final(&req);
         self.arena.intern(&req, predicted);
-        let target = self.router.route(
+        // Disaggregated layouts bypass the dispatch router: arrivals
+        // enter the short/long prefill queues instead (see `super::pd`).
+        if self.pd.is_some() {
+            self.pd_on_arrival(now, req);
+            return;
+        }
+        let mut target = self.router.route(
             &self.cfg.policy,
             &req,
             &self.stages,
@@ -257,26 +285,67 @@ impl Cluster {
         );
         let admit_len = self.predictor.admit_len(&req);
         if !self.instances[target].engine.can_ever_hold(admit_len) {
-            self.reject(target, req.id, admit_len);
-            return;
+            // Reject-or-reroute: the routed pool can never hold the
+            // request, but a sibling with a larger pool (mixed-TP
+            // fleets) may.  Only fleets where the routed pool would
+            // have rejected reach this scan, so uniformly-sized fleets
+            // behave bit-identically to the reject-only path.
+            match self.admit_reroute(admit_len) {
+                Some(alt) => {
+                    self.stats.admit_reroutes += 1;
+                    target = alt;
+                }
+                None => {
+                    self.reject(target, req.id, admit_len);
+                    return;
+                }
+            }
         }
         // Escalation: the predicted length fit, but the true final
         // never can.  Under `oracle` `admit_len == final_len`, so this
         // branch is unreachable and admission is exactly the legacy
-        // single check.
+        // single check.  The true final gets the same reroute chance
+        // before the escalation is recorded as a rejection.
         let final_len = req.final_len();
         if admit_len < final_len && !self.instances[target].engine.can_ever_hold(final_len) {
-            self.stats.predict_escalations += 1;
-            self.reject(target, req.id, final_len);
-            return;
+            match self.admit_reroute(final_len) {
+                Some(alt) => {
+                    self.stats.admit_reroutes += 1;
+                    target = alt;
+                }
+                None => {
+                    self.stats.predict_escalations += 1;
+                    self.reject(target, req.id, final_len);
+                    return;
+                }
+            }
         }
         self.instances[target].engine.submit(req);
         self.kick(now, target);
     }
 
+    /// Least-loaded *admitting* instance whose KV pool can ever hold
+    /// `len` — the reroute fallback consulted only after the routed
+    /// target's own pool has refused.  Load is the capacity-normalized
+    /// observable wait ([`effective_wait`]); first index wins ties.
+    pub(super) fn admit_reroute(&self, len: Tokens) -> Option<InstanceId> {
+        let mut best: Option<(f64, InstanceId)> = None;
+        for &i in &self.admitting {
+            let ins = &self.instances[i];
+            if !ins.engine.can_ever_hold(len) {
+                continue;
+            }
+            let w = effective_wait(ins, &self.migration);
+            if best.is_none_or(|(bw, _)| w < bw) {
+                best = Some((w, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
     /// Record an admission rejection (shared by the predicted-length
     /// check and the under-prediction escalation path).
-    fn reject(&mut self, target: InstanceId, request: crate::RequestId, final_len: Tokens) {
+    pub(super) fn reject(&mut self, target: InstanceId, request: RequestId, final_len: Tokens) {
         // Rejection ends the request's arena lifetime (never submitted).
         self.arena.release(request);
         self.stats.rejected += 1;
@@ -288,5 +357,21 @@ impl Cluster {
                 pool_tokens: self.instances[target].engine.kv().capacity_tokens(),
             });
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::stage_for_len;
+
+    #[test]
+    fn stage_for_len_clamps_and_guards_empty() {
+        let ranges = [(0, 512), (512, 4096), (4096, 131_072)];
+        assert_eq!(stage_for_len(&ranges, 0), 0);
+        assert_eq!(stage_for_len(&ranges, 511), 0);
+        assert_eq!(stage_for_len(&ranges, 512), 1);
+        assert_eq!(stage_for_len(&ranges, 131_072), 2, "past the last hi clamps");
+        // An empty range list must not underflow `len() - 1`.
+        assert_eq!(stage_for_len(&[], 1024), 0);
     }
 }

@@ -248,6 +248,11 @@ pub struct ExperimentConfig {
     /// When set it overrides the predictor carried by the scheduler
     /// spec.
     pub predictor: Option<String>,
+    /// Optional stage layout override (see
+    /// [`crate::cluster::parse_layout`], e.g. `"pd:2/2"` for
+    /// prefill/decode disaggregation).  When set it overrides the
+    /// layout carried by the scheduler spec.
+    pub layout: Option<String>,
     /// Optional fault-injection / elasticity spec (see
     /// [`crate::cluster::ChurnSpec::parse`], e.g.
     /// `"spot:2.0@1,join:6.0"` or `"auto:1.0:2..8"`).
@@ -267,6 +272,7 @@ impl Default for ExperimentConfig {
             workload: "sharegpt".into(),
             fleet: None,
             predictor: None,
+            layout: None,
             churn: None,
         }
     }
@@ -290,6 +296,10 @@ impl ExperimentConfig {
                 .map(|s| s.to_string()),
             predictor: cfg
                 .get("experiment", "predictor")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string()),
+            layout: cfg
+                .get("experiment", "layout")
                 .and_then(|v| v.as_str())
                 .map(|s| s.to_string()),
             churn: cfg

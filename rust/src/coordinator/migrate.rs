@@ -53,6 +53,13 @@ pub fn live_migration_schedule(
     decode_tokens_per_s: f64,
 ) -> (Time, Tokens, Time) {
     let bw_tokens_per_s = link_bytes_per_s / kv_bytes_per_token.max(1.0);
+    // A non-positive (or NaN) link bandwidth would divide every round
+    // below into NaN/∞ and poison the event clock; an unreachable link
+    // is reported as an infinite-duration transfer instead.  (+∞
+    // bandwidth needs no guard — each round degenerates to zero time.)
+    if bw_tokens_per_s.is_nan() || bw_tokens_per_s <= 0.0 {
+        return (f64::INFINITY, seq_len.max(1), f64::INFINITY);
+    }
     let mut to_move = seq_len.max(1) as f64;
     let mut total_time = 0.0;
     let mut total_tokens = 0.0;
@@ -315,6 +322,22 @@ mod tests {
         // fraction of the total for NVLink.
         let (time, _, stall) = live_migration_schedule(100_000, KVB, 450e9, 100.0);
         assert!(stall / time < 0.05, "stall {stall} of {time}");
+    }
+
+    #[test]
+    fn degenerate_bandwidth_is_guarded() {
+        // Zero, negative, and NaN bandwidths must never produce NaN
+        // schedules (NaN would poison the event clock's ordering).
+        for bad_bw in [0.0, -25e9, f64::NAN] {
+            let (time, tokens, stall) = live_migration_schedule(1000, KVB, bad_bw, 50.0);
+            assert!(time.is_infinite() && time > 0.0, "bw {bad_bw}: time {time}");
+            assert_eq!(tokens, 1000);
+            assert!(stall.is_infinite() && stall > 0.0);
+        }
+        // Infinite bandwidth degenerates to an instant transfer.
+        let (time, tokens, stall) = live_migration_schedule(1000, KVB, f64::INFINITY, 50.0);
+        assert!(time.abs() < 1e-12 && stall.abs() < 1e-12);
+        assert_eq!(tokens, 1000);
     }
 
     #[test]

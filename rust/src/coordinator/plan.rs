@@ -53,6 +53,11 @@ impl Pipeline {
             "stages must have ascending upper bounds: {:?}",
             self.stages
         );
+        // A stageless pipeline maps to stage 0 instead of underflowing
+        // `len() - 1` on usize.
+        if self.stages.is_empty() {
+            return 0;
+        }
         self.stages.partition_point(|s| s.hi <= len).min(self.stages.len() - 1)
     }
 

@@ -262,6 +262,16 @@ pub struct Engine<B: ExecBackend> {
     /// admissions (zero-length prompts / empty injected sequences),
     /// which allocate a 1-token minimum the `kv_len` does not reflect.
     kv_len_exact: bool,
+    /// Prefill-only admission mode (PD disaggregation): sequences whose
+    /// prefill completes are parked in [`Self::handoff_ready`] instead
+    /// of decoding locally; the cluster hands their KV off to a decode
+    /// instance.  Never set on colocated layouts, so the default-false
+    /// path is bit-identical to before the mode existed.
+    prefill_only: bool,
+    /// Completed prefills awaiting KV handoff (prefill-only mode).
+    /// Their KV stays allocated here until the transfer completes and
+    /// [`Engine::extract`] removes them; they cost no compute.
+    handoff_ready: Vec<Sequence>,
     /// Cumulative stats.
     pub total_output_tokens: u64,
     pub total_iterations: u64,
@@ -288,6 +298,8 @@ impl<B: ExecBackend> Engine<B> {
             n_prefilling: 0,
             max_len_hint: 0,
             kv_len_exact: true,
+            prefill_only: false,
+            handoff_ready: Vec::new(),
             total_output_tokens: 0,
             total_iterations: 0,
             busy_time: 0.0,
@@ -311,6 +323,13 @@ impl<B: ExecBackend> Engine<B> {
         }
         if !self.kv.allocate(seq.req.id, seq.current_len().max(1)) {
             return false;
+        }
+        if self.prefill_only && seq.phase == Phase::Decoding {
+            // A decode-phase sequence bounced back to a prefill-only
+            // engine (failed handoff) re-parks for the next attempt
+            // instead of decoding here.
+            self.handoff_ready.push(seq);
+            return true;
         }
         if seq.current_len() == 0 {
             // The allocator reserved a 1-token minimum the sequence
@@ -347,6 +366,11 @@ impl<B: ExecBackend> Engine<B> {
             self.lens_cached = false;
             return Some(seq);
         }
+        if let Some(pos) = self.handoff_ready.iter().position(|s| s.req.id == id) {
+            let seq = self.handoff_ready.remove(pos);
+            self.kv.free(id);
+            return Some(seq);
+        }
         if let Some(pos) = self.queue.iter().position(|s| s.req.id == id) {
             let seq = self.queue.remove(pos);
             if let Some(s) = &seq {
@@ -364,8 +388,13 @@ impl<B: ExecBackend> Engine<B> {
     /// O(n) total and it leaves the aggregates in the exact
     /// empty-engine state.
     pub fn evacuate(&mut self) -> Vec<Sequence> {
-        let mut out = Vec::with_capacity(self.running.len() + self.queue.len());
+        let mut out =
+            Vec::with_capacity(self.running.len() + self.handoff_ready.len() + self.queue.len());
         for seq in self.running.drain(..) {
+            self.kv.free(seq.req.id);
+            out.push(seq);
+        }
+        for seq in self.handoff_ready.drain(..) {
             self.kv.free(seq.req.id);
             out.push(seq);
         }
@@ -431,7 +460,48 @@ impl<B: ExecBackend> Engine<B> {
     }
 
     pub fn has_work(&self) -> bool {
-        !self.running.is_empty() || !self.queue.is_empty()
+        !self.running.is_empty() || !self.queue.is_empty() || !self.handoff_ready.is_empty()
+    }
+
+    /// Enter/leave prefill-only admission mode (PD disaggregation).
+    /// Only toggled on engines with no resident work (pool
+    /// re-allocation moves idle instances), so no running sequence
+    /// changes discipline mid-life.
+    pub fn set_prefill_only(&mut self, on: bool) {
+        debug_assert!(
+            !self.has_work(),
+            "prefill-only mode must only be toggled on an idle engine"
+        );
+        self.prefill_only = on;
+    }
+
+    pub fn prefill_only(&self) -> bool {
+        self.prefill_only
+    }
+
+    /// Completed prefills parked for KV handoff (prefill-only mode).
+    /// They stay resident — KV allocated — until the cluster's
+    /// transfer completes and extracts them.
+    pub fn handoff_ready(&self) -> &[Sequence] {
+        &self.handoff_ready
+    }
+
+    /// Park every running sequence whose prefill just completed
+    /// (phase flipped to `Decoding`, first token emitted) for handoff.
+    /// Called at the end of each prefill iteration in prefill-only
+    /// mode; batch order is preserved, so the sweep is deterministic.
+    fn park_prefilled(&mut self) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].phase == Phase::Decoding {
+                let seq = self.running.remove(i);
+                self.running_tokens -= seq.current_len();
+                self.handoff_ready.push(seq);
+                self.lens_cached = false;
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// Admit queued sequences while memory and batch slots allow (FCFS).
@@ -617,6 +687,11 @@ impl<B: ExecBackend> Engine<B> {
         self.lens_cached = false;
         // A prompt of output_len==1 is done right after prefill.
         self.reap(end, &mut outcome);
+        if self.prefill_only {
+            // Everything that survived the reap with a completed
+            // prefill parks for KV handoff instead of decoding here.
+            self.park_prefilled();
+        }
         outcome
     }
 
@@ -972,6 +1047,51 @@ mod tests {
         e.submit(req(4, now, 10, 2));
         let recs = run_to_completion(&mut e);
         assert_eq!(recs.len(), 1);
+    }
+
+    #[test]
+    fn prefill_only_parks_completed_prefills() {
+        let mut e = engine();
+        e.set_prefill_only(true);
+        e.submit(req(1, 0.0, 100, 5));
+        e.submit(req(2, 0.0, 50, 1));
+        let mut now = 0.0;
+        let mut recs = Vec::new();
+        let mut guard = 0;
+        loop {
+            let out = e.step(now);
+            if out.duration <= 0.0 {
+                break;
+            }
+            now += out.duration;
+            recs.extend(out.completed);
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        // The output_len==1 request completes locally at prefill; the
+        // other parks for handoff instead of decoding here.
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].id, 2);
+        assert_eq!(e.handoff_ready().len(), 1);
+        assert!(e.has_work(), "a parked sequence keeps the engine's work visible");
+        let seq = e.handoff_ready()[0];
+        assert_eq!(seq.req.id, 1);
+        assert_eq!(seq.generated, 1, "first token emitted at prefill completion");
+        assert!(seq.first_token_at.is_some());
+        assert_eq!(seq.phase, Phase::Decoding);
+        assert_eq!(e.token_load(), e.token_load_naive());
+        // Extraction frees the KV like any migration source.
+        let seq = e.extract(1).unwrap();
+        assert_eq!(e.kv().n_seqs(), 0);
+        assert!(!e.has_work());
+        // The parked sequence finishes on a normal (decode) engine,
+        // keeping its prefill-side first-token timestamp.
+        let mut d = engine();
+        assert!(d.inject(seq));
+        let recs = run_to_completion(&mut d);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].output_len, 5);
+        assert!(recs[0].first_token < recs[0].completion);
     }
 
     #[test]

@@ -134,6 +134,9 @@ impl Experiment {
         if let Some(p) = &cfg.predictor {
             b = b.predictor(p);
         }
+        if let Some(l) = &cfg.layout {
+            b = b.layout(l);
+        }
         if let Some(c) = &cfg.churn {
             b = b.churn(c);
         }
@@ -159,6 +162,7 @@ pub struct ExperimentBuilder {
     scheduler_name: String,
     policy: Option<PolicySpec>,
     predictor_name: Option<String>,
+    layout_name: Option<String>,
     rate: f64,
     requests: usize,
     seed: u64,
@@ -189,6 +193,7 @@ impl Default for ExperimentBuilder {
             scheduler_name: "cascade".into(),
             policy: None,
             predictor_name: None,
+            layout_name: None,
             rate: 8.0,
             requests: 2000,
             seed: 42,
@@ -261,6 +266,15 @@ impl ExperimentBuilder {
     /// scheduler spec carries.  Resolved at `build`.
     pub fn predictor(mut self, name: &str) -> Self {
         self.predictor_name = Some(name.to_string());
+        self
+    }
+
+    /// Stage layout (`planned`, `chain`, `flat`, or
+    /// `pd[:P/D[:BOUNDARY[:WINDOW_US]]]` — see
+    /// [`crate::cluster::pd::PdSpec`]); overrides whatever the
+    /// scheduler spec carries.  Resolved at `build`.
+    pub fn layout(mut self, name: &str) -> Self {
+        self.layout_name = Some(name.to_string());
         self
     }
 
@@ -488,6 +502,9 @@ impl ExperimentBuilder {
         };
         if let Some(p) = &self.predictor_name {
             policy.predictor = PredictorSpec::parse(p).map_err(ExperimentError::Policy)?;
+        }
+        if let Some(l) = &self.layout_name {
+            policy.layout = crate::cluster::parse_layout(l).map_err(ExperimentError::Policy)?;
         }
         let workload = match self.trace {
             Some(t) => ResolvedWorkload::Trace(t),
@@ -826,6 +843,51 @@ mod tests {
         let e = Experiment::builder().predictor("psychic").requests(1).build().unwrap_err();
         assert!(matches!(e, ExperimentError::Policy(_)));
         assert!(e.to_string().contains("noisy"), "{e}");
+    }
+
+    #[test]
+    fn layout_flag_reaches_the_policy_and_overrides_the_spec() {
+        use crate::cluster::{Layout, PdSpec};
+        let exp = Experiment::builder()
+            .layout("pd:1/1")
+            .instances(2)
+            .requests(5)
+            .build()
+            .unwrap();
+        match exp.cfg.policy.layout {
+            Layout::Disaggregated(pd) => assert_eq!((pd.prefill, pd.decode), (1, 1)),
+            other => panic!("expected a PD layout, got {other:?}"),
+        }
+        // The flag wins over the layout carried by a custom: spec.
+        let exp = Experiment::builder()
+            .scheduler("custom:layout=chain")
+            .layout("flat")
+            .requests(5)
+            .build()
+            .unwrap();
+        assert_eq!(exp.cfg.policy.layout, Layout::Flat);
+        // Unknown layouts are hard errors quoting the PD grammar.
+        let e = Experiment::builder().layout("pancake").requests(1).build().unwrap_err();
+        assert!(matches!(e, ExperimentError::Policy(_)));
+        assert!(e.to_string().contains(PdSpec::GRAMMAR), "{e}");
+    }
+
+    #[test]
+    fn config_file_layout_feeds_builder() {
+        let cfg = crate::config::Config::parse(
+            "[experiment]\ninstances = 4\nrequests = 10\nrate = 5.0\n\
+             layout = \"pd:2/2\"\n",
+        )
+        .unwrap();
+        let ec = ExperimentConfig::from_config(&cfg);
+        assert_eq!(ec.layout.as_deref(), Some("pd:2/2"));
+        let exp = Experiment::from_config(&ec).build().unwrap();
+        match exp.cfg.policy.layout {
+            crate::cluster::Layout::Disaggregated(pd) => {
+                assert_eq!((pd.prefill, pd.decode), (2, 2))
+            }
+            other => panic!("expected a PD layout, got {other:?}"),
+        }
     }
 
     #[test]

@@ -98,6 +98,9 @@ fn builder_from_args(args: &Args) -> ExperimentBuilder {
     if let Some(p) = args.get("predictor") {
         b = b.predictor(p);
     }
+    if let Some(l) = args.get("layout") {
+        b = b.layout(l);
+    }
     if let Some(c) = args.get("churn") {
         b = b.churn(c);
     }
@@ -162,7 +165,13 @@ fn print_sim_metrics(
     streaming: bool,
 ) {
     println!("completed        {}", report.records.len());
-    println!("mean TTFT        {:.4}s   p95 {:.4}s", report.mean_ttft(), report.p95_ttft());
+    println!(
+        "mean TTFT        {:.4}s   p50 {:.4}s  p95 {:.4}s  p99 {:.4}s",
+        report.mean_ttft(),
+        report.p50_ttft(),
+        report.p95_ttft(),
+        report.p99_ttft()
+    );
     println!("mean TPOT        {:.5}s   p95 {:.5}s", report.mean_tpot(), report.p95_tpot());
     println!("norm latency     {:.5}s/token", report.mean_normalized_latency());
     println!("throughput       {:.1} tok/s", report.throughput_tokens_per_s());
@@ -182,6 +191,23 @@ fn print_sim_metrics(
         println!(
             "mispredictions   {} (re-routes {}, escalations {})",
             stats.mispredictions, stats.predict_reroutes, stats.predict_escalations
+        );
+    }
+    if stats.admit_reroutes > 0 {
+        println!(
+            "admit reroutes   {} (preferred target's KV pool could never hold them)",
+            stats.admit_reroutes
+        );
+    }
+    // PD disaggregation accounting, shown only under a pd layout.
+    if stats.pd_handoffs + stats.pd_local_completions + stats.pd_reallocations > 0 {
+        println!(
+            "pd handoffs      {} ({} KV tokens moved, {} completed at prefill, \
+             {} pool re-allocations)",
+            stats.pd_handoffs,
+            stats.pd_handoff_tokens,
+            stats.pd_local_completions,
+            stats.pd_reallocations
         );
     }
     // Elastic-fleet accounting, shown only when churn actually fired.

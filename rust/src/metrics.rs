@@ -124,8 +124,16 @@ impl Report {
         mean(&self.ttfts())
     }
 
+    pub fn p50_ttft(&self) -> f64 {
+        percentile(&self.ttfts(), 50.0)
+    }
+
     pub fn p95_ttft(&self) -> f64 {
         percentile(&self.ttfts(), 95.0)
+    }
+
+    pub fn p99_ttft(&self) -> f64 {
+        percentile(&self.ttfts(), 99.0)
     }
 
     pub fn mean_tpot(&self) -> f64 {
@@ -319,6 +327,17 @@ mod tests {
     fn normalized_latency_divides_by_output() {
         let r = rec(0.0, 1.0, 5.0, 10);
         assert!((r.normalized_latency() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ttft_percentile_family_is_ordered() {
+        let report = Report::from_records(
+            (0..100).map(|i| rec(0.0, 0.1 + i as f64 * 0.01, 1.0, 5)).collect(),
+        );
+        assert!(report.p50_ttft() <= report.p95_ttft());
+        assert!(report.p95_ttft() <= report.p99_ttft());
+        assert!((report.p50_ttft() - 0.6).abs() < 1e-9);
+        assert!((report.p99_ttft() - 1.08).abs() < 1e-9);
     }
 
     #[test]

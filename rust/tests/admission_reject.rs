@@ -88,5 +88,60 @@ fn fitting_requests_are_not_rejected() {
     let (report, stats) = run(&reqs);
     assert_eq!(stats.rejected, 0);
     assert!(stats.rejections.is_empty());
+    assert_eq!(stats.admit_reroutes, 0, "every pool fits: the reroute scan never fires");
     assert_eq!(report.records.len(), reqs.len());
+}
+
+#[test]
+fn homogeneous_fleet_still_rejects_with_no_reroute() {
+    // All-TP2 fleet: nothing can hold the 100K request, so the
+    // reroute scan finds no feasible alternative and the rejection
+    // path is unchanged.
+    let reqs = trace_with_oversized(100_000);
+    let (_, stats) = run(&reqs);
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.admit_reroutes, 0);
+}
+
+#[test]
+fn mixed_tp_fleet_reroutes_instead_of_rejecting() {
+    // Instances 0-1 are 70B TP2 (~28K-token pools), instance 2 is TP4
+    // (~2x that): ~39K-final requests round-robined onto a TP2
+    // instance must re-route to the TP4 instance instead of being
+    // rejected.  Three oversized arrivals lead the trace so at least
+    // two of them hit a TP2 slot whatever the counter phase.
+    let mut reqs: Vec<Request> = (0..3u64)
+        .map(|i| Request {
+            id: i,
+            arrival: 0.3 + i as f64 * 0.05,
+            input_len: 39_000,
+            output_len: 200,
+        })
+        .collect();
+    reqs.extend((10..40u64).map(|i| Request {
+        id: i,
+        arrival: 0.3 + i as f64 * 0.05,
+        input_len: 256 + i * 8,
+        output_len: 64,
+    }));
+    let (report, stats) = Experiment::builder()
+        .fleet("h100:2,tp=2,h100:1,tp=4")
+        .model("llama70b")
+        .scheduler("vllm")
+        .trace(reqs.clone())
+        .build()
+        .expect("mixed 70B TP2/TP4 experiment builds")
+        .run();
+    assert_eq!(
+        stats.rejected, 0,
+        "the TP4 pool fits every request: {:?}",
+        stats.rejections
+    );
+    assert!(
+        stats.admit_reroutes >= 2,
+        "round-robin must have preferred an infeasible TP2 target at least twice \
+         (got {} reroutes)",
+        stats.admit_reroutes
+    );
+    assert_eq!(report.records.len(), reqs.len(), "every request completes");
 }

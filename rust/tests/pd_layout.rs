@@ -1,0 +1,177 @@
+//! Prefill/decode disaggregation regressions (`--layout pd`).
+//!
+//! Three contracts: (1) colocated layouts are bit-identical and take
+//! zero PD code paths for every registry scheduler and predictor
+//! family now that the PD machinery exists; (2) PD handoff accounting
+//! is airtight — every completed request either handed its KV off to
+//! the decode pool exactly once or completed on the prefill pool;
+//! (3) on prefill-heavy traffic with heavy decode residency, PD beats
+//! the colocated cascade on TTFT (the LAPS claim: prefill instances
+//! never stall behind decode batches, and TTFT is stamped at prefill
+//! completion).
+
+use cascade_infer::experiment::Experiment;
+use cascade_infer::workload::Request;
+
+/// Every name in the scheduler registry (`PolicySpec::resolve`).
+const SCHEDULERS: &[&str] = &[
+    "cascade",
+    "vllm",
+    "sglang",
+    "llumnix",
+    "chain",
+    "nopipeline",
+    "quantity",
+    "memory",
+    "interstage",
+    "rrintra",
+    "sjf",
+];
+
+fn small_trace(n: u64) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.04,
+            input_len: 128 + (i % 13) * 96,
+            output_len: 16 + (i % 7) * 24,
+        })
+        .collect()
+}
+
+/// Prefill-heavy arrivals with substantial decode residency: long-ish
+/// prompts and 300-token outputs keep every colocated instance's
+/// batches decode-dominated, which is exactly the interference PD
+/// removes from the prefill path.
+fn prefill_heavy_trace(n: u64) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.04,
+            input_len: if i % 3 == 0 { 1200 + (i % 5) * 300 } else { 300 + (i % 11) * 40 },
+            output_len: 300,
+        })
+        .collect()
+}
+
+fn run_colocated(
+    scheduler: &str,
+    predictor: Option<&str>,
+    trace: &[Request],
+) -> (cascade_infer::metrics::Report, cascade_infer::cluster::RunStats) {
+    let mut b = Experiment::builder().instances(4).scheduler(scheduler).trace(trace.to_vec());
+    if let Some(p) = predictor {
+        b = b.predictor(p);
+    }
+    b.build().expect("colocated experiment builds").run()
+}
+
+fn run_pd(
+    layout: &str,
+    trace: &[Request],
+) -> (cascade_infer::metrics::Report, cascade_infer::cluster::RunStats) {
+    Experiment::builder()
+        .instances(4)
+        .scheduler("cascade")
+        .layout(layout)
+        .trace(trace.to_vec())
+        .build()
+        .expect("pd experiment builds")
+        .run()
+}
+
+#[test]
+fn colocated_layouts_take_zero_pd_paths_and_stay_deterministic() {
+    let trace = small_trace(30);
+    for sched in SCHEDULERS {
+        let (r1, s1) = run_colocated(sched, None, &trace);
+        let (r2, s2) = run_colocated(sched, None, &trace);
+        assert_eq!(
+            r1.fingerprint(),
+            r2.fingerprint(),
+            "{sched}: colocated runs must be bit-identical"
+        );
+        assert_eq!(s1.pd_handoffs, 0, "{sched}: no PD handoff may fire colocated");
+        assert_eq!(s1.pd_handoff_tokens, 0, "{sched}");
+        assert_eq!(s1.pd_local_completions, 0, "{sched}");
+        assert_eq!(s1.pd_reallocations, 0, "{sched}");
+        assert_eq!(s2.pd_handoffs, 0, "{sched}");
+    }
+}
+
+#[test]
+fn colocated_predictor_families_take_zero_pd_paths() {
+    let trace = small_trace(30);
+    for pred in ["noisy:0.4", "bucket:0.7", "ltr:0.8"] {
+        let (r1, s1) = run_colocated("cascade", Some(pred), &trace);
+        let (r2, _) = run_colocated("cascade", Some(pred), &trace);
+        assert_eq!(
+            r1.fingerprint(),
+            r2.fingerprint(),
+            "{pred}: colocated runs must be bit-identical"
+        );
+        assert_eq!(
+            s1.pd_handoffs + s1.pd_local_completions + s1.pd_reallocations,
+            0,
+            "{pred}: no PD counter may move colocated"
+        );
+    }
+}
+
+#[test]
+fn pd_handoff_accounting_is_airtight() {
+    // Mixed outputs including single-token requests, which complete
+    // *on* the prefill pool (reaped at prefill, no handoff).
+    let trace: Vec<Request> = (0..40u64)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.05,
+            input_len: 200 + (i % 9) * 150,
+            output_len: if i % 5 == 0 { 1 } else { 32 + (i % 4) * 16 },
+        })
+        .collect();
+    let (report, stats) = run_pd("pd:2/2", &trace);
+    assert_eq!(report.records.len(), trace.len(), "every request completes under PD");
+    let singles = trace.iter().filter(|r| r.output_len == 1).count() as u64;
+    assert_eq!(stats.pd_local_completions, singles, "output_len==1 completes at prefill");
+    assert_eq!(
+        stats.pd_handoffs + stats.pd_local_completions,
+        report.records.len() as u64,
+        "every completion either handed off exactly once or finished at prefill"
+    );
+    assert!(stats.pd_handoff_tokens > 0, "handoffs moved KV tokens");
+    assert_eq!(stats.migrations, 0, "PD transfers are handoffs, not migrations");
+    assert_eq!(stats.rejected, 0);
+    // Reporting shows both pools; no request is lost to either.
+    assert_eq!(stats.stages.len(), 2, "stats stages = [prefill pool, decode pool]");
+    assert_eq!(stats.stages[0].len() + stats.stages[1].len(), 4);
+}
+
+#[test]
+fn pd_runs_are_deterministic() {
+    let trace = prefill_heavy_trace(60);
+    for layout in ["pd", "pd:2/2", "pd:1/3:256:0"] {
+        let (r1, s1) = run_pd(layout, &trace);
+        let (r2, s2) = run_pd(layout, &trace);
+        assert_eq!(r1.fingerprint(), r2.fingerprint(), "{layout}: PD runs are deterministic");
+        assert_eq!(s1.pd_handoffs, s2.pd_handoffs, "{layout}");
+        assert_eq!(s1.pd_handoff_tokens, s2.pd_handoff_tokens, "{layout}");
+        assert_eq!(r1.records.len(), trace.len(), "{layout}: every request completes");
+    }
+}
+
+#[test]
+fn pd_beats_colocated_cascade_ttft_on_prefill_heavy_traffic() {
+    let trace = prefill_heavy_trace(100);
+    let (colo, _) = run_colocated("cascade", None, &trace);
+    let (pd, pd_stats) = run_pd("pd:2/2", &trace);
+    assert_eq!(pd.records.len(), trace.len());
+    assert!(pd_stats.pd_handoffs > 0, "the PD run actually disaggregated");
+    assert!(
+        pd.mean_ttft() < colo.mean_ttft(),
+        "PD prefill pool must beat colocated cascade TTFT on prefill-heavy traffic: \
+         pd {:.4}s vs colocated {:.4}s",
+        pd.mean_ttft(),
+        colo.mean_ttft()
+    );
+}
